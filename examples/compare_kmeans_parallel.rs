@@ -1,0 +1,68 @@
+//! Head-to-head on a heavy-tailed KDD-like workload: SOCCER (adaptive
+//! stopping) vs k-means|| stopped after 1..5 rounds — the paper's core
+//! experimental comparison on its hardest dataset.
+//!
+//!   cargo run --release --example compare_kmeans_parallel [-- --n 200000 --k 25]
+
+use soccer::bench_support::experiments::*;
+use soccer::bench_support::{fmt_val, Table};
+use soccer::config::ExperimentConfig;
+use soccer::runtime::NativeEngine;
+use soccer::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("compare_kmeans_parallel", "SOCCER vs k-means|| on the KDD surrogate")
+        .opt("n", Some("100000"), "dataset size")
+        .opt("k", Some("25"), "clusters")
+        .opt("eps", Some("0.1"), "SOCCER epsilon")
+        .opt("reps", Some("3"), "repetitions");
+    let args = cli.parse_env();
+
+    let cfg = ExperimentConfig {
+        dataset: "kdd".into(),
+        n: args.usize("n", 100_000),
+        repetitions: args.usize("reps", 3),
+        machines: 50,
+        ..Default::default()
+    };
+    let k = args.usize("k", 25);
+    let eps = args.f64("eps", 0.1);
+
+    let mut fleet = build_fleet(&cfg, k);
+    println!(
+        "KDD-like surrogate: {} points x {} dims, heavy-tailed (see DESIGN.md §4)",
+        cfg.n,
+        fleet.dim()
+    );
+
+    let soc = soccer_cell(&mut fleet, &NativeEngine, &cfg, k, eps);
+    let km = kmeans_par_cells(&mut fleet, &NativeEngine, &cfg, k, &[1, 2, 3, 4, 5]);
+
+    let mut t = Table::new(
+        &format!("SOCCER (eps={eps}) vs k-means|| (k={k}, {} reps)", cfg.repetitions),
+        &["ALG", "rounds", "cost (mean±std)", "T_mach(s)"],
+    );
+    t.row(vec![
+        "SOCCER".into(),
+        soc.rounds.fmt(),
+        soc.cost.fmt(),
+        soc.t_machine.fmt(),
+    ]);
+    for cell in &km {
+        t.row(vec![
+            format!("k-means|| R={}", cell.rounds),
+            cell.rounds.to_string(),
+            cell.cost.fmt(),
+            cell.t_machine.fmt(),
+        ]);
+    }
+    t.print();
+    let km5 = km.last().unwrap();
+    println!(
+        "SOCCER reaches cost {} in {:.1} adaptive rounds; k-means|| needs 5 fixed rounds for {} at {:.1}x machine time.",
+        fmt_val(soc.cost.mean()),
+        soc.rounds.mean(),
+        fmt_val(km5.cost.mean()),
+        km5.t_machine.mean() / soc.t_machine.mean().max(1e-12)
+    );
+}

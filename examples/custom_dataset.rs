@@ -1,0 +1,67 @@
+//! Using the public API on your own data: load a CSV (or .bin), shard it
+//! across machines, run SOCCER with a custom configuration and inspect
+//! per-round telemetry.
+//!
+//!   cargo run --release --example custom_dataset -- --csv mydata.csv --k 8
+//!
+//! Without --csv it synthesizes a small demo file first.
+
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::data::loader;
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::util::cli::Cli;
+use soccer::util::rng::Pcg64;
+use std::path::PathBuf;
+
+fn main() {
+    let cli = Cli::new("custom_dataset", "run SOCCER on your own CSV")
+        .opt("csv", None, "path to a numeric CSV (no header)")
+        .opt("k", Some("8"), "clusters")
+        .opt("eps", Some("0.15"), "epsilon")
+        .opt("machines", Some("10"), "machine count");
+    let args = cli.parse_env();
+
+    let path = match args.get("csv") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            // synthesize a demo CSV: three noisy rings in 2-D
+            let p = std::env::temp_dir().join("soccer_demo.csv");
+            let mut rng = Pcg64::new(11);
+            let mut s = String::new();
+            for ring in 1..=3 {
+                for _ in 0..2000 {
+                    let a = rng.f64() * std::f64::consts::TAU;
+                    let r = ring as f64 * 10.0 + rng.normal() * 0.3;
+                    s.push_str(&format!("{:.4},{:.4}\n", r * a.cos(), r * a.sin()));
+                }
+            }
+            std::fs::write(&p, s).unwrap();
+            println!("no --csv given; wrote demo rings to {}", p.display());
+            p
+        }
+    };
+
+    let points = loader::load_csv(&path).expect("load csv");
+    println!("loaded {} points x {} dims", points.rows(), points.cols());
+
+    let k = args.usize("k", 8);
+    let mut fleet = Fleet::new(&points, args.usize("machines", 10), 3);
+    let mut params = SoccerParams::new(k, args.f64("eps", 0.15));
+    params.delta = 0.05; // tighter confidence than the default
+
+    let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 4);
+    for r in &out.telemetry.rounds {
+        println!(
+            "round {}: sampled {} pts, broadcast {} centers, removed {} ({} left), v={:.4}",
+            r.round, r.sampled, r.broadcast, r.removed, r.remaining, r.threshold
+        );
+    }
+    println!(
+        "done: rounds={} final cost={:.2} centers={}",
+        out.rounds,
+        out.cost,
+        out.final_centers.rows()
+    );
+}

@@ -1,0 +1,85 @@
+//! END-TO-END DRIVER: the full system on a real small workload, all
+//! layers composing — datasets → machine fleet → SOCCER coordinator
+//! over the PJRT engine (AOT JAX/Pallas artifacts) → weighted reduction
+//! → headline metrics vs k-means|| and the centralized reference. The
+//! recorded run lives in EXPERIMENTS.md §End-to-end.
+//!
+//!   cargo run --release --example e2e_driver [-- --n 200000 --engine pjrt]
+
+use soccer::baselines::run_centralized;
+use soccer::bench_support::experiments::*;
+use soccer::bench_support::{fmt_val, Table};
+use soccer::config::ExperimentConfig;
+use soccer::data;
+use soccer::util::cli::Cli;
+use soccer::util::json::Json;
+
+fn main() {
+    let cli = Cli::new("e2e_driver", "full-system end-to-end run over every dataset")
+        .opt("n", Some("100000"), "points per dataset")
+        .opt("k", Some("25"), "clusters")
+        .opt("eps", Some("0.1"), "SOCCER epsilon")
+        .opt("engine", Some("pjrt"), "native | pjrt")
+        .opt("reps", Some("2"), "repetitions");
+    let args = cli.parse_env();
+    let n = args.usize("n", 100_000);
+    let k = args.usize("k", 25);
+    let eps = args.f64("eps", 0.1);
+    let engine_name = args.get_or("engine", "pjrt");
+
+    let engine_box = EngineBox::by_name(&engine_name);
+    let engine = engine_box.engine();
+    println!("engine: {} | n={n} k={k} eps={eps}", engine.name());
+
+    let mut table = Table::new(
+        &format!("End-to-end: SOCCER vs k-means|| vs centralized (engine={engine_name})"),
+        &["Dataset", "SOCCER R", "SOCCER cost", "km||1 cost", "km||5 cost", "central cost", "SOCCER/central"],
+    );
+    let mut log = Vec::new();
+
+    for dataset in data::DATASET_NAMES {
+        let cfg = ExperimentConfig {
+            dataset: dataset.into(),
+            n,
+            repetitions: args.usize("reps", 2),
+            machines: 50,
+            engine: engine_name.clone(),
+            ..Default::default()
+        };
+        let mut fleet = build_fleet(&cfg, k);
+        let soc = soccer_cell(&mut fleet, engine, &cfg, k, eps);
+        let km = kmeans_par_cells(&mut fleet, engine, &cfg, k, &[1, 5]);
+        let ds = data::by_name(dataset, n, k, cfg.seed);
+        let central = run_centralized(&ds.points, k, make_blackbox(&cfg.blackbox).as_ref(), 99);
+
+        table.row(vec![
+            dataset.into(),
+            format!("{:.1}", soc.rounds.mean()),
+            soc.cost.fmt(),
+            fmt_val(km[0].cost.mean()),
+            fmt_val(km[1].cost.mean()),
+            fmt_val(central.cost),
+            format!("{:.2}x", soc.cost.mean() / central.cost.max(1e-12)),
+        ]);
+        log.push(Json::obj(vec![
+            ("dataset", Json::str(dataset)),
+            ("soccer_rounds", Json::num(soc.rounds.mean())),
+            ("soccer_cost", Json::num(soc.cost.mean())),
+            ("kmpar1_cost", Json::num(km[0].cost.mean())),
+            ("kmpar5_cost", Json::num(km[1].cost.mean())),
+            ("central_cost", Json::num(central.cost)),
+        ]));
+    }
+    table.print();
+    let path = soccer::bench_support::harness::write_log(
+        "e2e_driver",
+        Json::obj(vec![
+            ("engine", Json::str(engine_name)),
+            ("n", Json::num(n as f64)),
+            ("k", Json::num(k as f64)),
+            ("rows", Json::Arr(log)),
+        ]),
+    );
+    println!("log: {}", path.display());
+    println!("\nall layers composed: data -> fleet -> SOCCER over {} -> reduction -> metrics", engine.name());
+}

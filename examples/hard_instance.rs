@@ -1,0 +1,54 @@
+//! Theorem 7.2 demo: a dataset where k-means|| needs ~k−1 rounds for a
+//! finite approximation factor (OPT = 0), while SOCCER returns the
+//! optimal clustering after a single round.
+//!
+//!   cargo run --release --example hard_instance
+
+use soccer::baselines::KmeansParallel;
+use soccer::clustering::{weighted, LloydKMeans};
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::data::hard_instance;
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::util::rng::Pcg64;
+
+fn main() {
+    let k = 8;
+    let inst = hard_instance::generate(k, 20_000);
+    println!(
+        "hard instance: {} points, {} distinct, optimal cost = 0",
+        inst.points.rows(),
+        inst.distinct.rows()
+    );
+
+    let mut fleet = Fleet::new(&inst.points, 10, 1);
+
+    // SOCCER: one round, zero cost
+    let params = SoccerParams::new(k, 0.2);
+    let soc = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 2);
+    println!(
+        "SOCCER:    rounds={} cost={:.3e}  (optimal clustering found: {})",
+        soc.rounds,
+        soc.cost,
+        soc.cost == 0.0
+    );
+    assert_eq!(soc.rounds, 1);
+    assert_eq!(soc.cost, 0.0, "SOCCER must recover the optimal clustering");
+
+    // k-means|| needs several rounds to even see all distinct points
+    for rounds in [1usize, 2, k - 1] {
+        fleet.reset();
+        let mut rng = Pcg64::new(3);
+        let km = KmeansParallel::new(k, rounds);
+        let (snaps, _, centers) = km.run_with_snapshots(&mut fleet, &NativeEngine, &[rounds], &mut rng);
+        let pre = snaps.last().map(|s| &s.centers_pre).unwrap_or(&centers);
+        let counts = fleet.counts_full(pre, &NativeEngine);
+        let reduced =
+            weighted::reduce_with_weights(pre, &counts.value, k, &LloydKMeans::default(), &mut rng);
+        let cost = fleet.cost_full(&reduced, &NativeEngine).value;
+        println!(
+            "k-means||: rounds={rounds} cost={:.3e}  (finite approx of OPT=0 requires cost=0)",
+            cost
+        );
+    }
+}

@@ -1,0 +1,50 @@
+//! The three-layer pipeline, explicitly: load the AOT-compiled
+//! JAX/Pallas artifacts (L1/L2) into the PJRT runtime and drive the
+//! SOCCER coordinator (L3) entirely through them — Python is not
+//! involved at any point of this run.
+//!
+//! Requires `make artifacts`.
+//!
+//!   cargo run --release --example pjrt_pipeline
+
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::data::gaussian::{generate, GaussianMixtureSpec};
+use soccer::machines::Fleet;
+use soccer::runtime::{Engine, NativeEngine, PjrtRuntime};
+use soccer::util::rng::Pcg64;
+
+fn main() {
+    let rt = PjrtRuntime::load_default().expect("run `make artifacts` first");
+    println!("PJRT platform: {}", rt.platform());
+
+    let n = 30_000;
+    let k = 10;
+    let gm = generate(&GaussianMixtureSpec::paper(n, k), &mut Pcg64::new(5));
+    let mut fleet = Fleet::new(&gm.points, 16, 6);
+    let params = SoccerParams::new(k, 0.1);
+
+    // L3 over PJRT: every machine-side distance computation (removal
+    // masks, cost evaluation) executes the lowered Pallas kernel
+    let out = run_soccer(&mut fleet, &rt, &params, &LloydKMeans::default(), 7);
+    println!(
+        "pjrt engine:   rounds={} cost={:.4} T_total={:.3}s",
+        out.rounds, out.cost, out.total_secs
+    );
+    let execs = rt.exec_counts.borrow().clone();
+    println!("artifact executions: {execs:?}");
+    assert!(execs.values().sum::<usize>() > 0, "PJRT path must be exercised");
+
+    // same run on the native engine for comparison
+    fleet.reset();
+    let out_native = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 7);
+    println!(
+        "native engine: rounds={} cost={:.4} T_total={:.3}s",
+        out_native.rounds, out_native.cost, out_native.total_secs
+    );
+    println!(
+        "cost agreement pjrt/native: {:.3}x ({})",
+        out.cost / out_native.cost,
+        NativeEngine.name()
+    );
+}

@@ -1,0 +1,53 @@
+//! Quickstart: cluster a 15-D Gaussian mixture with SOCCER in the
+//! simulated coordinator model and compare against the centralized
+//! reference.
+//!
+//!   cargo run --release --example quickstart
+
+use soccer::baselines::run_centralized;
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::data::gaussian::{expected_optimal_cost, generate, GaussianMixtureSpec};
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::util::rng::Pcg64;
+
+fn main() {
+    let k = 25;
+    let n = 100_000;
+
+    // 1. data: the paper's synthetic benchmark
+    let spec = GaussianMixtureSpec::paper(n, k);
+    let gm = generate(&spec, &mut Pcg64::new(42));
+    println!("generated {}x{} Gaussian mixture (k={k})", n, spec.dim);
+
+    // 2. distribute across 50 machines
+    let mut fleet = Fleet::new(&gm.points, 50, 1);
+
+    // 3. run SOCCER (delta=0.1, eps=0.1 like the paper's experiments)
+    let params = SoccerParams::new(k, 0.1);
+    println!(
+        "SOCCER: coordinator samples |P1|=|P2|={} points/round, k+={} centers/round",
+        params.eta(n),
+        params.k_plus()
+    );
+    let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 2);
+
+    println!("\nresult:");
+    println!("  rounds                 = {} (worst case {})", out.rounds, params.worst_case_rounds());
+    println!("  |C_out|                = {}", out.output_size);
+    println!("  cost(final k centers)  = {:.4}", out.cost);
+    println!("  machine time           = {:.4}s", out.telemetry.machine_time());
+    println!("  total wall clock       = {:.3}s", out.total_secs);
+
+    // 4. sanity: centralized black box on all of X + the analytic optimum
+    let central = run_centralized(&gm.points, k, &LloydKMeans::default(), 3);
+    println!("\nreference:");
+    println!("  centralized cost       = {:.4} ({:.3}s)", central.cost, central.total_secs);
+    println!("  analytic optimal ~     = {:.4}", expected_optimal_cost(&spec));
+    println!(
+        "  SOCCER / centralized   = {:.3}x",
+        out.cost / central.cost
+    );
+    assert!(out.rounds <= 2, "SOCCER should stop almost immediately here");
+}

@@ -1,0 +1,68 @@
+//! The paper's future-work extensions in action: SOCCER-(k,z) ignoring
+//! planted outliers, and SOCCER surviving machine crashes mid-protocol.
+//!
+//!   cargo run --release --example robust_clustering
+
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::robust::fleet_trimmed_cost;
+use soccer::coordinator::{run_soccer, run_soccer_robust, RobustConfig, SoccerParams};
+use soccer::data::gaussian::{expected_optimal_cost, generate, GaussianMixtureSpec};
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::util::rng::Pcg64;
+use std::collections::BTreeMap;
+
+fn main() {
+    let n = 30_000;
+    let k = 8;
+    let z = 100;
+
+    // mixture + z far-out junk points
+    let spec = GaussianMixtureSpec::paper(n, k);
+    let gm = generate(&spec, &mut Pcg64::new(1));
+    let mut pts = gm.points;
+    let mut rng = Pcg64::new(2);
+    for _ in 0..z {
+        let row: Vec<f32> = (0..spec.dim).map(|_| (rng.normal() * 500.0) as f32).collect();
+        pts.push_row(&row);
+    }
+    println!("{} clean points + {z} planted outliers", n);
+
+    let mut fleet = Fleet::new(&pts, 16, 3);
+    let params = SoccerParams::new(k, 0.15);
+
+    // plain SOCCER: outliers hijack final centers
+    let plain = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 4);
+    let plain_trimmed = fleet_trimmed_cost(&mut fleet, &plain.final_centers, z, &NativeEngine);
+    println!(
+        "plain SOCCER:  trimmed cost = {plain_trimmed:.3}   (clean optimal ~ {:.3})",
+        expected_optimal_cost(&spec)
+    );
+
+    // SOCCER-(k,z)
+    fleet.reset();
+    let cfg = RobustConfig {
+        outliers_z: z,
+        ..Default::default()
+    };
+    let robust = run_soccer_robust(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), &cfg, 4);
+    println!(
+        "SOCCER-(k,z):  trimmed cost = {:.3}   rounds = {}",
+        robust.trimmed_cost, robust.base.rounds
+    );
+    assert!(robust.trimmed_cost < plain_trimmed);
+
+    // machine failures: kill 4 of 16 machines going into round 1
+    fleet.reset();
+    let mut failures = BTreeMap::new();
+    failures.insert(1usize, vec![0, 5, 10, 15]);
+    let cfg = RobustConfig {
+        outliers_z: z,
+        failures,
+    };
+    let crashed = run_soccer_robust(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), &cfg, 4);
+    println!(
+        "with 4/16 machines crashed: lost {} points, finished in {} rounds, trimmed cost on survivors = {:.3}",
+        crashed.points_lost, crashed.base.rounds, crashed.trimmed_cost
+    );
+}

@@ -1,0 +1,131 @@
+"""AOT: lower the L2 graphs to HLO text artifacts + manifest.json.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (`make artifacts`); never on the request path.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Artifact shape grid. One "big" shape per op for the hot path and one
+# "small" shape for fast compiles in tests. d=64 covers every dataset in
+# the paper (max d = 68 -> Census surrogate uses d=64); k=256 covers
+# k_plus for k<=200 at the paper's delta/epsilon grid.
+SHAPES = [
+    # (tag, tile_n, d, k)
+    ("small", 256, 16, 32),
+    ("main", 2048, 64, 256),
+    ("wide", 1024, 128, 256),  # census (d=68) and other wide datasets
+]
+
+OPS = {
+    "assign_cost": {
+        "fn": lambda tn, d, k: (
+            model.assign_cost,
+            (
+                jax.ShapeDtypeStruct((tn, d), jnp.float32),
+                jax.ShapeDtypeStruct((k, d), jnp.float32),
+                jax.ShapeDtypeStruct((tn,), jnp.float32),
+            ),
+        ),
+        "outputs": ["dist_sq f32[tile_n]", "idx i32[tile_n]", "cost f32[]"],
+        "inputs": ["points f32[tile_n,d]", "centers f32[k,d]", "weights f32[tile_n]"],
+    },
+    "lloyd_step": {
+        "fn": lambda tn, d, k: (
+            model.lloyd_step,
+            (
+                jax.ShapeDtypeStruct((tn, d), jnp.float32),
+                jax.ShapeDtypeStruct((tn,), jnp.float32),
+                jax.ShapeDtypeStruct((k, d), jnp.float32),
+            ),
+        ),
+        "outputs": ["sums f32[k,d]", "counts f32[k]", "cost f32[]"],
+        "inputs": ["points f32[tile_n,d]", "weights f32[tile_n]", "centers f32[k,d]"],
+    },
+    "removal_mask": {
+        "fn": lambda tn, d, k: (
+            model.removal_mask,
+            (
+                jax.ShapeDtypeStruct((tn, d), jnp.float32),
+                jax.ShapeDtypeStruct((k, d), jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.float32),
+            ),
+        ),
+        "outputs": ["keep i32[tile_n]", "dist_sq f32[tile_n]"],
+        "inputs": ["points f32[tile_n,d]", "centers f32[k,d]", "threshold f32[]"],
+    },
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_op(op: str, tile_n: int, d: int, k: int) -> str:
+    fn, args = OPS[op]["fn"](tile_n, d, k)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--ops", nargs="*", default=sorted(OPS))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    for op in args.ops:
+        for tag, tile_n, d, k in SHAPES:
+            text = lower_op(op, tile_n, d, k)
+            fname = f"{op}_{tag}_t{tile_n}_d{d}_k{k}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "op": op,
+                    "tag": tag,
+                    "file": fname,
+                    "tile_n": tile_n,
+                    "d": d,
+                    "k": k,
+                    "inputs": OPS[op]["inputs"],
+                    "outputs": OPS[op]["outputs"],
+                    "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "format": 1,
+        "interchange": "hlo-text",
+        "return_tuple": True,
+        "center_pad_coord": 1.0e17,
+        "artifacts": entries,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(entries)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: tiled pairwise squared distances + argmin.
+
+This is the compute hot-spot of every algorithm in the SOCCER paper
+(coordinator black-box clustering, machine-side removal, k-means||
+seeding, Lloyd iterations): for a tile of points X[tile_n, d] and a panel
+of centers C[k, d], compute for every point the squared Euclidean distance
+to its nearest center and the index of that center.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel is tiled so that
+the center panel (k x d) stays resident in VMEM while point tiles stream
+from HBM (BlockSpec over the grid's point axis). The inner product X @ C^T
+is the MXU-shaped part; the rank-1 norm corrections and the min/argmin
+reduction are VPU work that stays in VMEM. On this image Pallas must run
+with interpret=True (CPU PJRT cannot execute Mosaic custom-calls), so the
+kernel is validated for correctness here and its TPU efficiency is
+estimated analytically in DESIGN.md §7.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Grid block along the point axis. 256 keeps the f32 working set
+# (256 x d tile + k x d panel + 256 x k distance block) far below VMEM
+# (~16 MB) for every shape we AOT, leaving room for double buffering.
+BLOCK_N = 256
+
+
+def _dist_argmin_kernel(x_ref, c_ref, dist_ref, idx_ref):
+    """One grid step: distances of a BLOCK_N point tile to all k centers.
+
+    dist(i, j) = ||x_i||^2 - 2 x_i . c_j + ||c_j||^2, clamped at 0 to kill
+    the small negative values catastrophic cancellation can produce.
+    """
+    x = x_ref[...]  # [bn, d]
+    c = c_ref[...]  # [k, d]
+    x_sq = jnp.sum(x * x, axis=1, keepdims=True)  # [bn, 1]
+    c_sq = jnp.sum(c * c, axis=1)[None, :]  # [1, k]
+    # MXU-shaped inner product.
+    xc = jax.lax.dot_general(
+        x,
+        c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [bn, k]
+    d2 = jnp.maximum(x_sq - 2.0 * xc + c_sq, 0.0)
+    dist_ref[...] = jnp.min(d2, axis=1)
+    idx_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dist_argmin(points, centers, *, interpret=True):
+    """Nearest-center squared distance + index for every point.
+
+    points:  f32[n, d]  (n must be a multiple of BLOCK_N or <= BLOCK_N)
+    centers: f32[k, d]
+    returns (dist_sq f32[n], idx i32[n])
+    """
+    n, d = points.shape
+    k, _ = centers.shape
+    bn = min(BLOCK_N, n)
+    if n % bn != 0:
+        raise ValueError(f"n={n} must be a multiple of block {bn}")
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _dist_argmin_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),  # stream point tiles
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # center panel resident
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(points, centers)
+
+
+def vmem_footprint_bytes(d: int, k: int, bn: int = BLOCK_N) -> int:
+    """Analytic VMEM working set per grid step (f32), for DESIGN.md §7."""
+    point_tile = bn * d * 4
+    center_panel = k * d * 4
+    dist_block = bn * k * 4
+    outputs = bn * (4 + 4)
+    return point_tile + center_panel + dist_block + outputs
+
+
+def mxu_flops_per_step(d: int, k: int, bn: int = BLOCK_N) -> int:
+    """MXU FLOPs of one grid step (the dot_general)."""
+    return 2 * bn * k * d

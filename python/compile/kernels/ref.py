@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the L1 Pallas kernel and the L2 graphs.
+
+These are the CORE correctness signal: every kernel/model output is
+assert_allclose'd against these in python/tests/.
+"""
+
+import jax.numpy as jnp
+
+
+def dist_argmin_ref(points, centers):
+    """Exact all-pairs reference: (min squared distance, argmin index)."""
+    diff = points[:, None, :] - centers[None, :, :]  # [n, k, d]
+    d2 = jnp.sum(diff * diff, axis=-1)  # [n, k]
+    return jnp.min(d2, axis=1), jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def assign_cost_ref(points, centers, weights):
+    """Weighted assignment: per-point nearest dist^2, index, total cost."""
+    d2, idx = dist_argmin_ref(points, centers)
+    return d2, idx, jnp.sum(d2 * weights)
+
+
+def lloyd_step_ref(points, weights, centers):
+    """One weighted Lloyd step: per-cluster weighted sums and counts.
+
+    Returns (sums f32[k, d], counts f32[k], cost f32[]). Centroid update is
+    sums/counts, left to the caller (rust accumulates across tiles first).
+    """
+    d2, idx = dist_argmin_ref(points, centers)
+    k = centers.shape[0]
+    one_hot = (idx[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    wm = one_hot * weights[:, None]  # [n, k]
+    sums = wm.T @ points  # [k, d]
+    counts = jnp.sum(wm, axis=0)  # [k]
+    cost = jnp.sum(d2 * weights)
+    return sums, counts, cost

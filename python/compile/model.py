@@ -1,0 +1,62 @@
+"""L2: the JAX compute graphs SOCCER's rust coordinator executes via PJRT.
+
+Every graph calls the L1 Pallas kernel (kernels.distance.dist_argmin) so
+the kernel lowers into the same HLO module. Shapes are static (AOT); the
+rust runtime pads inputs to the artifact shape:
+
+  - the point axis is padded with arbitrary rows and a 0 entry in
+    `weights` so pads contribute nothing to cost/sums/counts;
+  - the feature axis is zero-padded on both points and centers (distances
+    unchanged);
+  - the center axis is padded with far-away sentinel rows (coordinate
+    ~1e17, squared distance ~1e35 < f32 max) that never win the argmin.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.distance import dist_argmin
+
+
+def assign_cost(points, centers, weights):
+    """Nearest-center assignment + weighted cost.
+
+    points f32[n,d], centers f32[k,d], weights f32[n]
+    -> (dist_sq f32[n], idx i32[n], cost f32[])
+
+    Per-point dist_sq is returned so the rust side can compute truncated
+    costs (cost_l) and removal masks natively on exact per-point values.
+    """
+    d2, idx = dist_argmin(points, centers)
+    return d2, idx, jnp.sum(d2 * weights)
+
+
+def lloyd_step(points, weights, centers):
+    """One weighted Lloyd accumulation step.
+
+    -> (sums f32[k,d], counts f32[k], cost f32[])
+
+    The centroid division sums/counts happens in rust after accumulating
+    over tiles (and over machines), which also handles empty clusters.
+    The scatter-add is expressed as one-hot matmul: XLA fuses it and on
+    TPU it is MXU-shaped, matching the kernel's tiling.
+    """
+    d2, idx = dist_argmin(points, centers)
+    k = centers.shape[0]
+    one_hot = (idx[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :])
+    wm = one_hot.astype(jnp.float32) * weights[:, None]
+    sums = wm.T @ points
+    counts = jnp.sum(wm, axis=0)
+    cost = jnp.sum(d2 * weights)
+    return sums, counts, cost
+
+
+def removal_mask(points, centers, threshold):
+    """SOCCER line 12: which points survive (rho(x, C_iter)^2 > v).
+
+    threshold f32[] -> (keep i32[n], dist_sq f32[n]).
+    Returned as i32 mask (not bool) for a stable PJRT literal layout; the
+    rust machine uses it to filter its shard in place.
+    """
+    d2, _ = dist_argmin(points, centers)
+    keep = (d2 > threshold).astype(jnp.int32)
+    return keep, d2

@@ -1,0 +1,23 @@
+"""Structural performance checks are part of the test suite: the AOT
+shapes must stay inside VMEM with double buffering and the lowered HLO
+must not duplicate the distance matmul."""
+
+from compile import analysis, aot
+
+
+def test_vmem_budget_all_shapes():
+    for _tag, tile_n, d, k in aot.SHAPES:
+        r = analysis.kernel_report(tile_n, d, k)
+        assert r["vmem_double_buffered_ok"], r
+
+
+def test_arithmetic_intensity_reasonable():
+    r = analysis.kernel_report(2048, 64, 256)
+    # distance kernel should be compute-bound-ish on TPU: >= 50 flops/byte
+    assert r["arith_intensity_flops_per_byte"] >= 50, r
+
+
+def test_hlo_single_dot_per_module():
+    for op in sorted(aot.OPS):
+        r = analysis.hlo_fusion_report(op, 256, 16, 32)
+        assert r["dot_count"] <= 2, r

@@ -1,0 +1,122 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+hypothesis sweeps shapes and data regimes; every case asserts allclose
+against kernels.ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import distance, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0, offset=0.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(offset, scale, shape).astype(np.float32))
+
+
+def check(points, centers):
+    d2, idx = distance.dist_argmin(points, centers)
+    rd2, ridx = ref.dist_argmin_ref(points, centers)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(rd2), rtol=1e-4, atol=1e-5)
+    # argmin may legitimately differ on exact ties; compare via distances.
+    diff = np.asarray(points)[:, None, :] - np.asarray(centers)[None, :, :]
+    all_d2 = (diff * diff).sum(-1)
+    picked = all_d2[np.arange(len(points)), np.asarray(idx)]
+    np.testing.assert_allclose(picked, np.asarray(rd2), rtol=1e-4, atol=1e-5)
+
+
+# --- hypothesis sweeps -----------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(1, 3),
+    d=st.integers(1, 17),
+    k=st.integers(1, 19),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_shapes(n_blocks, d, k, seed):
+    n = distance.BLOCK_N * n_blocks
+    check(rand((n, d), seed), rand((k, d), seed + 1))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([1, 2, 7, 63, 128, 255]),
+    d=st.integers(1, 8),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_small_n_single_block(n, d, k, seed):
+    # n <= BLOCK_N runs as a single block without padding.
+    check(rand((n, d), seed), rand((k, d), seed + 1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([1e-3, 1.0, 1e3]))
+def test_kernel_scale_regimes(seed, scale):
+    # catastrophic-cancellation regime: tight clusters far from origin. The
+    # MXU formulation ||x||^2 - 2xc + ||c||^2 has absolute error on the
+    # order of ||x||^2 * eps_f32 — the documented tradeoff vs the (x-c)^2
+    # form (which cannot use the MXU). Tolerance reflects that bound.
+    offset = 100.0
+    pts = rand((256, 8), seed, scale=scale, offset=offset)
+    cen = rand((5, 8), seed + 1, scale=scale, offset=offset)
+    d2, _ = distance.dist_argmin(pts, cen)
+    assert np.all(np.asarray(d2) >= 0.0), "clamp must kill negative distances"
+    rd2, _ = ref.dist_argmin_ref(pts, cen)
+    norm_sq = 8 * (offset**2 + scale**2)
+    atol = 32 * np.finfo(np.float32).eps * norm_sq  # cancellation bound
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(rd2), rtol=1e-3, atol=atol)
+
+
+# --- directed edge cases ---------------------------------------------------
+
+def test_point_on_center_is_zero():
+    cen = rand((4, 6), 0)
+    pts = jnp.concatenate([cen, rand((252, 6), 1)])
+    d2, idx = distance.dist_argmin(pts, cen)
+    np.testing.assert_allclose(np.asarray(d2[:4]), 0.0, atol=1e-6)
+    assert list(np.asarray(idx[:4])) == [0, 1, 2, 3]
+
+
+def test_k_equals_one():
+    pts, cen = rand((256, 3), 2), rand((1, 3), 3)
+    check(pts, cen)
+
+
+def test_sentinel_center_padding_never_wins():
+    # The rust runtime pads the center axis with far sentinels; verify.
+    pts = rand((256, 4), 4)
+    real = rand((3, 4), 5)
+    sentinel = jnp.full((5, 4), 1.0e17, jnp.float32)
+    cen = jnp.concatenate([real, sentinel])
+    d2, idx = distance.dist_argmin(pts, cen)
+    assert int(np.asarray(idx).max()) < 3
+    rd2, _ = ref.dist_argmin_ref(pts, real)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(rd2), rtol=1e-4)
+
+
+def test_zero_pad_feature_axis_preserves_distances():
+    pts, cen = rand((256, 5), 6), rand((4, 5), 7)
+    pad = lambda a, w: jnp.pad(a, ((0, 0), (0, w)))
+    d2a, _ = distance.dist_argmin(pts, cen)
+    d2b, _ = distance.dist_argmin(pad(pts, 11), pad(cen, 11))
+    np.testing.assert_allclose(np.asarray(d2a), np.asarray(d2b), rtol=1e-5)
+
+
+def test_non_divisible_n_raises():
+    with pytest.raises(ValueError):
+        distance.dist_argmin(rand((300, 4), 8), rand((3, 4), 9))
+
+
+def test_vmem_footprint_fits_main_shape():
+    # main artifact shape must fit VMEM with double buffering (16 MB).
+    fp = distance.vmem_footprint_bytes(d=64, k=256)
+    assert 2 * fp < 16 * 1024 * 1024
+    assert distance.mxu_flops_per_step(64, 256) == 2 * 256 * 256 * 64

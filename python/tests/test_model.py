@@ -1,0 +1,99 @@
+"""L2 graphs vs oracles: assign_cost, lloyd_step, removal_mask."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+def weights_like(n, seed, zero_tail=0):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.1, 2.0, n).astype(np.float32)
+    if zero_tail:
+        w[-zero_tail:] = 0.0
+    return jnp.asarray(w)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(1, 12), k=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_assign_cost_matches_ref(d, k, seed):
+    pts, cen = rand((256, d), seed), rand((k, d), seed + 1)
+    w = weights_like(256, seed + 2)
+    d2, idx, cost = model.assign_cost(pts, cen, w)
+    rd2, ridx, rcost = ref.assign_cost_ref(pts, cen, w)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(rd2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(cost), float(rcost), rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(1, 10), k=st.integers(2, 12), seed=st.integers(0, 2**31 - 1))
+def test_lloyd_step_matches_ref(d, k, seed):
+    pts, cen = rand((256, d), seed), rand((k, d), seed + 1)
+    w = weights_like(256, seed + 2)
+    sums, counts, cost = model.lloyd_step(pts, w, cen)
+    rs, rc, rcost = ref.lloyd_step_ref(pts, w, cen)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(rs), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(rc), rtol=1e-5)
+    np.testing.assert_allclose(float(cost), float(rcost), rtol=1e-4)
+
+
+def test_zero_weight_padding_contributes_nothing():
+    # The rust runtime pads the point axis with weight-0 rows.
+    pts, cen = rand((256, 6), 0), rand((4, 6), 1)
+    w_full = weights_like(256, 2)
+    w_pad = jnp.asarray(np.concatenate([np.asarray(w_full[:200]), np.zeros(56, np.float32)]))
+    s1, c1, cost1 = model.lloyd_step(pts[:200], w_full[:200], cen)
+    # pad with garbage rows but zero weight
+    pts_pad = jnp.concatenate([pts[:200], rand((56, 6), 3, scale=100.0)])
+    s2, c2, cost2 = model.lloyd_step(pts_pad, w_pad, cen)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-5)
+    np.testing.assert_allclose(float(cost1), float(cost2), rtol=1e-4)
+
+
+def test_lloyd_update_decreases_cost():
+    rng = np.random.default_rng(7)
+    pts = jnp.asarray(
+        np.concatenate(
+            [rng.normal(m, 0.2, (128, 5)) for m in (-3.0, 0.0, 3.0, 6.0)]
+        ).astype(np.float32)[:512]
+    )
+    w = jnp.ones(512, jnp.float32)
+    cen = pts[:4] + 0.5
+    _, _, cost0 = model.lloyd_step(pts, w, cen)
+    for _ in range(5):
+        sums, counts, cost = model.lloyd_step(pts, w, cen)
+        cen = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], cen)
+    _, _, cost1 = model.lloyd_step(pts, w, cen)
+    assert float(cost1) <= float(cost0) + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), thr=st.floats(0.0, 50.0))
+def test_removal_mask_matches_threshold(seed, thr):
+    pts, cen = rand((256, 5), seed), rand((6, 5), seed + 1)
+    keep, d2 = model.removal_mask(pts, cen, jnp.float32(thr))
+    rd2, _ = ref.dist_argmin_ref(pts, cen)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(rd2), rtol=1e-4, atol=1e-5)
+    expect = (np.asarray(rd2) > thr).astype(np.int32)
+    # tolerate boundary floats: disagreement only allowed within tolerance
+    dis = np.flatnonzero(expect != np.asarray(keep))
+    assert all(abs(float(rd2[i]) - thr) < 1e-3 * max(1.0, thr) for i in dis)
+
+
+def test_removal_mask_extremes():
+    pts, cen = rand((256, 4), 11), rand((3, 4), 12)
+    keep0, _ = model.removal_mask(pts, cen, jnp.float32(-1.0))
+    assert int(np.asarray(keep0).sum()) == 256  # everything survives
+    keep1, _ = model.removal_mask(pts, cen, jnp.float32(1e30))
+    assert int(np.asarray(keep1).sum()) == 0  # everything removed

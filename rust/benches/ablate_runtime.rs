@@ -1,0 +1,109 @@
+//! Ablation: PJRT (AOT JAX/Pallas artifacts) vs native rust distance
+//! engine — microbench of the three artifact ops plus an end-to-end
+//! SOCCER run under each engine. This is the §Perf anchor for L3 vs the
+//! runtime path.
+
+use soccer::bench_support::{fmt_val, Table};
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::data::gaussian::{generate, GaussianMixtureSpec};
+use soccer::machines::Fleet;
+use soccer::runtime::{Engine, NativeEngine, PjrtRuntime};
+use soccer::util::json::Json;
+use soccer::util::rng::Pcg64;
+use soccer::util::timer::timed;
+use soccer::Matrix;
+
+fn randmat(seed: u64, rows: usize, cols: usize) -> Matrix {
+    let mut rng = Pcg64::new(seed);
+    Matrix::from_vec((0..rows * cols).map(|_| rng.normal() as f32).collect(), rows, cols)
+}
+
+fn bench_engine(engine: &dyn Engine, pts: &Matrix, cen: &Matrix, reps: usize) -> (f64, f64) {
+    // warmup (compilation for pjrt)
+    let mut dist = Vec::new();
+    let mut idx = Vec::new();
+    engine.nearest(pts, cen, &mut dist, &mut idx);
+    let (_, nearest_s) = timed(|| {
+        for _ in 0..reps {
+            engine.nearest(pts, cen, &mut dist, &mut idx);
+        }
+    });
+    let mut keep = Vec::new();
+    engine.removal_keep(pts, cen, 1.0, &mut keep);
+    let (_, removal_s) = timed(|| {
+        for _ in 0..reps {
+            engine.removal_keep(pts, cen, 1.0, &mut keep);
+        }
+    });
+    (nearest_s / reps as f64, removal_s / reps as f64)
+}
+
+fn main() {
+    let n = soccer::bench_support::harness::bench_n(50_000);
+    let reps = soccer::bench_support::harness::bench_reps(3);
+    let pts = randmat(1, n, 15);
+    let cen = randmat(2, 96, 15);
+    let pjrt = PjrtRuntime::load_default().expect("run `make artifacts`");
+
+    let (nat_near, nat_rem) = bench_engine(&NativeEngine, &pts, &cen, reps);
+    let (pj_near, pj_rem) = bench_engine(&pjrt, &pts, &cen, reps);
+
+    let flops = 2.0 * n as f64 * 96.0 * 15.0;
+    let mut table = Table::new(
+        &format!("Runtime ablation: nearest/removal over {n}x15 pts, 96 centers"),
+        &["engine", "nearest (s)", "GFLOP/s", "removal (s)"],
+    );
+    table.row(vec![
+        "native".into(),
+        format!("{nat_near:.4}"),
+        format!("{:.2}", flops / nat_near / 1e9),
+        format!("{nat_rem:.4}"),
+    ]);
+    table.row(vec![
+        "pjrt".into(),
+        format!("{pj_near:.4}"),
+        format!("{:.2}", flops / pj_near / 1e9),
+        format!("{pj_rem:.4}"),
+    ]);
+    table.print();
+
+    // end-to-end SOCCER under each engine
+    let gm = generate(&GaussianMixtureSpec::paper(n, 10), &mut Pcg64::new(3));
+    let params = SoccerParams::new(10, 0.1);
+    let mut fleet = Fleet::new(&gm.points, 20, 4);
+    let out_nat = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 5);
+    fleet.reset();
+    let out_pj = run_soccer(&mut fleet, &pjrt, &params, &LloydKMeans::default(), 5);
+
+    let mut t2 = Table::new(
+        "End-to-end SOCCER by engine",
+        &["engine", "rounds", "cost", "T_total(s)"],
+    );
+    t2.row(vec![
+        "native".into(),
+        out_nat.rounds.to_string(),
+        fmt_val(out_nat.cost),
+        format!("{:.3}", out_nat.total_secs),
+    ]);
+    t2.row(vec![
+        "pjrt".into(),
+        out_pj.rounds.to_string(),
+        fmt_val(out_pj.cost),
+        format!("{:.3}", out_pj.total_secs),
+    ]);
+    t2.print();
+
+    let path = soccer::bench_support::harness::write_log(
+        "ablate_runtime",
+        Json::obj(vec![
+            ("native_nearest_s", Json::num(nat_near)),
+            ("pjrt_nearest_s", Json::num(pj_near)),
+            ("native_gflops", Json::num(flops / nat_near / 1e9)),
+            ("pjrt_gflops", Json::num(flops / pj_near / 1e9)),
+            ("e2e_native_s", Json::num(out_nat.total_secs)),
+            ("e2e_pjrt_s", Json::num(out_pj.total_secs)),
+        ]),
+    );
+    println!("log: {}", path.display());
+}

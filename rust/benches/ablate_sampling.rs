@@ -1,0 +1,93 @@
+//! Ablations on SOCCER's design choices (DESIGN.md §5):
+//! 1. exact-size vs Bernoulli sampling (App. A discussion),
+//! 2. sensitivity to the η coefficient (the coordinator-capacity /
+//!    approximation-constant tradeoff of §6's closing remark).
+
+use soccer::bench_support::{fmt_val, Table};
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::data::gaussian::{generate, GaussianMixtureSpec};
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::util::json::Json;
+use soccer::util::rng::Pcg64;
+
+fn main() {
+    let n = soccer::bench_support::harness::bench_n(80_000);
+    let reps = soccer::bench_support::harness::bench_reps(3);
+    let k = 10usize;
+    let eps = 0.1;
+    let gm = generate(&GaussianMixtureSpec::paper(n, k), &mut Pcg64::new(1));
+    let mut fleet = Fleet::new(&gm.points, 20, 2);
+
+    // 1. sampling mechanism
+    let mut t1 = Table::new(
+        "Ablation: exact-size vs Bernoulli sampling",
+        &["sampling", "rounds", "cost", "|C_out|"],
+    );
+    let mut log = Vec::new();
+    for exact in [true, false] {
+        let mut rounds = 0.0;
+        let mut cost = 0.0;
+        let mut outsz = 0.0;
+        for rep in 0..reps {
+            fleet.reset();
+            let mut params = SoccerParams::new(k, eps);
+            params.exact_sampling = exact;
+            let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 10 + rep as u64);
+            rounds += out.rounds as f64;
+            cost += out.cost;
+            outsz += out.output_size as f64;
+        }
+        let r = reps as f64;
+        t1.row(vec![
+            if exact { "exact (paper expts)" } else { "bernoulli (Alg.1)" }.into(),
+            format!("{:.2}", rounds / r),
+            fmt_val(cost / r),
+            format!("{:.0}", outsz / r),
+        ]);
+        log.push(Json::obj(vec![
+            ("exact", Json::Bool(exact)),
+            ("rounds", Json::num(rounds / r)),
+            ("cost", Json::num(cost / r)),
+        ]));
+    }
+    t1.print();
+
+    // 2. eta coefficient sweep (coordinator capacity <-> rounds tradeoff)
+    let mut t2 = Table::new(
+        "Ablation: eta coefficient (coordinator capacity)",
+        &["eta_coeff", "|P1|", "rounds", "cost"],
+    );
+    for coeff in [9.0, 18.0, 36.0, 72.0] {
+        let mut rounds = 0.0;
+        let mut cost = 0.0;
+        let mut params = SoccerParams::new(k, eps);
+        params.constants.eta_coeff = coeff;
+        for rep in 0..reps {
+            fleet.reset();
+            let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 50 + rep as u64);
+            rounds += out.rounds as f64;
+            cost += out.cost;
+        }
+        let r = reps as f64;
+        t2.row(vec![
+            format!("{coeff}"),
+            params.eta(n).to_string(),
+            format!("{:.2}", rounds / r),
+            fmt_val(cost / r),
+        ]);
+        log.push(Json::obj(vec![
+            ("eta_coeff", Json::num(coeff)),
+            ("rounds", Json::num(rounds / r)),
+            ("cost", Json::num(cost / r)),
+        ]));
+    }
+    t2.print();
+    println!("expected: smaller eta => more rounds at similar cost (paper's Appendix D.1 observation).");
+    let path = soccer::bench_support::harness::write_log(
+        "ablate_sampling",
+        Json::obj(vec![("rows", Json::Arr(log))]),
+    );
+    println!("log: {}", path.display());
+}

@@ -1,0 +1,50 @@
+//! Table 1: dataset inventory — sizes, dimensions and generation
+//! throughput of the paper's datasets / our surrogates, plus the
+//! qualitative properties that drive the other tables (cost scale,
+//! heavy-tailedness).
+
+use soccer::bench_support::{fmt_val, Table};
+use soccer::clustering::LloydKMeans;
+use soccer::baselines::run_centralized;
+use soccer::data;
+use soccer::util::json::Json;
+use soccer::util::stats;
+use soccer::util::timer::timed;
+
+fn main() {
+    let n = soccer::bench_support::harness::bench_n(50_000);
+    let mut table = Table::new(
+        &format!("Table 1: dataset inventory (surrogates at n={n}; paper n in DESIGN.md)"),
+        &["Dataset", "#points", "dim", "gen (s)", "central cost (k=25)", "tail ratio p99/p50"],
+    );
+    let mut log = Vec::new();
+    for name in data::DATASET_NAMES {
+        let (ds, gen_s) = timed(|| data::by_name(name, n, 25, 7));
+        let central = run_centralized(&ds.points, 25, &LloydKMeans::default(), 8);
+        // per-point cost tail
+        let pp = soccer::core::cost::per_point_costs(&ds.points, &central.centers);
+        let ppd: Vec<f64> = pp.iter().map(|&x| x as f64).collect();
+        let p50 = stats::quantile(&ppd, 0.5).max(1e-12);
+        let p99 = stats::quantile(&ppd, 0.99);
+        table.row(vec![
+            name.into(),
+            ds.points.rows().to_string(),
+            ds.points.cols().to_string(),
+            format!("{gen_s:.2}"),
+            fmt_val(central.cost),
+            format!("{:.1}", p99 / p50),
+        ]);
+        log.push(Json::obj(vec![
+            ("dataset", Json::str(name)),
+            ("dim", Json::num(ds.points.cols() as f64)),
+            ("central_cost", Json::num(central.cost)),
+            ("tail_ratio", Json::num(p99 / p50)),
+        ]));
+    }
+    table.print();
+    let path = soccer::bench_support::harness::write_log(
+        "bench_datasets",
+        Json::obj(vec![("n", Json::num(n as f64)), ("rows", Json::Arr(log))]),
+    );
+    println!("log: {}", path.display());
+}

@@ -1,0 +1,81 @@
+//! §8's EIM11 argument, quantified: the coordinator broadcast per round
+//! and the resulting machine time for EIM11 vs SOCCER vs k-means||. The
+//! paper's example (k=100, n=10⁷, ε=0.1): EIM11 broadcasts 72,000 points
+//! per round vs ~200 for SOCCER/k-means||, making machine time ~100x.
+
+use soccer::baselines::Eim11;
+use soccer::bench_support::experiments::*;
+use soccer::bench_support::{fmt_val, Table};
+use soccer::config::ExperimentConfig;
+use soccer::coordinator::SoccerParams;
+use soccer::runtime::NativeEngine;
+use soccer::util::json::Json;
+
+fn main() {
+    let n = soccer::bench_support::harness::bench_n(100_000);
+    let k = 25usize;
+    let eps = 0.1;
+    let cfg = ExperimentConfig {
+        n,
+        repetitions: 1,
+        machines: 50,
+        ..Default::default()
+    };
+    let mut fleet = build_fleet(&cfg, k);
+
+    // paper's formula-level comparison at the paper's own scale
+    let params = SoccerParams::new(100, 0.1);
+    let eim_paper = Eim11::new(100, 0.1);
+    println!(
+        "paper-scale broadcast per round (k=100, n=1e7, eps=0.1): EIM11 {} vs SOCCER k+ = {}",
+        eim_paper.sample_size(10_000_000),
+        params.k_plus()
+    );
+
+    // measured at bench scale
+    let soc = soccer_cell(&mut fleet, &NativeEngine, &cfg, k, eps);
+    let km = kmeans_par_cells(&mut fleet, &NativeEngine, &cfg, k, &[5]);
+    let eim = eim11_cell(&mut fleet, &NativeEngine, &cfg, k, eps);
+
+    let mut table = Table::new(
+        &format!("EIM11 blowup (k={k}, eps={eps}, n={n})"),
+        &["ALG", "rounds", "broadcast/round", "cost", "T_mach(s)"],
+    );
+    table.row(vec![
+        "SOCCER".into(),
+        format!("{:.1}", soc.rounds.mean()),
+        SoccerParams::new(k, eps).k_plus().to_string(),
+        fmt_val(soc.cost.mean()),
+        format!("{:.4}", soc.t_machine.mean()),
+    ]);
+    table.row(vec![
+        "k-means||".into(),
+        "5".into(),
+        format!("{}", 2 * k),
+        fmt_val(km[0].cost.mean()),
+        format!("{:.4}", km[0].t_machine.mean()),
+    ]);
+    table.row(vec![
+        "EIM11".into(),
+        format!("{:.1}", eim.rounds.mean()),
+        format!("{:.0}", eim.broadcast_per_round.mean()),
+        fmt_val(eim.cost.mean()),
+        format!("{:.4}", eim.t_machine.mean()),
+    ]);
+    table.print();
+    println!(
+        "machine-time blowup EIM11/SOCCER: x{:.1} | broadcast blowup: x{:.1}",
+        eim.t_machine.mean() / soc.t_machine.mean().max(1e-12),
+        eim.broadcast_per_round.mean() / SoccerParams::new(k, eps).k_plus() as f64
+    );
+    let path = soccer::bench_support::harness::write_log(
+        "eim11_blowup",
+        Json::obj(vec![
+            ("soccer_t", Json::num(soc.t_machine.mean())),
+            ("eim11_t", Json::num(eim.t_machine.mean())),
+            ("soccer_broadcast", Json::num(SoccerParams::new(k, eps).k_plus() as f64)),
+            ("eim11_broadcast", Json::num(eim.broadcast_per_round.mean())),
+        ]),
+    );
+    println!("log: {}", path.display());
+}

@@ -1,0 +1,35 @@
+//! Microbench of the native nearest-center kernel (the L3 machine-side
+//! hot loop) across the dataset shapes the paper uses. §Perf's
+//! before/after numbers come from here.
+
+use soccer::core::distance::nearest_center_into;
+use soccer::util::rng::Pcg64;
+use soccer::util::timer::timed;
+use soccer::Matrix;
+
+fn randmat(seed: u64, rows: usize, cols: usize) -> Matrix {
+    let mut rng = Pcg64::new(seed);
+    Matrix::from_vec((0..rows * cols).map(|_| rng.normal() as f32).collect(), rows, cols)
+}
+
+fn main() {
+    let n = soccer::bench_support::harness::bench_n(100_000);
+    let reps = soccer::bench_support::harness::bench_reps(5);
+    println!("nearest-center microbench: n={n}, reps={reps}");
+    println!("{:<22} {:>10} {:>10}", "shape (d, k)", "secs", "GFLOP/s");
+    for (d, k) in [(15usize, 96usize), (28, 109), (42, 109), (57, 109), (68, 109), (15, 384), (64, 256)] {
+        let pts = randmat(1, n, d);
+        let cen = randmat(2, k, d);
+        let mut dist = vec![0.0f32; n];
+        let mut idx = vec![0u32; n];
+        nearest_center_into(&pts, &cen, &mut dist, &mut idx); // warm
+        let (_, secs) = timed(|| {
+            for _ in 0..reps {
+                nearest_center_into(&pts, &cen, &mut dist, &mut idx);
+            }
+        });
+        let per = secs / reps as f64;
+        let gflops = 2.0 * n as f64 * k as f64 * d as f64 / per / 1e9;
+        println!("{:<22} {:>10.4} {:>10.2}", format!("d={d}, k={k}"), per, gflops);
+    }
+}

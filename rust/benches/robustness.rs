@@ -1,0 +1,113 @@
+//! Extension bench (paper §9 future work): SOCCER-(k,z) outlier
+//! robustness and machine-failure tolerance.
+//!
+//! Outliers: plant z far-out junk points in a Gaussian mixture; compare
+//! plain SOCCER vs robust SOCCER on the trimmed cost (cost excluding
+//! the z farthest points — the (k,z) objective).
+//! Failures: kill a growing fraction of machines at round 1 and watch
+//! cost/termination degrade gracefully.
+
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::robust::fleet_trimmed_cost;
+use soccer::coordinator::{run_soccer, run_soccer_robust, RobustConfig, SoccerParams};
+use soccer::bench_support::{fmt_val, Table};
+use soccer::data::gaussian::{expected_optimal_cost, generate, GaussianMixtureSpec};
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::util::json::Json;
+use soccer::util::rng::Pcg64;
+use soccer::Matrix;
+use std::collections::BTreeMap;
+
+fn planted(n: usize, k: usize, z: usize, seed: u64) -> (Matrix, f64) {
+    let spec = GaussianMixtureSpec::paper(n, k);
+    let gm = generate(&spec, &mut Pcg64::new(seed));
+    let mut pts = gm.points;
+    let mut rng = Pcg64::new(seed + 1);
+    for _ in 0..z {
+        let mut row = vec![0.0f32; pts.cols()];
+        for v in &mut row {
+            *v = (rng.normal() * 1e3) as f32;
+        }
+        pts.push_row(&row);
+    }
+    (pts, expected_optimal_cost(&spec))
+}
+
+fn main() {
+    let n = soccer::bench_support::harness::bench_n(50_000);
+    let k = 10usize;
+
+    // --- outliers ----------------------------------------------------------
+    let mut t1 = Table::new(
+        "SOCCER-(k,z): trimmed cost under planted outliers",
+        &["z planted", "plain trimmed", "robust trimmed", "clean optimal~"],
+    );
+    let mut log = Vec::new();
+    for z in [10usize, 100, 500] {
+        let (pts, opt) = planted(n, k, z, 21);
+        let mut fleet = Fleet::new(&pts, 20, 22);
+        let params = SoccerParams::new(k, 0.15);
+        let plain = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 23);
+        let plain_trimmed = fleet_trimmed_cost(&mut fleet, &plain.final_centers, z, &NativeEngine);
+        fleet.reset();
+        let cfg = RobustConfig {
+            outliers_z: z,
+            ..Default::default()
+        };
+        let robust =
+            run_soccer_robust(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), &cfg, 23);
+        t1.row(vec![
+            z.to_string(),
+            fmt_val(plain_trimmed),
+            fmt_val(robust.trimmed_cost),
+            fmt_val(opt),
+        ]);
+        log.push(Json::obj(vec![
+            ("z", Json::num(z as f64)),
+            ("plain_trimmed", Json::num(plain_trimmed)),
+            ("robust_trimmed", Json::num(robust.trimmed_cost)),
+            ("optimal", Json::num(opt)),
+        ]));
+    }
+    t1.print();
+
+    // --- machine failures ----------------------------------------------------
+    let mut t2 = Table::new(
+        "Machine failures at round 1 (of 20 machines)",
+        &["failed", "points lost", "rounds", "cost on survivors", "finished"],
+    );
+    let (pts, _) = planted(n, k, 0, 31);
+    for failed in [0usize, 2, 5, 10] {
+        let mut fleet = Fleet::new(&pts, 20, 32);
+        let params = SoccerParams::new(k, 0.15);
+        let mut failures = BTreeMap::new();
+        if failed > 0 {
+            failures.insert(1usize, (0..failed).collect::<Vec<_>>());
+        }
+        let cfg = RobustConfig {
+            outliers_z: 0,
+            failures,
+        };
+        let out =
+            run_soccer_robust(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), &cfg, 33);
+        t2.row(vec![
+            failed.to_string(),
+            out.points_lost.to_string(),
+            out.base.rounds.to_string(),
+            fmt_val(out.base.cost),
+            (!out.base.telemetry.forced_drain).to_string(),
+        ]);
+        log.push(Json::obj(vec![
+            ("failed", Json::num(failed as f64)),
+            ("points_lost", Json::num(out.points_lost as f64)),
+            ("cost", Json::num(out.base.cost)),
+        ]));
+    }
+    t2.print();
+    let path = soccer::bench_support::harness::write_log(
+        "robustness",
+        Json::obj(vec![("rows", Json::Arr(log))]),
+    );
+    println!("log: {}", path.display());
+}

@@ -1,0 +1,74 @@
+//! Scaling behaviour (supports the §4/§8 communication discussion):
+//! - n-sweep: SOCCER rounds stay flat while η grows as nᵉ;
+//! - m-sweep: per-machine communication 2η/m shrinks with the fleet
+//!   while total communication is unchanged;
+//! - machine time vs m: more machines → smaller shards → faster rounds.
+
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::bench_support::{fmt_val, Table};
+use soccer::data::gaussian::{generate, GaussianMixtureSpec};
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::util::json::Json;
+use soccer::util::rng::Pcg64;
+
+fn main() {
+    let k = 10usize;
+    let eps = 0.1;
+    let mut log = Vec::new();
+
+    let mut t1 = Table::new(
+        "n-sweep (k=10, eps=0.1, m=20)",
+        &["n", "eta", "rounds", "cost/n (x1e-6)", "T_mach(s)"],
+    );
+    for n in [20_000usize, 50_000, 100_000, 200_000] {
+        let gm = generate(&GaussianMixtureSpec::paper(n, k), &mut Pcg64::new(1));
+        let mut fleet = Fleet::new(&gm.points, 20, 2);
+        let params = SoccerParams::new(k, eps);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 3);
+        t1.row(vec![
+            n.to_string(),
+            params.eta(n).to_string(),
+            out.rounds.to_string(),
+            format!("{:.3}", out.cost / n as f64 * 1e6),
+            format!("{:.4}", out.telemetry.machine_time()),
+        ]);
+        log.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("rounds", Json::num(out.rounds as f64)),
+            ("t_machine", Json::num(out.telemetry.machine_time())),
+        ]));
+    }
+    t1.print();
+
+    let n = soccer::bench_support::harness::bench_n(100_000);
+    let gm = generate(&GaussianMixtureSpec::paper(n, k), &mut Pcg64::new(4));
+    let mut t2 = Table::new(
+        &format!("m-sweep (n={n}): per-machine communication and time"),
+        &["machines", "rounds", "to-coord total", "per-machine", "T_mach(s)", "cost"],
+    );
+    for m in [5usize, 20, 50, 200] {
+        let mut fleet = Fleet::new(&gm.points, m, 5);
+        let params = SoccerParams::new(k, eps);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 6);
+        let total_comm = out.telemetry.comm.to_coordinator;
+        t2.row(vec![
+            m.to_string(),
+            out.rounds.to_string(),
+            total_comm.to_string(),
+            (total_comm / m).to_string(),
+            format!("{:.4}", out.telemetry.machine_time()),
+            fmt_val(out.cost),
+        ]);
+        log.push(Json::obj(vec![
+            ("m", Json::num(m as f64)),
+            ("per_machine_comm", Json::num((total_comm / m) as f64)),
+            ("t_machine", Json::num(out.telemetry.machine_time())),
+        ]));
+    }
+    t2.print();
+    let path =
+        soccer::bench_support::harness::write_log("scaling", Json::obj(vec![("rows", Json::Arr(log))]));
+    println!("log: {}", path.display());
+}

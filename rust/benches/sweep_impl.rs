@@ -1,0 +1,110 @@
+//! Tables 4–8: the full sweep with the standard-KMeans black box — for
+//! each dataset, SOCCER over ε ∈ {0.2, 0.1, 0.05, 0.01} and k-means||
+//! over rounds 1–5, for each k. Reports output size, rounds, cost,
+//! T(machine) and T(total), mean±std over repetitions.
+//!
+//! One paper table per dataset; select with SOCCER_BENCH_DATASET
+//! (default: all five, reduced k grid — SOCCER_BENCH_FULL=1 for the
+//! paper's full k ∈ {25,50,100,200}).
+
+use soccer::bench_support::experiments::*;
+use soccer::bench_support::Table;
+use soccer::config::ExperimentConfig;
+use soccer::util::json::Json;
+
+pub fn run_sweep(blackbox: &str, log_name: &str) {
+    let n = soccer::bench_support::harness::bench_n(100_000);
+    let reps = soccer::bench_support::harness::bench_reps(3);
+    let full = std::env::var("SOCCER_BENCH_FULL").is_ok();
+    let ks: Vec<usize> = if full {
+        vec![25, 50, 100, 200]
+    } else {
+        vec![25, 50]
+    };
+    let epsilons = [0.2, 0.1, 0.05, 0.01];
+    let kmpar_rounds = [1usize, 2, 3, 4, 5];
+    let datasets: Vec<String> = match std::env::var("SOCCER_BENCH_DATASET") {
+        Ok(d) => vec![d],
+        Err(_) => ["gaussian", "higgs", "census", "kdd", "bigcross"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+
+    let mut log_rows = Vec::new();
+    for dataset in &datasets {
+        let mut table = Table::new(
+            &format!("Tables 4-8 sweep: {dataset} (blackbox={blackbox}, n={n})"),
+            &["k", "ALG", "eps/R", "|P1|", "Out size", "Rounds", "Cost", "T_mach(s)", "T_total(s)"],
+        );
+        for &k in &ks {
+            let cfg = ExperimentConfig {
+                dataset: dataset.clone(),
+                n,
+                repetitions: reps,
+                machines: 50,
+                blackbox: blackbox.into(),
+                ..Default::default()
+            };
+            let engine_box = EngineBox::by_name(&cfg.engine);
+            let engine = engine_box.engine();
+            let mut fleet = build_fleet(&cfg, k);
+
+            for &eps in &epsilons {
+                let c = soccer_cell(&mut fleet, engine, &cfg, k, eps);
+                table.row(vec![
+                    k.to_string(),
+                    "SOCCER".into(),
+                    format!("{eps}"),
+                    c.p1_size.to_string(),
+                    c.output_size.fmt(),
+                    c.rounds.fmt(),
+                    c.cost.fmt(),
+                    c.t_machine.fmt(),
+                    c.t_total.fmt(),
+                ]);
+                log_rows.push(Json::obj(vec![
+                    ("dataset", Json::str(dataset.clone())),
+                    ("alg", Json::str("soccer")),
+                    ("k", Json::num(k as f64)),
+                    ("eps", Json::num(eps)),
+                    ("p1", Json::num(c.p1_size as f64)),
+                    ("rounds", Json::num(c.rounds.mean())),
+                    ("cost", Json::num(c.cost.mean())),
+                    ("cost_std", Json::num(c.cost.std())),
+                    ("t_machine", Json::num(c.t_machine.mean())),
+                    ("t_total", Json::num(c.t_total.mean())),
+                ]));
+            }
+            for cell in kmeans_par_cells(&mut fleet, engine, &cfg, k, &kmpar_rounds) {
+                table.row(vec![
+                    k.to_string(),
+                    "k-means||".into(),
+                    format!("R={}", cell.rounds),
+                    "-".into(),
+                    cell.output_size.fmt(),
+                    cell.rounds.to_string(),
+                    cell.cost.fmt(),
+                    cell.t_machine.fmt(),
+                    cell.t_total.fmt(),
+                ]);
+                log_rows.push(Json::obj(vec![
+                    ("dataset", Json::str(dataset.clone())),
+                    ("alg", Json::str("kmeans_par")),
+                    ("k", Json::num(k as f64)),
+                    ("rounds", Json::num(cell.rounds as f64)),
+                    ("cost", Json::num(cell.cost.mean())),
+                    ("cost_std", Json::num(cell.cost.std())),
+                    ("t_machine", Json::num(cell.t_machine.mean())),
+                    ("t_total", Json::num(cell.t_total.mean())),
+                ]));
+            }
+        }
+        table.print();
+    }
+    let path = soccer::bench_support::harness::write_log(
+        log_name,
+        Json::obj(vec![("n", Json::num(n as f64)), ("rows", Json::Arr(log_rows))]),
+    );
+    println!("log: {}", path.display());
+}

@@ -1,0 +1,8 @@
+//! Tables 4-8: full sweep, standard-KMeans black box. See sweep_impl.rs.
+
+#[path = "sweep_impl.rs"]
+mod sweep;
+
+fn main() {
+    sweep::run_sweep("kmeans", "table4_8");
+}

@@ -1,0 +1,12 @@
+//! Tables 9-13: the Appendix D.2 sweep -- identical to Tables 4-8 but
+//! with MiniBatchKMeans as SOCCER's black box. The paper's observation
+//! to reproduce: similar costs with smaller coordinator time on most
+//! datasets, but a cost blow-up on KDD (MiniBatch fails on it -- same
+//! signature as our KDD surrogate).
+
+#[path = "sweep_impl.rs"]
+mod sweep;
+
+fn main() {
+    sweep::run_sweep("minibatch", "table9_13");
+}

@@ -1,0 +1,72 @@
+//! Theorem 7.1: on a k-spherical-Gaussian mixture with large enough
+//! dimension, SOCCER stops after ONE round with a constant approximation
+//! factor. Sweep the dimension and watch rounds pin to 1 and the
+//! cost/optimal ratio stay constant.
+
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::bench_support::{fmt_val, Table};
+use soccer::data::gaussian::{expected_optimal_cost, generate, GaussianMixtureSpec};
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::util::json::Json;
+use soccer::util::rng::Pcg64;
+
+fn main() {
+    let n = soccer::bench_support::harness::bench_n(50_000);
+    let reps = soccer::bench_support::harness::bench_reps(3);
+    let k = 10usize;
+    let eps = 0.1;
+
+    let mut table = Table::new(
+        "Theorem 7.1: Gaussian mixture => one round, constant approximation",
+        &["dim", "rounds (mean)", "cost", "optimal~", "ratio", "removed r1 (%)"],
+    );
+    let mut log_rows = Vec::new();
+    for dim in [5usize, 15, 50, 100] {
+        let spec = GaussianMixtureSpec {
+            n,
+            k,
+            dim,
+            sigma: 0.001,
+            zipf_gamma: 1.5,
+        };
+        let opt = expected_optimal_cost(&spec);
+        let mut rounds_sum = 0.0;
+        let mut cost_sum = 0.0;
+        let mut removed_frac = 0.0;
+        for rep in 0..reps {
+            let gm = generate(&spec, &mut Pcg64::new(100 + rep as u64));
+            let mut fleet = Fleet::new(&gm.points, 20, 200 + rep as u64);
+            let params = SoccerParams::new(k, eps);
+            let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), rep as u64);
+            rounds_sum += out.rounds as f64;
+            cost_sum += out.cost;
+            if let Some(r1) = out.telemetry.rounds.first() {
+                removed_frac += r1.removed as f64 / n as f64;
+            }
+        }
+        let rounds = rounds_sum / reps as f64;
+        let cost = cost_sum / reps as f64;
+        table.row(vec![
+            dim.to_string(),
+            format!("{rounds:.2}"),
+            fmt_val(cost),
+            fmt_val(opt),
+            format!("{:.2}", cost / opt),
+            format!("{:.1}", 100.0 * removed_frac / reps as f64),
+        ]);
+        log_rows.push(Json::obj(vec![
+            ("dim", Json::num(dim as f64)),
+            ("rounds", Json::num(rounds)),
+            ("ratio", Json::num(cost / opt)),
+        ]));
+    }
+    table.print();
+    println!("expected: rounds -> 1 and ratio O(1) as dim grows (Theorem 7.1).");
+    let path = soccer::bench_support::harness::write_log(
+        "theorem71",
+        Json::obj(vec![("n", Json::num(n as f64)), ("rows", Json::Arr(log_rows))]),
+    );
+    println!("log: {}", path.display());
+}

@@ -1,0 +1,75 @@
+//! Theorem 7.2: the Bachem-style hard instance. k-means|| cannot reach a
+//! finite approximation factor in fewer than k-1 rounds (OPT = 0, so any
+//! positive cost is an infinite factor); SOCCER finds the optimal
+//! clustering in ONE round.
+
+use soccer::baselines::KmeansParallel;
+use soccer::bench_support::{fmt_val, Table};
+use soccer::clustering::{weighted, LloydKMeans};
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::data::hard_instance;
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::util::json::Json;
+use soccer::util::rng::Pcg64;
+
+fn main() {
+    let n0 = soccer::bench_support::harness::bench_n(20_000);
+    let mut table = Table::new(
+        "Theorem 7.2: hard instance (OPT = 0)",
+        &["k", "SOCCER rounds", "SOCCER cost", "km|| cost @R=1", "@R=k/2", "@R=k-1", "@R=k"],
+    );
+    let mut log_rows = Vec::new();
+
+    for k in [5usize, 10, 15] {
+        let inst = hard_instance::generate(k, n0);
+        let mut fleet = Fleet::new(&inst.points, 10, 42);
+
+        // SOCCER: one round, optimal (zero) cost expected
+        let params = SoccerParams::new(k, 0.2);
+        let soc = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 1);
+
+        // k-means|| snapshots at R = 1, k/2, k-1, k
+        let rounds_grid = [1usize, (k / 2).max(1), k - 1, k];
+        fleet.reset();
+        let mut rng = Pcg64::new(7);
+        let km = KmeansParallel::new(k, k);
+        let (snaps, _, _) = km.run_with_snapshots(&mut fleet, &NativeEngine, &rounds_grid, &mut rng);
+        let mut km_costs = Vec::new();
+        for snap in &snaps {
+            let counts = fleet.counts_full(&snap.centers_pre, &NativeEngine);
+            let reduced = weighted::reduce_with_weights(
+                &snap.centers_pre,
+                &counts.value,
+                k,
+                &LloydKMeans::default(),
+                &mut rng,
+            );
+            km_costs.push(fleet.cost_full(&reduced, &NativeEngine).value);
+        }
+
+        table.row(vec![
+            k.to_string(),
+            soc.rounds.to_string(),
+            fmt_val(soc.cost),
+            fmt_val(km_costs[0]),
+            fmt_val(km_costs[1]),
+            fmt_val(km_costs[2]),
+            fmt_val(km_costs[3]),
+        ]);
+        log_rows.push(Json::obj(vec![
+            ("k", Json::num(k as f64)),
+            ("soccer_rounds", Json::num(soc.rounds as f64)),
+            ("soccer_cost", Json::num(soc.cost)),
+            ("kmpar_cost_r1", Json::num(km_costs[0])),
+            ("kmpar_cost_rk", Json::num(km_costs[3])),
+        ]));
+    }
+    table.print();
+    println!("expected: SOCCER cost = 0 after 1 round; k-means|| cost > 0 until ~k-1 rounds.");
+    let path = soccer::bench_support::harness::write_log(
+        "theorem72",
+        Json::obj(vec![("rows", Json::Arr(log_rows))]),
+    );
+    println!("log: {}", path.display());
+}

@@ -1,0 +1,49 @@
+//! Centralized reference: run the black box on the entire dataset at
+//! the coordinator. Infeasible in the coordinator model (it is the thing
+//! the distributed algorithms avoid) but it provides the cost floor the
+//! experiment tables are judged against.
+
+use crate::clustering::blackbox::BlackBox;
+use crate::core::Matrix;
+use crate::util::rng::Pcg64;
+use std::time::Instant;
+
+pub struct CentralizedOutcome {
+    pub centers: Matrix,
+    pub cost: f64,
+    pub total_secs: f64,
+}
+
+pub fn run_centralized(
+    points: &Matrix,
+    k: usize,
+    blackbox: &dyn BlackBox,
+    seed: u64,
+) -> CentralizedOutcome {
+    let t0 = Instant::now();
+    let mut rng = Pcg64::new(seed);
+    let centers = blackbox.cluster(points, k, &mut rng);
+    let cost = crate::core::cost::cost(points, &centers);
+    CentralizedOutcome {
+        centers,
+        cost,
+        total_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::LloydKMeans;
+    use crate::data::gaussian::{expected_optimal_cost, generate, GaussianMixtureSpec};
+
+    #[test]
+    fn near_optimal_on_gaussian_mixture() {
+        let spec = GaussianMixtureSpec::paper(10_000, 5);
+        let gm = generate(&spec, &mut Pcg64::new(1));
+        let out = run_centralized(&gm.points, 5, &LloydKMeans::default(), 2);
+        let opt = expected_optimal_cost(&spec);
+        assert!(out.cost < 3.0 * opt, "cost {} vs opt {opt}", out.cost);
+        assert_eq!(out.centers.rows(), 5);
+    }
+}

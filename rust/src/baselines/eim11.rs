@@ -1,0 +1,219 @@
+//! EIM11 — the distributed clustering scheme of Ene, Im & Moseley
+//! (KDD 2011), adapted from k-median to k-means (paper §2/§8).
+//!
+//! Per round: machines send two uniform samples of total size
+//! s = 9·k·nᵉ·ln(n) (the sample the paper's §8 cites as "72,000 points
+//! for k=100, n=10⁷, ε=0.1"). The coordinator adds the FIRST sample to
+//! its output clustering, computes a distance quantile of the SECOND
+//! sample against that clustering as the removal threshold, and — unlike
+//! SOCCER — **broadcasts the entire accumulated sample set** to the
+//! machines, which then discard the q-fraction of points within the
+//! threshold. A fixed fraction is removed each round, so the round count
+//! never adapts to the data; machine-side work is dominated by distances
+//! against the huge broadcast set. `benches/eim11_blowup.rs` reproduces
+//! the §8 blowup argument quantitatively.
+
+use crate::clustering::blackbox::BlackBox;
+use crate::clustering::weighted;
+use crate::core::cost::per_point_costs;
+use crate::core::Matrix;
+use crate::machines::Fleet;
+use crate::runtime::Engine;
+use crate::telemetry::{RoundLog, RunTelemetry};
+use crate::util::rng::Pcg64;
+use crate::util::stats::quantile;
+use std::time::Instant;
+
+pub struct Eim11 {
+    pub k: usize,
+    pub epsilon: f64,
+    /// removal quantile per round (fraction of remaining points removed)
+    pub removal_fraction: f64,
+    /// cap on rounds (the worst case is ~1/ε like SOCCER's)
+    pub max_rounds: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Eim11Outcome {
+    pub centers_pre: Matrix,
+    pub final_centers: Matrix,
+    pub rounds: usize,
+    pub cost: f64,
+    pub output_size: usize,
+    pub telemetry: RunTelemetry,
+    pub total_secs: f64,
+}
+
+impl Eim11 {
+    pub fn new(k: usize, epsilon: f64) -> Eim11 {
+        Eim11 {
+            k,
+            epsilon,
+            removal_fraction: 0.75,
+            max_rounds: ((2.0 / epsilon).ceil() as usize).max(4),
+        }
+    }
+
+    /// Per-round sample size s = 9·k·nᵉ·ln(n).
+    pub fn sample_size(&self, n: usize) -> usize {
+        let s = 9.0 * self.k as f64 * (n as f64).powf(self.epsilon) * (n as f64).ln();
+        (s.round() as usize).clamp(self.k + 1, n.max(self.k + 1))
+    }
+
+    /// Coordinator capacity (same η scale as SOCCER for comparability).
+    fn capacity(&self, n: usize) -> usize {
+        crate::coordinator::SoccerParams::new(self.k, self.epsilon).eta(n)
+    }
+
+    pub fn run(
+        &self,
+        fleet: &mut Fleet,
+        engine: &dyn Engine,
+        blackbox: &dyn BlackBox,
+        seed: u64,
+    ) -> Eim11Outcome {
+        let t0 = Instant::now();
+        let mut rng = Pcg64::new(seed);
+        let n0 = fleet.total_live();
+        let dim = fleet.dim();
+        let mut telemetry = RunTelemetry::default();
+        let mut centers_pre = Matrix::with_capacity(1024, dim);
+        let mut rounds = 0usize;
+        let cap = self.capacity(n0);
+
+        while fleet.total_live() > cap && rounds < self.max_rounds {
+            rounds += 1;
+            let n_live = fleet.total_live();
+            let s = self.sample_size(n0).min(n_live);
+
+            // two samples to the coordinator
+            let sample = fleet.sample_pair_exact(s, &mut rng);
+            let (s1, s2) = sample.value;
+            let sampled = s1.rows() + s2.rows();
+
+            // coordinator: S1 joins the clustering; quantile of S2's
+            // distances to the WHOLE accumulated clustering = threshold
+            let t_coord = Instant::now();
+            centers_pre.extend(&s1);
+            let d2: Vec<f64> = per_point_costs(&s2, &centers_pre)
+                .iter()
+                .map(|&d| d as f64)
+                .collect();
+            let thr = if d2.is_empty() {
+                0.0
+            } else {
+                quantile(&d2, self.removal_fraction)
+            };
+            let coord_secs = t_coord.elapsed().as_secs_f64();
+
+            // EIM11's defining drawback: the broadcast is the entire
+            // accumulated center set (all points the coordinator kept)
+            let broadcast = centers_pre.rows();
+            let removal = fleet.broadcast_remove(&centers_pre, thr as f32, engine);
+
+            telemetry.push_round(RoundLog {
+                round: rounds,
+                sampled,
+                broadcast,
+                removed: removal.value,
+                remaining: fleet.total_live(),
+                threshold: thr,
+                machine_time_max: sample.max_secs + removal.max_secs,
+                coordinator_time: coord_secs,
+            });
+            if removal.value == 0 {
+                break; // quantile 0 → no progress possible
+            }
+        }
+
+        // collect the remainder into the clustering
+        let rest = fleet.drain();
+        telemetry.comm.to_coordinator += rest.rows();
+        centers_pre.extend(&rest);
+
+        // weighted reduction to k (the coordinator-side final clustering)
+        let counts = fleet.counts_full(&centers_pre, engine);
+        let final_centers =
+            weighted::reduce_with_weights(&centers_pre, &counts.value, self.k, blackbox, &mut rng);
+        let cost = fleet.cost_full(&final_centers, engine).value;
+
+        Eim11Outcome {
+            output_size: centers_pre.rows(),
+            centers_pre,
+            final_centers,
+            rounds,
+            cost,
+            telemetry,
+            total_secs: t0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::LloydKMeans;
+    use crate::data::gaussian::{generate, GaussianMixtureSpec};
+    use crate::runtime::NativeEngine;
+
+    fn fleet(n: usize, k: usize, seed: u64) -> Fleet {
+        let gm = generate(&GaussianMixtureSpec::paper(n, k), &mut Pcg64::new(seed));
+        Fleet::new(&gm.points, 8, seed + 1)
+    }
+
+    #[test]
+    fn removes_fixed_fraction_each_round() {
+        let mut f = fleet(20_000, 5, 1);
+        let alg = Eim11::new(5, 0.15);
+        let out = alg.run(&mut f, &NativeEngine, &LloydKMeans::default(), 2);
+        assert!(out.rounds >= 1);
+        for r in &out.telemetry.rounds {
+            let before = r.remaining + r.removed;
+            let frac = r.removed as f64 / before as f64;
+            // ~75% removed (quantile rule), sampling noise allowed
+            assert!(frac > 0.5, "round {} removed only {frac}", r.round);
+        }
+    }
+
+    #[test]
+    fn broadcast_grows_every_round_and_dwarfs_soccer() {
+        let mut f = fleet(30_000, 5, 3);
+        let alg = Eim11::new(5, 0.1);
+        let out = alg.run(&mut f, &NativeEngine, &LloydKMeans::default(), 4);
+        let rounds = &out.telemetry.rounds;
+        for w in rounds.windows(2) {
+            assert!(w[1].broadcast > w[0].broadcast);
+        }
+        // §8: EIM11 broadcasts orders of magnitude more than SOCCER's k₊
+        let soccer_broadcast = crate::coordinator::SoccerParams::new(5, 0.1).k_plus();
+        assert!(
+            rounds[0].broadcast > 10 * soccer_broadcast,
+            "eim11 {} vs soccer {}",
+            rounds[0].broadcast,
+            soccer_broadcast
+        );
+    }
+
+    #[test]
+    fn cost_is_reasonable_despite_blowup() {
+        let mut f = fleet(20_000, 5, 5);
+        let alg = Eim11::new(5, 0.15);
+        let out = alg.run(&mut f, &NativeEngine, &LloydKMeans::default(), 6);
+        let central = LloydKMeans::default().cluster(
+            &generate(&GaussianMixtureSpec::paper(20_000, 5), &mut Pcg64::new(5)).points,
+            5,
+            &mut Pcg64::new(7),
+        );
+        let central_cost = f.cost_full(&central, &NativeEngine).value;
+        assert!(out.cost < 50.0 * central_cost.max(1e-9), "{} vs {central_cost}", out.cost);
+        assert!(out.final_centers.rows() <= 5);
+    }
+
+    #[test]
+    fn sample_size_formula() {
+        let alg = Eim11::new(100, 0.1);
+        // §8's example: k=100, n=10^7, eps=0.1 → ≈ 72k points
+        let s = alg.sample_size(10_000_000);
+        assert!((60_000..90_000).contains(&s), "s={s}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Comparison baselines: k-means|| (Bahmani et al. 2012), EIM11 (Ene et
+//! al. 2011) and the centralized reference.
+
+pub mod centralized;
+pub mod eim11;
+pub mod kmeans_parallel;
+
+pub use centralized::{run_centralized, CentralizedOutcome};
+pub use eim11::{Eim11, Eim11Outcome};
+pub use kmeans_parallel::{KmeansParallel, KmeansParallelOutcome};

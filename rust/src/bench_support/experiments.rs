@@ -1,0 +1,288 @@
+//! The shared experiment executor behind every table bench: builds the
+//! dataset + fleet, runs SOCCER / k-means|| / EIM11 with the paper's
+//! repetition protocol, and aggregates exactly the columns the paper
+//! reports (output size, rounds, cost, T(machine), T(total)).
+
+use super::harness::Agg;
+use crate::baselines::{Eim11, KmeansParallel};
+use crate::clustering::blackbox::BlackBox;
+use crate::clustering::{weighted, LloydKMeans, MiniBatch};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{run_soccer, SoccerParams};
+use crate::data;
+use crate::machines::Fleet;
+use crate::runtime::{Engine, NativeEngine, PjrtRuntime};
+use crate::util::rng::Pcg64;
+
+/// Aggregated SOCCER cell (one (dataset, k, ε) configuration).
+#[derive(Clone, Debug, Default)]
+pub struct SoccerCell {
+    pub p1_size: usize,
+    pub output_size: Agg,
+    pub rounds: Agg,
+    pub cost: Agg,
+    pub t_machine: Agg,
+    pub t_total: Agg,
+}
+
+/// Aggregated k-means|| cell (one (dataset, k, rounds) configuration).
+#[derive(Clone, Debug, Default)]
+pub struct KmParCell {
+    pub rounds: usize,
+    pub output_size: Agg,
+    pub cost: Agg,
+    pub t_machine: Agg,
+    pub t_total: Agg,
+}
+
+/// Aggregated EIM11 cell.
+#[derive(Clone, Debug, Default)]
+pub struct Eim11Cell {
+    pub rounds: Agg,
+    pub broadcast_per_round: Agg,
+    pub output_size: Agg,
+    pub cost: Agg,
+    pub t_machine: Agg,
+    pub t_total: Agg,
+}
+
+pub fn make_blackbox(name: &str) -> Box<dyn BlackBox> {
+    match name {
+        "kmeans" => Box::new(LloydKMeans::default()),
+        "minibatch" => Box::new(MiniBatch::default()),
+        other => panic!("unknown blackbox '{other}' (kmeans|minibatch)"),
+    }
+}
+
+/// Engine holder: owns the PJRT runtime when selected.
+pub enum EngineBox {
+    Native(NativeEngine),
+    Pjrt(Box<PjrtRuntime>),
+}
+
+impl EngineBox {
+    pub fn by_name(name: &str) -> EngineBox {
+        match name {
+            "native" => EngineBox::Native(NativeEngine),
+            "pjrt" => EngineBox::Pjrt(Box::new(
+                PjrtRuntime::load_default().expect("PJRT runtime (run `make artifacts`)"),
+            )),
+            other => panic!("unknown engine '{other}' (native|pjrt)"),
+        }
+    }
+
+    pub fn engine(&self) -> &dyn Engine {
+        match self {
+            EngineBox::Native(e) => e,
+            EngineBox::Pjrt(rt) => rt.as_ref(),
+        }
+    }
+}
+
+/// Build the fleet for a config cell (dataset regenerated per k for the
+/// Gaussian mixture, like the paper).
+pub fn build_fleet(cfg: &ExperimentConfig, k: usize) -> Fleet {
+    let ds = data::by_name(&cfg.dataset, cfg.n, k, cfg.seed);
+    Fleet::new(&ds.points, cfg.machines, cfg.seed ^ 0x5eed)
+}
+
+/// SOCCER with the paper's repetition protocol on an existing fleet.
+pub fn soccer_cell(
+    fleet: &mut Fleet,
+    engine: &dyn Engine,
+    cfg: &ExperimentConfig,
+    k: usize,
+    eps: f64,
+) -> SoccerCell {
+    let mut params = SoccerParams::new(k, eps);
+    params.delta = cfg.delta;
+    let blackbox = make_blackbox(&cfg.blackbox);
+    let mut cell = SoccerCell {
+        p1_size: params.eta(fleet.total_original()),
+        ..Default::default()
+    };
+    for rep in 0..cfg.repetitions {
+        fleet.reset_with_seed(cfg.seed ^ (1000 + rep as u64));
+        let out = run_soccer(fleet, engine, &params, blackbox.as_ref(), cfg.seed + 31 * rep as u64);
+        cell.output_size.push(out.output_size as f64);
+        cell.rounds.push(out.rounds as f64);
+        cell.cost.push(out.cost);
+        cell.t_machine.push(out.telemetry.machine_time());
+        cell.t_total.push(out.total_secs);
+    }
+    cell
+}
+
+/// One k-means|| run per repetition, snapshotted after each round in
+/// `round_grid` — mirrors the paper's "stop after r rounds" columns.
+/// Cost of a snapshot = cost after the standard weighted reduction.
+pub fn kmeans_par_cells(
+    fleet: &mut Fleet,
+    engine: &dyn Engine,
+    cfg: &ExperimentConfig,
+    k: usize,
+    round_grid: &[usize],
+) -> Vec<KmParCell> {
+    let blackbox = make_blackbox(&cfg.blackbox);
+    let max_rounds = *round_grid.iter().max().unwrap_or(&1);
+    let mut cells: Vec<KmParCell> = round_grid
+        .iter()
+        .map(|&r| KmParCell {
+            rounds: r,
+            ..Default::default()
+        })
+        .collect();
+    for rep in 0..cfg.repetitions {
+        fleet.reset_with_seed(cfg.seed ^ (2000 + rep as u64));
+        let mut rng = Pcg64::new(cfg.seed + 77 * rep as u64);
+        let km = KmeansParallel::new(k, max_rounds);
+        let (snaps, telemetry, _) = km.run_with_snapshots(fleet, engine, round_grid, &mut rng);
+        for (cell, snap) in cells.iter_mut().zip(&snaps) {
+            // machine time if stopped after `snap.round` rounds
+            let t_machine: f64 = telemetry.rounds[..snap.round]
+                .iter()
+                .map(|r| r.machine_time_max)
+                .sum();
+            let t0 = std::time::Instant::now();
+            let counts = fleet.counts_full(&snap.centers_pre, engine);
+            let final_centers = weighted::reduce_with_weights(
+                &snap.centers_pre,
+                &counts.value,
+                k,
+                blackbox.as_ref(),
+                &mut rng,
+            );
+            let cost = fleet.cost_full(&final_centers, engine).value;
+            let reduction_secs = t0.elapsed().as_secs_f64();
+            cell.output_size.push(snap.centers_pre.rows() as f64);
+            cell.cost.push(cost);
+            cell.t_machine.push(t_machine);
+            cell.t_total.push(t_machine + reduction_secs);
+        }
+    }
+    cells
+}
+
+/// EIM11 cell with repetitions.
+pub fn eim11_cell(
+    fleet: &mut Fleet,
+    engine: &dyn Engine,
+    cfg: &ExperimentConfig,
+    k: usize,
+    eps: f64,
+) -> Eim11Cell {
+    let blackbox = make_blackbox(&cfg.blackbox);
+    let mut cell = Eim11Cell::default();
+    for rep in 0..cfg.repetitions {
+        fleet.reset_with_seed(cfg.seed ^ (3000 + rep as u64));
+        let alg = Eim11::new(k, eps);
+        let out = alg.run(fleet, engine, blackbox.as_ref(), cfg.seed + 13 * rep as u64);
+        cell.rounds.push(out.rounds as f64);
+        let mean_bcast = if out.telemetry.rounds.is_empty() {
+            0.0
+        } else {
+            out.telemetry.rounds.iter().map(|r| r.broadcast as f64).sum::<f64>()
+                / out.telemetry.rounds.len() as f64
+        };
+        cell.broadcast_per_round.push(mean_bcast);
+        cell.output_size.push(out.output_size as f64);
+        cell.cost.push(out.cost);
+        cell.t_machine.push(out.telemetry.machine_time());
+        cell.t_total.push(out.total_secs);
+    }
+    cell
+}
+
+/// k-means|| "run until within `slack` of `target_cost`" (paper Table 3,
+/// right columns). Returns (rounds used, machine time) or None if the
+/// cap was hit.
+pub fn kmeans_par_until_cost(
+    fleet: &mut Fleet,
+    engine: &dyn Engine,
+    cfg: &ExperimentConfig,
+    k: usize,
+    target_cost: f64,
+    slack: f64,
+    max_rounds: usize,
+) -> Option<(usize, f64)> {
+    let blackbox = make_blackbox(&cfg.blackbox);
+    fleet.reset();
+    let mut rng = Pcg64::new(cfg.seed ^ 0xeeee);
+    let km = KmeansParallel::new(k, max_rounds);
+    let all_rounds: Vec<usize> = (1..=max_rounds).collect();
+    let (snaps, telemetry, _) = km.run_with_snapshots(fleet, engine, &all_rounds, &mut rng);
+    for snap in &snaps {
+        let counts = fleet.counts_full(&snap.centers_pre, engine);
+        let final_centers = weighted::reduce_with_weights(
+            &snap.centers_pre,
+            &counts.value,
+            k,
+            blackbox.as_ref(),
+            &mut rng,
+        );
+        let cost = fleet.cost_full(&final_centers, engine).value;
+        if cost <= target_cost * (1.0 + slack) {
+            let t: f64 = telemetry.rounds[..snap.round]
+                .iter()
+                .map(|r| r.machine_time_max)
+                .sum();
+            return Some((snap.round, t));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            n: 10_000,
+            machines: 8,
+            repetitions: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn soccer_cell_aggregates() {
+        let cfg = tiny_cfg();
+        let mut fleet = build_fleet(&cfg, 5);
+        let cell = soccer_cell(&mut fleet, &NativeEngine, &cfg, 5, 0.2);
+        assert_eq!(cell.cost.values.len(), 2);
+        assert!(cell.cost.mean() > 0.0);
+        assert!(cell.rounds.mean() >= 0.0);
+        assert!(cell.p1_size > 0);
+    }
+
+    #[test]
+    fn kmpar_cells_cover_round_grid() {
+        let cfg = tiny_cfg();
+        let mut fleet = build_fleet(&cfg, 5);
+        let cells = kmeans_par_cells(&mut fleet, &NativeEngine, &cfg, 5, &[1, 3]);
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].rounds, 1);
+        assert_eq!(cells[1].rounds, 3);
+        // more rounds -> more centers, cost no worse (usually)
+        assert!(cells[1].output_size.mean() >= cells[0].output_size.mean());
+    }
+
+    #[test]
+    fn until_cost_terminates() {
+        let cfg = tiny_cfg();
+        let mut fleet = build_fleet(&cfg, 5);
+        // huge target => 1 round suffices
+        let r = kmeans_par_until_cost(&mut fleet, &NativeEngine, &cfg, 5, 1e18, 0.02, 4);
+        assert_eq!(r.unwrap().0, 1);
+        // impossible target => None
+        let r = kmeans_par_until_cost(&mut fleet, &NativeEngine, &cfg, 5, 1e-18, 0.02, 2);
+        assert!(r.is_none());
+    }
+
+    #[test]
+    fn blackbox_factory() {
+        assert_eq!(make_blackbox("kmeans").name(), "kmeans");
+        assert_eq!(make_blackbox("minibatch").name(), "minibatch");
+    }
+}

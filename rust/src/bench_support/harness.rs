@@ -1,0 +1,176 @@
+//! Bench harness (offline substrate for `criterion`): repetition loop
+//! with mean±std aggregation, paper-style table printing, and JSON logs
+//! under `target/bench_logs/` that EXPERIMENTS.md references.
+
+use crate::util::json::Json;
+use crate::util::stats::{mean, std};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// Aggregate of repeated measurements.
+#[derive(Clone, Debug, Default)]
+pub struct Agg {
+    pub values: Vec<f64>,
+}
+
+impl Agg {
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.values)
+    }
+
+    pub fn std(&self) -> f64 {
+        std(&self.values)
+    }
+
+    /// "12.3 ±0.4" with magnitude-aware formatting.
+    pub fn fmt(&self) -> String {
+        format!("{} ±{}", fmt_val(self.mean()), fmt_val(self.std()))
+    }
+}
+
+/// Human-friendly numeric formatting across the paper's 10⁻² .. 10¹²
+/// cost range.
+pub fn fmt_val(v: f64) -> String {
+    if v.is_nan() {
+        return "-".into();
+    }
+    let a = v.abs();
+    if a >= 1e6 {
+        format!("{v:.3e}")
+    } else if a >= 100.0 {
+        format!("{v:.0}")
+    } else if a >= 1.0 {
+        format!("{v:.2}")
+    } else if a == 0.0 {
+        "0".into()
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Fixed-width table printer matching the paper's row layout.
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n=== {} ===", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Write a bench's JSON log under target/bench_logs/<name>.json.
+pub fn write_log(name: &str, payload: Json) -> PathBuf {
+    let dir = PathBuf::from("target/bench_logs");
+    std::fs::create_dir_all(&dir).ok();
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, payload.to_string()).expect("write bench log");
+    path
+}
+
+/// Benches honor SOCCER_BENCH_N / SOCCER_BENCH_REPS for quick CI runs.
+pub fn bench_n(default: usize) -> usize {
+    std::env::var("SOCCER_BENCH_N")
+        .ok()
+        .and_then(|v| v.replace('_', "").parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn bench_reps(default: usize) -> usize {
+    std::env::var("SOCCER_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agg_mean_std() {
+        let mut a = Agg::default();
+        a.push(1.0);
+        a.push(3.0);
+        assert_eq!(a.mean(), 2.0);
+        assert!((a.std() - std::f64::consts::SQRT_2).abs() < 1e-12);
+        assert!(a.fmt().contains('±'));
+    }
+
+    #[test]
+    fn fmt_val_ranges() {
+        assert_eq!(fmt_val(f64::NAN), "-");
+        assert_eq!(fmt_val(0.0), "0");
+        assert!(fmt_val(1.5e12).contains('e'));
+        assert_eq!(fmt_val(150.4), "150");
+        assert_eq!(fmt_val(3.25), "3.25");
+        assert_eq!(fmt_val(0.0371), "0.0371");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["a", "bbbb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        let s = t.render();
+        assert!(s.contains("=== Demo ==="));
+        assert!(s.contains("333"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn env_overrides() {
+        std::env::remove_var("SOCCER_BENCH_N");
+        assert_eq!(bench_n(123), 123);
+    }
+}

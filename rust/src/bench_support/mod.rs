@@ -1,0 +1,8 @@
+//! Benchmark support: the repetition/aggregation harness (criterion
+//! substitute) and the shared experiment executor used by every
+//! `rust/benches/*.rs` table generator.
+
+pub mod experiments;
+pub mod harness;
+
+pub use harness::{fmt_val, Agg, Table};

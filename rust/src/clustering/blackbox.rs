@@ -1,0 +1,150 @@
+//! The centralized black-box k-means algorithm `A` of the paper
+//! (Theorem 4.1 assumes a β-approximation; the experiments instantiate it
+//! with scikit-learn's KMeans or MiniBatchKMeans — here with our own
+//! k-means++/Lloyd and MiniBatch implementations).
+
+use super::lloyd::lloyd;
+use super::minibatch::{minibatch_kmeans, MiniBatchConfig};
+use super::kmeanspp;
+use crate::core::Matrix;
+use crate::util::rng::Pcg64;
+
+/// A centralized k-means algorithm: S, k → at most k centers.
+pub trait BlackBox: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Cluster `points` into (at most) `k` centers.
+    fn cluster(&self, points: &Matrix, k: usize, rng: &mut Pcg64) -> Matrix {
+        self.cluster_weighted(points, None, k, rng)
+    }
+
+    /// Weighted variant (used by the final k-center reduction).
+    fn cluster_weighted(
+        &self,
+        points: &Matrix,
+        weights: Option<&[f64]>,
+        k: usize,
+        rng: &mut Pcg64,
+    ) -> Matrix;
+}
+
+/// "Standard KMeans": k-means++ seeding + full Lloyd refinement — the
+/// paper's default black box (§8, Tables 4–8).
+#[derive(Clone, Debug)]
+pub struct LloydKMeans {
+    pub max_iter: usize,
+    pub tol: f64,
+}
+
+impl Default for LloydKMeans {
+    fn default() -> Self {
+        // sklearn defaults: max_iter=300/tol=1e-4; 40 iterations is where
+        // our Lloyd converges on every bench dataset (see EXPERIMENTS.md)
+        LloydKMeans {
+            max_iter: 40,
+            tol: 1e-4,
+        }
+    }
+}
+
+impl BlackBox for LloydKMeans {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn cluster_weighted(
+        &self,
+        points: &Matrix,
+        weights: Option<&[f64]>,
+        k: usize,
+        rng: &mut Pcg64,
+    ) -> Matrix {
+        if points.rows() <= k {
+            return points.clone();
+        }
+        let idx = kmeanspp::seed_indices_weighted(points, weights, k, rng);
+        let init = points.select(&idx);
+        lloyd(points, weights, init, self.max_iter, self.tol).centers
+    }
+}
+
+/// MiniBatchKMeans black box (paper Appendix D.2, Tables 9–13).
+#[derive(Clone, Debug, Default)]
+pub struct MiniBatch {
+    pub cfg: MiniBatchConfig,
+}
+
+impl BlackBox for MiniBatch {
+    fn name(&self) -> &'static str {
+        "minibatch"
+    }
+
+    fn cluster_weighted(
+        &self,
+        points: &Matrix,
+        weights: Option<&[f64]>,
+        k: usize,
+        rng: &mut Pcg64,
+    ) -> Matrix {
+        minibatch_kmeans(points, weights, k, &self.cfg, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::cost::cost;
+
+    fn blobs(seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let mut m = Matrix::with_capacity(300, 2);
+        for b in 0..3 {
+            for _ in 0..100 {
+                let c = b as f32 * 40.0;
+                m.push_row(&[c + rng.normal() as f32, c + rng.normal() as f32]);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn lloyd_blackbox_near_optimal_on_blobs() {
+        let pts = blobs(1);
+        let mut rng = Pcg64::new(2);
+        let centers = LloydKMeans::default().cluster(&pts, 3, &mut rng);
+        assert_eq!(centers.rows(), 3);
+        assert!(cost(&pts, &centers) / 300.0 < 4.0);
+    }
+
+    #[test]
+    fn both_blackboxes_respect_k() {
+        let pts = blobs(3);
+        let mut rng = Pcg64::new(4);
+        for bb in [&LloydKMeans::default() as &dyn BlackBox, &MiniBatch::default()] {
+            let c = bb.cluster(&pts, 7, &mut rng);
+            assert!(c.rows() <= 7, "{}", bb.name());
+            assert_eq!(c.cols(), 2);
+        }
+    }
+
+    #[test]
+    fn tiny_input_returns_input() {
+        let pts = Matrix::from_rows(&[&[1.0, 1.0], &[2.0, 2.0]]);
+        let mut rng = Pcg64::new(5);
+        let c = LloydKMeans::default().cluster(&pts, 5, &mut rng);
+        assert_eq!(c.rows(), 2);
+    }
+
+    #[test]
+    fn lloyd_beats_minibatch_usually() {
+        // standard KMeans should be at least as good on easy data
+        let pts = blobs(6);
+        let mut c_l = 0.0;
+        let mut c_m = 0.0;
+        for s in 0..5 {
+            c_l += cost(&pts, &LloydKMeans::default().cluster(&pts, 3, &mut Pcg64::new(s)));
+            c_m += cost(&pts, &MiniBatch::default().cluster(&pts, 3, &mut Pcg64::new(s)));
+        }
+        assert!(c_l <= c_m * 1.5, "lloyd={c_l} minibatch={c_m}");
+    }
+}

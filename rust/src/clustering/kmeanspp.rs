@@ -1,0 +1,189 @@
+//! k-means++ seeding (Arthur & Vassilvitskii 2007), plain and weighted.
+//!
+//! This is the initialization of both centralized black boxes, the
+//! weighted-reduction step shared by SOCCER and k-means||, and (in its
+//! weighted form) the final stage of k-means|| itself.
+
+use crate::core::distance::update_nearest;
+use crate::core::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Seed `k` centers from `points` with D² sampling. Returns row indices.
+pub fn seed_indices(points: &Matrix, k: usize, rng: &mut Pcg64) -> Vec<usize> {
+    seed_indices_weighted(points, None, k, rng)
+}
+
+/// Weighted k-means++: selection probability ∝ w(x)·D²(x).
+///
+/// `weights = None` means unit weights. If `k >= points.rows()` every
+/// point is selected. Duplicate geometric points are handled: once all
+/// remaining D² mass is zero, selection falls back to weighted-uniform
+/// among unchosen points.
+pub fn seed_indices_weighted(
+    points: &Matrix,
+    weights: Option<&[f64]>,
+    k: usize,
+    rng: &mut Pcg64,
+) -> Vec<usize> {
+    let n = points.rows();
+    assert!(n > 0, "cannot seed from an empty set");
+    if let Some(w) = weights {
+        assert_eq!(w.len(), n);
+    }
+    if k >= n {
+        return (0..n).collect();
+    }
+    let wval = |i: usize| weights.map(|w| w[i]).unwrap_or(1.0).max(0.0);
+
+    // first center: weighted-uniform
+    let first = sample_weighted_index(rng, n, &wval);
+    let mut chosen = vec![first];
+    let mut dist = vec![f32::INFINITY; n];
+    update_nearest(points, &points.select(&[first]), &mut dist, None);
+
+    while chosen.len() < k {
+        // total w·D² mass
+        let total: f64 = (0..n).map(|i| wval(i) * dist[i] as f64).sum();
+        let next = if total > 0.0 {
+            let mut r = rng.f64() * total;
+            let mut pick = None;
+            for i in 0..n {
+                let m = wval(i) * dist[i] as f64;
+                if m <= 0.0 {
+                    continue;
+                }
+                if r < m {
+                    pick = Some(i);
+                    break;
+                }
+                r -= m;
+            }
+            pick.unwrap_or_else(|| (0..n).rev().find(|&i| wval(i) * dist[i] as f64 > 0.0).unwrap())
+        } else {
+            // all mass zero (duplicates): weighted-uniform among unchosen
+            match (0..n).find(|i| !chosen.contains(i)) {
+                Some(fallback) => {
+                    let mut cands: Vec<usize> = (0..n).filter(|i| !chosen.contains(i)).collect();
+                    rng.shuffle(&mut cands);
+                    cands.pop().unwrap_or(fallback)
+                }
+                None => break,
+            }
+        };
+        chosen.push(next);
+        update_nearest(points, &points.select(&[next]), &mut dist, None);
+    }
+    chosen
+}
+
+/// Seed `k` centers and materialize them as a Matrix.
+pub fn seed(points: &Matrix, k: usize, rng: &mut Pcg64) -> Matrix {
+    points.select(&seed_indices(points, k, rng))
+}
+
+fn sample_weighted_index(rng: &mut Pcg64, n: usize, w: &impl Fn(usize) -> f64) -> usize {
+    let total: f64 = (0..n).map(w).sum();
+    if total <= 0.0 {
+        return rng.below(n);
+    }
+    let mut r = rng.f64() * total;
+    for i in 0..n {
+        let wi = w(i);
+        if r < wi {
+            return i;
+        }
+        r -= wi;
+    }
+    n - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::cost::cost;
+
+    fn blobs(seed: u64) -> Matrix {
+        // 3 well-separated blobs of 30 points each in 2-D
+        let mut rng = Pcg64::new(seed);
+        let mut m = Matrix::with_capacity(90, 2);
+        for &c in &[0.0f32, 100.0, 200.0] {
+            for _ in 0..30 {
+                m.push_row(&[c + rng.normal() as f32, c + rng.normal() as f32]);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn selects_k_distinct_indices() {
+        let pts = blobs(1);
+        let mut rng = Pcg64::new(2);
+        let idx = seed_indices(&pts, 5, &mut rng);
+        assert_eq!(idx.len(), 5);
+        let set: std::collections::HashSet<_> = idx.iter().collect();
+        assert_eq!(set.len(), 5);
+    }
+
+    #[test]
+    fn k_ge_n_returns_everything() {
+        let pts = Matrix::from_rows(&[&[0.0], &[1.0], &[2.0]]);
+        let mut rng = Pcg64::new(3);
+        assert_eq!(seed_indices(&pts, 3, &mut rng), vec![0, 1, 2]);
+        assert_eq!(seed_indices(&pts, 10, &mut rng), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn separated_blobs_get_one_seed_each() {
+        let pts = blobs(4);
+        let mut rng = Pcg64::new(5);
+        let centers = seed(&pts, 3, &mut rng);
+        // D^2 seeding on well-separated blobs hits all three almost surely
+        let mut hit = [false; 3];
+        for i in 0..3 {
+            let c = centers.row(i)[0];
+            for (b, &m) in [0.0f32, 100.0, 200.0].iter().enumerate() {
+                if (c - m).abs() < 20.0 {
+                    hit[b] = true;
+                }
+            }
+        }
+        assert!(hit.iter().all(|&h| h), "blob missed: {hit:?}");
+    }
+
+    #[test]
+    fn seeding_cost_beats_uniform_on_average() {
+        let pts = blobs(6);
+        let mut pp_cost = 0.0;
+        let mut uni_cost = 0.0;
+        for s in 0..10 {
+            let mut rng = Pcg64::new(100 + s);
+            pp_cost += cost(&pts, &seed(&pts, 3, &mut rng));
+            let mut rng = Pcg64::new(200 + s);
+            let idx = rng.sample_indices(pts.rows(), 3);
+            uni_cost += cost(&pts, &pts.select(&idx));
+        }
+        assert!(pp_cost <= uni_cost, "pp={pp_cost} uni={uni_cost}");
+    }
+
+    #[test]
+    fn zero_weight_points_never_first() {
+        // point 0 has weight 0; first seed must avoid it
+        let pts = Matrix::from_rows(&[&[0.0], &[1.0], &[2.0]]);
+        let w = [0.0, 1.0, 1.0];
+        for s in 0..20 {
+            let mut rng = Pcg64::new(s);
+            let idx = seed_indices_weighted(&pts, Some(&w), 1, &mut rng);
+            assert_ne!(idx[0], 0);
+        }
+    }
+
+    #[test]
+    fn all_duplicates_still_returns_k() {
+        let pts = Matrix::from_vec(vec![7.0; 10], 10, 1);
+        let mut rng = Pcg64::new(9);
+        let idx = seed_indices(&pts, 4, &mut rng);
+        assert_eq!(idx.len(), 4);
+        let set: std::collections::HashSet<_> = idx.iter().collect();
+        assert_eq!(set.len(), 4);
+    }
+}

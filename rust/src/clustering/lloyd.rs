@@ -1,0 +1,179 @@
+//! Weighted Lloyd iterations — the refinement stage of both black boxes.
+//!
+//! Mirrors the L2 `lloyd_step` graph: assign, accumulate weighted sums
+//! and counts, divide, reseed empty clusters to the most expensive point.
+
+use crate::core::distance::nearest_center_into;
+use crate::core::Matrix;
+
+/// Outcome of a Lloyd refinement.
+#[derive(Clone, Debug)]
+pub struct LloydResult {
+    pub centers: Matrix,
+    pub cost: f64,
+    pub iterations: usize,
+}
+
+/// Run weighted Lloyd from `init` until relative cost improvement drops
+/// below `tol` or `max_iter` iterations. `weights=None` = unit weights.
+pub fn lloyd(
+    points: &Matrix,
+    weights: Option<&[f64]>,
+    init: Matrix,
+    max_iter: usize,
+    tol: f64,
+) -> LloydResult {
+    let n = points.rows();
+    let d = points.cols();
+    let k = init.rows();
+    assert!(k > 0, "lloyd needs at least one center");
+    if let Some(w) = weights {
+        assert_eq!(w.len(), n);
+    }
+    let wval = |i: usize| weights.map(|w| w[i]).unwrap_or(1.0);
+
+    let mut centers = init;
+    let mut dist = vec![0.0f32; n];
+    let mut idx = vec![0u32; n];
+    let mut prev_cost = f64::INFINITY;
+    let mut iterations = 0;
+
+    for it in 0..max_iter.max(1) {
+        iterations = it + 1;
+        nearest_center_into(points, &centers, &mut dist, &mut idx);
+        let cost: f64 = (0..n).map(|i| wval(i) * dist[i] as f64).sum();
+
+        // accumulate weighted sums/counts
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0.0f64; k];
+        for i in 0..n {
+            let w = wval(i);
+            if w == 0.0 {
+                continue;
+            }
+            let c = idx[i] as usize;
+            counts[c] += w;
+            let p = points.row(i);
+            let s = &mut sums[c * d..(c + 1) * d];
+            for (sj, pj) in s.iter_mut().zip(p) {
+                *sj += w * *pj as f64;
+            }
+        }
+
+        // update centers; reseed empties to the currently worst point
+        let mut worst: Vec<usize> = (0..n).collect();
+        worst.sort_by(|&a, &b| dist[b].partial_cmp(&dist[a]).unwrap());
+        let mut worst_iter = worst.into_iter();
+        for c in 0..k {
+            if counts[c] > 0.0 {
+                let row = centers.row_mut(c);
+                for (j, r) in row.iter_mut().enumerate() {
+                    *r = (sums[c * d + j] / counts[c]) as f32;
+                }
+            } else if let Some(w) = worst_iter.next() {
+                centers.row_mut(c).copy_from_slice(points.row(w));
+            }
+        }
+
+        if prev_cost.is_finite() && (prev_cost - cost) <= tol * prev_cost.abs() {
+            prev_cost = cost;
+            break;
+        }
+        prev_cost = cost;
+    }
+
+    // final cost w.r.t. the updated centers
+    nearest_center_into(points, &centers, &mut dist, &mut idx);
+    let final_cost: f64 = (0..n).map(|i| wval(i) * dist[i] as f64).sum();
+    LloydResult {
+        centers,
+        cost: final_cost.min(prev_cost),
+        iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::kmeanspp;
+    use crate::core::cost::cost;
+    use crate::util::rng::Pcg64;
+
+    fn blobs(seed: u64, sep: f32) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let mut m = Matrix::with_capacity(120, 3);
+        for b in 0..4 {
+            for _ in 0..30 {
+                let c = b as f32 * sep;
+                m.push_row(&[
+                    c + rng.normal() as f32 * 0.1,
+                    c + rng.normal() as f32 * 0.1,
+                    c + rng.normal() as f32 * 0.1,
+                ]);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn cost_never_increases() {
+        let pts = blobs(1, 10.0);
+        let mut rng = Pcg64::new(2);
+        let init = kmeanspp::seed(&pts, 4, &mut rng);
+        let init_cost = cost(&pts, &init);
+        let res = lloyd(&pts, None, init, 25, 0.0);
+        assert!(res.cost <= init_cost + 1e-9, "{} > {}", res.cost, init_cost);
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let pts = blobs(3, 50.0);
+        let mut rng = Pcg64::new(4);
+        let init = kmeanspp::seed(&pts, 4, &mut rng);
+        let res = lloyd(&pts, None, init, 50, 1e-9);
+        // near-optimal: every point within ~0.5 of a center
+        assert!(res.cost / (pts.rows() as f64) < 0.25, "avg cost {}", res.cost);
+    }
+
+    #[test]
+    fn tolerance_stops_early() {
+        let pts = blobs(5, 50.0);
+        let mut rng = Pcg64::new(6);
+        let init = kmeanspp::seed(&pts, 4, &mut rng);
+        let res = lloyd(&pts, None, init, 100, 0.5);
+        assert!(res.iterations < 100);
+    }
+
+    #[test]
+    fn weighted_pull_matches_duplication() {
+        // weight w on a point ≈ w copies of the point
+        let pts = Matrix::from_rows(&[&[0.0], &[1.0], &[10.0]]);
+        let w = [1.0, 1.0, 3.0];
+        let init = Matrix::from_rows(&[&[0.5]]);
+        let res_w = lloyd(&pts, Some(&w), init.clone(), 5, 0.0);
+        let dup = Matrix::from_rows(&[&[0.0], &[1.0], &[10.0], &[10.0], &[10.0]]);
+        let res_d = lloyd(&dup, None, init, 5, 0.0);
+        assert!((res_w.centers.row(0)[0] - res_d.centers.row(0)[0]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn empty_cluster_reseeds() {
+        // two identical centers: one goes empty, must be reseeded
+        let pts = Matrix::from_rows(&[&[0.0], &[0.1], &[100.0], &[100.1]]);
+        let init = Matrix::from_rows(&[&[0.0], &[0.0]]);
+        let res = lloyd(&pts, None, init, 10, 0.0);
+        let c0 = res.centers.row(0)[0];
+        let c1 = res.centers.row(1)[0];
+        assert!((c0 - c1).abs() > 50.0, "centers {c0} {c1} did not split");
+        assert!(res.cost < 1.0);
+    }
+
+    #[test]
+    fn zero_weights_ignored() {
+        let pts = Matrix::from_rows(&[&[0.0], &[1.0], &[1000.0]]);
+        let w = [1.0, 1.0, 0.0];
+        let init = Matrix::from_rows(&[&[0.6]]);
+        let res = lloyd(&pts, Some(&w), init, 10, 0.0);
+        assert!((res.centers.row(0)[0] - 0.5).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,138 @@
+//! MiniBatchKMeans (Sculley 2010), the faster/weaker black box of the
+//! paper's Appendix D.2 (scikit-learn's MiniBatchKMeans analog).
+//!
+//! Per-center counts give per-update learning rates 1/count; k-means++
+//! seeding on a subsample; fixed batch budget. Matches the paper's
+//! observation that this black box is faster but can fail on hard
+//! datasets (our KDD surrogate shows the same signature).
+
+use super::kmeanspp;
+use crate::core::distance::nearest_center_into;
+use crate::core::Matrix;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct MiniBatchConfig {
+    pub batch_size: usize,
+    pub max_batches: usize,
+    /// k-means++ init subsample size (like sklearn's init_size ≈ 3k).
+    pub init_size_factor: usize,
+}
+
+impl Default for MiniBatchConfig {
+    fn default() -> Self {
+        MiniBatchConfig {
+            batch_size: 1024,
+            max_batches: 100,
+            init_size_factor: 3,
+        }
+    }
+}
+
+/// Run mini-batch k-means; returns k centers.
+pub fn minibatch_kmeans(
+    points: &Matrix,
+    weights: Option<&[f64]>,
+    k: usize,
+    cfg: &MiniBatchConfig,
+    rng: &mut Pcg64,
+) -> Matrix {
+    let n = points.rows();
+    assert!(n > 0);
+    if k >= n {
+        return points.clone();
+    }
+    // init on a subsample
+    let init_size = (cfg.init_size_factor * k).clamp(k, n);
+    let init_idx = rng.sample_indices(n, init_size);
+    let init_sample = points.select(&init_idx);
+    let init_w: Option<Vec<f64>> = weights.map(|w| init_idx.iter().map(|&i| w[i]).collect());
+    let seed_idx =
+        kmeanspp::seed_indices_weighted(&init_sample, init_w.as_deref(), k, rng);
+    let mut centers = init_sample.select(&seed_idx);
+
+    let mut counts = vec![0.0f64; k];
+    let bs = cfg.batch_size.min(n);
+    let mut bdist = vec![0.0f32; bs];
+    let mut bidx = vec![0u32; bs];
+    for _ in 0..cfg.max_batches {
+        let batch_idx = rng.sample_indices(n, bs);
+        let batch = points.select(&batch_idx);
+        nearest_center_into(&batch, &centers, &mut bdist, &mut bidx);
+        for (bi, &orig) in batch_idx.iter().enumerate() {
+            let w = weights.map(|w| w[orig]).unwrap_or(1.0);
+            if w <= 0.0 {
+                continue;
+            }
+            let c = bidx[bi] as usize;
+            counts[c] += w;
+            let eta = (w / counts[c]) as f32;
+            let row = centers.row_mut(c);
+            for (r, &p) in row.iter_mut().zip(batch.row(bi)) {
+                *r += eta * (p - *r);
+            }
+        }
+    }
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::cost::cost;
+
+    fn blobs(seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let mut m = Matrix::with_capacity(3000, 2);
+        for b in 0..3 {
+            for _ in 0..1000 {
+                let c = b as f32 * 30.0;
+                m.push_row(&[c + rng.normal() as f32, c + rng.normal() as f32]);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn finds_reasonable_clustering() {
+        let pts = blobs(1);
+        let mut rng = Pcg64::new(2);
+        let centers = minibatch_kmeans(&pts, None, 3, &MiniBatchConfig::default(), &mut rng);
+        assert_eq!(centers.rows(), 3);
+        // avg within-cluster cost ~ 2 (unit variance, 2-D); allow slack
+        let c = cost(&pts, &centers) / pts.rows() as f64;
+        assert!(c < 8.0, "avg cost {c}");
+    }
+
+    #[test]
+    fn k_ge_n_returns_points() {
+        let pts = Matrix::from_rows(&[&[1.0], &[2.0]]);
+        let mut rng = Pcg64::new(3);
+        let c = minibatch_kmeans(&pts, None, 5, &MiniBatchConfig::default(), &mut rng);
+        assert_eq!(c.rows(), 2);
+    }
+
+    #[test]
+    fn weights_bias_centers() {
+        // heavy weight on the right blob pulls its center tight
+        let pts = Matrix::from_rows(&[&[0.0], &[1.0], &[100.0], &[101.0]]);
+        let w = [0.0, 0.0, 10.0, 10.0];
+        let mut rng = Pcg64::new(4);
+        let cfg = MiniBatchConfig {
+            batch_size: 4,
+            max_batches: 50,
+            init_size_factor: 4,
+        };
+        let c = minibatch_kmeans(&pts, Some(&w), 1, &cfg, &mut rng);
+        assert!((c.row(0)[0] - 100.5).abs() < 2.0, "center {}", c.row(0)[0]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let pts = blobs(5);
+        let cfg = MiniBatchConfig::default();
+        let a = minibatch_kmeans(&pts, None, 3, &cfg, &mut Pcg64::new(7));
+        let b = minibatch_kmeans(&pts, None, 3, &cfg, &mut Pcg64::new(7));
+        assert_eq!(a, b);
+    }
+}

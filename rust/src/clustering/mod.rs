@@ -1,0 +1,11 @@
+//! Centralized clustering algorithms: the black boxes the SOCCER
+//! coordinator runs (paper §5's `A`), plus the shared weighted-reduction
+//! step that maps an oversampled center set back to exactly k centers.
+
+pub mod blackbox;
+pub mod kmeanspp;
+pub mod lloyd;
+pub mod minibatch;
+pub mod weighted;
+
+pub use blackbox::{BlackBox, LloydKMeans, MiniBatch};

@@ -1,0 +1,111 @@
+//! The standard weighted-reduction step (paper §2, Guha et al. 2003,
+//! Thm 4): both SOCCER and k-means|| output more than k centers; the
+//! final k-clustering is computed by weighting each output center with
+//! the size of its induced cluster on X and running a weighted
+//! centralized k-means on the (small) center set.
+
+use super::blackbox::BlackBox;
+use crate::core::distance::nearest_center_into;
+use crate::core::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Cluster sizes of `centers` on `points` (the reduction weights).
+pub fn center_weights(points: &Matrix, centers: &Matrix) -> Vec<f64> {
+    let mut w = vec![0.0f64; centers.rows()];
+    if points.is_empty() || centers.is_empty() {
+        return w;
+    }
+    let mut dist = vec![0.0f32; points.rows()];
+    let mut idx = vec![0u32; points.rows()];
+    nearest_center_into(points, centers, &mut dist, &mut idx);
+    for &c in &idx {
+        w[c as usize] += 1.0;
+    }
+    w
+}
+
+/// Reduce `centers` (usually |C_out| > k) to exactly ≤ k centers using
+/// precomputed weights.
+pub fn reduce_with_weights(
+    centers: &Matrix,
+    weights: &[f64],
+    k: usize,
+    blackbox: &dyn BlackBox,
+    rng: &mut Pcg64,
+) -> Matrix {
+    assert_eq!(weights.len(), centers.rows());
+    if centers.rows() <= k {
+        return centers.clone();
+    }
+    blackbox.cluster_weighted(centers, Some(weights), k, rng)
+}
+
+/// Full reduction: weigh `centers` by their cluster sizes on `points`
+/// and reduce to ≤ k. (Centralized convenience path; the distributed
+/// path computes weights on the machine fleet — see machines::fleet.)
+pub fn reduce(
+    points: &Matrix,
+    centers: &Matrix,
+    k: usize,
+    blackbox: &dyn BlackBox,
+    rng: &mut Pcg64,
+) -> Matrix {
+    let w = center_weights(points, centers);
+    reduce_with_weights(centers, &w, k, blackbox, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::blackbox::LloydKMeans;
+    use crate::core::cost::cost;
+
+    fn blobs(seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let mut m = Matrix::with_capacity(400, 2);
+        for b in 0..4 {
+            for _ in 0..100 {
+                let c = b as f32 * 25.0;
+                m.push_row(&[c + rng.normal() as f32, c + rng.normal() as f32]);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn center_weights_sum_to_n() {
+        let pts = blobs(1);
+        let cen = Matrix::from_rows(&[&[0.0, 0.0], &[25.0, 25.0], &[75.0, 75.0]]);
+        let w = center_weights(&pts, &cen);
+        assert_eq!(w.iter().sum::<f64>() as usize, 400);
+        assert!(w.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn reduction_preserves_quality_on_blobs() {
+        // oversampled center set (16) reduced to k=4 stays near-optimal
+        let pts = blobs(2);
+        let mut rng = Pcg64::new(3);
+        let over = LloydKMeans::default().cluster(&pts, 16, &mut rng);
+        let reduced = reduce(&pts, &over, 4, &LloydKMeans::default(), &mut rng);
+        assert!(reduced.rows() <= 4);
+        let c = cost(&pts, &reduced) / pts.rows() as f64;
+        assert!(c < 6.0, "avg cost {c}");
+    }
+
+    #[test]
+    fn no_reduction_needed_when_small() {
+        let cen = Matrix::from_rows(&[&[0.0, 0.0], &[1.0, 1.0]]);
+        let pts = blobs(4);
+        let mut rng = Pcg64::new(5);
+        let r = reduce(&pts, &cen, 5, &LloydKMeans::default(), &mut rng);
+        assert_eq!(r, cen);
+    }
+
+    #[test]
+    fn empty_points_give_zero_weights() {
+        let pts = Matrix::zeros(0, 2);
+        let cen = Matrix::from_rows(&[&[0.0, 0.0]]);
+        assert_eq!(center_weights(&pts, &cen), vec![0.0]);
+    }
+}

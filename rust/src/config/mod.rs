@@ -1,0 +1,165 @@
+//! Experiment configuration: a JSON-backed description of a run
+//! (dataset, n, k grid, ε grid, repetitions, engine, black box) shared
+//! by the CLI, the examples and every bench target.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub dataset: String,
+    pub n: usize,
+    pub machines: usize,
+    pub ks: Vec<usize>,
+    pub epsilons: Vec<f64>,
+    pub kmeans_par_rounds: Vec<usize>,
+    pub repetitions: usize,
+    pub delta: f64,
+    pub seed: u64,
+    /// "native" or "pjrt"
+    pub engine: String,
+    /// "kmeans" or "minibatch"
+    pub blackbox: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "gaussian".into(),
+            n: 200_000,
+            machines: 50,
+            ks: vec![25, 50, 100, 200],
+            epsilons: vec![0.2, 0.1, 0.05, 0.01],
+            kmeans_par_rounds: vec![1, 2, 3, 4, 5],
+            repetitions: 3,
+            delta: 0.1,
+            seed: 20220501,
+            engine: "native".into(),
+            blackbox: "kmeans".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.clone())),
+            ("n", Json::num(self.n as f64)),
+            ("machines", Json::num(self.machines as f64)),
+            ("ks", Json::Arr(self.ks.iter().map(|&k| Json::num(k as f64)).collect())),
+            (
+                "epsilons",
+                Json::Arr(self.epsilons.iter().map(|&e| Json::num(e)).collect()),
+            ),
+            (
+                "kmeans_par_rounds",
+                Json::Arr(self.kmeans_par_rounds.iter().map(|&r| Json::num(r as f64)).collect()),
+            ),
+            ("repetitions", Json::num(self.repetitions as f64)),
+            ("delta", Json::num(self.delta)),
+            ("seed", Json::num(self.seed as f64)),
+            ("engine", Json::str(self.engine.clone())),
+            ("blackbox", Json::str(self.blackbox.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
+        let d = ExperimentConfig::default();
+        let get_usize = |k: &str, dv: usize| j.get(k).and_then(Json::as_usize).unwrap_or(dv);
+        let get_f64 = |k: &str, dv: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dv);
+        let get_str = |k: &str, dv: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .unwrap_or(dv)
+                .to_string()
+        };
+        let get_list_usize = |k: &str, dv: &[usize]| -> Result<Vec<usize>> {
+            match j.get(k) {
+                None => Ok(dv.to_vec()),
+                Some(v) => v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("'{k}' must be an array"))?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| anyhow!("'{k}' must hold integers")))
+                    .collect(),
+            }
+        };
+        let get_list_f64 = |k: &str, dv: &[f64]| -> Result<Vec<f64>> {
+            match j.get(k) {
+                None => Ok(dv.to_vec()),
+                Some(v) => v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("'{k}' must be an array"))?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or_else(|| anyhow!("'{k}' must hold numbers")))
+                    .collect(),
+            }
+        };
+        Ok(ExperimentConfig {
+            dataset: get_str("dataset", &d.dataset),
+            n: get_usize("n", d.n),
+            machines: get_usize("machines", d.machines),
+            ks: get_list_usize("ks", &d.ks)?,
+            epsilons: get_list_f64("epsilons", &d.epsilons)?,
+            kmeans_par_rounds: get_list_usize("kmeans_par_rounds", &d.kmeans_par_rounds)?,
+            repetitions: get_usize("repetitions", d.repetitions),
+            delta: get_f64("delta", d.delta),
+            seed: get_usize("seed", d.seed as usize) as u64,
+            engine: get_str("engine", &d.engine),
+            blackbox: get_str("blackbox", &d.blackbox),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let c = ExperimentConfig {
+            dataset: "kdd".into(),
+            ks: vec![25, 100],
+            ..Default::default()
+        };
+        let j = c.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"dataset": "higgs", "n": 1000}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.dataset, "higgs");
+        assert_eq!(c.n, 1000);
+        assert_eq!(c.repetitions, ExperimentConfig::default().repetitions);
+    }
+
+    #[test]
+    fn bad_types_error() {
+        let j = Json::parse(r#"{"ks": ["a"]}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let p = std::env::temp_dir().join(format!("soccer_cfg_{}.json", std::process::id()));
+        let c = ExperimentConfig::default();
+        c.save(&p).unwrap();
+        assert_eq!(ExperimentConfig::load(&p).unwrap(), c);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,10 @@
+//! The paper's contribution: the SOCCER coordinator protocol and its
+//! interdependent constants.
+
+pub mod params;
+pub mod robust;
+pub mod soccer;
+
+pub use params::{Constants, SoccerParams};
+pub use robust::{run_soccer_robust, RobustConfig, RobustOutcome};
+pub use soccer::{run_soccer, SoccerOutcome};

@@ -1,0 +1,311 @@
+//! Extensions the paper's conclusions pose as future work:
+//! "robustness against outliers and machine failures".
+//!
+//! **Outliers** — SOCCER-(k,z): the removal threshold is already built
+//! from a *truncated* cost, so the natural extension is (a) truncating
+//! the final evaluation by the z farthest points, and (b) letting the
+//! final centralized clustering discard its z own outliers before
+//! clustering the drained remainder (trimmed A(V, k)).
+//!
+//! **Machine failures** — a failure plan kills machines at round
+//! boundaries. A dead machine stops contributing samples, counts and
+//! removals; its live shard is lost (the coordinator-model analogue of
+//! a worker crash without replication). SOCCER's guarantees degrade
+//! gracefully: the protocol still terminates and clusters the surviving
+//! data, and the cost is evaluated on the survivors.
+
+use super::params::SoccerParams;
+use super::soccer::SoccerOutcome;
+use crate::clustering::blackbox::BlackBox;
+use crate::clustering::weighted;
+use crate::core::cost::{truncated_cost, truncated_sum};
+use crate::core::Matrix;
+use crate::machines::Fleet;
+use crate::runtime::Engine;
+use crate::telemetry::{RoundLog, RunTelemetry};
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Robust-run configuration.
+#[derive(Clone, Debug, Default)]
+pub struct RobustConfig {
+    /// number of outliers to exclude (SOCCER-(k,z)); 0 = plain SOCCER
+    pub outliers_z: usize,
+    /// machines to kill before each round: round -> machine ids
+    pub failures: BTreeMap<usize, Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct RobustOutcome {
+    pub base: SoccerOutcome,
+    /// cost(X_survivors, final) excluding the z farthest points
+    pub trimmed_cost: f64,
+    /// points lost to machine failures
+    pub points_lost: usize,
+    pub machines_failed: usize,
+}
+
+/// SOCCER with outlier trimming and failure injection. Mirrors
+/// `run_soccer` round for round; the differences are annotated.
+pub fn run_soccer_robust(
+    fleet: &mut Fleet,
+    engine: &dyn Engine,
+    params: &SoccerParams,
+    blackbox: &dyn BlackBox,
+    cfg: &RobustConfig,
+    seed: u64,
+) -> RobustOutcome {
+    let t_run = Instant::now();
+    let mut rng = Pcg64::new(seed);
+    let n0 = fleet.total_live();
+    let dim = fleet.dim();
+    let mut c_out = Matrix::with_capacity(params.k_plus() * 4, dim);
+    let mut telemetry = RunTelemetry::default();
+    let mut rounds = 0usize;
+    let mut stall = 0usize;
+    let mut points_lost = 0usize;
+    let mut machines_failed = 0usize;
+
+    loop {
+        // failure injection at the round boundary
+        if let Some(ids) = cfg.failures.get(&(rounds + 1)) {
+            for &id in ids {
+                points_lost += fleet.kill_machine(id);
+            }
+            machines_failed += ids.len();
+        }
+        let n_live = fleet.total_live();
+        let eta = params.eta(n0);
+        if n_live <= eta {
+            break;
+        }
+        if rounds >= params.max_rounds || stall >= params.max_stall_rounds {
+            telemetry.forced_drain = true;
+            break;
+        }
+        rounds += 1;
+
+        let sample = fleet.sample_pair_exact(eta.min(n_live), &mut rng);
+        let (p1, p2) = sample.value;
+        if p1.is_empty() {
+            telemetry.forced_drain = true;
+            break; // everything failed
+        }
+        let sampled = p1.rows() + p2.rows();
+
+        let t_coord = Instant::now();
+        let c_iter = blackbox.cluster(&p1, params.k_plus(), &mut rng);
+        // outlier-aware threshold: drop z additional points from the
+        // truncated-cost estimate so far-out junk cannot inflate v
+        let extra = cfg.outliers_z.min(p2.rows() / 4);
+        let tc = truncated_cost(&p2, &c_iter, params.trunc_l() + extra);
+        let v = params.threshold(tc);
+        c_out.extend(&c_iter);
+        let coord_secs = t_coord.elapsed().as_secs_f64();
+
+        let removal = fleet.broadcast_remove(&c_iter, v as f32, engine);
+        stall = if removal.value == 0 { stall + 1 } else { 0 };
+
+        telemetry.push_round(RoundLog {
+            round: rounds,
+            sampled,
+            broadcast: c_iter.rows(),
+            removed: removal.value,
+            remaining: fleet.total_live(),
+            threshold: v,
+            machine_time_max: sample.max_secs + removal.max_secs,
+            coordinator_time: coord_secs,
+        });
+    }
+
+    // drain + trimmed final clustering: discard the z farthest points
+    // of V before the final A(V, k) (k-means-with-outliers style)
+    let v_final = fleet.drain();
+    telemetry.comm.to_coordinator += v_final.rows();
+    if !v_final.is_empty() {
+        let cleaned = if cfg.outliers_z > 0 && !c_out.is_empty() && v_final.rows() > cfg.outliers_z
+        {
+            let dists = crate::core::cost::per_point_costs(&v_final, &c_out);
+            let mut order: Vec<usize> = (0..v_final.rows()).collect();
+            order.sort_by(|&a, &b| dists[a].partial_cmp(&dists[b]).unwrap());
+            order.truncate(v_final.rows() - cfg.outliers_z);
+            v_final.select(&order)
+        } else {
+            v_final
+        };
+        if !cleaned.is_empty() {
+            let c_final = blackbox.cluster(&cleaned, params.k, &mut rng);
+            c_out.extend(&c_final);
+        }
+    }
+
+    // Outlier-aware reduction. Outlier points carry their own dedicated
+    // C_out centers (distance ~0), so distance-based trimming cannot see
+    // them; instead use the standard tiny-cluster elimination: sort
+    // centers by induced cluster size and drop the smallest ones until
+    // the dropped point mass reaches z. What remains supports ≥ n − z
+    // points, and the weighted reduction can no longer be pulled onto
+    // far-out junk by its huge D² mass.
+    let counts = fleet.counts_full(&c_out, engine).value;
+    let (red_centers, red_counts) = if cfg.outliers_z > 0 && c_out.rows() > params.k {
+        let mut order: Vec<usize> = (0..c_out.rows()).collect();
+        order.sort_by(|&a, &b| counts[a].partial_cmp(&counts[b]).unwrap());
+        let mut dropped = 0.0f64;
+        let mut survivors: Vec<usize> = Vec::with_capacity(c_out.rows());
+        for (rank, &c) in order.iter().enumerate() {
+            let would_drop = dropped + counts[c];
+            // keep at least k centers no matter what
+            if would_drop <= cfg.outliers_z as f64 && c_out.rows() - rank > params.k {
+                dropped = would_drop;
+            } else {
+                survivors.push(c);
+            }
+        }
+        survivors.sort_unstable();
+        (
+            c_out.select(&survivors),
+            survivors.iter().map(|&c| counts[c]).collect::<Vec<f64>>(),
+        )
+    } else {
+        (c_out.clone(), counts)
+    };
+    let final_centers =
+        weighted::reduce_with_weights(&red_centers, &red_counts, params.k, blackbox, &mut rng);
+
+    let cost = fleet.cost_full(&final_centers, engine).value;
+    let cost_c_out = fleet.cost_full(&c_out, engine).value;
+    // trimmed cost: exclude the z globally-farthest surviving points
+    let trimmed_cost = fleet_trimmed_cost(fleet, &final_centers, cfg.outliers_z, engine);
+
+    RobustOutcome {
+        base: SoccerOutcome {
+            output_size: c_out.rows(),
+            c_out,
+            final_centers,
+            rounds,
+            cost,
+            cost_c_out,
+            telemetry,
+            total_secs: t_run.elapsed().as_secs_f64(),
+        },
+        trimmed_cost,
+        points_lost,
+        machines_failed,
+    }
+}
+
+/// cost(X, centers) with the z farthest points excluded, computed
+/// distributedly (machines ship per-point costs of their shard tails).
+pub fn fleet_trimmed_cost(
+    fleet: &mut Fleet,
+    centers: &Matrix,
+    z: usize,
+    engine: &dyn Engine,
+) -> f64 {
+    if z == 0 {
+        return fleet.cost_full(centers, engine).value;
+    }
+    let dists = fleet.per_point_costs_full(centers, engine);
+    truncated_sum(&dists, z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::LloydKMeans;
+    use crate::data::gaussian::{expected_optimal_cost, generate, GaussianMixtureSpec};
+    use crate::runtime::NativeEngine;
+
+    fn mixture_with_outliers(n: usize, k: usize, z: usize, seed: u64) -> Matrix {
+        let gm = generate(&GaussianMixtureSpec::paper(n, k), &mut Pcg64::new(seed));
+        let mut pts = gm.points;
+        let mut rng = Pcg64::new(seed + 1);
+        for _ in 0..z {
+            let mut row = vec![0.0f32; pts.cols()];
+            for v in &mut row {
+                *v = (rng.normal() * 1e3) as f32; // far outliers
+            }
+            pts.push_row(&row);
+        }
+        pts
+    }
+
+    #[test]
+    fn outlier_trimming_recovers_clean_cost() {
+        let n = 15_000;
+        let z = 30;
+        let pts = mixture_with_outliers(n, 5, z, 3);
+        let mut fleet = Fleet::new(&pts, 10, 4);
+        let params = SoccerParams::new(5, 0.2);
+        let cfg = RobustConfig {
+            outliers_z: z,
+            ..Default::default()
+        };
+        let out = run_soccer_robust(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), &cfg, 5);
+        let clean_opt = expected_optimal_cost(&GaussianMixtureSpec::paper(n, 5));
+        // trimmed cost ignores the planted outliers -> near clean optimum
+        assert!(
+            out.trimmed_cost < 10.0 * clean_opt,
+            "trimmed {} vs clean opt {clean_opt}",
+            out.trimmed_cost
+        );
+        // untrimmed cost is dominated by outliers
+        assert!(out.base.cost > out.trimmed_cost);
+    }
+
+    #[test]
+    fn machine_failures_lose_points_but_terminate() {
+        let pts = mixture_with_outliers(12_000, 4, 0, 7);
+        let mut fleet = Fleet::new(&pts, 10, 8);
+        let params = SoccerParams::new(4, 0.2);
+        let mut failures = BTreeMap::new();
+        failures.insert(1usize, vec![0usize, 3]);
+        failures.insert(2usize, vec![7usize]);
+        let cfg = RobustConfig {
+            outliers_z: 0,
+            failures,
+        };
+        let out = run_soccer_robust(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), &cfg, 9);
+        assert!(out.machines_failed >= 2);
+        assert!(out.points_lost > 0);
+        assert!(out.base.cost.is_finite());
+        assert!(out.base.rounds >= 1);
+    }
+
+    #[test]
+    fn all_machines_fail_is_handled() {
+        let pts = mixture_with_outliers(5_000, 3, 0, 10);
+        let mut fleet = Fleet::new(&pts, 4, 11);
+        let params = SoccerParams::new(3, 0.2);
+        let mut failures = BTreeMap::new();
+        failures.insert(1usize, vec![0, 1, 2, 3]);
+        let cfg = RobustConfig {
+            outliers_z: 0,
+            failures,
+        };
+        let out = run_soccer_robust(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), &cfg, 12);
+        assert_eq!(out.points_lost, 5_000);
+        assert_eq!(out.base.rounds, 0);
+    }
+
+    #[test]
+    fn zero_config_matches_plain_soccer_shape() {
+        let pts = mixture_with_outliers(10_000, 4, 0, 13);
+        let mut fleet = Fleet::new(&pts, 8, 14);
+        let params = SoccerParams::new(4, 0.2);
+        let out = run_soccer_robust(
+            &mut fleet,
+            &NativeEngine,
+            &params,
+            &LloydKMeans::default(),
+            &RobustConfig::default(),
+            15,
+        );
+        fleet.reset();
+        let plain = crate::coordinator::run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 15);
+        assert_eq!(out.base.rounds, plain.rounds);
+        assert!((out.base.cost - plain.cost).abs() <= 1e-9 * plain.cost.max(1.0));
+        assert_eq!(out.trimmed_cost, out.base.cost);
+    }
+}

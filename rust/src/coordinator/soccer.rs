@@ -1,0 +1,228 @@
+//! SOCCER (Alg. 1): the coordinator-side protocol.
+//!
+//! Per round: collect two η-point samples from the fleet, run the
+//! black-box A on P₁ for k₊ centers, estimate the truncated cost of
+//! those centers on P₂, broadcast (v, C_iter), machines remove points
+//! with ρ(x,C_iter)² ≤ v. Stops as soon as the remaining data fits the
+//! coordinator (N ≤ η), then clusters the remainder with A(V, k).
+
+use super::params::SoccerParams;
+use crate::clustering::blackbox::BlackBox;
+use crate::clustering::weighted;
+use crate::core::cost::truncated_cost;
+use crate::core::Matrix;
+use crate::machines::Fleet;
+use crate::runtime::Engine;
+use crate::telemetry::{RoundLog, RunTelemetry};
+use crate::util::rng::Pcg64;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct SoccerOutcome {
+    /// the raw output center set C_out (|C_out| ≈ I·k₊ + k)
+    pub c_out: Matrix,
+    /// C_out reduced to ≤ k centers by the standard weighted reduction
+    pub final_centers: Matrix,
+    /// communication rounds used (while-loop iterations)
+    pub rounds: usize,
+    /// cost(X, final_centers) — the headline number of the paper tables
+    pub cost: f64,
+    /// cost(X, C_out) — the pre-reduction cost Theorem 4.1 bounds
+    pub cost_c_out: f64,
+    pub output_size: usize,
+    pub telemetry: RunTelemetry,
+    /// wall-clock of the whole run (sampling+clustering+reduction)
+    pub total_secs: f64,
+}
+
+/// Run SOCCER on a fleet. The fleet's live shards are consumed (call
+/// `fleet.reset()` for another repetition); costs are evaluated against
+/// the original full dataset held by the machines.
+pub fn run_soccer(
+    fleet: &mut Fleet,
+    engine: &dyn Engine,
+    params: &SoccerParams,
+    blackbox: &dyn BlackBox,
+    seed: u64,
+) -> SoccerOutcome {
+    let t_run = Instant::now();
+    let mut rng = Pcg64::new(seed);
+    let n0 = fleet.total_live();
+    let dim = fleet.dim();
+    let mut c_out = Matrix::with_capacity(params.k_plus() * 4, dim);
+    let mut telemetry = RunTelemetry::default();
+    let mut rounds = 0usize;
+    let mut stall = 0usize;
+
+    loop {
+        let n_live = fleet.total_live();
+        let eta = params.eta(n0);
+        if n_live <= eta {
+            break;
+        }
+        if rounds >= params.max_rounds || stall >= params.max_stall_rounds {
+            telemetry.forced_drain = true;
+            break;
+        }
+        rounds += 1;
+
+        // line 3-5: sample P1, P2 (exact-size variant by default)
+        let alpha = (eta as f64 / n_live as f64).min(1.0);
+        let sample = if params.exact_sampling {
+            fleet.sample_pair_exact(eta, &mut rng)
+        } else {
+            fleet.sample_pair_bernoulli(alpha)
+        };
+        let (p1, p2) = sample.value;
+        let sampled = p1.rows() + p2.rows();
+
+        // lines 7-9: coordinator work — cluster P1, estimate threshold on P2
+        let t_coord = Instant::now();
+        let c_iter = blackbox.cluster(&p1, params.k_plus(), &mut rng);
+        let tc = truncated_cost(&p2, &c_iter, params.trunc_l());
+        let v = params.threshold(tc);
+        c_out.extend(&c_iter);
+        let coord_secs = t_coord.elapsed().as_secs_f64();
+
+        // lines 11-13: broadcast (v, C_iter); machines remove
+        let removal = fleet.broadcast_remove(&c_iter, v as f32, engine);
+        let removed = removal.value;
+        stall = if removed == 0 { stall + 1 } else { 0 };
+
+        telemetry.push_round(RoundLog {
+            round: rounds,
+            sampled,
+            broadcast: c_iter.rows(),
+            removed,
+            remaining: fleet.total_live(),
+            threshold: v,
+            machine_time_max: sample.max_secs + removal.max_secs,
+            coordinator_time: coord_secs,
+        });
+    }
+
+    // lines 15-16: collect the remainder and cluster it with A(V, k)
+    let v_final = fleet.drain();
+    telemetry.comm.to_coordinator += v_final.rows();
+    if !v_final.is_empty() {
+        let t_coord = Instant::now();
+        let c_final = blackbox.cluster(&v_final, params.k, &mut rng);
+        c_out.extend(&c_final);
+        if let Some(last) = telemetry.rounds.last_mut() {
+            last.coordinator_time += t_coord.elapsed().as_secs_f64();
+        }
+    }
+
+    // standard weighted reduction to exactly k (paper §2/§8)
+    let counts = fleet.counts_full(&c_out, engine);
+    let final_centers =
+        weighted::reduce_with_weights(&c_out, &counts.value, params.k, blackbox, &mut rng);
+
+    let cost = fleet.cost_full(&final_centers, engine).value;
+    let cost_c_out = fleet.cost_full(&c_out, engine).value;
+
+    SoccerOutcome {
+        output_size: c_out.rows(),
+        c_out,
+        final_centers,
+        rounds,
+        cost,
+        cost_c_out,
+        telemetry,
+        total_secs: t_run.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::LloydKMeans;
+    use crate::data::gaussian::{expected_optimal_cost, generate, GaussianMixtureSpec};
+    use crate::runtime::NativeEngine;
+
+    fn gaussian_fleet(n: usize, k: usize, m: usize, seed: u64) -> (Fleet, f64) {
+        let spec = GaussianMixtureSpec::paper(n, k);
+        let gm = generate(&spec, &mut Pcg64::new(seed));
+        (Fleet::new(&gm.points, m, seed + 1), expected_optimal_cost(&spec))
+    }
+
+    #[test]
+    fn gaussian_mixture_single_round_near_optimal() {
+        // Theorem 7.1 regime: SOCCER should stop after ONE round on a
+        // Gaussian mixture and land near the optimal cost.
+        let (mut fleet, opt) = gaussian_fleet(20_000, 5, 10, 1);
+        let params = SoccerParams::new(5, 0.2);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 2);
+        assert_eq!(out.rounds, 1, "rounds={}", out.rounds);
+        assert!(!out.telemetry.forced_drain);
+        assert!(
+            out.cost < 3.0 * opt,
+            "cost {} vs expected optimal {opt}",
+            out.cost
+        );
+        assert!(out.final_centers.rows() <= 5);
+    }
+
+    #[test]
+    fn rounds_within_worst_case_bound() {
+        let (mut fleet, _) = gaussian_fleet(30_000, 8, 10, 3);
+        for eps in [0.3, 0.15] {
+            fleet.reset();
+            let params = SoccerParams::new(8, eps);
+            let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 4);
+            assert!(
+                out.rounds <= params.worst_case_rounds(),
+                "eps={eps}: {} > {}",
+                out.rounds,
+                params.worst_case_rounds()
+            );
+        }
+    }
+
+    #[test]
+    fn output_size_bound_holds() {
+        // |C_out| ≤ I·k₊ + k (Theorem 4.1 part 2 + the final A(V,k))
+        let (mut fleet, _) = gaussian_fleet(20_000, 5, 8, 5);
+        let params = SoccerParams::new(5, 0.15);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 6);
+        assert!(out.output_size <= out.rounds.max(1) * params.k_plus() + params.k);
+    }
+
+    #[test]
+    fn degenerate_small_dataset_zero_rounds() {
+        // n ≤ η: the loop never runs, everything is clustered centrally
+        let (mut fleet, _) = gaussian_fleet(500, 5, 4, 7);
+        let params = SoccerParams::new(5, 0.2);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 8);
+        assert_eq!(out.rounds, 0);
+        assert!(out.output_size <= params.k);
+        assert!(out.cost.is_finite());
+    }
+
+    #[test]
+    fn comm_accounting_is_consistent() {
+        let (mut fleet, _) = gaussian_fleet(20_000, 5, 8, 9);
+        let params = SoccerParams::new(5, 0.2);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 10);
+        let eta = params.eta(20_000);
+        // per round: 2η to the coordinator; broadcasts of k₊ centers
+        let per_round: usize = out.telemetry.rounds.iter().map(|r| r.sampled).sum();
+        assert!(per_round <= out.rounds * 2 * eta);
+        assert_eq!(
+            out.telemetry.comm.broadcast,
+            out.telemetry.rounds.iter().map(|r| r.broadcast).sum::<usize>()
+        );
+        // Theorem 4.1 part 5: broadcast ≤ I·k₊
+        assert!(out.telemetry.comm.broadcast <= out.rounds * params.k_plus());
+    }
+
+    #[test]
+    fn bernoulli_sampling_also_works() {
+        let (mut fleet, opt) = gaussian_fleet(20_000, 5, 8, 11);
+        let mut params = SoccerParams::new(5, 0.2);
+        params.exact_sampling = false;
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 12);
+        assert!(out.rounds <= 2);
+        assert!(out.cost < 5.0 * opt);
+    }
+}

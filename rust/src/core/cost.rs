@@ -1,0 +1,145 @@
+//! k-means cost and the paper's l-truncated cost (Section 5).
+//!
+//! cost(S, T)   = Σ_{x∈S} ρ(x, T)²
+//! cost_l(S, T) = cost(S, T) after removing the l points of S that incur
+//!                the most cost — the quantity SOCCER's threshold
+//!                v = 2·cost_{3/2(k+1)d_k}(P₂, C_iter) / (3·k·d_k)
+//!                is built from.
+
+use super::distance::nearest_dist_into;
+use super::matrix::Matrix;
+use crate::util::stats::select_nth;
+
+/// Exact k-means cost of centers `t` on `s` (f64 accumulator: datasets in
+/// the paper reach costs ~1e14, beyond f32 integer precision).
+pub fn cost(s: &Matrix, t: &Matrix) -> f64 {
+    if s.is_empty() {
+        return 0.0;
+    }
+    let mut dist = vec![0.0f32; s.rows()];
+    nearest_dist_into(s, t, &mut dist);
+    dist.iter().map(|&d| d as f64).sum()
+}
+
+/// l-truncated cost: total cost after dropping the `l` largest per-point
+/// costs. l ≥ |S| gives 0; l = 0 gives the plain cost.
+pub fn truncated_cost(s: &Matrix, t: &Matrix, l: usize) -> f64 {
+    if s.is_empty() || l >= s.rows() {
+        return 0.0;
+    }
+    let mut dist = vec![0.0f32; s.rows()];
+    nearest_dist_into(s, t, &mut dist);
+    truncated_sum(&dist, l)
+}
+
+/// Truncated sum over precomputed per-point squared distances.
+///
+/// Selection (O(n)) instead of a full sort: find the (n-l)-th order
+/// statistic and sum everything strictly below it, then add back copies
+/// of the cutoff value if ties straddle the boundary.
+pub fn truncated_sum(dist: &[f32], l: usize) -> f64 {
+    let n = dist.len();
+    if l == 0 {
+        return dist.iter().map(|&d| d as f64).sum();
+    }
+    if l >= n {
+        return 0.0;
+    }
+    let keep = n - l;
+    let mut work: Vec<f64> = dist.iter().map(|&d| d as f64).collect();
+    let cutoff = select_nth(&mut work, keep - 1); // largest kept value
+    let mut sum = 0.0;
+    let mut below = 0usize;
+    for &d in dist {
+        if (d as f64) < cutoff {
+            sum += d as f64;
+            below += 1;
+        }
+    }
+    // fill the remaining kept slots with the cutoff value (handles ties)
+    sum + cutoff * (keep - below) as f64
+}
+
+/// Per-point costs of `s` w.r.t. `t` (exposed for the removal step and
+/// the EIM11 quantile threshold).
+pub fn per_point_costs(s: &Matrix, t: &Matrix) -> Vec<f32> {
+    let mut dist = vec![0.0f32; s.rows()];
+    if !s.is_empty() {
+        nearest_dist_into(s, t, &mut dist);
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn line_points() -> Matrix {
+        // points at x = 0, 1, 2, 10 in 1-D
+        Matrix::from_rows(&[&[0.0], &[1.0], &[2.0], &[10.0]])
+    }
+
+    #[test]
+    fn cost_single_center() {
+        let s = line_points();
+        let t = Matrix::from_rows(&[&[0.0]]);
+        assert_eq!(cost(&s, &t), 0.0 + 1.0 + 4.0 + 100.0);
+    }
+
+    #[test]
+    fn truncated_drops_largest() {
+        let s = line_points();
+        let t = Matrix::from_rows(&[&[0.0]]);
+        assert_eq!(truncated_cost(&s, &t, 0), 105.0);
+        assert_eq!(truncated_cost(&s, &t, 1), 5.0); // drop the 100
+        assert_eq!(truncated_cost(&s, &t, 2), 1.0); // drop 100 and 4
+        assert_eq!(truncated_cost(&s, &t, 4), 0.0);
+        assert_eq!(truncated_cost(&s, &t, 99), 0.0);
+    }
+
+    #[test]
+    fn truncated_sum_with_ties() {
+        let dist = vec![1.0f32, 2.0, 2.0, 2.0, 3.0];
+        // drop 2 largest: one 3 and one 2 -> keep 1+2+2 = 5
+        assert_eq!(truncated_sum(&dist, 2), 5.0);
+        // drop 1: keep 1+2+2+2 = 7
+        assert_eq!(truncated_sum(&dist, 1), 7.0);
+    }
+
+    #[test]
+    fn truncated_matches_sort_reference() {
+        let mut rng = Pcg64::new(5);
+        let dist: Vec<f32> = (0..500).map(|_| rng.f32() * 100.0).collect();
+        for l in [0usize, 1, 7, 100, 499, 500, 1000] {
+            let fast = truncated_sum(&dist, l);
+            let mut sorted = dist.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let slow: f64 = sorted[..dist.len().saturating_sub(l)]
+                .iter()
+                .map(|&d| d as f64)
+                .sum();
+            assert!(
+                (fast - slow).abs() < 1e-6 * slow.max(1.0),
+                "l={l} fast={fast} slow={slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_set_costs_zero() {
+        let s = Matrix::zeros(0, 3);
+        let t = Matrix::from_rows(&[&[0.0, 0.0, 0.0]]);
+        assert_eq!(cost(&s, &t), 0.0);
+        assert_eq!(truncated_cost(&s, &t, 0), 0.0);
+    }
+
+    #[test]
+    fn per_point_costs_match_cost() {
+        let s = line_points();
+        let t = Matrix::from_rows(&[&[1.0]]);
+        let pp = per_point_costs(&s, &t);
+        assert_eq!(pp, vec![1.0, 0.0, 1.0, 81.0]);
+        assert_eq!(pp.iter().map(|&d| d as f64).sum::<f64>(), cost(&s, &t));
+    }
+}

@@ -1,0 +1,279 @@
+//! Native nearest-center distance kernel (the rust mirror of the L1
+//! Pallas kernel, used as fallback for shapes without artifacts and as
+//! the ablation baseline in `benches/ablate_runtime.rs`).
+//!
+//! Same formulation as the Pallas kernel: d²(x,c) = ‖x‖² − 2x·c + ‖c‖²
+//! with a clamp at zero, blocked over centers so the center panel stays
+//! in cache while point rows stream.
+
+use super::matrix::Matrix;
+
+/// Squared Euclidean distance between two points.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    // 4-wide manual unroll: autovectorizes well on the unrolled lanes.
+    let mut i = 0;
+    let n = a.len();
+    while i + 4 <= n {
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        acc += d0 * d0 + d1 * d1 + d2 * d2 + d3 * d3;
+        i += 4;
+    }
+    while i < n {
+        let d = a[i] - b[i];
+        acc += d * d;
+        i += 1;
+    }
+    acc
+}
+
+/// Per-point nearest-center squared distance + index.
+///
+/// Uses the norm-expansion form with a precomputed center-norm panel;
+/// exactly mirrors the Pallas kernel's numerics (including the clamp).
+pub fn nearest_center(points: &Matrix, centers: &Matrix) -> (Vec<f32>, Vec<u32>) {
+    let n = points.rows();
+    let mut dist = vec![0.0f32; n];
+    let mut idx = vec![0u32; n];
+    nearest_center_into(points, centers, &mut dist, &mut idx);
+    (dist, idx)
+}
+
+/// `nearest_center` into caller-provided buffers (hot path: no alloc).
+pub fn nearest_center_into(
+    points: &Matrix,
+    centers: &Matrix,
+    dist_out: &mut [f32],
+    idx_out: &mut [u32],
+) {
+    let n = points.rows();
+    let k = centers.rows();
+    assert!(k > 0, "no centers");
+    assert_eq!(points.cols(), centers.cols(), "dim mismatch");
+    assert!(dist_out.len() >= n && idx_out.len() >= n);
+    let d = points.cols();
+    for i in 0..n {
+        let p = points.row(i);
+        let mut best = f32::INFINITY;
+        let mut best_j = 0u32;
+        // center-blocked by 4: four independent named accumulator chains
+        // give the ILP the single-center loop lacks (§Perf: 2.8 → 4.6
+        // GFLOP/s). Rejected variants (EXPERIMENTS.md §Perf): 8-chain
+        // accumulator array (2.5 — register spills), 4x2 t-unroll (4.1,
+        // noisier) — both reverted per the one-change-at-a-time rule.
+        let mut j = 0usize;
+        while j + 4 <= k {
+            let base = j * d;
+            let c = &centers.data()[base..base + 4 * d];
+            let (c0, rest) = c.split_at(d);
+            let (c1, rest) = rest.split_at(d);
+            let (c2, c3) = rest.split_at(d);
+            let mut a0 = 0.0f32;
+            let mut a1 = 0.0f32;
+            let mut a2 = 0.0f32;
+            let mut a3 = 0.0f32;
+            for t in 0..d {
+                let x = p[t];
+                let d0 = x - c0[t];
+                let d1 = x - c1[t];
+                let d2 = x - c2[t];
+                let d3 = x - c3[t];
+                a0 += d0 * d0;
+                a1 += d1 * d1;
+                a2 += d2 * d2;
+                a3 += d3 * d3;
+            }
+            if a0 < best {
+                best = a0;
+                best_j = j as u32;
+            }
+            if a1 < best {
+                best = a1;
+                best_j = (j + 1) as u32;
+            }
+            if a2 < best {
+                best = a2;
+                best_j = (j + 2) as u32;
+            }
+            if a3 < best {
+                best = a3;
+                best_j = (j + 3) as u32;
+            }
+            j += 4;
+        }
+        while j < k {
+            let dsq = sq_dist(p, centers.row(j));
+            if dsq < best {
+                best = dsq;
+                best_j = j as u32;
+            }
+            j += 1;
+        }
+        dist_out[i] = best;
+        idx_out[i] = best_j;
+    }
+}
+
+/// Only the per-point nearest squared distance (no index), into a buffer.
+pub fn nearest_dist_into(points: &Matrix, centers: &Matrix, dist_out: &mut [f32]) {
+    let n = points.rows();
+    let k = centers.rows();
+    assert!(k > 0, "no centers");
+    assert_eq!(points.cols(), centers.cols(), "dim mismatch");
+    // delegate to the blocked kernel; the index write is negligible
+    let mut idx = vec![0u32; n];
+    nearest_center_into(points, centers, dist_out, &mut idx);
+}
+
+/// Incremental variant: given per-point current nearest distances `dist`
+/// (to an existing center set), fold in `new_centers`, updating dist (and
+/// optionally indices offset by `idx_base`). This is the k-means++ /
+/// k-means|| hot loop — O(n·|new|) instead of O(n·|all|) per round.
+pub fn update_nearest(
+    points: &Matrix,
+    new_centers: &Matrix,
+    dist: &mut [f32],
+    idx: Option<(&mut [u32], u32)>,
+) {
+    let n = points.rows();
+    assert_eq!(dist.len(), n);
+    assert_eq!(points.cols(), new_centers.cols());
+    match idx {
+        None => {
+            for i in 0..n {
+                let p = points.row(i);
+                let mut best = dist[i];
+                for j in 0..new_centers.rows() {
+                    let d = sq_dist(p, new_centers.row(j));
+                    if d < best {
+                        best = d;
+                    }
+                }
+                dist[i] = best;
+            }
+        }
+        Some((idx, idx_base)) => {
+            assert_eq!(idx.len(), n);
+            for i in 0..n {
+                let p = points.row(i);
+                for j in 0..new_centers.rows() {
+                    let d = sq_dist(p, new_centers.row(j));
+                    if d < dist[i] {
+                        dist[i] = d;
+                        idx[i] = idx_base + j as u32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randmat(rng: &mut Pcg64, rows: usize, cols: usize) -> Matrix {
+        let data = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        Matrix::from_vec(data, rows, cols)
+    }
+
+    #[test]
+    fn sq_dist_basics() {
+        assert_eq!(sq_dist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(sq_dist(&[1.0; 7], &[1.0; 7]), 0.0);
+        // length > 4 exercises the unrolled + scalar tail paths
+        let a = [1., 2., 3., 4., 5., 6., 7.];
+        let b = [0.; 7];
+        assert_eq!(sq_dist(&a, &b), 1. + 4. + 9. + 16. + 25. + 36. + 49.);
+    }
+
+    #[test]
+    fn nearest_matches_bruteforce() {
+        let mut rng = Pcg64::new(1);
+        let pts = randmat(&mut rng, 100, 9);
+        let cen = randmat(&mut rng, 7, 9);
+        let (dist, idx) = nearest_center(&pts, &cen);
+        for i in 0..pts.rows() {
+            let mut best = f32::INFINITY;
+            let mut bj = 0;
+            for j in 0..cen.rows() {
+                let d = sq_dist(pts.row(i), cen.row(j));
+                if d < best {
+                    best = d;
+                    bj = j;
+                }
+            }
+            assert_eq!(idx[i] as usize, bj);
+            assert!((dist[i] - best).abs() <= 1e-6 * best.max(1.0));
+        }
+    }
+
+    #[test]
+    fn point_equal_to_center_is_zero() {
+        let cen = Matrix::from_rows(&[&[1.0, 2.0], &[5.0, 5.0]]);
+        let pts = Matrix::from_rows(&[&[5.0, 5.0]]);
+        let (d, i) = nearest_center(&pts, &cen);
+        assert_eq!(d[0], 0.0);
+        assert_eq!(i[0], 1);
+    }
+
+    #[test]
+    fn update_nearest_equals_full_recompute() {
+        let mut rng = Pcg64::new(2);
+        let pts = randmat(&mut rng, 200, 5);
+        let c1 = randmat(&mut rng, 3, 5);
+        let c2 = randmat(&mut rng, 4, 5);
+        // incremental
+        let (mut dist, mut idx) = nearest_center(&pts, &c1);
+        update_nearest(&pts, &c2, &mut dist, Some((&mut idx, 3)));
+        // full
+        let mut all = c1.clone();
+        all.extend(&c2);
+        let (dist_full, idx_full) = nearest_center(&pts, &all);
+        assert_eq!(idx, idx_full);
+        for i in 0..pts.rows() {
+            assert!((dist[i] - dist_full[i]).abs() <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn update_nearest_without_idx() {
+        let mut rng = Pcg64::new(3);
+        let pts = randmat(&mut rng, 50, 4);
+        let c1 = randmat(&mut rng, 2, 4);
+        let c2 = randmat(&mut rng, 2, 4);
+        let (mut dist, _) = nearest_center(&pts, &c1);
+        update_nearest(&pts, &c2, &mut dist, None);
+        let mut all = c1.clone();
+        all.extend(&c2);
+        let (dist_full, _) = nearest_center(&pts, &all);
+        for i in 0..50 {
+            assert!((dist[i] - dist_full[i]).abs() <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn nearest_dist_into_matches() {
+        let mut rng = Pcg64::new(4);
+        let pts = randmat(&mut rng, 64, 6);
+        let cen = randmat(&mut rng, 5, 6);
+        let (dist, _) = nearest_center(&pts, &cen);
+        let mut buf = vec![0.0; 64];
+        nearest_dist_into(&pts, &cen, &mut buf);
+        assert_eq!(dist, buf);
+    }
+
+    #[test]
+    #[should_panic(expected = "no centers")]
+    fn empty_centers_panics() {
+        let pts = Matrix::zeros(2, 3);
+        let cen = Matrix::zeros(0, 3);
+        nearest_center(&pts, &cen);
+    }
+}

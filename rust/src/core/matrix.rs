@@ -1,0 +1,253 @@
+//! Dense row-major f32 point storage.
+//!
+//! Every dataset, shard, sample and center set in the system is a
+//! `Matrix`: `rows` points in `cols` dimensions, contiguous row-major —
+//! the layout both the native distance kernel and the PJRT artifacts use.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            data: vec![0.0; rows * cols],
+            rows,
+            cols,
+        }
+    }
+
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { data, rows, cols }
+    }
+
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        let cols = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Matrix {
+            data,
+            rows: rows.len(),
+            cols,
+        }
+    }
+
+    /// Empty matrix with capacity reserved for `rows_hint` rows.
+    pub fn with_capacity(rows_hint: usize, cols: usize) -> Self {
+        Matrix {
+            data: Vec::with_capacity(rows_hint * cols),
+            rows: 0,
+            cols,
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "row width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Append all rows of `other`.
+    pub fn extend(&mut self, other: &Matrix) {
+        if other.rows == 0 {
+            return;
+        }
+        assert_eq!(self.cols, other.cols, "col mismatch");
+        self.data.extend_from_slice(&other.data);
+        self.rows += other.rows;
+    }
+
+    /// New matrix with the selected rows (in the order given).
+    pub fn select(&self, indices: &[usize]) -> Matrix {
+        let mut out = Matrix::with_capacity(indices.len(), self.cols);
+        for &i in indices {
+            out.push_row(self.row(i));
+        }
+        out
+    }
+
+    /// Keep only rows where `keep[i]`, compacting in place. O(n), stable.
+    pub fn retain_rows(&mut self, keep: &[bool]) {
+        assert_eq!(keep.len(), self.rows);
+        let cols = self.cols;
+        let mut write = 0usize;
+        for (i, &k) in keep.iter().enumerate() {
+            if k {
+                if write != i {
+                    let (dst, src) = self.data.split_at_mut(i * cols);
+                    dst[write * cols..(write + 1) * cols].copy_from_slice(&src[..cols]);
+                }
+                write += 1;
+            }
+        }
+        self.rows = write;
+        self.data.truncate(write * cols);
+    }
+
+    /// Contiguous row range as a borrowed view matrix (copy-free slice).
+    pub fn row_slice(&self, start: usize, len: usize) -> &[f32] {
+        &self.data[start * self.cols..(start + len) * self.cols]
+    }
+
+    /// Split into `parts` contiguous shards with near-equal row counts
+    /// (the paper's "arbitrary partition" across machines).
+    pub fn split_rows(&self, parts: usize) -> Vec<Matrix> {
+        assert!(parts > 0);
+        let base = self.rows / parts;
+        let extra = self.rows % parts;
+        let mut out = Vec::with_capacity(parts);
+        let mut start = 0usize;
+        for p in 0..parts {
+            let len = base + usize::from(p < extra);
+            out.push(Matrix::from_vec(
+                self.row_slice(start, len).to_vec(),
+                len,
+                self.cols,
+            ));
+            start += len;
+        }
+        out
+    }
+
+    /// Vertical stack of many matrices.
+    pub fn vstack(mats: &[&Matrix]) -> Matrix {
+        let cols = mats.iter().find(|m| m.rows > 0).map(|m| m.cols).unwrap_or(0);
+        let mut out = Matrix::with_capacity(mats.iter().map(|m| m.rows).sum(), cols);
+        if out.cols == 0 {
+            return out;
+        }
+        for m in mats {
+            if m.rows > 0 {
+                out.extend(m);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m3x2() -> Matrix {
+        Matrix::from_vec(vec![1., 2., 3., 4., 5., 6.], 3, 2)
+    }
+
+    #[test]
+    fn rows_and_access() {
+        let m = m3x2();
+        assert_eq!(m.row(0), &[1., 2.]);
+        assert_eq!(m.row(2), &[5., 6.]);
+        assert_eq!((m.rows(), m.cols()), (3, 2));
+    }
+
+    #[test]
+    fn push_and_extend() {
+        let mut m = Matrix::with_capacity(4, 2);
+        m.push_row(&[1., 2.]);
+        m.extend(&m3x2());
+        assert_eq!(m.rows(), 4);
+        assert_eq!(m.row(3), &[5., 6.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn push_wrong_width_panics() {
+        let mut m = Matrix::zeros(0, 3);
+        m.push_row(&[1.0]);
+    }
+
+    #[test]
+    fn select_rows() {
+        let m = m3x2();
+        let s = m.select(&[2, 0]);
+        assert_eq!(s.row(0), &[5., 6.]);
+        assert_eq!(s.row(1), &[1., 2.]);
+    }
+
+    #[test]
+    fn retain_rows_compacts() {
+        let mut m = m3x2();
+        m.retain_rows(&[true, false, true]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(0), &[1., 2.]);
+        assert_eq!(m.row(1), &[5., 6.]);
+        // degenerate: keep nothing
+        m.retain_rows(&[false, false]);
+        assert_eq!(m.rows(), 0);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn retain_all_noop() {
+        let mut m = m3x2();
+        m.retain_rows(&[true, true, true]);
+        assert_eq!(m, m3x2());
+    }
+
+    #[test]
+    fn split_rows_covers_everything() {
+        let m = Matrix::from_vec((0..20).map(|x| x as f32).collect(), 10, 2);
+        let parts = m.split_rows(3);
+        assert_eq!(parts.iter().map(|p| p.rows()).collect::<Vec<_>>(), vec![4, 3, 3]);
+        let back = Matrix::vstack(&parts.iter().collect::<Vec<_>>());
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn split_more_parts_than_rows() {
+        let m = m3x2();
+        let parts = m.split_rows(5);
+        assert_eq!(parts.len(), 5);
+        assert_eq!(parts.iter().map(|p| p.rows()).sum::<usize>(), 3);
+        assert!(parts[4].is_empty());
+    }
+
+    #[test]
+    fn vstack_empty_inputs() {
+        let e = Matrix::zeros(0, 2);
+        let v = Matrix::vstack(&[&e, &m3x2(), &e]);
+        assert_eq!(v, m3x2());
+        let all_empty = Matrix::vstack(&[&e, &e]);
+        assert!(all_empty.is_empty());
+    }
+}

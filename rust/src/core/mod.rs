@@ -1,0 +1,8 @@
+//! Core numeric types: dense point storage, the native distance kernel
+//! and the paper's (truncated) k-means cost.
+
+pub mod cost;
+pub mod distance;
+pub mod matrix;
+
+pub use matrix::Matrix;

@@ -1,0 +1,135 @@
+//! The paper's synthetic benchmark (§8): a k-Gaussian mixture in R^15
+//! with means uniform in the unit cube, spherical isotropic σ = 0.001,
+//! and Zipf(γ = 1.5) mixture weights.
+
+use crate::core::Matrix;
+use crate::util::rng::{zipf_weights, AliasTable, Pcg64};
+
+#[derive(Clone, Debug)]
+pub struct GaussianMixtureSpec {
+    pub n: usize,
+    pub k: usize,
+    pub dim: usize,
+    pub sigma: f64,
+    pub zipf_gamma: f64,
+}
+
+impl GaussianMixtureSpec {
+    /// The exact §8 configuration for a given k (n scaled by the caller).
+    pub fn paper(n: usize, k: usize) -> Self {
+        GaussianMixtureSpec {
+            n,
+            k,
+            dim: 15,
+            sigma: 0.001,
+            zipf_gamma: 1.5,
+        }
+    }
+}
+
+/// A generated mixture: the points plus ground truth for tests/benches.
+pub struct GaussianMixture {
+    pub points: Matrix,
+    pub means: Matrix,
+    pub component: Vec<u32>,
+    pub weights: Vec<f64>,
+}
+
+pub fn generate(spec: &GaussianMixtureSpec, rng: &mut Pcg64) -> GaussianMixture {
+    assert!(spec.k >= 1 && spec.dim >= 1);
+    // means ~ U[0,1]^dim
+    let mut means = Matrix::zeros(spec.k, spec.dim);
+    for c in 0..spec.k {
+        for v in means.row_mut(c) {
+            *v = rng.f32();
+        }
+    }
+    let weights = zipf_weights(spec.k, spec.zipf_gamma);
+    let alias = AliasTable::new(&weights);
+
+    let mut points = Matrix::zeros(spec.n, spec.dim);
+    let mut component = vec![0u32; spec.n];
+    for i in 0..spec.n {
+        let c = alias.sample(rng);
+        component[i] = c as u32;
+        let mu = means.row(c).to_vec();
+        let row = points.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = mu[j] + (rng.normal() * spec.sigma) as f32;
+        }
+    }
+    GaussianMixture {
+        points,
+        means,
+        component,
+        weights,
+    }
+}
+
+/// Expected optimal k-means cost of the mixture: each point contributes
+/// ≈ σ²·d in squared distance to its own mean (used as the ground-truth
+/// scale in theorem-7.1 benches; the paper's "cost 150" for n=10M is
+/// exactly n·σ²·d = 1e7·1e-6·15 = 150).
+pub fn expected_optimal_cost(spec: &GaussianMixtureSpec) -> f64 {
+    spec.n as f64 * spec.sigma * spec.sigma * spec.dim as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::cost::cost;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let spec = GaussianMixtureSpec::paper(1000, 5);
+        let a = generate(&spec, &mut Pcg64::new(1));
+        let b = generate(&spec, &mut Pcg64::new(1));
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.points.rows(), 1000);
+        assert_eq!(a.points.cols(), 15);
+        assert_eq!(a.means.rows(), 5);
+    }
+
+    #[test]
+    fn cost_at_true_means_matches_theory() {
+        let spec = GaussianMixtureSpec::paper(20_000, 8);
+        let gm = generate(&spec, &mut Pcg64::new(2));
+        let c = cost(&gm.points, &gm.means);
+        let expected = expected_optimal_cost(&spec);
+        assert!(
+            (c - expected).abs() < 0.15 * expected,
+            "cost {c} vs expected {expected}"
+        );
+    }
+
+    #[test]
+    fn zipf_weights_produce_skewed_components() {
+        let spec = GaussianMixtureSpec::paper(50_000, 10);
+        let gm = generate(&spec, &mut Pcg64::new(3));
+        let mut counts = vec![0usize; 10];
+        for &c in &gm.component {
+            counts[c as usize] += 1;
+        }
+        // component 0 should be the largest by a wide margin (zipf 1.5)
+        let max = *counts.iter().max().unwrap();
+        assert_eq!(counts[0], max);
+        assert!(counts[0] > 3 * counts[9], "{counts:?}");
+        // empirical proportions track the zipf weights
+        for c in 0..10 {
+            let p = counts[c] as f64 / 50_000.0;
+            assert!((p - gm.weights[c]).abs() < 0.02, "c={c} p={p} w={}", gm.weights[c]);
+        }
+    }
+
+    #[test]
+    fn points_concentrate_near_means() {
+        let spec = GaussianMixtureSpec::paper(2000, 3);
+        let gm = generate(&spec, &mut Pcg64::new(4));
+        for i in 0..100 {
+            let c = gm.component[i] as usize;
+            let d2 = crate::core::distance::sq_dist(gm.points.row(i), gm.means.row(c));
+            // chi^2_15 tail: 15 sigma^2 expected, allow 10x
+            assert!(d2 < (10.0 * 15.0 * 1e-6) as f32, "i={i} d2={d2}");
+        }
+    }
+}

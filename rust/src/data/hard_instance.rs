@@ -1,0 +1,93 @@
+//! The Theorem 7.2 hard instance for k-means|| (after Bachem et al.
+//! 2017a, Theorem 2): k distinct points {x_1..x_k} where x_1 appears
+//! k−1 times and x_2..x_k once each, the whole multiset duplicated z
+//! times so n ≥ n₀. k-means|| needs k−1 rounds for a finite
+//! approximation factor; SOCCER stops after one round with the optimal
+//! (zero-cost) clustering.
+//!
+//! Geometry: x_1 at the origin, x_2..x_k mutually far apart and far from
+//! the origin with *geometrically decreasing* distances — k-means||'s
+//! D²-sampling keeps picking (copies of) the currently-costliest point
+//! and discovers only one new distinct point per round.
+
+use crate::core::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct HardInstance {
+    pub points: Matrix,
+    /// the k distinct points (the optimal zero-cost clustering)
+    pub distinct: Matrix,
+    pub duplication: usize,
+}
+
+/// Build the instance with at least `n0` points.
+pub fn generate(k: usize, n0: usize) -> HardInstance {
+    assert!(k >= 2);
+    let base = 2 * k - 2; // |{x_1 × (k-1), x_2..x_k}|
+    let z = n0.div_ceil(base).max(1);
+
+    // distinct points on orthogonal axes in R^k with geometric radii:
+    // x_1 = 0, x_i = r_i * e_i with r_i = 4^(k-i+1) — the far points
+    // dominate D^2 mass one at a time.
+    let d = k;
+    let mut distinct = Matrix::zeros(k, d);
+    for i in 1..k {
+        let r = 4.0f32.powi((k - i) as i32 + 1);
+        distinct.row_mut(i)[i] = r;
+    }
+
+    let mut points = Matrix::with_capacity(base * z, d);
+    for _ in 0..z {
+        for _ in 0..(k - 1) {
+            points.push_row(distinct.row(0));
+        }
+        for i in 1..k {
+            points.push_row(distinct.row(i));
+        }
+    }
+    HardInstance {
+        points,
+        distinct,
+        duplication: z,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::cost::cost;
+
+    #[test]
+    fn sizes_and_duplication() {
+        let h = generate(5, 1000);
+        assert_eq!(h.points.rows() % (2 * 5 - 2), 0);
+        assert!(h.points.rows() >= 1000);
+        assert_eq!(h.distinct.rows(), 5);
+    }
+
+    #[test]
+    fn optimal_cost_is_zero() {
+        let h = generate(6, 100);
+        assert_eq!(cost(&h.points, &h.distinct), 0.0);
+    }
+
+    #[test]
+    fn distinct_points_mutually_far() {
+        let h = generate(5, 10);
+        for i in 0..5 {
+            for j in 0..i {
+                let d2 = crate::core::distance::sq_dist(h.distinct.row(i), h.distinct.row(j));
+                assert!(d2 >= 16.0, "points {i},{j} too close: {d2}");
+            }
+        }
+    }
+
+    #[test]
+    fn x1_multiplicity() {
+        let h = generate(4, 50);
+        let copies_of_x1 = (0..h.points.rows())
+            .filter(|&i| h.points.row(i).iter().all(|&v| v == 0.0))
+            .count();
+        assert_eq!(copies_of_x1, (4 - 1) * h.duplication);
+    }
+}

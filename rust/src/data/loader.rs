@@ -1,0 +1,124 @@
+//! Binary dataset save/load (simple header + raw f32 rows, little
+//! endian) plus a CSV loader so users can run the system on their own
+//! data. Generated benchmark datasets can be cached across runs.
+
+use crate::core::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SOCCERv1";
+
+/// Save a matrix as `SOCCERv1 <rows u64> <cols u64> <f32 data...>`.
+pub fn save_binary(m: &Matrix, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(m.rows() as u64).to_le_bytes())?;
+    w.write_all(&(m.cols() as u64).to_le_bytes())?;
+    for &v in m.data() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a matrix written by [`save_binary`].
+pub fn load_binary(path: &Path) -> Result<Matrix> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = std::io::BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a SOCCERv1 file");
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let rows = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let cols = u64::from_le_bytes(b8) as usize;
+    let mut data = vec![0f32; rows * cols];
+    let mut b4 = [0u8; 4];
+    for v in data.iter_mut() {
+        r.read_exact(&mut b4)?;
+        *v = f32::from_le_bytes(b4);
+    }
+    Ok(Matrix::from_vec(data, rows, cols))
+}
+
+/// Load a headerless numeric CSV (comma or whitespace separated).
+pub fn load_csv(path: &Path) -> Result<Matrix> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut cols = 0usize;
+    let mut data = Vec::new();
+    let mut rows = 0usize;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let vals: Vec<f32> = trimmed
+            .split(|c: char| c == ',' || c.is_whitespace())
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse::<f32>().with_context(|| format!("line {}: bad number '{s}'", lineno + 1)))
+            .collect::<Result<_>>()?;
+        if cols == 0 {
+            cols = vals.len();
+        } else if vals.len() != cols {
+            bail!("line {}: expected {cols} columns, got {}", lineno + 1, vals.len());
+        }
+        data.extend(vals);
+        rows += 1;
+    }
+    if rows == 0 {
+        bail!("{path:?}: no data rows");
+    }
+    Ok(Matrix::from_vec(data, rows, cols))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("soccer_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let m = Matrix::from_rows(&[&[1.5, -2.0], &[0.0, 3.25]]);
+        let p = tmp("roundtrip.bin");
+        save_binary(&m, &p).unwrap();
+        let back = load_binary(&p).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let p = tmp("garbage.bin");
+        std::fs::write(&p, b"not a soccer file at all").unwrap();
+        assert!(load_binary(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn csv_parses_mixed_separators() {
+        let p = tmp("data.csv");
+        std::fs::write(&p, "# comment\n1.0,2.0\n3.0 4.0\n\n5,6\n").unwrap();
+        let m = load_csv(&p).unwrap();
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let p = tmp("ragged.csv");
+        std::fs::write(&p, "1,2\n3,4,5\n").unwrap();
+        assert!(load_csv(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

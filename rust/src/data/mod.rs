@@ -1,0 +1,59 @@
+//! Dataset substrates: the paper's Gaussian-mixture benchmark, synthetic
+//! surrogates for its four real datasets, the Theorem-7.2 hard instance,
+//! and a binary loader/saver for reusing generated datasets.
+
+pub mod gaussian;
+pub mod hard_instance;
+pub mod loader;
+pub mod scaler;
+pub mod surrogates;
+
+use crate::core::Matrix;
+use crate::util::rng::Pcg64;
+
+/// A named dataset ready for the experiment harness.
+pub struct Dataset {
+    pub name: String,
+    pub points: Matrix,
+}
+
+/// Names accepted by `by_name` (paper Table 1 inventory).
+pub const DATASET_NAMES: [&str; 5] = ["gaussian", "higgs", "census", "kdd", "bigcross"];
+
+/// Build a dataset by paper name. `k` only affects `gaussian` (the paper
+/// regenerates the mixture for each tested k).
+pub fn by_name(name: &str, n: usize, k: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let points = match name {
+        "gaussian" => gaussian::generate(&gaussian::GaussianMixtureSpec::paper(n, k), &mut rng).points,
+        "higgs" => surrogates::higgs_like(n, &mut rng),
+        "census" => surrogates::census_like(n, &mut rng),
+        "kdd" => surrogates::kdd_like(n, &mut rng),
+        "bigcross" => surrogates::bigcross_like(n, &mut rng),
+        other => panic!("unknown dataset '{other}' (expected one of {DATASET_NAMES:?})"),
+    };
+    Dataset {
+        name: name.to_string(),
+        points,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_everything() {
+        for name in DATASET_NAMES {
+            let ds = by_name(name, 200, 5, 1);
+            assert_eq!(ds.points.rows(), 200, "{name}");
+            assert!(ds.points.cols() >= 15, "{name}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown dataset")]
+    fn unknown_name_panics() {
+        by_name("nope", 10, 2, 0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Feature scaling for user-supplied datasets. k-means is not
+//! scale-invariant; real pipelines standardize before clustering (the
+//! UCI datasets the paper uses are commonly preprocessed this way).
+
+use crate::core::Matrix;
+
+/// Per-feature affine transform x' = (x - shift) / scale.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scaler {
+    pub shift: Vec<f32>,
+    pub scale: Vec<f32>,
+}
+
+impl Scaler {
+    /// Standardize: shift = mean, scale = std (1 where degenerate).
+    pub fn standard(points: &Matrix) -> Scaler {
+        let (rows, cols) = (points.rows(), points.cols());
+        assert!(rows > 0, "cannot fit a scaler on an empty matrix");
+        let mut mean = vec![0.0f64; cols];
+        for i in 0..rows {
+            for (m, &v) in mean.iter_mut().zip(points.row(i)) {
+                *m += v as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= rows as f64;
+        }
+        let mut var = vec![0.0f64; cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                let d = points.row(i)[j] as f64 - mean[j];
+                var[j] += d * d;
+            }
+        }
+        let scale = var
+            .iter()
+            .map(|&v| {
+                let s = (v / rows as f64).sqrt();
+                if s > 1e-12 {
+                    s as f32
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        Scaler {
+            shift: mean.into_iter().map(|m| m as f32).collect(),
+            scale,
+        }
+    }
+
+    /// Min-max to [0, 1] (constant features map to 0).
+    pub fn minmax(points: &Matrix) -> Scaler {
+        let (rows, cols) = (points.rows(), points.cols());
+        assert!(rows > 0, "cannot fit a scaler on an empty matrix");
+        let mut lo = vec![f32::INFINITY; cols];
+        let mut hi = vec![f32::NEG_INFINITY; cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                let v = points.row(i)[j];
+                lo[j] = lo[j].min(v);
+                hi[j] = hi[j].max(v);
+            }
+        }
+        let scale = lo
+            .iter()
+            .zip(&hi)
+            .map(|(&l, &h)| if h - l > 1e-12 { h - l } else { 1.0 })
+            .collect();
+        Scaler { shift: lo, scale }
+    }
+
+    /// Apply in place.
+    pub fn transform(&self, points: &mut Matrix) {
+        assert_eq!(points.cols(), self.shift.len());
+        for i in 0..points.rows() {
+            let row = points.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (*v - self.shift[j]) / self.scale[j];
+            }
+        }
+    }
+
+    /// Undo (for reporting centers in original units).
+    pub fn inverse_transform(&self, points: &mut Matrix) {
+        assert_eq!(points.cols(), self.shift.len());
+        for i in 0..points.rows() {
+            let row = points.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = *v * self.scale[j] + self.shift[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn sample() -> Matrix {
+        let mut rng = Pcg64::new(1);
+        let mut m = Matrix::zeros(500, 3);
+        for i in 0..500 {
+            let r = m.row_mut(i);
+            r[0] = (rng.normal() * 10.0 + 100.0) as f32;
+            r[1] = (rng.normal() * 0.01) as f32;
+            r[2] = 7.0; // constant feature
+        }
+        m
+    }
+
+    #[test]
+    fn standard_gives_zero_mean_unit_std() {
+        let mut m = sample();
+        let s = Scaler::standard(&m);
+        s.transform(&mut m);
+        for j in 0..2 {
+            let col: Vec<f64> = (0..m.rows()).map(|i| m.row(i)[j] as f64).collect();
+            assert!(crate::util::stats::mean(&col).abs() < 1e-3, "j={j}");
+            assert!((crate::util::stats::std(&col) - 1.0).abs() < 0.01, "j={j}");
+        }
+        // constant feature untouched (scale fell back to 1)
+        assert_eq!(m.row(0)[2], 0.0);
+    }
+
+    #[test]
+    fn minmax_bounds() {
+        let mut m = sample();
+        Scaler::minmax(&m).transform(&mut m);
+        for i in 0..m.rows() {
+            for &v in m.row(i) {
+                assert!((0.0..=1.0).contains(&v), "{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrips() {
+        let orig = sample();
+        let mut m = orig.clone();
+        let s = Scaler::standard(&orig);
+        s.transform(&mut m);
+        s.inverse_transform(&mut m);
+        for i in 0..m.rows() {
+            for j in 0..m.cols() {
+                assert!((m.row(i)[j] - orig.row(i)[j]).abs() < 1e-2, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_panics() {
+        Scaler::standard(&Matrix::zeros(0, 3));
+    }
+}

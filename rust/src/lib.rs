@@ -1,0 +1,34 @@
+//! # SOCCER — Fast Distributed k-Means with a Small Number of Rounds
+//!
+//! Production reproduction of Hess, Visbord & Sabato (2022). The crate
+//! implements the full coordinator-model distributed k-means stack:
+//!
+//! - [`coordinator`] — the SOCCER algorithm (Alg. 1 of the paper),
+//! - [`machines`] — the simulated machine fleet with communication and
+//!   per-machine time accounting,
+//! - [`baselines`] — k-means|| (Bahmani et al. 2012), EIM11 (Ene et al.
+//!   2011) and a centralized reference,
+//! - [`clustering`] — the centralized black-box algorithms the
+//!   coordinator runs (k-means++/Lloyd and MiniBatchKMeans),
+//! - [`runtime`] — the PJRT runtime executing AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) on the hot paths,
+//! - [`data`] — dataset substrates (the paper's Gaussian mixtures plus
+//!   surrogates for its four real datasets),
+//! - [`bench_support`] — the harness regenerating every paper table.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); the binary and
+//! all examples are self-contained afterwards.
+
+pub mod baselines;
+pub mod bench_support;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod machines;
+pub mod runtime;
+pub mod telemetry;
+pub mod util;
+
+pub use crate::core::Matrix;

@@ -1,0 +1,380 @@
+//! The machine fleet: m machines + the coordinator-side orchestration
+//! primitives every distributed algorithm in this repo is built from.
+//!
+//! Execution model: under a `parallel_safe` engine (native) machine
+//! tasks run on a scoped thread pool; under the PJRT engine they run
+//! sequentially on the coordinator thread (PJRT types are
+//! thread-confined). Either way each task is individually timed and a
+//! round's machine time is max_j t_j, matching the paper's metric.
+
+use super::machine::Machine;
+use crate::core::Matrix;
+use crate::runtime::{Engine, NativeEngine};
+use crate::util::pool::par_map_mut;
+use crate::util::rng::Pcg64;
+
+pub struct Fleet {
+    machines: Vec<Machine>,
+    pub workers: usize,
+}
+
+/// Aggregated result of a fleet-wide step.
+pub struct StepOut<T> {
+    pub value: T,
+    /// max over machines of the per-machine time (the paper's metric)
+    pub max_secs: f64,
+}
+
+impl Fleet {
+    /// Partition `points` into `m` contiguous shards (the paper's
+    /// "arbitrarily partitioned") and build the fleet. Each machine gets
+    /// an independent RNG stream derived from `seed`.
+    pub fn new(points: &Matrix, m: usize, seed: u64) -> Fleet {
+        assert!(m >= 1);
+        let shards = points.split_rows(m);
+        let mut root = Pcg64::new(seed);
+        let machines = shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| Machine::new(id, shard, root.split(id as u64)))
+            .collect();
+        Fleet {
+            machines,
+            workers: crate::util::pool::default_workers(),
+        }
+    }
+
+    pub fn num_machines(&self) -> usize {
+        self.machines.len()
+    }
+
+    pub fn total_live(&self) -> usize {
+        self.machines.iter().map(|m| m.n_live()).sum()
+    }
+
+    pub fn total_original(&self) -> usize {
+        self.machines.iter().map(|m| m.n_original()).sum()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.machines[0].original().cols()
+    }
+
+    pub fn live_sizes(&self) -> Vec<usize> {
+        self.machines.iter().map(|m| m.n_live()).collect()
+    }
+
+    /// Restore all machines for a fresh repetition (identical replay).
+    pub fn reset(&mut self) {
+        for m in &mut self.machines {
+            m.reset();
+        }
+    }
+
+    /// Restore shards AND derive fresh per-machine RNG streams from
+    /// `seed` (independent repetition, the paper's protocol).
+    pub fn reset_with_seed(&mut self, seed: u64) {
+        let mut root = Pcg64::new(seed);
+        for (i, m) in self.machines.iter_mut().enumerate() {
+            m.reset();
+            m.reseed(root.split(i as u64));
+        }
+    }
+
+    /// Run `f` on every machine, parallel when the engine allows it.
+    fn each<R: Send>(
+        &mut self,
+        engine: &dyn Engine,
+        f: impl Fn(&mut Machine, &dyn Engine) -> R + Sync,
+    ) -> Vec<R> {
+        if engine.parallel_safe() {
+            // parallel path: NativeEngine is a ZST with identical
+            // semantics, so hand each thread its own copy
+            par_map_mut(&mut self.machines, self.workers, |_, m| f(m, &NativeEngine))
+        } else {
+            self.machines.iter_mut().map(|m| f(m, engine)).collect()
+        }
+    }
+
+    /// Exact-size sampling (paper App. A variant, used by the
+    /// experiments): the coordinator draws per-machine quotas from a
+    /// multinomial over live shard sizes, each machine samples its quota
+    /// without replacement. Returns two independent samples of exactly
+    /// `total` points each (clamped by machine contents).
+    pub fn sample_pair_exact(&mut self, total: usize, coord_rng: &mut Pcg64) -> StepOut<(Matrix, Matrix)> {
+        let sizes: Vec<f64> = self.machines.iter().map(|m| m.n_live() as f64).collect();
+        let q1 = coord_rng.multinomial(total, &sizes);
+        let q2 = coord_rng.multinomial(total, &sizes);
+        // quotas can exceed a machine's contents in rare multinomial
+        // draws; clamp (the deficit is negligible and only shrinks P)
+        let mut max_secs = 0.0f64;
+        let dim = self.dim();
+        let mut p1 = Matrix::with_capacity(total, dim);
+        let mut p2 = Matrix::with_capacity(total, dim);
+        for (i, m) in self.machines.iter_mut().enumerate() {
+            let t1 = m.sample_exact(q1[i]);
+            let t2 = m.sample_exact(q2[i]);
+            p1.extend(&t1.value);
+            p2.extend(&t2.value);
+            max_secs = max_secs.max(t1.secs + t2.secs);
+        }
+        StepOut {
+            value: (p1, p2),
+            max_secs,
+        }
+    }
+
+    /// Bernoulli sampling exactly as written in Alg. 1 line 4.
+    pub fn sample_pair_bernoulli(&mut self, alpha: f64) -> StepOut<(Matrix, Matrix)> {
+        let dim = self.dim();
+        let outs = par_map_mut(&mut self.machines, self.workers, |_, m| {
+            m.sample_bernoulli_pair(alpha)
+        });
+        let mut p1 = Matrix::with_capacity(64, dim);
+        let mut p2 = Matrix::with_capacity(64, dim);
+        let mut max_secs = 0.0f64;
+        for t in outs {
+            p1.extend(&t.value.0);
+            p2.extend(&t.value.1);
+            max_secs = max_secs.max(t.secs);
+        }
+        StepOut {
+            value: (p1, p2),
+            max_secs,
+        }
+    }
+
+    /// Broadcast (centers, v) and run the removal step on every machine.
+    /// Returns total points removed.
+    pub fn broadcast_remove(&mut self, centers: &Matrix, v: f32, engine: &dyn Engine) -> StepOut<usize> {
+        let outs = self.each(engine, |m, e| m.remove_within(centers, v, e));
+        StepOut {
+            value: outs.iter().map(|t| t.value).sum(),
+            max_secs: outs.iter().map(|t| t.secs).fold(0.0, f64::max),
+        }
+    }
+
+    /// Collect all remaining live points at the coordinator (line 15).
+    pub fn drain(&mut self) -> Matrix {
+        let dim = self.dim();
+        let mut v = Matrix::with_capacity(self.total_live(), dim);
+        for m in &mut self.machines {
+            let part = m.drain();
+            v.extend(&part);
+        }
+        v
+    }
+
+    /// Distributed evaluation of cost(X, centers) over ORIGINAL shards.
+    pub fn cost_full(&mut self, centers: &Matrix, engine: &dyn Engine) -> StepOut<f64> {
+        let outs = self.each(engine, |m, e| m.cost_original(centers, e));
+        StepOut {
+            value: outs.iter().map(|t| t.value).sum(),
+            max_secs: outs.iter().map(|t| t.secs).fold(0.0, f64::max),
+        }
+    }
+
+    /// Distributed cluster sizes of `centers` over X (reduction weights).
+    pub fn counts_full(&mut self, centers: &Matrix, engine: &dyn Engine) -> StepOut<Vec<f64>> {
+        let k = centers.rows();
+        let outs = self.each(engine, |m, e| m.counts_original(centers, e));
+        let mut total = vec![0.0f64; k];
+        let mut max_secs = 0.0f64;
+        for t in outs {
+            for (a, b) in total.iter_mut().zip(&t.value) {
+                *a += b;
+            }
+            max_secs = max_secs.max(t.secs);
+        }
+        StepOut {
+            value: total,
+            max_secs,
+        }
+    }
+
+    // ---- k-means|| fleet steps ---------------------------------------------
+
+    pub fn kmpar_init(&mut self, initial: &Matrix, engine: &dyn Engine) -> StepOut<f64> {
+        let outs = self.each(engine, |m, e| m.kmpar_init(initial, e));
+        StepOut {
+            value: outs.iter().map(|t| t.value).sum(),
+            max_secs: outs.iter().map(|t| t.secs).fold(0.0, f64::max),
+        }
+    }
+
+    pub fn kmpar_update(&mut self, new_centers: &Matrix, engine: &dyn Engine) -> StepOut<f64> {
+        let outs = self.each(engine, |m, e| m.kmpar_update(new_centers, e));
+        StepOut {
+            value: outs.iter().map(|t| t.value).sum(),
+            max_secs: outs.iter().map(|t| t.secs).fold(0.0, f64::max),
+        }
+    }
+
+    pub fn kmpar_sample(&mut self, l: f64, phi: f64) -> StepOut<Matrix> {
+        let dim = self.dim();
+        let outs = par_map_mut(&mut self.machines, self.workers, |_, m| m.kmpar_sample(l, phi));
+        let mut all = Matrix::with_capacity(16, dim);
+        let mut max_secs = 0.0f64;
+        for t in outs {
+            all.extend(&t.value);
+            max_secs = max_secs.max(t.secs);
+        }
+        StepOut {
+            value: all,
+            max_secs,
+        }
+    }
+
+    /// Outlier-aware reduction weights: cluster sizes over points with
+    /// nearest-distance^2 <= cutoff.
+    pub fn counts_full_below(
+        &mut self,
+        centers: &Matrix,
+        cutoff: f32,
+        engine: &dyn Engine,
+    ) -> StepOut<Vec<f64>> {
+        let k = centers.rows();
+        let outs = self.each(engine, |m, e| m.counts_original_below(centers, cutoff, e));
+        let mut total = vec![0.0f64; k];
+        let mut max_secs = 0.0f64;
+        for t in outs {
+            for (a, b) in total.iter_mut().zip(&t.value) {
+                *a += b;
+            }
+            max_secs = max_secs.max(t.secs);
+        }
+        StepOut { value: total, max_secs }
+    }
+
+    /// Kill a machine: its live shard is lost (crash without
+    /// replication) and it stops contributing to every later step.
+    /// Returns the number of live points lost. Killing an unknown or
+    /// already-dead machine is a no-op.
+    pub fn kill_machine(&mut self, id: usize) -> usize {
+        for m in &mut self.machines {
+            if m.id == id {
+                return m.kill();
+            }
+        }
+        0
+    }
+
+    /// Per-point costs of `centers` over the ORIGINAL shards of all
+    /// surviving machines, concatenated (for trimmed-cost evaluation).
+    pub fn per_point_costs_full(&mut self, centers: &Matrix, engine: &dyn Engine) -> Vec<f32> {
+        let outs = self.each(engine, |m, e| m.per_point_costs_original(centers, e));
+        let mut all = Vec::new();
+        for t in outs {
+            all.extend(t.value);
+        }
+        all
+    }
+
+    /// Pick one uniformly random point across live shards (k-means||
+    /// initialization).
+    pub fn uniform_point(&mut self, coord_rng: &mut Pcg64) -> Matrix {
+        let total = self.total_live();
+        assert!(total > 0);
+        let mut target = coord_rng.below(total);
+        for m in &mut self.machines {
+            if target < m.n_live() {
+                return m.live().select(&[target]);
+            }
+            target -= m.n_live();
+        }
+        unreachable!("index within total")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngine;
+
+    fn fleet(n: usize, m: usize) -> Fleet {
+        let mut rng = Pcg64::new(9);
+        let pts = Matrix::from_vec((0..n * 3).map(|_| rng.normal() as f32).collect(), n, 3);
+        Fleet::new(&pts, m, 7)
+    }
+
+    #[test]
+    fn partition_covers_everything() {
+        let f = fleet(1003, 50);
+        assert_eq!(f.num_machines(), 50);
+        assert_eq!(f.total_live(), 1003);
+        assert_eq!(f.total_original(), 1003);
+        let sizes = f.live_sizes();
+        assert!(sizes.iter().all(|&s| s == 20 || s == 21));
+    }
+
+    #[test]
+    fn exact_sampling_sizes() {
+        let mut f = fleet(5000, 13);
+        let mut rng = Pcg64::new(1);
+        let out = f.sample_pair_exact(400, &mut rng);
+        assert_eq!(out.value.0.rows(), 400);
+        assert_eq!(out.value.1.rows(), 400);
+    }
+
+    #[test]
+    fn bernoulli_sampling_approx_sizes() {
+        let mut f = fleet(20_000, 10);
+        let out = f.sample_pair_bernoulli(0.05);
+        let (p1, p2) = out.value;
+        assert!((800..1200).contains(&p1.rows()), "{}", p1.rows());
+        assert!((800..1200).contains(&p2.rows()), "{}", p2.rows());
+    }
+
+    #[test]
+    fn remove_and_drain_partition_invariant() {
+        let mut f = fleet(2000, 8);
+        let centers = Matrix::from_rows(&[&[0.0, 0.0, 0.0]]);
+        let before = f.total_live();
+        let out = f.broadcast_remove(&centers, 1.0, &NativeEngine);
+        assert_eq!(f.total_live() + out.value, before);
+        let v = f.drain();
+        assert_eq!(v.rows() + out.value, before);
+        assert_eq!(f.total_live(), 0);
+        assert_eq!(f.total_original(), 2000);
+    }
+
+    #[test]
+    fn cost_full_matches_centralized() {
+        let mut rng = Pcg64::new(2);
+        let pts = Matrix::from_vec((0..900).map(|_| rng.normal() as f32).collect(), 300, 3);
+        let mut f = Fleet::new(&pts, 7, 3);
+        let centers = Matrix::from_rows(&[&[0.0, 0.0, 0.0], &[1.0, 1.0, 1.0]]);
+        let distributed = f.cost_full(&centers, &NativeEngine).value;
+        let central = crate::core::cost::cost(&pts, &centers);
+        assert!((distributed - central).abs() < 1e-6 * central.max(1.0));
+    }
+
+    #[test]
+    fn counts_full_sums_to_n() {
+        let mut f = fleet(1234, 9);
+        let centers = Matrix::from_rows(&[&[0.0, 0.0, 0.0], &[5.0, 5.0, 5.0]]);
+        let counts = f.counts_full(&centers, &NativeEngine).value;
+        assert_eq!(counts.iter().sum::<f64>() as usize, 1234);
+    }
+
+    #[test]
+    fn uniform_point_in_dataset() {
+        let mut f = fleet(97, 10);
+        let mut rng = Pcg64::new(4);
+        for _ in 0..20 {
+            let p = f.uniform_point(&mut rng);
+            assert_eq!(p.rows(), 1);
+            assert_eq!(p.cols(), 3);
+        }
+    }
+
+    #[test]
+    fn reset_restores_fleet() {
+        let mut f = fleet(500, 5);
+        let centers = Matrix::from_rows(&[&[0.0, 0.0, 0.0]]);
+        f.broadcast_remove(&centers, 1e9, &NativeEngine);
+        assert_eq!(f.total_live(), 0);
+        f.reset();
+        assert_eq!(f.total_live(), 500);
+    }
+}

@@ -1,0 +1,418 @@
+//! A single simulated machine in the coordinator model (paper §3): it
+//! holds a shard X_j, samples from it, removes points against broadcast
+//! centers + threshold, and reports scalar statistics. Every method
+//! self-times so the fleet can report the paper's
+//! "T (machine) = Σ_rounds max_j t_j" metric.
+
+use crate::core::Matrix;
+use crate::runtime::Engine;
+use crate::util::rng::Pcg64;
+use std::time::Instant;
+
+pub struct Machine {
+    pub id: usize,
+    /// dead machines contribute nothing (failure injection)
+    dead: bool,
+    /// The machine's full original shard (kept for cost evaluation over
+    /// X after the protocol finishes).
+    original: Matrix,
+    /// The live dataset X_j (shrinks as rounds remove points).
+    live: Matrix,
+    rng: Pcg64,
+    /// pristine copy of the RNG for reset() (repetition determinism)
+    rng_init: Pcg64,
+    /// per-point distance to the current center set (k-means|| state)
+    kmpar_dist: Vec<f32>,
+    // reusable buffers
+    keep_buf: Vec<bool>,
+}
+
+/// A timed machine-side result.
+pub struct Timed<T> {
+    pub value: T,
+    pub secs: f64,
+}
+
+fn timed<T>(f: impl FnOnce() -> T) -> Timed<T> {
+    let t0 = Instant::now();
+    let value = f();
+    Timed {
+        value,
+        secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+impl Machine {
+    pub fn new(id: usize, shard: Matrix, rng: Pcg64) -> Machine {
+        Machine {
+            id,
+            dead: false,
+            live: shard.clone(),
+            original: shard,
+            rng_init: rng.clone(),
+            rng,
+            kmpar_dist: Vec::new(),
+            keep_buf: Vec::new(),
+        }
+    }
+
+    pub fn n_live(&self) -> usize {
+        if self.dead {
+            0
+        } else {
+            self.live.rows()
+        }
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    /// Crash the machine: live data is lost, the original shard no
+    /// longer participates in cost/counts. Returns live points lost.
+    pub fn kill(&mut self) -> usize {
+        if self.dead {
+            return 0;
+        }
+        self.dead = true;
+        let lost = self.live.rows();
+        self.live = Matrix::zeros(0, self.original.cols());
+        lost
+    }
+
+    pub fn n_original(&self) -> usize {
+        if self.dead {
+            0
+        } else {
+            self.original.rows()
+        }
+    }
+
+    pub fn live(&self) -> &Matrix {
+        &self.live
+    }
+
+    pub fn original(&self) -> &Matrix {
+        &self.original
+    }
+
+    /// Restore the machine to its pre-run state, including its RNG
+    /// stream — a reset fleet replays identically given the same
+    /// coordinator seed. Use [`Machine::reseed`] to vary repetitions.
+    pub fn reset(&mut self) {
+        self.live = self.original.clone();
+        self.kmpar_dist.clear();
+        self.rng = self.rng_init.clone();
+        self.dead = false;
+    }
+
+    /// Give the machine a fresh RNG stream (new repetition).
+    pub fn reseed(&mut self, rng: Pcg64) {
+        self.rng_init = rng.clone();
+        self.rng = rng;
+    }
+
+    /// Draw `count` points uniformly without replacement from the live
+    /// shard (the coordinator fixed this machine's quota — App. A's
+    /// exact-size sampling variant).
+    pub fn sample_exact(&mut self, count: usize) -> Timed<Matrix> {
+        let n = self.live.rows();
+        let count = count.min(n);
+        let rng = &mut self.rng;
+        let live = &self.live;
+        let mut idx_holder = Vec::new();
+        let t = timed(|| {
+            let idx = rng.sample_indices(n, count);
+            let m = live.select(&idx);
+            idx_holder = idx;
+            m
+        });
+        t
+    }
+
+    /// Alg. 1 line 4 as written: two independent Bernoulli(α) samples.
+    pub fn sample_bernoulli_pair(&mut self, alpha: f64) -> Timed<(Matrix, Matrix)> {
+        let n = self.live.rows();
+        let rng = &mut self.rng;
+        let live = &self.live;
+        timed(|| {
+            let mut p1 = Matrix::with_capacity((alpha * n as f64) as usize + 1, live.cols());
+            let mut p2 = Matrix::with_capacity((alpha * n as f64) as usize + 1, live.cols());
+            for i in 0..n {
+                if rng.bernoulli(alpha) {
+                    p1.push_row(live.row(i));
+                }
+                if rng.bernoulli(alpha) {
+                    p2.push_row(live.row(i));
+                }
+            }
+            (p1, p2)
+        })
+    }
+
+    /// SOCCER removal (Alg. 1 line 12): drop every live point with
+    /// ρ(x, centers)² ≤ v. Returns the number removed.
+    pub fn remove_within(&mut self, centers: &Matrix, v: f32, engine: &dyn Engine) -> Timed<usize> {
+        let t0 = Instant::now();
+        if self.live.is_empty() {
+            return Timed {
+                value: 0,
+                secs: t0.elapsed().as_secs_f64(),
+            };
+        }
+        engine.removal_keep(&self.live, centers, v, &mut self.keep_buf);
+        let before = self.live.rows();
+        let keep = std::mem::take(&mut self.keep_buf);
+        self.live.retain_rows(&keep);
+        self.keep_buf = keep;
+        Timed {
+            value: before - self.live.rows(),
+            secs: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// EIM11 removal: same predicate (points strictly farther than the
+    /// threshold survive).
+    pub fn remove_within_threshold(
+        &mut self,
+        centers: &Matrix,
+        threshold_sq: f32,
+        engine: &dyn Engine,
+    ) -> Timed<usize> {
+        self.remove_within(centers, threshold_sq, engine)
+    }
+
+    /// Hand the remaining live points to the coordinator (line 15).
+    pub fn drain(&mut self) -> Matrix {
+        std::mem::replace(&mut self.live, Matrix::zeros(0, self.original.cols()))
+    }
+
+    /// Local cost of `centers` on the ORIGINAL shard (final evaluation
+    /// of cost(X, ·)). Dead machines contribute nothing.
+    pub fn cost_original(&self, centers: &Matrix, engine: &dyn Engine) -> Timed<f64> {
+        if self.dead {
+            return timed(|| 0.0);
+        }
+        timed(|| engine.cost(&self.original, centers))
+    }
+
+    /// Cluster sizes counting only points with nearest-distance^2 at
+    /// most `cutoff` (outlier-aware reduction weights).
+    pub fn counts_original_below(
+        &self,
+        centers: &Matrix,
+        cutoff: f32,
+        engine: &dyn Engine,
+    ) -> Timed<Vec<f64>> {
+        let original = &self.original;
+        let dead = self.dead;
+        timed(|| {
+            let mut counts = vec![0.0f64; centers.rows()];
+            if dead || original.is_empty() || centers.is_empty() {
+                return counts;
+            }
+            let mut dist = Vec::new();
+            let mut idx = Vec::new();
+            engine.nearest(original, centers, &mut dist, &mut idx);
+            for (i, &c) in idx.iter().enumerate() {
+                if dist[i] <= cutoff {
+                    counts[c as usize] += 1.0;
+                }
+            }
+            counts
+        })
+    }
+
+    /// Per-point costs over the original shard (trimmed-cost support).
+    pub fn per_point_costs_original(&self, centers: &Matrix, engine: &dyn Engine) -> Timed<Vec<f32>> {
+        let original = &self.original;
+        let dead = self.dead;
+        timed(|| {
+            if dead || original.is_empty() || centers.is_empty() {
+                return Vec::new();
+            }
+            let mut dist = Vec::new();
+            let mut idx = Vec::new();
+            engine.nearest(original, centers, &mut dist, &mut idx);
+            dist
+        })
+    }
+
+    /// Cluster sizes of `centers` on the original shard (weighted-
+    /// reduction weights).
+    pub fn counts_original(&self, centers: &Matrix, engine: &dyn Engine) -> Timed<Vec<f64>> {
+        let original = &self.original;
+        let dead = self.dead;
+        timed(|| {
+            let mut counts = vec![0.0f64; centers.rows()];
+            if dead || original.is_empty() || centers.is_empty() {
+                return counts;
+            }
+            let mut dist = Vec::new();
+            let mut idx = Vec::new();
+            engine.nearest(original, centers, &mut dist, &mut idx);
+            for &c in &idx {
+                counts[c as usize] += 1.0;
+            }
+            counts
+        })
+    }
+
+    // ---- k-means|| machine-side state --------------------------------------
+
+    /// Start a k-means|| run: distances to the (single-point) initial
+    /// center set.
+    pub fn kmpar_init(&mut self, initial: &Matrix, engine: &dyn Engine) -> Timed<f64> {
+        let original = &self.original;
+        let dist = &mut self.kmpar_dist;
+        timed(|| {
+            dist.resize(original.rows(), f32::INFINITY);
+            dist.fill(f32::INFINITY);
+            let mut idx = Vec::new();
+            let mut d = Vec::new();
+            if !original.is_empty() {
+                engine.nearest(original, initial, &mut d, &mut idx);
+                dist.copy_from_slice(&d);
+            }
+            dist.iter().map(|&x| x as f64).sum()
+        })
+    }
+
+    /// Fold freshly broadcast centers into the per-point distances and
+    /// return the machine's local cost Σ d² (for the coordinator's φ).
+    pub fn kmpar_update(&mut self, new_centers: &Matrix, engine: &dyn Engine) -> Timed<f64> {
+        let original = &self.original;
+        let dist = &mut self.kmpar_dist;
+        timed(|| {
+            if !original.is_empty() && !new_centers.is_empty() {
+                let mut nd = Vec::new();
+                let mut idx = Vec::new();
+                engine.nearest(original, new_centers, &mut nd, &mut idx);
+                for (cur, &cand) in dist.iter_mut().zip(&nd) {
+                    if cand < *cur {
+                        *cur = cand;
+                    }
+                }
+            }
+            dist.iter().map(|&x| x as f64).sum()
+        })
+    }
+
+    /// k-means|| oversampling pass: select each point independently with
+    /// probability min(1, l·d²(x)/φ).
+    pub fn kmpar_sample(&mut self, l: f64, phi: f64) -> Timed<Matrix> {
+        let original = &self.original;
+        let dist = &self.kmpar_dist;
+        let rng = &mut self.rng;
+        timed(|| {
+            let mut out = Matrix::with_capacity(8, original.cols());
+            if phi <= 0.0 {
+                return out;
+            }
+            for i in 0..original.rows() {
+                let p = (l * dist[i] as f64 / phi).min(1.0);
+                if p > 0.0 && rng.bernoulli(p) {
+                    out.push_row(original.row(i));
+                }
+            }
+            out
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngine;
+
+    fn mk(seed: u64, n: usize) -> Machine {
+        let mut rng = Pcg64::new(seed);
+        let data = (0..n * 2).map(|_| rng.normal() as f32).collect();
+        Machine::new(0, Matrix::from_vec(data, n, 2), Pcg64::new(seed + 1))
+    }
+
+    #[test]
+    fn sample_exact_sizes() {
+        let mut m = mk(1, 100);
+        assert_eq!(m.sample_exact(10).value.rows(), 10);
+        assert_eq!(m.sample_exact(100).value.rows(), 100);
+        assert_eq!(m.sample_exact(500).value.rows(), 100); // clamped
+        assert_eq!(m.sample_exact(0).value.rows(), 0);
+    }
+
+    #[test]
+    fn bernoulli_pair_independent_sizes() {
+        let mut m = mk(2, 10_000);
+        let t = m.sample_bernoulli_pair(0.1);
+        let (p1, p2) = t.value;
+        assert!((800..1200).contains(&p1.rows()), "{}", p1.rows());
+        assert!((800..1200).contains(&p2.rows()), "{}", p2.rows());
+        assert_ne!(p1, p2);
+    }
+
+    #[test]
+    fn removal_shrinks_live_not_original() {
+        let mut m = mk(3, 200);
+        let centers = Matrix::from_rows(&[&[0.0, 0.0]]);
+        let removed = m.remove_within(&centers, 1.0, &NativeEngine).value;
+        assert!(removed > 0);
+        assert_eq!(m.n_live() + removed, 200);
+        assert_eq!(m.n_original(), 200);
+        // all survivors are strictly farther than sqrt(v)
+        for i in 0..m.n_live() {
+            let d = crate::core::distance::sq_dist(m.live().row(i), &[0.0, 0.0]);
+            assert!(d > 1.0);
+        }
+    }
+
+    #[test]
+    fn reset_restores() {
+        let mut m = mk(4, 50);
+        let centers = Matrix::from_rows(&[&[0.0, 0.0]]);
+        m.remove_within(&centers, 100.0, &NativeEngine);
+        assert_eq!(m.n_live(), 0);
+        m.reset();
+        assert_eq!(m.n_live(), 50);
+    }
+
+    #[test]
+    fn drain_empties() {
+        let mut m = mk(5, 30);
+        let v = m.drain();
+        assert_eq!(v.rows(), 30);
+        assert_eq!(m.n_live(), 0);
+    }
+
+    #[test]
+    fn kmpar_update_monotone_cost() {
+        let mut m = mk(6, 300);
+        let eng = NativeEngine;
+        let c0 = Matrix::from_rows(&[&[5.0, 5.0]]);
+        let phi0 = m.kmpar_init(&c0, &eng).value;
+        let c1 = Matrix::from_rows(&[&[0.0, 0.0]]);
+        let phi1 = m.kmpar_update(&c1, &eng).value;
+        assert!(phi1 <= phi0);
+        let phi2 = m.kmpar_update(&c0, &eng).value; // re-adding changes nothing
+        assert!((phi2 - phi1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kmpar_sample_respects_probability() {
+        let mut m = mk(7, 5000);
+        let eng = NativeEngine;
+        let phi = m.kmpar_init(&Matrix::from_rows(&[&[50.0, 50.0]]), &eng).value;
+        // l = 10 -> expected sample size ~ 10
+        let s = m.kmpar_sample(10.0, phi).value;
+        assert!(s.rows() < 100, "sampled {}", s.rows());
+        // phi=0 -> empty
+        assert_eq!(m.kmpar_sample(10.0, 0.0).value.rows(), 0);
+    }
+
+    #[test]
+    fn counts_sum_to_shard() {
+        let m = mk(8, 120);
+        let centers = Matrix::from_rows(&[&[0.0, 0.0], &[10.0, 10.0]]);
+        let counts = m.counts_original(&centers, &NativeEngine).value;
+        assert_eq!(counts.iter().sum::<f64>() as usize, 120);
+    }
+}

@@ -1,0 +1,9 @@
+//! The simulated machine fleet of the coordinator model: shard-holding
+//! machines, fleet-wide round primitives (sampling, broadcast+removal,
+//! drain, distributed cost/counts) and per-machine time accounting.
+
+pub mod fleet;
+pub mod machine;
+
+pub use fleet::{Fleet, StepOut};
+pub use machine::Machine;

@@ -1,0 +1,241 @@
+//! `soccer` — the leader binary: run SOCCER or a baseline on a dataset
+//! in the simulated coordinator model, or manage datasets/artifacts.
+//!
+//! Examples:
+//!   soccer run --dataset gaussian --n 200000 --k 25 --eps 0.1
+//!   soccer run --alg kmeans-par --rounds 5 --k 25
+//!   soccer run --engine pjrt --dataset higgs --k 50
+//!   soccer gen --dataset kdd --n 1000000 --out kdd.bin
+//!   soccer info
+
+use soccer::baselines::{run_centralized, Eim11, KmeansParallel};
+use soccer::bench_support::experiments::{make_blackbox, EngineBox};
+use soccer::bench_support::fmt_val;
+use soccer::config::ExperimentConfig;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::data;
+use soccer::machines::Fleet;
+use soccer::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("soccer", "Fast Distributed k-Means with a Small Number of Rounds (Hess, Visbord & Sabato 2022)")
+        .subcommand("run", "run a distributed clustering algorithm")
+        .subcommand("sweep", "run a full experiment grid from a JSON config")
+        .subcommand("gen", "generate a dataset to a binary file")
+        .subcommand("info", "print parameter/artifact information")
+        .opt("alg", Some("soccer"), "algorithm: soccer | kmeans-par | eim11 | central")
+        .opt("dataset", Some("gaussian"), "gaussian | higgs | census | kdd | bigcross | <path.bin|.csv>")
+        .opt("n", Some("200000"), "dataset size (generated datasets)")
+        .opt("k", Some("25"), "number of clusters")
+        .opt("eps", Some("0.1"), "SOCCER/EIM11 coordinator parameter epsilon")
+        .opt("delta", Some("0.1"), "SOCCER confidence parameter")
+        .opt("rounds", Some("5"), "k-means|| rounds (it has no stopping rule)")
+        .opt("machines", Some("50"), "number of simulated machines")
+        .opt("engine", Some("native"), "distance engine: native | pjrt")
+        .opt("blackbox", Some("kmeans"), "centralized black box: kmeans | minibatch")
+        .opt("seed", Some("20220501"), "PRNG seed")
+        .opt("out", None, "output path (gen)")
+        .opt("config", None, "experiment config JSON (sweep); omit for defaults")
+        .flag("bernoulli", "use Alg-1 Bernoulli sampling instead of exact-size")
+        .flag("verbose", "print per-round telemetry");
+    let args = cli.parse_env();
+
+    match args.subcommand.as_deref() {
+        Some("run") | None => cmd_run(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("gen") => cmd_gen(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn load_points(args: &soccer::util::cli::Args) -> soccer::Matrix {
+    let dataset = args.get_or("dataset", "gaussian");
+    let n = args.usize("n", 200_000);
+    let k = args.usize("k", 25);
+    let seed = args.usize("seed", 20220501) as u64;
+    if dataset.ends_with(".bin") {
+        soccer::data::loader::load_binary(std::path::Path::new(&dataset)).expect("load dataset")
+    } else if dataset.ends_with(".csv") {
+        soccer::data::loader::load_csv(std::path::Path::new(&dataset)).expect("load dataset")
+    } else {
+        data::by_name(&dataset, n, k, seed).points
+    }
+}
+
+fn cmd_run(args: &soccer::util::cli::Args) {
+    let alg = args.get_or("alg", "soccer");
+    let k = args.usize("k", 25);
+    let eps = args.f64("eps", 0.1);
+    let seed = args.usize("seed", 20220501) as u64;
+    let machines = args.usize("machines", 50);
+    let engine_box = EngineBox::by_name(&args.get_or("engine", "native"));
+    let engine = engine_box.engine();
+    let blackbox = make_blackbox(&args.get_or("blackbox", "kmeans"));
+
+    let points = load_points(args);
+    println!(
+        "dataset: {} points x {} dims on {} machines | alg={alg} k={k} engine={}",
+        points.rows(),
+        points.cols(),
+        machines,
+        engine.name()
+    );
+
+    match alg.as_str() {
+        "soccer" => {
+            let mut fleet = Fleet::new(&points, machines, seed);
+            let mut params = SoccerParams::new(k, eps);
+            params.delta = args.f64("delta", 0.1);
+            params.exact_sampling = !args.flag("bernoulli");
+            println!(
+                "SOCCER: eta={} k+={} worst-case rounds={}",
+                params.eta(points.rows()),
+                params.k_plus(),
+                params.worst_case_rounds()
+            );
+            let out = run_soccer(&mut fleet, engine, &params, blackbox.as_ref(), seed + 1);
+            if args.flag("verbose") {
+                for r in &out.telemetry.rounds {
+                    println!(
+                        "  round {}: sampled={} broadcast={} removed={} remaining={} v={} t_machine={:.4}s",
+                        r.round, r.sampled, r.broadcast, r.removed, r.remaining,
+                        fmt_val(r.threshold), r.machine_time_max
+                    );
+                }
+            }
+            println!(
+                "rounds={} |C_out|={} cost(final k)={} cost(C_out)={} T_machine={:.4}s T_total={:.3}s",
+                out.rounds,
+                out.output_size,
+                fmt_val(out.cost),
+                fmt_val(out.cost_c_out),
+                out.telemetry.machine_time(),
+                out.total_secs
+            );
+        }
+        "kmeans-par" => {
+            let mut fleet = Fleet::new(&points, machines, seed);
+            let rounds = args.usize("rounds", 5);
+            let km = KmeansParallel::new(k, rounds);
+            let out = km.run(&mut fleet, engine, blackbox.as_ref(), seed + 1);
+            println!(
+                "rounds={} |C_pre|={} cost(final k)={} T_machine={:.4}s T_total={:.3}s",
+                out.rounds,
+                out.output_size,
+                fmt_val(out.cost),
+                out.telemetry.machine_time(),
+                out.total_secs
+            );
+        }
+        "eim11" => {
+            let mut fleet = Fleet::new(&points, machines, seed);
+            let alg = Eim11::new(k, eps);
+            let out = alg.run(&mut fleet, engine, blackbox.as_ref(), seed + 1);
+            let bcast: usize = out.telemetry.rounds.iter().map(|r| r.broadcast).sum();
+            println!(
+                "rounds={} |C_pre|={} broadcast_total={} cost={} T_machine={:.4}s T_total={:.3}s",
+                out.rounds,
+                out.output_size,
+                bcast,
+                fmt_val(out.cost),
+                out.telemetry.machine_time(),
+                out.total_secs
+            );
+        }
+        "central" => {
+            let out = run_centralized(&points, k, blackbox.as_ref(), seed + 1);
+            println!("cost={} T={:.3}s", fmt_val(out.cost), out.total_secs);
+        }
+        other => {
+            eprintln!("unknown --alg '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Run the (dataset x k x eps x km||-rounds) grid described by an
+/// ExperimentConfig file and print paper-style tables.
+fn cmd_sweep(args: &soccer::util::cli::Args) {
+    use soccer::bench_support::Table;
+    let cfg = match args.get("config") {
+        Some(p) => ExperimentConfig::load(std::path::Path::new(p)).expect("load config"),
+        None => ExperimentConfig::default(),
+    };
+    println!("sweep config: {}", cfg.to_json());
+    let engine_box = EngineBox::by_name(&cfg.engine);
+    let engine = engine_box.engine();
+    let mut table = Table::new(
+        &format!("sweep: {} (n={}, blackbox={})", cfg.dataset, cfg.n, cfg.blackbox),
+        &["k", "ALG", "eps/R", "Out size", "Rounds", "Cost", "T_mach(s)"],
+    );
+    for &k in &cfg.ks {
+        let mut fleet = soccer::bench_support::experiments::build_fleet(&cfg, k);
+        for &eps in &cfg.epsilons {
+            let c = soccer::bench_support::experiments::soccer_cell(&mut fleet, engine, &cfg, k, eps);
+            table.row(vec![
+                k.to_string(),
+                "SOCCER".into(),
+                format!("{eps}"),
+                c.output_size.fmt(),
+                c.rounds.fmt(),
+                c.cost.fmt(),
+                c.t_machine.fmt(),
+            ]);
+        }
+        for cell in soccer::bench_support::experiments::kmeans_par_cells(
+            &mut fleet, engine, &cfg, k, &cfg.kmeans_par_rounds,
+        ) {
+            table.row(vec![
+                k.to_string(),
+                "k-means||".into(),
+                format!("R={}", cell.rounds),
+                cell.output_size.fmt(),
+                cell.rounds.to_string(),
+                cell.cost.fmt(),
+                cell.t_machine.fmt(),
+            ]);
+        }
+    }
+    table.print();
+}
+
+fn cmd_gen(args: &soccer::util::cli::Args) {
+    let out = args
+        .get("out")
+        .unwrap_or_else(|| {
+            eprintln!("gen requires --out <path.bin>");
+            std::process::exit(2);
+        })
+        .to_string();
+    let points = load_points(args);
+    soccer::data::loader::save_binary(&points, std::path::Path::new(&out)).expect("save");
+    println!("wrote {} points x {} dims to {out}", points.rows(), points.cols());
+}
+
+fn cmd_info(args: &soccer::util::cli::Args) {
+    let k = args.usize("k", 25);
+    let eps = args.f64("eps", 0.1);
+    let n = args.usize("n", 200_000);
+    let params = SoccerParams::new(k, eps);
+    println!("SOCCER parameters for k={k}, eps={eps}, delta=0.1, n={n}:");
+    println!("  eta (|P1|=|P2|)       = {}", params.eta(n));
+    println!("  k_plus                = {}", params.k_plus());
+    println!("  d_k                   = {:.2}", params.d_k());
+    println!("  truncation l          = {}", params.trunc_l());
+    println!("  worst-case rounds     = {}", params.worst_case_rounds());
+    match soccer::runtime::Manifest::load(&soccer::runtime::Manifest::default_dir()) {
+        Ok(m) => {
+            println!("artifacts ({}):", m.dir.display());
+            for e in &m.entries {
+                println!("  {} [{}] tile_n={} d<={} k<={}", e.op, e.tag, e.tile_n, e.d, e.k);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    let cfg = ExperimentConfig::default();
+    println!("default experiment config:\n{}", cfg.to_json());
+}

@@ -1,0 +1,275 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once on the CPU
+//! PJRT client, execute on the hot path with shape padding.
+//!
+//! Padding contract (mirrors python/compile/model.py):
+//! - feature axis  → zero-pad points and centers (distances unchanged),
+//! - center axis   → sentinel rows at `center_pad_coord` (≈1e17; squared
+//!   distance ≈1e35 stays below f32::MAX and never wins an argmin),
+//! - point axis    → tiles of `tile_n`; the tail tile zero-pads rows and
+//!   gives them weight 0 so they contribute nothing to cost/sums/counts.
+//!
+//! PJRT wrapper types are !Send/!Sync (raw pointers), so a runtime
+//! instance is confined to the thread that created it; the machine fleet
+//! runs sequentially when this backend is selected (DESIGN.md §8).
+
+use super::manifest::{ArtifactEntry, Manifest};
+use crate::core::Matrix;
+use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    // compiled-executable cache, keyed by artifact file name
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// statistics: number of tile executions per op (profiling aid)
+    pub exec_counts: RefCell<HashMap<String, usize>>,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest and create the CPU PJRT client. Compilation is
+    /// lazy per artifact (first use) and cached for the runtime's life.
+    pub fn load(artifact_dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_counts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load from the default artifact dir (`$SOCCER_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<PjrtRuntime> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&self, entry: &ArtifactEntry) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        let key = entry.file.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = entry
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path}: {e:?}"))?;
+        let exe = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    fn entry(&self, op: &str, d: usize, k: usize) -> Result<&ArtifactEntry> {
+        self.manifest.select(op, d, k).ok_or_else(|| {
+            anyhow!(
+                "no '{op}' artifact fits d={d}, k={k} (available: {:?}) — regenerate with `make artifacts`",
+                self.manifest
+                    .entries
+                    .iter()
+                    .map(|e| format!("{} d{} k{}", e.op, e.d, e.k))
+                    .collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Pad centers [k,d] → [K,D] with zero dims + sentinel rows.
+    fn pad_centers(&self, centers: &Matrix, entry: &ArtifactEntry) -> Vec<f32> {
+        let (kk, dd) = (entry.k, entry.d);
+        let mut buf = vec![0.0f32; kk * dd];
+        for c in 0..centers.rows() {
+            buf[c * dd..c * dd + centers.cols()].copy_from_slice(centers.row(c));
+        }
+        for c in centers.rows()..kk {
+            for v in &mut buf[c * dd..(c + 1) * dd] {
+                *v = self.manifest.center_pad_coord;
+            }
+        }
+        buf
+    }
+
+    /// Pad a point tile rows[start..start+len] → [tile_n, D].
+    fn pad_tile(points: &Matrix, start: usize, len: usize, entry: &ArtifactEntry) -> Vec<f32> {
+        let dd = entry.d;
+        let mut buf = vec![0.0f32; entry.tile_n * dd];
+        let cols = points.cols();
+        for r in 0..len {
+            let src = points.row(start + r);
+            buf[r * dd..r * dd + cols].copy_from_slice(src);
+        }
+        buf
+    }
+
+    fn literal_2d(buf: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        xla::Literal::vec1(buf)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("literal reshape: {e:?}"))
+    }
+
+    fn bump(&self, op: &str, tiles: usize) {
+        *self.exec_counts.borrow_mut().entry(op.to_string()).or_insert(0) += tiles;
+    }
+
+    /// assign_cost artifact: per-point (dist², nearest index) + total
+    /// cost over all points (unit weights).
+    pub fn assign_cost(&self, points: &Matrix, centers: &Matrix) -> Result<(Vec<f32>, Vec<u32>, f64)> {
+        let n = points.rows();
+        let entry = self.entry("assign_cost", points.cols(), centers.rows())?.clone();
+        let exe = self.executable(&entry)?;
+        let cbuf = self.pad_centers(centers, &entry);
+        let clit = Self::literal_2d(&cbuf, entry.k, entry.d)?;
+
+        let mut dist = Vec::with_capacity(n);
+        let mut idx = Vec::with_capacity(n);
+        let mut total = 0.0f64;
+        let mut tiles = 0usize;
+        let mut start = 0usize;
+        while start < n {
+            let len = entry.tile_n.min(n - start);
+            let pbuf = Self::pad_tile(points, start, len, &entry);
+            let plit = Self::literal_2d(&pbuf, entry.tile_n, entry.d)?;
+            let mut wbuf = vec![0.0f32; entry.tile_n];
+            wbuf[..len].fill(1.0);
+            let wlit = xla::Literal::vec1(&wbuf);
+            let result = exe
+                .execute::<&xla::Literal>(&[&plit, &clit, &wlit])
+                .map_err(|e| anyhow!("execute assign_cost: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let (d2, ix, cost) = result
+                .to_tuple3()
+                .map_err(|e| anyhow!("assign_cost outputs: {e:?}"))?;
+            let d2v: Vec<f32> = d2.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let ixv: Vec<i32> = ix.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            dist.extend_from_slice(&d2v[..len]);
+            idx.extend(ixv[..len].iter().map(|&i| i as u32));
+            total += cost.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))? as f64;
+            start += len;
+            tiles += 1;
+        }
+        self.bump("assign_cost", tiles);
+        Ok((dist, idx, total))
+    }
+
+    /// removal_mask artifact: SOCCER line 12 — which points survive
+    /// (ρ(x,C)² > v). Returns (keep, dist²).
+    pub fn removal_mask(
+        &self,
+        points: &Matrix,
+        centers: &Matrix,
+        threshold: f32,
+    ) -> Result<(Vec<bool>, Vec<f32>)> {
+        let n = points.rows();
+        let entry = self.entry("removal_mask", points.cols(), centers.rows())?.clone();
+        let exe = self.executable(&entry)?;
+        let cbuf = self.pad_centers(centers, &entry);
+        let clit = Self::literal_2d(&cbuf, entry.k, entry.d)?;
+        let tlit = xla::Literal::scalar(threshold);
+
+        let mut keep = Vec::with_capacity(n);
+        let mut dist = Vec::with_capacity(n);
+        let mut tiles = 0usize;
+        let mut start = 0usize;
+        while start < n {
+            let len = entry.tile_n.min(n - start);
+            let pbuf = Self::pad_tile(points, start, len, &entry);
+            let plit = Self::literal_2d(&pbuf, entry.tile_n, entry.d)?;
+            let result = exe
+                .execute::<&xla::Literal>(&[&plit, &clit, &tlit])
+                .map_err(|e| anyhow!("execute removal_mask: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let (k_lit, d_lit) = result
+                .to_tuple2()
+                .map_err(|e| anyhow!("removal_mask outputs: {e:?}"))?;
+            let kv: Vec<i32> = k_lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let dv: Vec<f32> = d_lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            keep.extend(kv[..len].iter().map(|&x| x != 0));
+            dist.extend_from_slice(&dv[..len]);
+            start += len;
+            tiles += 1;
+        }
+        self.bump("removal_mask", tiles);
+        Ok((keep, dist))
+    }
+
+    /// lloyd_step artifact: weighted per-cluster sums/counts + cost,
+    /// accumulated across tiles. Returns (sums [k×d], counts [k], cost).
+    pub fn lloyd_step(
+        &self,
+        points: &Matrix,
+        weights: Option<&[f64]>,
+        centers: &Matrix,
+    ) -> Result<(Matrix, Vec<f64>, f64)> {
+        let n = points.rows();
+        let (k, d) = (centers.rows(), centers.cols());
+        if let Some(w) = weights {
+            anyhow::ensure!(w.len() == n, "weights length mismatch");
+        }
+        let entry = self.entry("lloyd_step", d, k)?.clone();
+        let exe = self.executable(&entry)?;
+        let cbuf = self.pad_centers(centers, &entry);
+        let clit = Self::literal_2d(&cbuf, entry.k, entry.d)?;
+
+        let mut sums = Matrix::zeros(k, d);
+        let mut counts = vec![0.0f64; k];
+        let mut total = 0.0f64;
+        let mut tiles = 0usize;
+        let mut start = 0usize;
+        while start < n {
+            let len = entry.tile_n.min(n - start);
+            let pbuf = Self::pad_tile(points, start, len, &entry);
+            let plit = Self::literal_2d(&pbuf, entry.tile_n, entry.d)?;
+            let mut wbuf = vec![0.0f32; entry.tile_n];
+            match weights {
+                Some(w) => {
+                    for i in 0..len {
+                        wbuf[i] = w[start + i] as f32;
+                    }
+                }
+                None => wbuf[..len].fill(1.0),
+            }
+            let wlit = xla::Literal::vec1(&wbuf);
+            let result = exe
+                .execute::<&xla::Literal>(&[&plit, &wlit, &clit])
+                .map_err(|e| anyhow!("execute lloyd_step: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let (s_lit, c_lit, cost_lit) = result
+                .to_tuple3()
+                .map_err(|e| anyhow!("lloyd_step outputs: {e:?}"))?;
+            let sv: Vec<f32> = s_lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let cv: Vec<f32> = c_lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            // accumulate only the real k×d block (sums come back K×D)
+            for c in 0..k {
+                counts[c] += cv[c] as f64;
+                let row = sums.row_mut(c);
+                for j in 0..d {
+                    row[j] += sv[c * entry.d + j];
+                }
+            }
+            total += cost_lit.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))? as f64;
+            start += len;
+            tiles += 1;
+        }
+        self.bump("lloyd_step", tiles);
+        Ok((sums, counts, total))
+    }
+}

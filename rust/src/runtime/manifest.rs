@@ -1,0 +1,147 @@
+//! The AOT artifact manifest: `artifacts/manifest.json`, written once by
+//! `python/compile/aot.py` (`make artifacts`). Lists every lowered HLO
+//! module with its op name and static shape so the runtime can pick the
+//! right executable and pad inputs to it.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub op: String,
+    pub tag: String,
+    pub file: PathBuf,
+    pub tile_n: usize,
+    pub d: usize,
+    pub k: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub center_pad_coord: f32,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        if j.get("interchange").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("{path:?}: unsupported interchange format");
+        }
+        let center_pad_coord = j
+            .get("center_pad_coord")
+            .and_then(Json::as_f64)
+            .unwrap_or(1.0e17) as f32;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{path:?}: missing artifacts array"))?;
+        let mut entries = Vec::with_capacity(arts.len());
+        for a in arts {
+            let field = |k: &str| {
+                a.get(k)
+                    .ok_or_else(|| anyhow!("{path:?}: artifact missing field '{k}'"))
+            };
+            entries.push(ArtifactEntry {
+                op: field("op")?.as_str().unwrap_or_default().to_string(),
+                tag: field("tag")?.as_str().unwrap_or_default().to_string(),
+                file: dir.join(field("file")?.as_str().unwrap_or_default()),
+                tile_n: field("tile_n")?.as_usize().context("tile_n")?,
+                d: field("d")?.as_usize().context("d")?,
+                k: field("k")?.as_usize().context("k")?,
+            });
+        }
+        if entries.is_empty() {
+            bail!("{path:?}: no artifacts listed");
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            center_pad_coord,
+            entries,
+        })
+    }
+
+    /// Pick the smallest artifact of `op` that fits `d` dims and `k`
+    /// centers (the runtime tiles the point axis, so tile_n is a free
+    /// choice — prefer the largest tile for throughput).
+    pub fn select(&self, op: &str, d: usize, k: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.op == op && e.d >= d && e.k >= k)
+            .min_by_key(|e| (e.d * e.k, std::cmp::Reverse(e.tile_n)))
+    }
+
+    /// Default artifact directory: `$SOCCER_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SOCCER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("soccer_manifest_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    const SAMPLE: &str = r#"{
+      "format": 1, "interchange": "hlo-text", "return_tuple": true,
+      "center_pad_coord": 1e17,
+      "artifacts": [
+        {"op": "assign_cost", "tag": "small", "file": "a_small.hlo.txt",
+         "tile_n": 256, "d": 16, "k": 32, "inputs": [], "outputs": [], "sha256": ""},
+        {"op": "assign_cost", "tag": "main", "file": "a_main.hlo.txt",
+         "tile_n": 2048, "d": 64, "k": 256, "inputs": [], "outputs": [], "sha256": ""}
+      ]
+    }"#;
+
+    #[test]
+    fn loads_and_selects() {
+        let dir = tmpdir("ok");
+        write_manifest(&dir, SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        // small shapes pick the small artifact
+        let e = m.select("assign_cost", 10, 20).unwrap();
+        assert_eq!(e.tag, "small");
+        // larger d forces the main artifact
+        let e = m.select("assign_cost", 28, 20).unwrap();
+        assert_eq!(e.tag, "main");
+        // nothing fits
+        assert!(m.select("assign_cost", 100, 20).is_none());
+        assert!(m.select("unknown_op", 4, 4).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let dir = tmpdir("missing");
+        std::fs::remove_dir_all(&dir).ok();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let dir = tmpdir("bad");
+        write_manifest(&dir, r#"{"interchange": "protobuf", "artifacts": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,207 @@
+//! Runtime layer: executes the hot distance/cost computations either
+//! natively (rust kernel in `core::distance`) or through AOT-compiled
+//! JAX/Pallas artifacts on the PJRT CPU client.
+//!
+//! `Engine` is the seam the machine fleet and cost evaluation go
+//! through; `benches/ablate_runtime.rs` compares the two
+//! implementations head to head.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::PjrtRuntime;
+pub use manifest::{ArtifactEntry, Manifest};
+
+use crate::core::distance;
+use crate::core::Matrix;
+
+/// The distance-computation engine behind machines and cost evaluation.
+///
+/// Deliberately NOT `Send`/`Sync`-bound: the PJRT wrapper types are raw
+/// pointers confined to their creating thread. The fleet runs machines
+/// sequentially under a PJRT engine and in parallel under the native one
+/// (see `machines::fleet`).
+pub trait Engine {
+    /// Per-point nearest-center squared distance + index.
+    fn nearest(&self, points: &Matrix, centers: &Matrix, dist: &mut Vec<f32>, idx: &mut Vec<u32>);
+
+    /// SOCCER removal predicate: keep[i] = ρ(points_i, centers)² > v.
+    fn removal_keep(&self, points: &Matrix, centers: &Matrix, v: f32, keep: &mut Vec<bool>);
+
+    /// Total k-means cost of `centers` on `points`.
+    fn cost(&self, points: &Matrix, centers: &Matrix) -> f64;
+
+    /// Is this engine safe to call from multiple threads at once?
+    fn parallel_safe(&self) -> bool;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust engine (core::distance).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeEngine;
+
+impl Engine for NativeEngine {
+    fn nearest(&self, points: &Matrix, centers: &Matrix, dist: &mut Vec<f32>, idx: &mut Vec<u32>) {
+        let n = points.rows();
+        dist.resize(n, 0.0);
+        idx.resize(n, 0);
+        distance::nearest_center_into(points, centers, dist, idx);
+    }
+
+    fn removal_keep(&self, points: &Matrix, centers: &Matrix, v: f32, keep: &mut Vec<bool>) {
+        let n = points.rows();
+        keep.clear();
+        keep.reserve(n);
+        let mut dist = vec![0.0f32; n];
+        distance::nearest_dist_into(points, centers, &mut dist);
+        keep.extend(dist.iter().map(|&d| d > v));
+    }
+
+    fn cost(&self, points: &Matrix, centers: &Matrix) -> f64 {
+        crate::core::cost::cost(points, centers)
+    }
+
+    fn parallel_safe(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+impl PjrtRuntime {
+    /// Largest center count any assign_cost artifact supports for this
+    /// dimensionality.
+    fn max_artifact_k(&self, d: usize) -> usize {
+        self.manifest()
+            .entries
+            .iter()
+            .filter(|e| e.op == "assign_cost" && e.d >= d)
+            .map(|e| e.k)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// assign_cost over arbitrarily many centers: chunk the center axis
+    /// to the artifact capacity and merge argmins (k-means|| center
+    /// sets routinely exceed the largest lowered k).
+    fn nearest_chunked(&self, points: &Matrix, centers: &Matrix) -> (Vec<f32>, Vec<u32>) {
+        let cap = self.max_artifact_k(points.cols()).max(1);
+        if centers.rows() <= cap {
+            let (d, i, _) = self.assign_cost(points, centers).expect("pjrt assign_cost failed");
+            return (d, i);
+        }
+        let n = points.rows();
+        let mut best = vec![f32::INFINITY; n];
+        let mut best_idx = vec![0u32; n];
+        let mut start = 0usize;
+        while start < centers.rows() {
+            let len = cap.min(centers.rows() - start);
+            let chunk = Matrix::from_vec(
+                centers.row_slice(start, len).to_vec(),
+                len,
+                centers.cols(),
+            );
+            let (d, i, _) = self.assign_cost(points, &chunk).expect("pjrt assign_cost failed");
+            for p in 0..n {
+                if d[p] < best[p] {
+                    best[p] = d[p];
+                    best_idx[p] = start as u32 + i[p];
+                }
+            }
+            start += len;
+        }
+        (best, best_idx)
+    }
+}
+
+impl Engine for PjrtRuntime {
+    fn nearest(&self, points: &Matrix, centers: &Matrix, dist: &mut Vec<f32>, idx: &mut Vec<u32>) {
+        if points.is_empty() {
+            dist.clear();
+            idx.clear();
+            return;
+        }
+        let (d, i) = self.nearest_chunked(points, centers);
+        *dist = d;
+        *idx = i;
+    }
+
+    fn removal_keep(&self, points: &Matrix, centers: &Matrix, v: f32, keep: &mut Vec<bool>) {
+        if points.is_empty() {
+            keep.clear();
+            return;
+        }
+        if centers.rows() <= self.max_artifact_k(points.cols()) {
+            let (k, _) = self
+                .removal_mask(points, centers, v)
+                .expect("pjrt removal_mask failed");
+            *keep = k;
+        } else {
+            let (d, _) = self.nearest_chunked(points, centers);
+            keep.clear();
+            keep.extend(d.iter().map(|&x| x > v));
+        }
+    }
+
+    fn cost(&self, points: &Matrix, centers: &Matrix) -> f64 {
+        if points.is_empty() {
+            return 0.0;
+        }
+        if centers.rows() <= self.max_artifact_k(points.cols()) {
+            let (_, _, c) = self.assign_cost(points, centers).expect("pjrt assign_cost failed");
+            c
+        } else {
+            let (d, _) = self.nearest_chunked(points, centers);
+            d.iter().map(|&x| x as f64).sum()
+        }
+    }
+
+    fn parallel_safe(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randmat(seed: u64, rows: usize, cols: usize) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        Matrix::from_vec((0..rows * cols).map(|_| rng.normal() as f32).collect(), rows, cols)
+    }
+
+    #[test]
+    fn native_engine_matches_core() {
+        let pts = randmat(1, 100, 7);
+        let cen = randmat(2, 5, 7);
+        let eng = NativeEngine;
+        let (mut dist, mut idx) = (Vec::new(), Vec::new());
+        eng.nearest(&pts, &cen, &mut dist, &mut idx);
+        let (d2, i2) = distance::nearest_center(&pts, &cen);
+        assert_eq!(dist, d2);
+        assert_eq!(idx, i2);
+        assert!((eng.cost(&pts, &cen) - crate::core::cost::cost(&pts, &cen)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn native_removal_keep_consistent() {
+        let pts = randmat(3, 50, 4);
+        let cen = randmat(4, 3, 4);
+        let eng = NativeEngine;
+        let mut keep = Vec::new();
+        let (dist, _) = distance::nearest_center(&pts, &cen);
+        let v = crate::util::stats::quantile(&dist.iter().map(|&d| d as f64).collect::<Vec<_>>(), 0.5) as f32;
+        eng.removal_keep(&pts, &cen, v, &mut keep);
+        for (i, &k) in keep.iter().enumerate() {
+            assert_eq!(k, dist[i] > v, "i={i}");
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Communication and time accounting — the quantities the paper's
+//! tables report: points transmitted to the coordinator, points
+//! broadcast from it (one broadcast = one transmission, §3), rounds,
+//! machine running time (Σ over rounds of the max per-machine time,
+//! §8) and total wall-clock.
+
+/// Communication counters in *points* (the paper's unit; multiply by
+/// 4·d bytes for wire size).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommStats {
+    /// points sent machines → coordinator
+    pub to_coordinator: usize,
+    /// points broadcast coordinator → machines
+    pub broadcast: usize,
+    /// scalar control messages (thresholds, counts) — negligible but
+    /// tracked for completeness
+    pub control_scalars: usize,
+}
+
+impl CommStats {
+    pub fn add(&mut self, other: &CommStats) {
+        self.to_coordinator += other.to_coordinator;
+        self.broadcast += other.broadcast;
+        self.control_scalars += other.control_scalars;
+    }
+}
+
+/// Per-round record.
+#[derive(Clone, Debug)]
+pub struct RoundLog {
+    pub round: usize,
+    /// points sampled to the coordinator this round
+    pub sampled: usize,
+    /// points broadcast to the machines this round
+    pub broadcast: usize,
+    /// points removed from machine shards this round
+    pub removed: usize,
+    /// points remaining across all machines after the round
+    pub remaining: usize,
+    /// removal threshold v (SOCCER) or quantile threshold (EIM11); NaN
+    /// for algorithms without one (k-means||)
+    pub threshold: f64,
+    /// max over machines of this round's machine-side work (seconds)
+    pub machine_time_max: f64,
+    /// coordinator-side work this round (seconds)
+    pub coordinator_time: f64,
+}
+
+/// Full run telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct RunTelemetry {
+    pub comm: CommStats,
+    pub rounds: Vec<RoundLog>,
+    /// fell back to a forced drain because no progress was being made
+    pub forced_drain: bool,
+}
+
+impl RunTelemetry {
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// The paper's "T (machine)": Σ_rounds max_j time_j.
+    pub fn machine_time(&self) -> f64 {
+        self.rounds.iter().map(|r| r.machine_time_max).sum()
+    }
+
+    pub fn coordinator_time(&self) -> f64 {
+        self.rounds.iter().map(|r| r.coordinator_time).sum()
+    }
+
+    pub fn push_round(&mut self, log: RoundLog) {
+        self.comm.to_coordinator += log.sampled;
+        self.comm.broadcast += log.broadcast;
+        self.rounds.push(log);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(r: usize, mt: f64) -> RoundLog {
+        RoundLog {
+            round: r,
+            sampled: 100,
+            broadcast: 10,
+            removed: 500,
+            remaining: 1000,
+            threshold: 1.0,
+            machine_time_max: mt,
+            coordinator_time: 0.5,
+        }
+    }
+
+    #[test]
+    fn accumulates_comm_and_time() {
+        let mut t = RunTelemetry::default();
+        t.push_round(round(1, 0.2));
+        t.push_round(round(2, 0.3));
+        assert_eq!(t.comm.to_coordinator, 200);
+        assert_eq!(t.comm.broadcast, 20);
+        assert_eq!(t.num_rounds(), 2);
+        assert!((t.machine_time() - 0.5).abs() < 1e-12);
+        assert!((t.coordinator_time() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_stats_add() {
+        let mut a = CommStats {
+            to_coordinator: 1,
+            broadcast: 2,
+            control_scalars: 3,
+        };
+        a.add(&CommStats {
+            to_coordinator: 10,
+            broadcast: 20,
+            control_scalars: 30,
+        });
+        assert_eq!(a.to_coordinator, 11);
+        assert_eq!(a.broadcast, 22);
+        assert_eq!(a.control_scalars, 33);
+    }
+}

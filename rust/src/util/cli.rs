@@ -1,0 +1,268 @@
+//! Tiny CLI argument parser (offline substrate for `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! subcommands, typed getters with defaults, and generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.replace('_', "")
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list of f64, e.g. `--eps 0.2,0.1,0.05`.
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("bad number in --{key}: '{s}'")))
+                .collect(),
+        }
+    }
+
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("bad integer in --{key}: '{s}'")))
+                .collect(),
+        }
+    }
+}
+
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<ArgSpec>,
+    pub subcommands: Vec<(&'static str, &'static str)>,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Cli {
+            bin,
+            about,
+            specs: Vec::new(),
+            subcommands: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn subcommand(mut self, name: &'static str, help: &'static str) -> Self {
+        self.subcommands.push((name, help));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.bin, self.about);
+        if !self.subcommands.is_empty() {
+            let _ = writeln!(s, "USAGE: {} <subcommand> [options]\n\nSUBCOMMANDS:", self.bin);
+            for (name, help) in &self.subcommands {
+                let _ = writeln!(s, "  {name:<18} {help}");
+            }
+            let _ = writeln!(s);
+        }
+        let _ = writeln!(s, "OPTIONS:");
+        for spec in &self.specs {
+            let d = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  --{:<16} {}{}", spec.name, spec.help, d);
+        }
+        let _ = writeln!(s, "  --{:<16} {}", "help", "print this help");
+        s
+    }
+
+    /// Parse a raw argv (without the binary name). Returns Err(help) when
+    /// `--help` is requested or an unknown option is passed.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help_text()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} expects a value"))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else if args.subcommand.is_none()
+                && !self.subcommands.is_empty()
+                && self.subcommands.iter().any(|(n, _)| n == a)
+            {
+                args.subcommand = Some(a.clone());
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn parse_env(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.starts_with(self.bin) { 0 } else { 2 });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("k", Some("25"), "clusters")
+            .opt("eps", None, "epsilon")
+            .flag("verbose", "chatty")
+            .subcommand("run", "run it")
+    }
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&argv(&[])).unwrap();
+        assert_eq!(a.usize("k", 0), 25);
+        let a = cli().parse(&argv(&["--k", "100"])).unwrap();
+        assert_eq!(a.usize("k", 0), 100);
+        let a = cli().parse(&argv(&["--k=7"])).unwrap();
+        assert_eq!(a.usize("k", 0), 7);
+    }
+
+    #[test]
+    fn flags_and_subcommands() {
+        let a = cli().parse(&argv(&["run", "--verbose"])).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = cli().parse(&argv(&["--eps", "0.2,0.1, 0.05"])).unwrap();
+        assert_eq!(a.f64_list("eps", &[]), vec![0.2, 0.1, 0.05]);
+        let a = cli().parse(&argv(&[])).unwrap();
+        assert_eq!(a.f64_list("eps", &[0.3]), vec![0.3]);
+    }
+
+    #[test]
+    fn unknown_option_and_help() {
+        assert!(cli().parse(&argv(&["--bogus", "1"])).is_err());
+        let err = cli().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("SUBCOMMANDS"));
+        assert!(err.contains("--k"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cli().parse(&argv(&["--eps"])).is_err());
+        assert!(cli().parse(&argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn underscores_in_integers() {
+        let a = cli().parse(&argv(&["--k", "1_000_000"])).unwrap();
+        assert_eq!(a.usize("k", 0), 1_000_000);
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrates built from scratch for the offline image (DESIGN.md §3):
+//! PRNG, JSON, CLI parsing, a scoped thread pool, summary statistics,
+//! timers and a mini property-testing framework.
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,106 @@
+//! Scoped parallel-for over a mutable slice (offline substrate for
+//! `rayon`/`tokio`). The machine fleet is round-synchronous, so all we
+//! need is "run f on every machine, in parallel, wait for all".
+
+/// Run `f(index, item)` for every item, using up to `workers` OS threads.
+/// Results are collected in input order. Panics propagate.
+pub fn par_map_mut<T: Send, R: Send>(
+    items: &mut [T],
+    workers: usize,
+    f: impl Fn(usize, &mut T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    // Deal items to workers round-robin by splitting into chunks of
+    // ceil(n/workers); reassemble results in order.
+    let chunk = n.div_ceil(workers);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::new();
+        // split both items and out into matching chunks
+        let mut items_rest = &mut items[..];
+        let mut out_rest = &mut out[..];
+        let mut base = 0usize;
+        while !items_rest.is_empty() {
+            let take = chunk.min(items_rest.len());
+            let (items_chunk, ir) = items_rest.split_at_mut(take);
+            let (out_chunk, or) = out_rest.split_at_mut(take);
+            items_rest = ir;
+            out_rest = or;
+            let b = base;
+            handles.push(s.spawn(move || {
+                for (off, (t, slot)) in items_chunk.iter_mut().zip(out_chunk.iter_mut()).enumerate()
+                {
+                    *slot = Some(f(b + off, t));
+                }
+            }));
+            base += take;
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    out.into_iter().map(|r| r.expect("missing result")).collect()
+}
+
+/// Number of worker threads to use by default.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let mut v: Vec<usize> = (0..37).collect();
+        let r = par_map_mut(&mut v, 4, |i, x| {
+            *x += 1;
+            i * 10
+        });
+        assert_eq!(v, (1..38).collect::<Vec<_>>());
+        assert_eq!(r, (0..37).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_and_empty() {
+        let mut v: Vec<u32> = vec![];
+        let r: Vec<u32> = par_map_mut(&mut v, 8, |_, x| *x);
+        assert!(r.is_empty());
+        let mut v = vec![5u32];
+        let r = par_map_mut(&mut v, 1, |_, x| *x * 2);
+        assert_eq!(r, vec![10]);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let mut v = vec![1, 2, 3];
+        let r = par_map_mut(&mut v, 64, |_, x| *x);
+        assert_eq!(r, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        // All workers must be in-flight at once for this not to deadlock:
+        // each task waits until every task has started.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let started = AtomicUsize::new(0);
+        let mut v = vec![0u8; 4];
+        par_map_mut(&mut v, 4, |_, _| {
+            started.fetch_add(1, Ordering::SeqCst);
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+            while started.load(Ordering::SeqCst) < 4 {
+                assert!(std::time::Instant::now() < deadline, "not parallel");
+                std::hint::spin_loop();
+            }
+        });
+    }
+}

@@ -1,0 +1,138 @@
+//! Mini property-testing framework (offline substrate for `proptest`).
+//!
+//! `forall` runs `cases` seeded random cases: generate an input with
+//! `generate`, check `property`. On failure it retries with progressively
+//! "smaller" regenerated inputs (shrink-by-regeneration: the generator is
+//! called with a shrink level that implementations use to produce smaller
+//! cases) and reports the smallest failing case with its reproduction
+//! seed.
+
+use super::rng::Pcg64;
+use std::fmt::Debug;
+
+/// Generation context handed to generators: seeded RNG plus a size hint
+/// in [0, 1] — generators should scale dimensions by it so that failing
+/// cases can be re-generated smaller.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg64,
+    pub size: f64,
+}
+
+impl<'a> Gen<'a> {
+    /// A size-scaled integer in [lo, hi].
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_scaled = lo + (((hi - lo) as f64) * self.size).round() as usize;
+        lo + self.rng.below(hi_scaled - lo + 1)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+}
+
+/// Run `cases` random checks of `property` over `generate`d inputs.
+///
+/// Panics with the failing case (Debug), seed and shrink level on the
+/// first property violation that survives shrinking.
+pub fn forall<T: Debug>(
+    name: &str,
+    cases: usize,
+    base_seed: u64,
+    generate: impl Fn(&mut Gen) -> T,
+    property: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(case as u64);
+        let mut rng = Pcg64::new(seed);
+        let mut g = Gen {
+            rng: &mut rng,
+            size: 1.0,
+        };
+        let input = generate(&mut g);
+        if let Err(msg) = property(&input) {
+            // shrink by regeneration at decreasing sizes
+            let mut smallest: (T, String, f64) = (input, msg, 1.0);
+            for level in 1..=4 {
+                let size = 1.0 / (1 << level) as f64;
+                let mut srng = Pcg64::new(seed ^ (level as u64) << 32);
+                let mut sg = Gen {
+                    rng: &mut srng,
+                    size,
+                };
+                let candidate = generate(&mut sg);
+                if let Err(m) = property(&candidate) {
+                    smallest = (candidate, m, size);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}, size {}):\n  {}\n  input: {:?}",
+                smallest.2, smallest.1, smallest.0
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            "sum-commutes",
+            50,
+            1,
+            |g| (g.f64(-10.0, 10.0), g.f64(-10.0, 10.0)),
+            |&(a, b)| {
+                if (a + b - (b + a)).abs() < 1e-12 {
+                    Ok(())
+                } else {
+                    Err("noncommutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-small'")]
+    fn failing_property_reports() {
+        forall(
+            "always-small",
+            50,
+            2,
+            |g| g.int(0, 1000),
+            |&n| {
+                if n < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("n={n} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn gen_int_respects_bounds() {
+        let mut rng = Pcg64::new(3);
+        let mut g = Gen {
+            rng: &mut rng,
+            size: 0.5,
+        };
+        for _ in 0..100 {
+            let v = g.int(5, 105);
+            assert!((5..=55).contains(&v), "v={v}");
+        }
+    }
+}

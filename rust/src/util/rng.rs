@@ -1,0 +1,410 @@
+//! Deterministic PRNG + distributions (offline substrate for `rand`).
+//!
+//! PCG64 (XSL-RR 128/64) core generator with Box–Muller normals, Zipf
+//! weights, Fisher–Yates shuffling, reservoir/index sampling and an alias
+//! table for O(1) weighted draws. Everything is seedable and reproducible
+//! across runs — the experiment harness relies on that for the paper's
+//! "10 repetitions, report mean±std" protocol.
+
+/// PCG64 XSL-RR: 128-bit LCG state, 64-bit xor-shift/rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed with an arbitrary u64; stream constant fixed.
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: (0xda3e_39cb_94b9_5bdb_u128 << 1) | 1,
+        };
+        rng.state = rng.inc.wrapping_add(seed as u128);
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent child generator (for per-machine streams).
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let s = self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        Pcg64::new(s)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, bound) — Lemire's nearly-divisionless method.
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        let bound = bound as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (pair cached).
+    pub fn normal(&mut self) -> f64 {
+        // No cached spare: branch-free variant would complicate Clone
+        // semantics; Box–Muller computes pairs but we draw fresh — the
+        // polar trig call is not on any hot path (data generation only).
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE); // (0,1]
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// N(mu, sigma^2).
+    #[inline]
+    pub fn normal_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Log-normal with underlying N(mu, sigma^2).
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal_with(mu, sigma).exp()
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// Sample `count` distinct indices from [0, n) — Floyd's algorithm for
+    /// small count, partial Fisher–Yates otherwise.
+    pub fn sample_indices(&mut self, n: usize, count: usize) -> Vec<usize> {
+        assert!(count <= n, "cannot sample {count} of {n}");
+        if count == 0 {
+            return Vec::new();
+        }
+        if count * 4 >= n {
+            // partial Fisher–Yates over a full index vector
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..count {
+                let j = i + self.below(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(count);
+            idx
+        } else {
+            // Floyd: O(count) expected, set-backed
+            let mut chosen = std::collections::HashSet::with_capacity(count * 2);
+            let mut out = Vec::with_capacity(count);
+            for j in (n - count)..n {
+                let t = self.below(j + 1);
+                let pick = if chosen.contains(&t) { j } else { t };
+                chosen.insert(pick);
+                out.push(pick);
+            }
+            out
+        }
+    }
+
+    /// Split `total` into `parts` multinomial counts with probabilities
+    /// proportional to `weights` (sequential binomial decomposition).
+    pub fn multinomial(&mut self, total: usize, weights: &[f64]) -> Vec<usize> {
+        let mut out = vec![0usize; weights.len()];
+        let wsum: f64 = weights.iter().sum();
+        let mut remaining = total;
+        let mut wleft = wsum;
+        for (i, &w) in weights.iter().enumerate() {
+            if remaining == 0 || wleft <= 0.0 {
+                break;
+            }
+            if i == weights.len() - 1 {
+                out[i] = remaining;
+                break;
+            }
+            let p = (w / wleft).clamp(0.0, 1.0);
+            let c = self.binomial(remaining, p);
+            out[i] = c;
+            remaining -= c;
+            wleft -= w;
+        }
+        out
+    }
+
+    /// Binomial(n, p) — inversion for small n·p, normal approx for large.
+    pub fn binomial(&mut self, n: usize, p: f64) -> usize {
+        if p <= 0.0 || n == 0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        let np = n as f64 * p;
+        if np < 30.0 || n as f64 * (1.0 - p) < 30.0 {
+            // BINV inversion (exact, O(np))
+            let q = 1.0 - p;
+            let s = p / q;
+            let a = (n as f64 + 1.0) * s;
+            let mut r = q.powi(n as i32).max(f64::MIN_POSITIVE);
+            let mut u = self.f64();
+            let mut x = 0usize;
+            loop {
+                if u < r {
+                    return x.min(n);
+                }
+                u -= r;
+                x += 1;
+                if x > n {
+                    return n;
+                }
+                r *= a / x as f64 - s;
+            }
+        } else {
+            // normal approximation with continuity correction (fine for the
+            // sampling sizes used here; exactness not required by protocol)
+            let sd = (np * (1.0 - p)).sqrt();
+            let v = self.normal_with(np, sd).round();
+            v.clamp(0.0, n as f64) as usize
+        }
+    }
+}
+
+/// Zipf weights w_i ∝ i^{-gamma} (the paper's mixture uses gamma=1.5 —
+/// it says "proportionally to i^gamma" with gamma=1.5 meaning the decay
+/// exponent), normalized to sum 1.
+pub fn zipf_weights(k: usize, gamma: f64) -> Vec<f64> {
+    let mut w: Vec<f64> = (1..=k).map(|i| (i as f64).powf(-gamma)).collect();
+    let s: f64 = w.iter().sum();
+    for x in &mut w {
+        *x /= s;
+    }
+    w
+}
+
+/// Alias table for O(1) weighted index sampling (Walker/Vose).
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0);
+        let sum: f64 = weights.iter().sum();
+        assert!(sum > 0.0, "weights must not all be zero");
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * n as f64 / sum).collect();
+        let mut alias = vec![0usize; n];
+        let (mut small, mut large): (Vec<usize>, Vec<usize>) = (Vec::new(), Vec::new());
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i)
+            } else {
+                large.push(i)
+            }
+        }
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s] = l;
+            prob[l] = (prob[l] + prob[s]) - 1.0;
+            if prob[l] < 1.0 {
+                small.push(l)
+            } else {
+                large.push(l)
+            }
+        }
+        // leftovers are 1.0 up to fp error
+        for i in small.into_iter().chain(large) {
+            prob[i] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_distinct_streams() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        let mut c = Pcg64::new(43);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn split_streams_diverge() {
+        let mut root = Pcg64::new(7);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut rng = Pcg64::new(1);
+        let mut sum = 0.0;
+        for _ in 0..20_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / 20_000.0 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Pcg64::new(2);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[rng.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(3);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Pcg64::new(4);
+        for &(n, c) in &[(10usize, 10usize), (1000, 17), (50, 25), (5, 0)] {
+            let s = rng.sample_indices(n, c);
+            assert_eq!(s.len(), c);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), c, "duplicates for n={n} c={c}");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(5);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn binomial_moments() {
+        let mut rng = Pcg64::new(6);
+        // small-np exact path
+        let mean_small: f64 =
+            (0..5000).map(|_| rng.binomial(20, 0.3) as f64).sum::<f64>() / 5000.0;
+        assert!((mean_small - 6.0).abs() < 0.15, "{mean_small}");
+        // large-np approx path
+        let mean_big: f64 =
+            (0..3000).map(|_| rng.binomial(10_000, 0.5) as f64).sum::<f64>() / 3000.0;
+        assert!((mean_big - 5000.0).abs() < 10.0, "{mean_big}");
+    }
+
+    #[test]
+    fn multinomial_sums_to_total() {
+        let mut rng = Pcg64::new(7);
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        for total in [0usize, 1, 10, 12345] {
+            let c = rng.multinomial(total, &w);
+            assert_eq!(c.iter().sum::<usize>(), total);
+        }
+        // proportions roughly follow weights
+        let c = rng.multinomial(100_000, &w);
+        assert!((c[3] as f64 / 100_000.0 - 0.4).abs() < 0.02);
+    }
+
+    #[test]
+    fn zipf_weights_normalized_decreasing() {
+        let w = zipf_weights(10, 1.5);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        for i in 1..w.len() {
+            assert!(w[i] < w[i - 1]);
+        }
+    }
+
+    #[test]
+    fn alias_table_matches_weights() {
+        let w = vec![0.1, 0.2, 0.3, 0.4];
+        let at = AliasTable::new(&w);
+        let mut rng = Pcg64::new(8);
+        let mut counts = [0usize; 4];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[at.sample(&mut rng)] += 1;
+        }
+        for i in 0..4 {
+            let freq = counts[i] as f64 / n as f64;
+            assert!((freq - w[i]).abs() < 0.01, "i={i} freq={freq}");
+        }
+    }
+
+    #[test]
+    fn alias_table_degenerate_single() {
+        let at = AliasTable::new(&[3.0]);
+        let mut rng = Pcg64::new(9);
+        assert_eq!(at.sample(&mut rng), 0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Summary statistics for the experiment harness (mean±std over the
+//! paper's 10 repetitions, quantiles for EIM11's threshold rule).
+
+/// Streaming mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1); 0 for n < 2.
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample std of a slice.
+pub fn std(xs: &[f64]) -> f64 {
+    let mut w = Welford::new();
+    for &x in xs {
+        w.push(x);
+    }
+    w.std()
+}
+
+/// q-quantile (0..=1) by partial selection; linear interpolation between
+/// order statistics (type-7, numpy default).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let h = q * (v.len() - 1) as f64;
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    v[lo] + (h - lo as f64) * (v[hi] - v[lo])
+}
+
+/// The value of the r-th smallest element (0-based), O(n) average —
+/// quickselect. Used for truncated-cost cutoffs on large vectors.
+pub fn select_nth(xs: &mut [f64], r: usize) -> f64 {
+    assert!(r < xs.len());
+    let mut lo = 0usize;
+    let mut hi = xs.len();
+    let mut seed = 0x9e3779b97f4a7c15u64;
+    loop {
+        if hi - lo <= 1 {
+            return xs[lo];
+        }
+        // deterministic pseudo-random pivot
+        seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+        let p = lo + (seed % (hi - lo) as u64) as usize;
+        xs.swap(p, hi - 1);
+        let pivot = xs[hi - 1];
+        let mut store = lo;
+        for i in lo..hi - 1 {
+            if xs[i] < pivot {
+                xs.swap(i, store);
+                store += 1;
+            }
+        }
+        xs.swap(store, hi - 1);
+        match r.cmp(&store) {
+            std::cmp::Ordering::Equal => return xs[store],
+            std::cmp::Ordering::Less => hi = store,
+            std::cmp::Ordering::Greater => lo = store + 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 6.2).abs() < 1e-12);
+        let naive_var = xs.iter().map(|x| (x - 6.2_f64).powi(2)).sum::<f64>() / 4.0;
+        assert!((w.var() - naive_var).abs() < 1e-9);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn welford_degenerate() {
+        let mut w = Welford::new();
+        assert_eq!(w.var(), 0.0);
+        w.push(3.0);
+        assert_eq!(w.std(), 0.0);
+        assert_eq!(w.mean(), 3.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn select_nth_matches_sort() {
+        let base = [5.0, 3.0, 9.0, 1.0, 7.0, 2.0, 8.0, 6.0, 4.0, 0.0];
+        let mut sorted = base.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for r in 0..base.len() {
+            let mut v = base.to_vec();
+            assert_eq!(select_nth(&mut v, r), sorted[r], "r={r}");
+        }
+    }
+
+    #[test]
+    fn select_nth_with_duplicates() {
+        let mut v = vec![2.0, 2.0, 2.0, 1.0, 3.0];
+        assert_eq!(select_nth(&mut v, 2), 2.0);
+    }
+
+    #[test]
+    fn mean_std_slice() {
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-12);
+        assert!((std(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert!(mean(&[]).is_nan());
+    }
+}

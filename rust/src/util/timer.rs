@@ -1,0 +1,77 @@
+//! Wall-clock timing helpers for the experiment harness.
+
+use std::time::{Duration, Instant};
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Accumulating stopwatch: start/stop many times, read the total.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+        }
+    }
+
+    pub fn secs(&self) -> f64 {
+        let running = self.started.map(|t0| t0.elapsed()).unwrap_or_default();
+        (self.total + running).as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_measures() {
+        let (v, secs) = timed(|| {
+            std::thread::sleep(Duration::from_millis(10));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(secs >= 0.009, "secs={secs}");
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let t1 = sw.secs();
+        assert!(t1 >= 0.004);
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.secs() > t1);
+    }
+
+    #[test]
+    fn stopwatch_reads_while_running() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(sw.secs() > 0.0);
+        sw.stop();
+    }
+}

@@ -1,0 +1,168 @@
+//! Cross-module integration: full algorithm runs over datasets, fleet
+//! invariants under each algorithm, config-driven execution, telemetry
+//! consistency.
+
+use soccer::baselines::{run_centralized, Eim11, KmeansParallel};
+use soccer::bench_support::experiments::{build_fleet, make_blackbox, soccer_cell};
+use soccer::clustering::LloydKMeans;
+use soccer::config::ExperimentConfig;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::data;
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::util::rng::Pcg64;
+
+fn small_cfg(dataset: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: dataset.into(),
+        n: 12_000,
+        machines: 10,
+        repetitions: 1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn soccer_runs_on_every_dataset() {
+    for dataset in data::DATASET_NAMES {
+        let cfg = small_cfg(dataset);
+        let mut fleet = build_fleet(&cfg, 8);
+        let params = SoccerParams::new(8, 0.15);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 1);
+        assert!(out.cost.is_finite() && out.cost >= 0.0, "{dataset}");
+        assert!(out.rounds <= params.max_rounds, "{dataset}");
+        assert!(out.final_centers.rows() <= 8, "{dataset}");
+        assert!(out.final_centers.cols() == fleet.dim(), "{dataset}");
+        // cost must beat the trivial 1-center clustering
+        let ds = data::by_name(dataset, cfg.n, 8, cfg.seed);
+        let trivial = run_centralized(&ds.points, 1, &LloydKMeans::default(), 2);
+        assert!(out.cost <= trivial.cost, "{dataset}: {} > {}", out.cost, trivial.cost);
+    }
+}
+
+#[test]
+fn soccer_cost_within_factor_of_centralized() {
+    for dataset in ["gaussian", "higgs", "bigcross"] {
+        let cfg = small_cfg(dataset);
+        let mut fleet = build_fleet(&cfg, 10);
+        let params = SoccerParams::new(10, 0.15);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 3);
+        let ds = data::by_name(dataset, cfg.n, 10, cfg.seed);
+        let central = run_centralized(&ds.points, 10, &LloydKMeans::default(), 4);
+        // Theorem 4.1's worst factor at beta~9 is ~I*(80*9+44); in
+        // practice SOCCER lands within a small constant -- require 10x
+        assert!(
+            out.cost <= 10.0 * central.cost.max(1e-9),
+            "{dataset}: soccer {} vs central {}",
+            out.cost,
+            central.cost
+        );
+    }
+}
+
+#[test]
+fn kmeans_parallel_improves_with_rounds_on_gaussian() {
+    let cfg = small_cfg("gaussian");
+    let mut fleet = build_fleet(&cfg, 10);
+    let mut costs = Vec::new();
+    for rounds in [1usize, 5] {
+        fleet.reset();
+        let km = KmeansParallel::new(10, rounds);
+        costs.push(km.run(&mut fleet, &NativeEngine, &LloydKMeans::default(), 9).cost);
+    }
+    assert!(
+        costs[1] < costs[0],
+        "5 rounds {} should beat 1 round {}",
+        costs[1],
+        costs[0]
+    );
+}
+
+#[test]
+fn eim11_vs_soccer_broadcast() {
+    let cfg = small_cfg("gaussian");
+    let mut fleet = build_fleet(&cfg, 10);
+    let params = SoccerParams::new(6, 0.15);
+    let soc = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 11);
+    fleet.reset();
+    let eim = Eim11::new(6, 0.15).run(&mut fleet, &NativeEngine, &LloydKMeans::default(), 12);
+    let soc_bcast: usize = soc.telemetry.rounds.iter().map(|r| r.broadcast).sum();
+    let eim_bcast: usize = eim.telemetry.rounds.iter().map(|r| r.broadcast).sum();
+    assert!(
+        eim_bcast > 5 * soc_bcast.max(1),
+        "EIM11 broadcast {eim_bcast} should dwarf SOCCER's {soc_bcast}"
+    );
+}
+
+#[test]
+fn fleet_partition_invariant_through_protocol() {
+    let ds = data::by_name("census", 8_000, 5, 3);
+    let mut fleet = Fleet::new(&ds.points, 7, 4);
+    let n = fleet.total_live();
+    let params = SoccerParams::new(5, 0.2);
+    let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 5);
+    // every point is accounted for: removed over rounds + drained = n
+    let removed: usize = out.telemetry.rounds.iter().map(|r| r.removed).sum();
+    let drained = out.telemetry.comm.to_coordinator
+        - out.telemetry.rounds.iter().map(|r| r.sampled).sum::<usize>();
+    assert_eq!(removed + drained, n, "partition invariant violated");
+    assert_eq!(fleet.total_live(), 0);
+    assert_eq!(fleet.total_original(), n);
+}
+
+#[test]
+fn repetitions_are_deterministic_given_seed() {
+    let cfg = small_cfg("higgs");
+    let mut fleet = build_fleet(&cfg, 6);
+    let params = SoccerParams::new(6, 0.2);
+    fleet.reset();
+    let a = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 77);
+    fleet.reset();
+    let b = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 77);
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.output_size, b.output_size);
+    assert!((a.cost - b.cost).abs() <= 1e-9 * a.cost.max(1.0));
+}
+
+#[test]
+fn experiment_executor_smoke() {
+    let cfg = small_cfg("gaussian");
+    let mut fleet = build_fleet(&cfg, 5);
+    let cell = soccer_cell(&mut fleet, &NativeEngine, &cfg, 5, 0.2);
+    assert_eq!(cell.cost.values.len(), cfg.repetitions);
+    assert!(cell.cost.mean().is_finite());
+}
+
+#[test]
+fn minibatch_blackbox_full_protocol() {
+    let cfg = ExperimentConfig {
+        blackbox: "minibatch".into(),
+        ..small_cfg("gaussian")
+    };
+    let mut fleet = build_fleet(&cfg, 8);
+    let params = SoccerParams::new(8, 0.15);
+    let bb = make_blackbox(&cfg.blackbox);
+    let out = run_soccer(&mut fleet, &NativeEngine, &params, bb.as_ref(), 13);
+    assert!(out.cost.is_finite());
+    assert!(out.rounds >= 1);
+}
+
+#[test]
+fn zero_progress_safety_valve() {
+    // adversarial: a huge duplicate mass plus far outliers; termination
+    // must happen regardless (possibly via forced drain)
+    let mut rng = Pcg64::new(1);
+    let mut pts = soccer::Matrix::zeros(0, 2);
+    for _ in 0..5000 {
+        pts.push_row(&[0.0, 0.0]);
+    }
+    for _ in 0..200 {
+        pts.push_row(&[rng.normal() as f32 * 1e6, rng.normal() as f32 * 1e6]);
+    }
+    let mut fleet = Fleet::new(&pts, 5, 2);
+    let mut params = SoccerParams::new(3, 0.1);
+    params.max_rounds = 6;
+    let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 3);
+    assert!(out.rounds <= 6);
+    assert!(out.cost.is_finite());
+}

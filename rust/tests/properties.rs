@@ -1,0 +1,252 @@
+//! Property-based tests (via the in-repo mini framework,
+//! util::proptest): randomized invariants of the coordinator, the cost
+//! machinery, the sampling primitives and the reduction step.
+
+use soccer::clustering::{weighted, BlackBox, LloydKMeans};
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::core::cost::{cost, truncated_cost, truncated_sum};
+use soccer::core::distance::{nearest_center, update_nearest};
+use soccer::machines::Fleet;
+use soccer::prop_assert;
+use soccer::runtime::NativeEngine;
+use soccer::util::proptest::forall;
+use soccer::util::rng::Pcg64;
+use soccer::Matrix;
+
+fn gen_matrix(g: &mut soccer::util::proptest::Gen, min_rows: usize, max_rows: usize, max_cols: usize) -> Matrix {
+    let rows = g.int(min_rows, max_rows);
+    let cols = g.int(1, max_cols);
+    let scale = g.f64(0.1, 100.0);
+    let mut m = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        for v in m.row_mut(i) {
+            *v = (g.rng.normal() * scale) as f32;
+        }
+    }
+    m
+}
+
+#[test]
+fn prop_truncated_cost_monotone_in_l() {
+    forall(
+        "truncated-cost-monotone",
+        30,
+        1,
+        |g| {
+            let s = gen_matrix(g, 2, 80, 6);
+            let k = g.int(1, 5);
+            let mut t = Matrix::zeros(k, s.cols());
+            for i in 0..k {
+                for v in t.row_mut(i) {
+                    *v = (g.rng.normal() * 10.0) as f32;
+                }
+            }
+            (s, t)
+        },
+        |(s, t)| {
+            let mut prev = f64::INFINITY;
+            for l in 0..=s.rows() + 1 {
+                let c = truncated_cost(s, t, l);
+                prop_assert!(c <= prev + 1e-9, "cost_l not monotone at l={l}: {c} > {prev}");
+                prop_assert!(c >= 0.0, "negative truncated cost {c}");
+                prev = c;
+            }
+            prop_assert!(
+                (truncated_cost(s, t, 0) - cost(s, t)).abs() <= 1e-6 * cost(s, t).max(1.0),
+                "l=0 must equal plain cost"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_truncated_sum_matches_sort() {
+    forall(
+        "truncated-sum-vs-sort",
+        40,
+        2,
+        |g| {
+            let n = g.int(1, 200);
+            let dist: Vec<f32> = (0..n).map(|_| (g.rng.f64() * 1000.0) as f32).collect();
+            let l = g.int(0, n + 10);
+            (dist, l)
+        },
+        |(dist, l)| {
+            let fast = truncated_sum(dist, *l);
+            let mut sorted = dist.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let slow: f64 = sorted[..dist.len().saturating_sub(*l)].iter().map(|&d| d as f64).sum();
+            prop_assert!(
+                (fast - slow).abs() <= 1e-6 * slow.max(1.0),
+                "l={l}: fast {fast} vs sort {slow}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_incremental_nearest_equals_batch() {
+    forall(
+        "incremental-nearest",
+        25,
+        3,
+        |g| {
+            let pts = gen_matrix(g, 1, 60, 5);
+            let d = pts.cols();
+            let k1 = g.int(1, 4);
+            let k2 = g.int(1, 4);
+            let mut mk = |k: usize| {
+                let mut m = Matrix::zeros(k, d);
+                for i in 0..k {
+                    for v in m.row_mut(i) {
+                        *v = (g.rng.normal() * 10.0) as f32;
+                    }
+                }
+                m
+            };
+            let c1 = mk(k1);
+            let c2 = mk(k2);
+            (pts, c1, c2)
+        },
+        |(pts, c1, c2)| {
+            let (mut dist, mut idx) = nearest_center(pts, c1);
+            update_nearest(pts, c2, &mut dist, Some((&mut idx, c1.rows() as u32)));
+            let mut all = c1.clone();
+            all.extend(c2);
+            let (dist_full, idx_full) = nearest_center(pts, &all);
+            for i in 0..pts.rows() {
+                prop_assert!(
+                    (dist[i] - dist_full[i]).abs() <= 1e-5 * dist_full[i].max(1.0),
+                    "dist mismatch at {i}"
+                );
+                prop_assert!(idx[i] == idx_full[i], "idx mismatch at {i}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_soccer_invariants_random_blob_data() {
+    forall(
+        "soccer-invariants",
+        8,
+        4,
+        |g| {
+            let k_true = g.int(2, 5);
+            let n = g.int(2_000, 8_000);
+            let dim = g.int(2, 8);
+            let sep = g.f64(5.0, 50.0);
+            let mut pts = Matrix::zeros(n, dim);
+            for i in 0..n {
+                let c = g.rng.below(k_true);
+                for v in pts.row_mut(i) {
+                    *v = (c as f64 * sep + g.rng.normal()) as f32;
+                }
+            }
+            let k = g.int(2, 6);
+            let eps = g.f64(0.1, 0.3);
+            let m = g.int(2, 12);
+            (pts, k, eps, m)
+        },
+        |(pts, k, eps, m)| {
+            let mut fleet = Fleet::new(pts, *m, 9);
+            let params = SoccerParams::new(*k, *eps);
+            let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 10);
+            // Theorem 4.1 structural invariants
+            prop_assert!(
+                out.output_size <= out.rounds.max(1) * params.k_plus() + params.k,
+                "output size {} exceeds bound",
+                out.output_size
+            );
+            prop_assert!(
+                out.telemetry.comm.broadcast <= out.rounds * params.k_plus(),
+                "broadcast exceeds I*k_plus"
+            );
+            prop_assert!(out.final_centers.rows() <= *k, "more than k final centers");
+            prop_assert!(out.cost.is_finite() && out.cost >= 0.0, "bad cost");
+            // reduction never beats C_out by definition
+            prop_assert!(
+                out.cost >= out.cost_c_out - 1e-6 * out.cost_c_out.max(1.0),
+                "final-k cost {} below C_out cost {}",
+                out.cost,
+                out.cost_c_out
+            );
+            // rounds remove monotonically: remaining never grows
+            let mut prev = usize::MAX;
+            for r in &out.telemetry.rounds {
+                prop_assert!(r.remaining <= prev, "remaining grew");
+                prev = r.remaining;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_weighted_reduction_preserves_cost_scale() {
+    forall(
+        "weighted-reduction",
+        10,
+        5,
+        |g| {
+            let pts = gen_matrix(g, 100, 400, 4);
+            let k = g.int(2, 5);
+            (pts, k)
+        },
+        |(pts, k)| {
+            let mut rng = Pcg64::new(11);
+            // oversample 4k centers then reduce to k
+            let over = LloydKMeans::default().cluster(pts, 4 * k, &mut rng);
+            let reduced = weighted::reduce(pts, &over, *k, &LloydKMeans::default(), &mut rng);
+            prop_assert!(reduced.rows() <= *k, "reduction returned too many centers");
+            let direct = LloydKMeans::default().cluster(pts, *k, &mut rng);
+            let c_red = cost(pts, &reduced);
+            let c_dir = cost(pts, &direct);
+            // Guha'03: reduction preserves approximation up to constants
+            prop_assert!(
+                c_red <= 25.0 * c_dir.max(1e-9),
+                "reduced {} vs direct {}",
+                c_red,
+                c_dir
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_multinomial_sampling_exactness() {
+    forall(
+        "fleet-exact-sampling",
+        15,
+        6,
+        |g| {
+            let n = g.int(500, 4_000);
+            let m = g.int(1, 20);
+            let total = g.int(10, 400);
+            (n, m, total)
+        },
+        |(n, m, total)| {
+            let mut rng = Pcg64::new(13);
+            let mut pts = Matrix::zeros(*n, 2);
+            for i in 0..*n {
+                for v in pts.row_mut(i) {
+                    *v = rng.normal() as f32;
+                }
+            }
+            let mut fleet = Fleet::new(&pts, *m, 14);
+            let mut coord = Pcg64::new(15);
+            let out = fleet.sample_pair_exact(*total, &mut coord);
+            prop_assert!(
+                out.value.0.rows() == *total && out.value.1.rows() == *total,
+                "exact sampling sizes {} {}",
+                out.value.0.rows(),
+                out.value.1.rows()
+            );
+            Ok(())
+        },
+    );
+}

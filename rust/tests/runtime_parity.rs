@@ -1,0 +1,186 @@
+//! PJRT runtime vs native kernel parity — the integration seam between
+//! the rust coordinator (L3) and the AOT-compiled JAX/Pallas artifacts
+//! (L2/L1). Requires `make artifacts` to have produced ./artifacts.
+
+use soccer::core::cost::cost;
+use soccer::core::distance::nearest_center;
+use soccer::runtime::{Manifest, NativeEngine, PjrtRuntime};
+use soccer::util::rng::Pcg64;
+use soccer::Matrix;
+
+fn runtime() -> PjrtRuntime {
+    PjrtRuntime::load(&Manifest::default_dir()).expect("run `make artifacts` before cargo test")
+}
+
+fn randmat(seed: u64, rows: usize, cols: usize, scale: f32) -> Matrix {
+    let mut rng = Pcg64::new(seed);
+    Matrix::from_vec(
+        (0..rows * cols).map(|_| rng.normal() as f32 * scale).collect(),
+        rows,
+        cols,
+    )
+}
+
+#[test]
+fn assign_cost_matches_native_small_shape() {
+    let rt = runtime();
+    let pts = randmat(1, 100, 7, 1.0); // d=7<=16, k=3<=32 -> small artifact
+    let cen = randmat(2, 3, 7, 1.0);
+    let (dist, idx, total) = rt.assign_cost(&pts, &cen).unwrap();
+    let (nd, ni) = nearest_center(&pts, &cen);
+    assert_eq!(dist.len(), 100);
+    for i in 0..100 {
+        assert!(
+            (dist[i] - nd[i]).abs() <= 1e-4 * nd[i].max(1.0),
+            "i={i}: {} vs {}",
+            dist[i],
+            nd[i]
+        );
+        assert_eq!(idx[i], ni[i], "i={i}");
+    }
+    let native_total = cost(&pts, &cen);
+    assert!((total - native_total).abs() <= 1e-3 * native_total.max(1.0));
+}
+
+#[test]
+fn assign_cost_matches_native_main_shape() {
+    let rt = runtime();
+    // d=28 (higgs), k=100 -> main artifact; n crosses tile boundaries
+    let pts = randmat(3, 5000, 28, 2.0);
+    let cen = randmat(4, 100, 28, 2.0);
+    let (dist, idx, total) = rt.assign_cost(&pts, &cen).unwrap();
+    let (nd, ni) = nearest_center(&pts, &cen);
+    let mut idx_mismatch = 0;
+    for i in 0..5000 {
+        assert!(
+            (dist[i] - nd[i]).abs() <= 1e-3 * nd[i].max(1.0),
+            "i={i}: {} vs {}",
+            dist[i],
+            nd[i]
+        );
+        if idx[i] != ni[i] {
+            idx_mismatch += 1; // fp ties may break differently
+        }
+    }
+    assert!(idx_mismatch < 5, "{idx_mismatch} argmin mismatches");
+    let native_total = cost(&pts, &cen);
+    assert!((total - native_total).abs() <= 1e-3 * native_total.max(1.0));
+}
+
+#[test]
+fn removal_mask_matches_native() {
+    let rt = runtime();
+    let pts = randmat(5, 700, 15, 1.0);
+    let cen = randmat(6, 10, 15, 1.0);
+    let (nd, _) = nearest_center(&pts, &cen);
+    let mut sorted: Vec<f32> = nd.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let v = sorted[350]; // median threshold
+    let (keep, dist) = rt.removal_mask(&pts, &cen, v).unwrap();
+    for i in 0..700 {
+        assert!((dist[i] - nd[i]).abs() <= 1e-4 * nd[i].max(1.0));
+        let expect = nd[i] > v;
+        if keep[i] != expect {
+            // only boundary disagreements allowed
+            assert!((nd[i] - v).abs() <= 1e-3 * v.max(1.0), "i={i}");
+        }
+    }
+}
+
+#[test]
+fn lloyd_step_matches_native_accumulation() {
+    let rt = runtime();
+    let pts = randmat(7, 1000, 12, 1.0);
+    let cen = randmat(8, 6, 12, 1.0);
+    let w: Vec<f64> = (0..1000).map(|i| 0.5 + (i % 4) as f64).collect();
+    let (sums, counts, total) = rt.lloyd_step(&pts, Some(&w), &cen).unwrap();
+    // native reference
+    let (nd, ni) = nearest_center(&pts, &cen);
+    let mut rsums = Matrix::zeros(6, 12);
+    let mut rcounts = vec![0.0f64; 6];
+    let mut rcost = 0.0f64;
+    for i in 0..1000 {
+        let c = ni[i] as usize;
+        rcounts[c] += w[i];
+        rcost += w[i] * nd[i] as f64;
+        for j in 0..12 {
+            rsums.row_mut(c)[j] += (w[i] as f32) * pts.row(i)[j];
+        }
+    }
+    for c in 0..6 {
+        assert!(
+            (counts[c] - rcounts[c]).abs() <= 1e-2 * rcounts[c].max(1.0),
+            "count c={c}: {} vs {}",
+            counts[c],
+            rcounts[c]
+        );
+        for j in 0..12 {
+            let a = sums.row(c)[j];
+            let b = rsums.row(c)[j];
+            assert!((a - b).abs() <= 1e-2 * b.abs().max(1.0), "sum c={c} j={j}: {a} vs {b}");
+        }
+    }
+    assert!((total - rcost).abs() <= 1e-3 * rcost.max(1.0));
+}
+
+#[test]
+fn engine_trait_pjrt_full_protocol() {
+    // Run the whole SOCCER protocol through the PJRT engine.
+    use soccer::clustering::LloydKMeans;
+    use soccer::coordinator::{run_soccer, SoccerParams};
+    use soccer::data::gaussian::{generate, GaussianMixtureSpec};
+    use soccer::machines::Fleet;
+
+    let rt = runtime();
+    let gm = generate(&GaussianMixtureSpec::paper(8_000, 4), &mut Pcg64::new(11));
+    let mut fleet = Fleet::new(&gm.points, 6, 12);
+    let params = SoccerParams::new(4, 0.2);
+    let out = run_soccer(&mut fleet, &rt, &params, &LloydKMeans::default(), 13);
+    assert!(out.rounds <= 2);
+    assert!(out.cost.is_finite() && out.cost > 0.0);
+
+    // native engine on the same data must land in the same cost regime
+    fleet.reset();
+    let out_native = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 13);
+    let ratio = out.cost / out_native.cost;
+    assert!(
+        (0.2..5.0).contains(&ratio),
+        "pjrt {} vs native {}",
+        out.cost,
+        out_native.cost
+    );
+}
+
+#[test]
+fn exec_counts_accumulate() {
+    let rt = runtime();
+    let pts = randmat(20, 600, 7, 1.0);
+    let cen = randmat(21, 3, 7, 1.0);
+    rt.assign_cost(&pts, &cen).unwrap();
+    let tiles = *rt.exec_counts.borrow().get("assign_cost").unwrap();
+    assert!(tiles >= 3, "600 points / 256-tile artifact => >=3 tiles, got {tiles}");
+}
+
+#[test]
+fn chunked_centers_beyond_artifact_capacity() {
+    // k-means|| center sets exceed the largest artifact k (256); the
+    // engine must chunk the center axis and merge argmins.
+    use soccer::runtime::Engine;
+    let rt = runtime();
+    let pts = randmat(40, 800, 15, 1.0);
+    let cen = randmat(41, 300, 15, 1.0); // > 256
+    let (mut dist, mut idx) = (Vec::new(), Vec::new());
+    rt.nearest(&pts, &cen, &mut dist, &mut idx);
+    let (nd, ni) = nearest_center(&pts, &cen);
+    for i in 0..800 {
+        assert!((dist[i] - nd[i]).abs() <= 1e-3 * nd[i].max(1.0), "i={i}");
+        if idx[i] != ni[i] {
+            assert!((nd[i] - dist[i]).abs() <= 1e-3 * nd[i].max(1.0));
+        }
+    }
+    let c = rt.cost(&pts, &cen);
+    assert!((c - cost(&pts, &cen)).abs() <= 1e-3 * c.max(1.0));
+    let mut keep = Vec::new();
+    rt.removal_keep(&pts, &cen, 1.0, &mut keep);
+    assert_eq!(keep.len(), 800);
+}
