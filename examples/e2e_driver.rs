@@ -15,17 +15,19 @@ use soccer::util::cli::Cli;
 use soccer::util::json::Json;
 
 fn main() {
+    // default to the PJRT engine only when it was compiled in
+    let default_engine = if cfg!(feature = "pjrt") { "pjrt" } else { "native" };
     let cli = Cli::new("e2e_driver", "full-system end-to-end run over every dataset")
         .opt("n", Some("100000"), "points per dataset")
         .opt("k", Some("25"), "clusters")
         .opt("eps", Some("0.1"), "SOCCER epsilon")
-        .opt("engine", Some("pjrt"), "native | pjrt")
+        .opt("engine", Some(default_engine), "native | pjrt")
         .opt("reps", Some("2"), "repetitions");
     let args = cli.parse_env();
     let n = args.usize("n", 100_000);
     let k = args.usize("k", 25);
     let eps = args.f64("eps", 0.1);
-    let engine_name = args.get_or("engine", "pjrt");
+    let engine_name = args.get_or("engine", default_engine);
 
     let engine_box = EngineBox::by_name(&engine_name);
     let engine = engine_box.engine();

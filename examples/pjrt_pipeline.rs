@@ -3,18 +3,28 @@
 //! SOCCER coordinator (L3) entirely through them — Python is not
 //! involved at any point of this run.
 //!
-//! Requires `make artifacts`.
+//! Requires building with `--features pjrt` and running `make
+//! artifacts` first; the default build prints how to enable it.
 //!
-//!   cargo run --release --example pjrt_pipeline
+//!   cargo run --release --features pjrt --example pjrt_pipeline
 
-use soccer::clustering::LloydKMeans;
-use soccer::coordinator::{run_soccer, SoccerParams};
-use soccer::data::gaussian::{generate, GaussianMixtureSpec};
-use soccer::machines::Fleet;
-use soccer::runtime::{Engine, NativeEngine, PjrtRuntime};
-use soccer::util::rng::Pcg64;
-
+#[cfg(not(feature = "pjrt"))]
 fn main() {
+    eprintln!("pjrt_pipeline drives SOCCER through the PJRT runtime. Enabling it needs");
+    eprintln!("the out-of-tree `xla` PJRT bindings crate added as a dependency plus");
+    eprintln!("`make artifacts`, then rebuild with `--features pjrt` (see README.md).");
+    eprintln!("The default build is native-only.");
+}
+
+#[cfg(feature = "pjrt")]
+fn main() {
+    use soccer::clustering::LloydKMeans;
+    use soccer::coordinator::{run_soccer, SoccerParams};
+    use soccer::data::gaussian::{generate, GaussianMixtureSpec};
+    use soccer::machines::Fleet;
+    use soccer::runtime::{Engine, NativeEngine, PjrtRuntime};
+    use soccer::util::rng::Pcg64;
+
     let rt = PjrtRuntime::load_default().expect("run `make artifacts` first");
     println!("PJRT platform: {}", rt.platform());
 

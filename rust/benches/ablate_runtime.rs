@@ -1,7 +1,24 @@
 //! Ablation: PJRT (AOT JAX/Pallas artifacts) vs native rust distance
 //! engine — microbench of the three artifact ops plus an end-to-end
 //! SOCCER run under each engine. This is the §Perf anchor for L3 vs the
-//! runtime path.
+//! runtime path. Requires `--features pjrt` + `make artifacts`; without
+//! the feature the target still builds and explains how to enable it.
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("ablate_runtime compares the PJRT and native engines.");
+    eprintln!("Enabling it needs the out-of-tree `xla` PJRT bindings crate added as a");
+    eprintln!("dependency plus `make artifacts`, then `cargo bench --features pjrt`");
+    eprintln!("(see the pjrt feature notes in README.md).");
+}
+
+#[cfg(feature = "pjrt")]
+fn main() {
+    pjrt_ablation::run();
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_ablation {
 
 use soccer::bench_support::{fmt_val, Table};
 use soccer::clustering::LloydKMeans;
@@ -39,7 +56,7 @@ fn bench_engine(engine: &dyn Engine, pts: &Matrix, cen: &Matrix, reps: usize) ->
     (nearest_s / reps as f64, removal_s / reps as f64)
 }
 
-fn main() {
+pub fn run() {
     let n = soccer::bench_support::harness::bench_n(50_000);
     let reps = soccer::bench_support::harness::bench_reps(3);
     let pts = randmat(1, n, 15);
@@ -106,4 +123,6 @@ fn main() {
         ]),
     );
     println!("log: {}", path.display());
+}
+
 }

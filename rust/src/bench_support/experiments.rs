@@ -11,7 +11,9 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::{run_soccer, SoccerParams};
 use crate::data;
 use crate::machines::Fleet;
-use crate::runtime::{Engine, NativeEngine, PjrtRuntime};
+#[cfg(feature = "pjrt")]
+use crate::runtime::PjrtRuntime;
+use crate::runtime::{Engine, NativeEngine};
 use crate::util::rng::Pcg64;
 
 /// Aggregated SOCCER cell (one (dataset, k, ε) configuration).
@@ -54,9 +56,11 @@ pub fn make_blackbox(name: &str) -> Box<dyn BlackBox> {
     }
 }
 
-/// Engine holder: owns the PJRT runtime when selected.
+/// Engine holder: owns the PJRT runtime when selected (only available
+/// with the `pjrt` feature; the default build is native-only).
 pub enum EngineBox {
     Native(NativeEngine),
+    #[cfg(feature = "pjrt")]
     Pjrt(Box<PjrtRuntime>),
 }
 
@@ -64,9 +68,15 @@ impl EngineBox {
     pub fn by_name(name: &str) -> EngineBox {
         match name {
             "native" => EngineBox::Native(NativeEngine),
+            #[cfg(feature = "pjrt")]
             "pjrt" => EngineBox::Pjrt(Box::new(
                 PjrtRuntime::load_default().expect("PJRT runtime (run `make artifacts`)"),
             )),
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => panic!(
+                "engine 'pjrt' requires the pjrt feature (plus the out-of-tree `xla` \
+                 bindings and `make artifacts` — see README.md); this build is native-only"
+            ),
             other => panic!("unknown engine '{other}' (native|pjrt)"),
         }
     }
@@ -74,6 +84,7 @@ impl EngineBox {
     pub fn engine(&self) -> &dyn Engine {
         match self {
             EngineBox::Native(e) => e,
+            #[cfg(feature = "pjrt")]
             EngineBox::Pjrt(rt) => rt.as_ref(),
         }
     }

@@ -2,8 +2,9 @@
 //! (dataset, n, k grid, ε grid, repetitions, engine, black box) shared
 //! by the CLI, the examples and every bench target.
 
+use crate::format_err;
+use crate::util::error::Result;
 use crate::util::json::Json;
-use anyhow::{anyhow, Result};
 use std::path::Path;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -79,9 +80,9 @@ impl ExperimentConfig {
                 None => Ok(dv.to_vec()),
                 Some(v) => v
                     .as_arr()
-                    .ok_or_else(|| anyhow!("'{k}' must be an array"))?
+                    .ok_or_else(|| format_err!("'{k}' must be an array"))?
                     .iter()
-                    .map(|x| x.as_usize().ok_or_else(|| anyhow!("'{k}' must hold integers")))
+                    .map(|x| x.as_usize().ok_or_else(|| format_err!("'{k}' must hold integers")))
                     .collect(),
             }
         };
@@ -90,9 +91,9 @@ impl ExperimentConfig {
                 None => Ok(dv.to_vec()),
                 Some(v) => v
                     .as_arr()
-                    .ok_or_else(|| anyhow!("'{k}' must be an array"))?
+                    .ok_or_else(|| format_err!("'{k}' must be an array"))?
                     .iter()
-                    .map(|x| x.as_f64().ok_or_else(|| anyhow!("'{k}' must hold numbers")))
+                    .map(|x| x.as_f64().ok_or_else(|| format_err!("'{k}' must hold numbers")))
                     .collect(),
             }
         };
@@ -113,7 +114,7 @@ impl ExperimentConfig {
 
     pub fn load(path: &Path) -> Result<ExperimentConfig> {
         let text = std::fs::read_to_string(path)?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format_err!("{path:?}: {e}"))?;
         Self::from_json(&j)
     }
 

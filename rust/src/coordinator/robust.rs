@@ -117,6 +117,9 @@ pub fn run_soccer_robust(
             machine_time_max: sample.max_secs + removal.max_secs,
             coordinator_time: coord_secs,
         });
+        // same control-plane accounting as run_soccer (always exact
+        // sampling here): (v, |C_iter|) + two quotas per machine
+        telemetry.comm.control_scalars += 2 + 2 * fleet.num_machines();
     }
 
     // drain + trimmed final clustering: discard the z farthest points
@@ -135,8 +138,10 @@ pub fn run_soccer_robust(
             v_final
         };
         if !cleaned.is_empty() {
+            let t_coord = Instant::now();
             let c_final = blackbox.cluster(&cleaned, params.k, &mut rng);
             c_out.extend(&c_final);
+            telemetry.final_cluster_secs = t_coord.elapsed().as_secs_f64();
         }
     }
 

@@ -99,18 +99,27 @@ pub fn run_soccer(
             machine_time_max: sample.max_secs + removal.max_secs,
             coordinator_time: coord_secs,
         });
+        // control-plane scalars: the (v, |C_iter|) broadcast pair, plus
+        // per-machine quota messages (two per machine — one per sample)
+        // under exact sampling, or the single α broadcast otherwise
+        telemetry.comm.control_scalars += 2;
+        telemetry.comm.control_scalars += if params.exact_sampling {
+            2 * fleet.num_machines()
+        } else {
+            1
+        };
     }
 
-    // lines 15-16: collect the remainder and cluster it with A(V, k)
+    // lines 15-16: collect the remainder and cluster it with A(V, k).
+    // The clustering time goes to the dedicated final_cluster_secs field:
+    // on the zero-round path there is no RoundLog to attach it to.
     let v_final = fleet.drain();
     telemetry.comm.to_coordinator += v_final.rows();
     if !v_final.is_empty() {
         let t_coord = Instant::now();
         let c_final = blackbox.cluster(&v_final, params.k, &mut rng);
         c_out.extend(&c_final);
-        if let Some(last) = telemetry.rounds.last_mut() {
-            last.coordinator_time += t_coord.elapsed().as_secs_f64();
-        }
+        telemetry.final_cluster_secs = t_coord.elapsed().as_secs_f64();
     }
 
     // standard weighted reduction to exactly k (paper §2/§8)
@@ -197,6 +206,27 @@ mod tests {
         assert_eq!(out.rounds, 0);
         assert!(out.output_size <= params.k);
         assert!(out.cost.is_finite());
+        // the final A(V, k) time must not be dropped on the zero-round
+        // path: it lands in final_cluster_secs and coordinator_time()
+        assert!(out.telemetry.final_cluster_secs > 0.0);
+        assert!(out.telemetry.coordinator_time() >= out.telemetry.final_cluster_secs);
+    }
+
+    #[test]
+    fn more_machines_than_points_leaves_empty_shards() {
+        // m > n: the tail machines hold empty shards; the protocol must
+        // degrade to the zero-round centralized path without panicking
+        let (mut fleet, _) = gaussian_fleet(30, 3, 64, 17);
+        assert_eq!(fleet.num_machines(), 64);
+        assert!(fleet.live_sizes().iter().filter(|&&s| s == 0).count() >= 34);
+        let params = SoccerParams::new(3, 0.2);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 18);
+        assert_eq!(out.rounds, 0);
+        assert!(out.cost.is_finite());
+        assert!(out.final_centers.rows() <= 3);
+        assert_eq!(out.final_centers.cols(), fleet.dim());
+        // every point reached the coordinator through the drain
+        assert_eq!(out.telemetry.comm.to_coordinator, 30);
     }
 
     #[test]
@@ -214,6 +244,15 @@ mod tests {
         );
         // Theorem 4.1 part 5: broadcast ≤ I·k₊
         assert!(out.telemetry.comm.broadcast <= out.rounds * params.k_plus());
+        // control scalars: per round, the (v, |C_iter|) pair plus two
+        // quota messages per machine (exact-size sampling, 8 machines)
+        let m = 8;
+        assert_eq!(
+            out.telemetry.comm.control_scalars,
+            out.rounds * (2 + 2 * m),
+            "control-scalar accounting drifted"
+        );
+        assert!(out.rounds > 0, "test needs at least one round to be meaningful");
     }
 
     #[test]
@@ -224,5 +263,7 @@ mod tests {
         let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 12);
         assert!(out.rounds <= 2);
         assert!(out.cost < 5.0 * opt);
+        // Bernoulli control plane: (v, |C_iter|) plus the α broadcast
+        assert_eq!(out.telemetry.comm.control_scalars, out.rounds * 3);
     }
 }

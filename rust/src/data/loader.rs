@@ -2,8 +2,9 @@
 //! endian) plus a CSV loader so users can run the system on their own
 //! data. Generated benchmark datasets can be cached across runs.
 
+use crate::bail;
 use crate::core::Matrix;
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 

@@ -96,24 +96,57 @@ impl Fleet {
         }
     }
 
+    /// Per-machine quotas summing to exactly `min(total, total_live)`:
+    /// a multinomial draw over live shard sizes, with any quota that
+    /// exceeds its machine's contents clamped and the overflow
+    /// redistributed to machines with spare capacity. The
+    /// redistribution is deterministic (greedy, in machine order) so a
+    /// fleet replay consumes the same coordinator RNG stream.
+    fn exact_quotas(&self, total: usize, coord_rng: &mut Pcg64) -> Vec<usize> {
+        let caps: Vec<usize> = self.machines.iter().map(|m| m.n_live()).collect();
+        let cap_total: usize = caps.iter().sum();
+        let total = total.min(cap_total);
+        let weights: Vec<f64> = caps.iter().map(|&c| c as f64).collect();
+        let mut q = coord_rng.multinomial(total, &weights);
+        // clamp quotas that exceed their machine's contents, then top the
+        // sample back up from spare capacity; the same pass also covers a
+        // (pathological, fp-edge) multinomial shortfall
+        for (qi, &cap) in q.iter_mut().zip(&caps) {
+            *qi = (*qi).min(cap);
+        }
+        let mut need = total - q.iter().sum::<usize>();
+        for (qi, &cap) in q.iter_mut().zip(&caps) {
+            if need == 0 {
+                break;
+            }
+            let take = need.min(cap - *qi);
+            *qi += take;
+            need -= take;
+        }
+        debug_assert_eq!(q.iter().sum::<usize>(), total);
+        q
+    }
+
     /// Exact-size sampling (paper App. A variant, used by the
     /// experiments): the coordinator draws per-machine quotas from a
     /// multinomial over live shard sizes, each machine samples its quota
     /// without replacement. Returns two independent samples of exactly
-    /// `total` points each (clamped by machine contents).
+    /// `total` points each (clamped by the fleet's live total). Machines
+    /// run in parallel like `sample_pair_bernoulli`; the per-machine
+    /// task covers BOTH quota draws, so max_secs = max_j (t1_j + t2_j).
     pub fn sample_pair_exact(&mut self, total: usize, coord_rng: &mut Pcg64) -> StepOut<(Matrix, Matrix)> {
-        let sizes: Vec<f64> = self.machines.iter().map(|m| m.n_live() as f64).collect();
-        let q1 = coord_rng.multinomial(total, &sizes);
-        let q2 = coord_rng.multinomial(total, &sizes);
-        // quotas can exceed a machine's contents in rare multinomial
-        // draws; clamp (the deficit is negligible and only shrinks P)
-        let mut max_secs = 0.0f64;
+        let q1 = self.exact_quotas(total, coord_rng);
+        let q2 = self.exact_quotas(total, coord_rng);
         let dim = self.dim();
-        let mut p1 = Matrix::with_capacity(total, dim);
-        let mut p2 = Matrix::with_capacity(total, dim);
-        for (i, m) in self.machines.iter_mut().enumerate() {
+        let outs = par_map_mut(&mut self.machines, self.workers, |i, m| {
             let t1 = m.sample_exact(q1[i]);
             let t2 = m.sample_exact(q2[i]);
+            (t1, t2)
+        });
+        let mut p1 = Matrix::with_capacity(total, dim);
+        let mut p2 = Matrix::with_capacity(total, dim);
+        let mut max_secs = 0.0f64;
+        for (t1, t2) in outs {
             p1.extend(&t1.value);
             p2.extend(&t2.value);
             max_secs = max_secs.max(t1.secs + t2.secs);
@@ -365,6 +398,55 @@ mod tests {
             let p = f.uniform_point(&mut rng);
             assert_eq!(p.rows(), 1);
             assert_eq!(p.cols(), 3);
+        }
+    }
+
+    #[test]
+    fn dead_fleet_dim_and_aggregates() {
+        let mut f = fleet(120, 4);
+        let lost: usize = (0..4).map(|id| f.kill_machine(id)).sum();
+        assert_eq!(lost, 120);
+        // dim() still answers from the (retained) original shard shape
+        assert_eq!(f.dim(), 3);
+        assert_eq!(f.total_live(), 0);
+        assert_eq!(f.total_original(), 0);
+        // aggregate steps degrade to zeros rather than panicking
+        let centers = Matrix::from_rows(&[&[0.0, 0.0, 0.0]]);
+        assert_eq!(f.counts_full(&centers, &NativeEngine).value, vec![0.0]);
+        assert_eq!(f.cost_full(&centers, &NativeEngine).value, 0.0);
+        assert!(f.drain().is_empty());
+        // exact sampling on a dead fleet yields empty samples
+        let mut rng = Pcg64::new(5);
+        let out = f.sample_pair_exact(10, &mut rng);
+        assert!(out.value.0.is_empty() && out.value.1.is_empty());
+        // killing again (or an unknown id) is a no-op
+        assert_eq!(f.kill_machine(0), 0);
+        assert_eq!(f.kill_machine(99), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "total > 0")]
+    fn uniform_point_on_dead_fleet_panics() {
+        let mut f = fleet(60, 3);
+        for id in 0..3 {
+            f.kill_machine(id);
+        }
+        let mut rng = Pcg64::new(6);
+        f.uniform_point(&mut rng);
+    }
+
+    #[test]
+    fn exact_sampling_is_exact_despite_quota_overflow() {
+        // total close to n with many machines: raw multinomial quotas
+        // routinely exceed a shard's contents; redistribution must keep
+        // the sample size exact (the property properties.rs checks too)
+        let mut f = fleet(500, 20);
+        let mut rng = Pcg64::new(7);
+        for total in [400usize, 499, 500, 600] {
+            let out = f.sample_pair_exact(total, &mut rng);
+            let expect = total.min(500);
+            assert_eq!(out.value.0.rows(), expect, "total={total}");
+            assert_eq!(out.value.1.rows(), expect, "total={total}");
         }
     }
 

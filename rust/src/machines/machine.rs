@@ -120,14 +120,10 @@ impl Machine {
         let count = count.min(n);
         let rng = &mut self.rng;
         let live = &self.live;
-        let mut idx_holder = Vec::new();
-        let t = timed(|| {
+        timed(|| {
             let idx = rng.sample_indices(n, count);
-            let m = live.select(&idx);
-            idx_holder = idx;
-            m
-        });
-        t
+            live.select(&idx)
+        })
     }
 
     /// Alg. 1 line 4 as written: two independent Bernoulli(α) samples.

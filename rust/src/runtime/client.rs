@@ -14,7 +14,8 @@
 
 use super::manifest::{ArtifactEntry, Manifest};
 use crate::core::Matrix;
-use anyhow::{anyhow, Result};
+use crate::format_err;
+use crate::util::error::Result;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
@@ -33,7 +34,7 @@ impl PjrtRuntime {
     /// lazy per artifact (first use) and cached for the runtime's life.
     pub fn load(artifact_dir: &Path) -> Result<PjrtRuntime> {
         let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format_err!("PJRT cpu client: {e:?}"))?;
         Ok(PjrtRuntime {
             client,
             manifest,
@@ -64,14 +65,14 @@ impl PjrtRuntime {
         let path = entry
             .file
             .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+            .ok_or_else(|| format_err!("non-utf8 artifact path"))?;
         let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+            .map_err(|e| format_err!("parse {path}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow!("compile {path}: {e:?}"))?;
+            .map_err(|e| format_err!("compile {path}: {e:?}"))?;
         let exe = std::rc::Rc::new(exe);
         self.cache.borrow_mut().insert(key, exe.clone());
         Ok(exe)
@@ -79,7 +80,7 @@ impl PjrtRuntime {
 
     fn entry(&self, op: &str, d: usize, k: usize) -> Result<&ArtifactEntry> {
         self.manifest.select(op, d, k).ok_or_else(|| {
-            anyhow!(
+            format_err!(
                 "no '{op}' artifact fits d={d}, k={k} (available: {:?}) — regenerate with `make artifacts`",
                 self.manifest
                     .entries
@@ -120,7 +121,7 @@ impl PjrtRuntime {
     fn literal_2d(buf: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
         xla::Literal::vec1(buf)
             .reshape(&[rows as i64, cols as i64])
-            .map_err(|e| anyhow!("literal reshape: {e:?}"))
+            .map_err(|e| format_err!("literal reshape: {e:?}"))
     }
 
     fn bump(&self, op: &str, tiles: usize) {
@@ -150,17 +151,17 @@ impl PjrtRuntime {
             let wlit = xla::Literal::vec1(&wbuf);
             let result = exe
                 .execute::<&xla::Literal>(&[&plit, &clit, &wlit])
-                .map_err(|e| anyhow!("execute assign_cost: {e:?}"))?[0][0]
+                .map_err(|e| format_err!("execute assign_cost: {e:?}"))?[0][0]
                 .to_literal_sync()
-                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+                .map_err(|e| format_err!("to_literal: {e:?}"))?;
             let (d2, ix, cost) = result
                 .to_tuple3()
-                .map_err(|e| anyhow!("assign_cost outputs: {e:?}"))?;
-            let d2v: Vec<f32> = d2.to_vec().map_err(|e| anyhow!("{e:?}"))?;
-            let ixv: Vec<i32> = ix.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                .map_err(|e| format_err!("assign_cost outputs: {e:?}"))?;
+            let d2v: Vec<f32> = d2.to_vec().map_err(|e| format_err!("{e:?}"))?;
+            let ixv: Vec<i32> = ix.to_vec().map_err(|e| format_err!("{e:?}"))?;
             dist.extend_from_slice(&d2v[..len]);
             idx.extend(ixv[..len].iter().map(|&i| i as u32));
-            total += cost.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))? as f64;
+            total += cost.get_first_element::<f32>().map_err(|e| format_err!("{e:?}"))? as f64;
             start += len;
             tiles += 1;
         }
@@ -193,14 +194,14 @@ impl PjrtRuntime {
             let plit = Self::literal_2d(&pbuf, entry.tile_n, entry.d)?;
             let result = exe
                 .execute::<&xla::Literal>(&[&plit, &clit, &tlit])
-                .map_err(|e| anyhow!("execute removal_mask: {e:?}"))?[0][0]
+                .map_err(|e| format_err!("execute removal_mask: {e:?}"))?[0][0]
                 .to_literal_sync()
-                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+                .map_err(|e| format_err!("to_literal: {e:?}"))?;
             let (k_lit, d_lit) = result
                 .to_tuple2()
-                .map_err(|e| anyhow!("removal_mask outputs: {e:?}"))?;
-            let kv: Vec<i32> = k_lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
-            let dv: Vec<f32> = d_lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                .map_err(|e| format_err!("removal_mask outputs: {e:?}"))?;
+            let kv: Vec<i32> = k_lit.to_vec().map_err(|e| format_err!("{e:?}"))?;
+            let dv: Vec<f32> = d_lit.to_vec().map_err(|e| format_err!("{e:?}"))?;
             keep.extend(kv[..len].iter().map(|&x| x != 0));
             dist.extend_from_slice(&dv[..len]);
             start += len;
@@ -221,7 +222,9 @@ impl PjrtRuntime {
         let n = points.rows();
         let (k, d) = (centers.rows(), centers.cols());
         if let Some(w) = weights {
-            anyhow::ensure!(w.len() == n, "weights length mismatch");
+            if w.len() != n {
+                crate::bail!("weights length mismatch");
+            }
         }
         let entry = self.entry("lloyd_step", d, k)?.clone();
         let exe = self.executable(&entry)?;
@@ -249,14 +252,14 @@ impl PjrtRuntime {
             let wlit = xla::Literal::vec1(&wbuf);
             let result = exe
                 .execute::<&xla::Literal>(&[&plit, &wlit, &clit])
-                .map_err(|e| anyhow!("execute lloyd_step: {e:?}"))?[0][0]
+                .map_err(|e| format_err!("execute lloyd_step: {e:?}"))?[0][0]
                 .to_literal_sync()
-                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+                .map_err(|e| format_err!("to_literal: {e:?}"))?;
             let (s_lit, c_lit, cost_lit) = result
                 .to_tuple3()
-                .map_err(|e| anyhow!("lloyd_step outputs: {e:?}"))?;
-            let sv: Vec<f32> = s_lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
-            let cv: Vec<f32> = c_lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                .map_err(|e| format_err!("lloyd_step outputs: {e:?}"))?;
+            let sv: Vec<f32> = s_lit.to_vec().map_err(|e| format_err!("{e:?}"))?;
+            let cv: Vec<f32> = c_lit.to_vec().map_err(|e| format_err!("{e:?}"))?;
             // accumulate only the real k×d block (sums come back K×D)
             for c in 0..k {
                 counts[c] += cv[c] as f64;
@@ -265,7 +268,7 @@ impl PjrtRuntime {
                     row[j] += sv[c * entry.d + j];
                 }
             }
-            total += cost_lit.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))? as f64;
+            total += cost_lit.get_first_element::<f32>().map_err(|e| format_err!("{e:?}"))? as f64;
             start += len;
             tiles += 1;
         }

@@ -3,8 +3,9 @@
 //! module with its op name and static shape so the runtime can pick the
 //! right executable and pad inputs to it.
 
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 #[derive(Clone, Debug, PartialEq)]
@@ -30,7 +31,7 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| crate::format_err!("{path:?}: {e}"))?;
         if j.get("interchange").and_then(Json::as_str) != Some("hlo-text") {
             bail!("{path:?}: unsupported interchange format");
         }
@@ -41,12 +42,12 @@ impl Manifest {
         let arts = j
             .get("artifacts")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("{path:?}: missing artifacts array"))?;
+            .ok_or_else(|| crate::format_err!("{path:?}: missing artifacts array"))?;
         let mut entries = Vec::with_capacity(arts.len());
         for a in arts {
             let field = |k: &str| {
                 a.get(k)
-                    .ok_or_else(|| anyhow!("{path:?}: artifact missing field '{k}'"))
+                    .ok_or_else(|| crate::format_err!("{path:?}: artifact missing field '{k}'"))
             };
             entries.push(ArtifactEntry {
                 op: field("op")?.as_str().unwrap_or_default().to_string(),

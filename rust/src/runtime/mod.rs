@@ -6,9 +6,11 @@
 //! through; `benches/ablate_runtime.rs` compares the two
 //! implementations head to head.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use client::PjrtRuntime;
 pub use manifest::{ArtifactEntry, Manifest};
 
@@ -71,6 +73,7 @@ impl Engine for NativeEngine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Largest center count any assign_cost artifact supports for this
     /// dimensionality.
@@ -117,6 +120,7 @@ impl PjrtRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine for PjrtRuntime {
     fn nearest(&self, points: &Matrix, centers: &Matrix, dist: &mut Vec<f32>, idx: &mut Vec<u32>) {
         if points.is_empty() {

@@ -12,8 +12,10 @@ pub struct CommStats {
     pub to_coordinator: usize,
     /// points broadcast coordinator → machines
     pub broadcast: usize,
-    /// scalar control messages (thresholds, counts) — negligible but
-    /// tracked for completeness
+    /// scalar control messages — negligible on the wire but tracked for
+    /// completeness: the per-round (v, |C_iter|) broadcast pair, plus
+    /// either the per-machine quota messages (exact-size sampling, two
+    /// per machine per round) or the α broadcast (Bernoulli sampling)
     pub control_scalars: usize,
 }
 
@@ -51,6 +53,10 @@ pub struct RoundLog {
 pub struct RunTelemetry {
     pub comm: CommStats,
     pub rounds: Vec<RoundLog>,
+    /// coordinator time of the final centralized A(V, k) run on the
+    /// drained remainder. Not attributed to any round: on the
+    /// zero-round path (n ≤ η) there is no round to attach it to.
+    pub final_cluster_secs: f64,
     /// fell back to a forced drain because no progress was being made
     pub forced_drain: bool,
 }
@@ -65,8 +71,10 @@ impl RunTelemetry {
         self.rounds.iter().map(|r| r.machine_time_max).sum()
     }
 
+    /// Total coordinator-side work: per-round clustering/thresholding
+    /// plus the final A(V, k) on the drained remainder.
     pub fn coordinator_time(&self) -> f64 {
-        self.rounds.iter().map(|r| r.coordinator_time).sum()
+        self.rounds.iter().map(|r| r.coordinator_time).sum::<f64>() + self.final_cluster_secs
     }
 
     pub fn push_round(&mut self, log: RoundLog) {
@@ -103,6 +111,18 @@ mod tests {
         assert_eq!(t.num_rounds(), 2);
         assert!((t.machine_time() - 0.5).abs() < 1e-12);
         assert!((t.coordinator_time() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn final_cluster_time_counts_toward_coordinator_time() {
+        // zero-round run: the final A(V, k) time must still be reported
+        let mut t = RunTelemetry::default();
+        t.final_cluster_secs = 0.25;
+        assert_eq!(t.num_rounds(), 0);
+        assert!((t.coordinator_time() - 0.25).abs() < 1e-12);
+        // and it stacks on top of per-round coordinator time
+        t.push_round(round(1, 0.1));
+        assert!((t.coordinator_time() - 0.75).abs() < 1e-12);
     }
 
     #[test]

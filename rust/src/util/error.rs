@@ -1,0 +1,172 @@
+//! Minimal error handling (offline substrate for `anyhow`): a single
+//! string-message error type that any `std::error::Error` converts
+//! into, plus `context`/`with_context` adapters and the `format_err!`/
+//! `bail!` macros. Like `anyhow::Error`, [`Error`] deliberately does
+//! NOT implement `std::error::Error` itself — that is what makes the
+//! blanket `From` impl possible.
+
+use std::fmt;
+
+/// A message-carrying error with an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error {
+            msg: msg.into(),
+            source: None,
+        }
+    }
+
+    pub fn context(self, msg: impl Into<String>) -> Error {
+        Error {
+            msg: msg.into(),
+            source: Some(Box::new(Wrapped(self.to_string()))),
+        }
+    }
+}
+
+/// Internal adapter so a chained [`Error`] can live in the `source`
+/// slot (which requires `std::error::Error`).
+#[derive(Debug)]
+struct Wrapped(String);
+
+impl fmt::Display for Wrapped {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Wrapped {}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, ": {src}")?;
+        }
+        Ok(())
+    }
+}
+
+/// `Debug` mirrors `Display` (plus the chain) so `.unwrap()`/`.expect()`
+/// failures read well — same policy as `anyhow`.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error {
+            msg: e.to_string(),
+            source: e.source().map(|s| {
+                Box::new(Wrapped(s.to_string())) as Box<dyn std::error::Error + Send + Sync>
+            }),
+        }
+    }
+}
+
+/// `context`/`with_context` on `Result` and `Option`, as in `anyhow`.
+pub trait Context<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: msg.into(),
+            source: Some(Box::new(Wrapped(e.to_string()))),
+        })
+    }
+
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: f().into(),
+            source: Some(Box::new(Wrapped(e.to_string()))),
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (substitute for `anyhow!`).
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`] (substitute for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::format_err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_wraps_and_chains() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "inner cause",
+        ));
+        let err = r.context("outer context").unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("outer context"), "{text}");
+        assert!(text.contains("inner cause"), "{text}");
+        // Debug formats like Display (expect()-friendly)
+        assert_eq!(format!("{err:?}"), text);
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let missing: Option<u32> = None;
+        let err = missing.context("no value").unwrap_err();
+        assert_eq!(err.to_string(), "no value");
+        let err = crate::format_err!("bad thing {}", 42);
+        assert_eq!(err.to_string(), "bad thing 42");
+        fn bails() -> Result<()> {
+            crate::bail!("stopped at {}", 7);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stopped at 7");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(5);
+        let v = ok.with_context(|| "never evaluated".to_string()).unwrap();
+        assert_eq!(v, 5);
+    }
+}

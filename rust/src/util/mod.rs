@@ -1,8 +1,10 @@
 //! Substrates built from scratch for the offline image (DESIGN.md §3):
 //! PRNG, JSON, CLI parsing, a scoped thread pool, summary statistics,
-//! timers and a mini property-testing framework.
+//! timers, a mini property-testing framework and an `anyhow`-style
+//! error type — the crate builds with zero external dependencies.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod pool;
 pub mod proptest;

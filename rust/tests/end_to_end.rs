@@ -1,61 +1,101 @@
-//! End-to-end: the complete three-layer system on every dataset — the
-//! test-suite twin of examples/e2e_driver.rs. PJRT engine (AOT
-//! artifacts) drives the machine-side compute; costs cross-checked
-//! against the native engine and the centralized reference.
+//! End-to-end: the complete system on every dataset — the test-suite
+//! twin of examples/e2e_driver.rs. The default build drives the native
+//! engine; with `--features pjrt` (plus `make artifacts`) the same
+//! protocol additionally runs through the PJRT runtime and the two
+//! engines are cross-checked.
 
 use soccer::baselines::run_centralized;
 use soccer::clustering::LloydKMeans;
 use soccer::coordinator::{run_soccer, SoccerParams};
 use soccer::data;
 use soccer::machines::Fleet;
-use soccer::runtime::{NativeEngine, PjrtRuntime};
+use soccer::runtime::NativeEngine;
 
 #[test]
-fn full_system_all_datasets_pjrt() {
-    let rt = PjrtRuntime::load_default().expect("run `make artifacts` before cargo test");
+fn full_system_all_datasets_native() {
     for dataset in data::DATASET_NAMES {
         let k = 6;
         let ds = data::by_name(dataset, 6_000, k, 21);
         let mut fleet = Fleet::new(&ds.points, 8, 22);
         let params = SoccerParams::new(k, 0.2);
 
-        let out_pjrt = run_soccer(&mut fleet, &rt, &params, &LloydKMeans::default(), 23);
-        fleet.reset();
-        let out_native = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 23);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 23);
+        assert!(out.cost.is_finite() && out.cost >= 0.0, "{dataset}");
+        assert!(out.final_centers.rows() <= k, "{dataset}");
+        assert_eq!(out.final_centers.cols(), ds.points.cols(), "{dataset}");
+        // every live point was either removed in a round or drained
+        let removed: usize = out.telemetry.rounds.iter().map(|r| r.removed).sum();
+        let drained = out.telemetry.comm.to_coordinator
+            - out.telemetry.rounds.iter().map(|r| r.sampled).sum::<usize>();
+        assert_eq!(removed + drained, 6_000, "{dataset}: partition invariant");
 
-        assert!(out_pjrt.cost.is_finite(), "{dataset}");
-        // engines agree on the cost regime (same protocol, same seeds;
-        // fp differences can change sampling trajectories slightly)
-        let ratio = out_pjrt.cost / out_native.cost.max(1e-12);
-        assert!(
-            (0.1..10.0).contains(&ratio),
-            "{dataset}: pjrt {} vs native {}",
-            out_pjrt.cost,
-            out_native.cost
-        );
-
-        // and neither is worse than 20x centralized
+        // not worse than 20x the centralized reference
         let central = run_centralized(&ds.points, k, &LloydKMeans::default(), 24);
         assert!(
-            out_pjrt.cost <= 20.0 * central.cost.max(1e-9),
+            out.cost <= 20.0 * central.cost.max(1e-9),
             "{dataset}: {} vs centralized {}",
-            out_pjrt.cost,
+            out.cost,
             central.cost
         );
     }
 }
 
 #[test]
-fn headline_metric_gaussian_one_round_pjrt() {
+fn headline_metric_gaussian_one_round_native() {
     // The paper's headline: on a Gaussian mixture SOCCER uses ONE round
-    // and lands at ~optimal cost — through the full AOT/PJRT stack.
-    let rt = PjrtRuntime::load_default().expect("artifacts");
+    // and lands at ~optimal cost.
     let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(10_000, 5);
     let gm = soccer::data::gaussian::generate(&spec, &mut soccer::util::rng::Pcg64::new(31));
     let mut fleet = Fleet::new(&gm.points, 10, 32);
     let params = SoccerParams::new(5, 0.2);
-    let out = run_soccer(&mut fleet, &rt, &params, &LloydKMeans::default(), 33);
+    let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 33);
     assert_eq!(out.rounds, 1);
     let opt = soccer::data::gaussian::expected_optimal_cost(&spec);
     assert!(out.cost < 3.0 * opt, "cost {} vs optimal {}", out.cost, opt);
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use soccer::runtime::PjrtRuntime;
+
+    #[test]
+    fn full_system_all_datasets_pjrt() {
+        let rt = PjrtRuntime::load_default().expect("run `make artifacts` before cargo test");
+        for dataset in data::DATASET_NAMES {
+            let k = 6;
+            let ds = data::by_name(dataset, 6_000, k, 21);
+            let mut fleet = Fleet::new(&ds.points, 8, 22);
+            let params = SoccerParams::new(k, 0.2);
+
+            let out_pjrt = run_soccer(&mut fleet, &rt, &params, &LloydKMeans::default(), 23);
+            fleet.reset();
+            let out_native =
+                run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 23);
+
+            assert!(out_pjrt.cost.is_finite(), "{dataset}");
+            // engines agree on the cost regime (same protocol, same
+            // seeds; fp differences can shift sampling trajectories)
+            let ratio = out_pjrt.cost / out_native.cost.max(1e-12);
+            assert!(
+                (0.1..10.0).contains(&ratio),
+                "{dataset}: pjrt {} vs native {}",
+                out_pjrt.cost,
+                out_native.cost
+            );
+        }
+    }
+
+    #[test]
+    fn headline_metric_gaussian_one_round_pjrt() {
+        let rt = PjrtRuntime::load_default().expect("artifacts");
+        let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(10_000, 5);
+        let gm = soccer::data::gaussian::generate(&spec, &mut soccer::util::rng::Pcg64::new(31));
+        let mut fleet = Fleet::new(&gm.points, 10, 32);
+        let params = SoccerParams::new(5, 0.2);
+        let out = run_soccer(&mut fleet, &rt, &params, &LloydKMeans::default(), 33);
+        assert_eq!(out.rounds, 1);
+        let opt = soccer::data::gaussian::expected_optimal_cost(&spec);
+        assert!(out.cost < 3.0 * opt, "cost {} vs optimal {}", out.cost, opt);
+    }
 }
