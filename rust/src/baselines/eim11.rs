@@ -19,7 +19,7 @@ use crate::core::cost::per_point_costs;
 use crate::core::Matrix;
 use crate::machines::Fleet;
 use crate::runtime::Engine;
-use crate::telemetry::{RoundLog, RunTelemetry};
+use crate::telemetry::{per_machine_round_max, RoundLog, RunTelemetry};
 use crate::util::rng::Pcg64;
 use crate::util::stats::quantile;
 use std::time::Instant;
@@ -73,6 +73,7 @@ impl Eim11 {
         seed: u64,
     ) -> Eim11Outcome {
         let t0 = Instant::now();
+        fleet.reset_wire_meter();
         let mut rng = Pcg64::new(seed);
         let n0 = fleet.total_live();
         let dim = fleet.dim();
@@ -118,7 +119,11 @@ impl Eim11 {
                 removed: removal.value,
                 remaining: fleet.total_live(),
                 threshold: thr,
-                machine_time_max: sample.max_secs + removal.max_secs,
+                // §8 metric: max over machines of the per-machine total
+                machine_time_max: per_machine_round_max(&[
+                    &sample.per_machine_secs,
+                    &removal.per_machine_secs,
+                ]),
                 coordinator_time: coord_secs,
             });
             if removal.value == 0 {
@@ -129,6 +134,10 @@ impl Eim11 {
         // collect the remainder into the clustering
         let rest = fleet.drain();
         telemetry.comm.to_coordinator += rest.rows();
+        // protocol communication ends here; exclude evaluation traffic
+        let (wire_up, wire_down) = fleet.wire_bytes();
+        telemetry.comm.bytes_to_coordinator = wire_up;
+        telemetry.comm.bytes_broadcast = wire_down;
         centers_pre.extend(&rest);
 
         // weighted reduction to k (the coordinator-side final clustering)

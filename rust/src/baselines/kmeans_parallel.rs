@@ -14,7 +14,7 @@ use crate::clustering::weighted;
 use crate::core::Matrix;
 use crate::machines::Fleet;
 use crate::runtime::Engine;
-use crate::telemetry::{RoundLog, RunTelemetry};
+use crate::telemetry::{per_machine_round_max, RoundLog, RunTelemetry};
 use crate::util::rng::Pcg64;
 use std::time::Instant;
 
@@ -68,14 +68,21 @@ impl KmeansParallel {
     ) -> (Vec<RoundSnapshot>, RunTelemetry, Matrix) {
         let mut telemetry = RunTelemetry::default();
         let mut snapshots = Vec::new();
+        fleet.reset_wire_meter();
 
         // initialization: a single uniform point, broadcast to machines
         let first = fleet.uniform_point(rng);
         let mut centers = first.clone();
         let init = fleet.kmpar_init(&first, engine);
+        // the uniform point travels up, then back down as the initial
+        // center broadcast — count both so the analytic units cover
+        // everything the wired meters measure
         telemetry.comm.to_coordinator += 1;
+        telemetry.comm.broadcast += 1;
         let mut phi = init.value;
-        let mut init_secs = init.max_secs;
+        // init cost charged to round 1 only, attributed per machine so
+        // the round max is taken over per-machine TOTALS (§8 metric)
+        let mut init_secs = init.per_machine_secs;
 
         for round in 1..=self.rounds {
             // machines sample with prob l·d²/φ and ship the picks
@@ -95,10 +102,14 @@ impl KmeansParallel {
                 removed: 0,
                 remaining: fleet.total_original(),
                 threshold: f64::NAN,
-                machine_time_max: init_secs + sample.max_secs + update.max_secs,
+                machine_time_max: per_machine_round_max(&[
+                    &init_secs,
+                    &sample.per_machine_secs,
+                    &update.per_machine_secs,
+                ]),
                 coordinator_time: 0.0,
             });
-            init_secs = 0.0; // init cost charged to round 1 only
+            init_secs = Vec::new(); // init cost charged to round 1 only
 
             if snapshot_rounds.contains(&round) {
                 snapshots.push(RoundSnapshot {
@@ -107,6 +118,11 @@ impl KmeansParallel {
                 });
             }
         }
+        // the oversampling protocol's communication ends here (the
+        // weighted reduction in run() is evaluation)
+        let (wire_up, wire_down) = fleet.wire_bytes();
+        telemetry.comm.bytes_to_coordinator = wire_up;
+        telemetry.comm.bytes_broadcast = wire_down;
         (snapshots, telemetry, centers)
     }
 
@@ -188,6 +204,33 @@ mod tests {
         assert_eq!(snaps[2].centers_pre.rows(), final_pre.rows());
         assert_eq!(telem.num_rounds(), 4);
         assert!(telem.machine_time() > 0.0);
+    }
+
+    #[test]
+    fn killed_machine_matches_fleet_without_that_shard() {
+        // regression: kmpar_init/update/sample used to ignore the dead
+        // flag, so a machine killed via Fleet::kill_machine kept
+        // contributing its full shard to k-means|| runs. A fleet with a
+        // killed machine must replay identically to one whose machine
+        // holds an empty shard (same machine count, same RNG streams).
+        let gm = generate(&GaussianMixtureSpec::paper(4_000, 4), &mut Pcg64::new(41));
+        let shards = gm.points.split_rows(5);
+        let mut with_dead = Fleet::from_shards(shards.clone(), 42);
+        assert!(with_dead.kill_machine(3) > 0);
+        let mut shards_without = shards;
+        shards_without[3] = Matrix::zeros(0, gm.points.cols());
+        let mut without = Fleet::from_shards(shards_without, 42);
+
+        let km = KmeansParallel::new(4, 3);
+        let out_a = km.run(&mut with_dead, &NativeEngine, &LloydKMeans::default(), 43);
+        let out_b = km.run(&mut without, &NativeEngine, &LloydKMeans::default(), 43);
+        assert_eq!(out_a.centers_pre, out_b.centers_pre);
+        assert_eq!(out_a.final_centers, out_b.final_centers);
+        assert_eq!(out_a.cost.to_bits(), out_b.cost.to_bits());
+        assert_eq!(
+            out_a.telemetry.comm.to_coordinator,
+            out_b.telemetry.comm.to_coordinator
+        );
     }
 
     #[test]

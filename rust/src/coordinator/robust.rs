@@ -22,7 +22,7 @@ use crate::core::cost::{truncated_cost, truncated_sum};
 use crate::core::Matrix;
 use crate::machines::Fleet;
 use crate::runtime::Engine;
-use crate::telemetry::{RoundLog, RunTelemetry};
+use crate::telemetry::{per_machine_round_max, RoundLog, RunTelemetry};
 use crate::util::rng::Pcg64;
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -57,6 +57,7 @@ pub fn run_soccer_robust(
     seed: u64,
 ) -> RobustOutcome {
     let t_run = Instant::now();
+    fleet.reset_wire_meter();
     let mut rng = Pcg64::new(seed);
     let n0 = fleet.total_live();
     let dim = fleet.dim();
@@ -114,7 +115,11 @@ pub fn run_soccer_robust(
             removed: removal.value,
             remaining: fleet.total_live(),
             threshold: v,
-            machine_time_max: sample.max_secs + removal.max_secs,
+            // §8 metric: max over machines of the per-machine total
+            machine_time_max: per_machine_round_max(&[
+                &sample.per_machine_secs,
+                &removal.per_machine_secs,
+            ]),
             coordinator_time: coord_secs,
         });
         // same control-plane accounting as run_soccer (always exact
@@ -126,6 +131,10 @@ pub fn run_soccer_robust(
     // of V before the final A(V, k) (k-means-with-outliers style)
     let v_final = fleet.drain();
     telemetry.comm.to_coordinator += v_final.rows();
+    // protocol communication ends here; exclude the evaluation traffic
+    let (wire_up, wire_down) = fleet.wire_bytes();
+    telemetry.comm.bytes_to_coordinator = wire_up;
+    telemetry.comm.bytes_broadcast = wire_down;
     if !v_final.is_empty() {
         let cleaned = if cfg.outliers_z > 0 && !c_out.is_empty() && v_final.rows() > cfg.outliers_z
         {

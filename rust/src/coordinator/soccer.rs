@@ -13,7 +13,7 @@ use crate::core::cost::truncated_cost;
 use crate::core::Matrix;
 use crate::machines::Fleet;
 use crate::runtime::Engine;
-use crate::telemetry::{RoundLog, RunTelemetry};
+use crate::telemetry::{per_machine_round_max, RoundLog, RunTelemetry};
 use crate::util::rng::Pcg64;
 use std::time::Instant;
 
@@ -46,6 +46,7 @@ pub fn run_soccer(
     seed: u64,
 ) -> SoccerOutcome {
     let t_run = Instant::now();
+    fleet.reset_wire_meter();
     let mut rng = Pcg64::new(seed);
     let n0 = fleet.total_live();
     let dim = fleet.dim();
@@ -96,7 +97,13 @@ pub fn run_soccer(
             removed,
             remaining: fleet.total_live(),
             threshold: v,
-            machine_time_max: sample.max_secs + removal.max_secs,
+            // §8 metric: the slowest machine's sample+removal TOTAL —
+            // not sample.max_secs + removal.max_secs, whose maxima can
+            // come from different machines
+            machine_time_max: per_machine_round_max(&[
+                &sample.per_machine_secs,
+                &removal.per_machine_secs,
+            ]),
             coordinator_time: coord_secs,
         });
         // control-plane scalars: the (v, |C_iter|) broadcast pair, plus
@@ -115,6 +122,12 @@ pub fn run_soccer(
     // on the zero-round path there is no RoundLog to attach it to.
     let v_final = fleet.drain();
     telemetry.comm.to_coordinator += v_final.rows();
+    // protocol communication ends at the drain: snapshot the transport
+    // meters here so the (diagnostic) cost/counts evaluation below is
+    // excluded, matching what the paper's tables count
+    let (wire_up, wire_down) = fleet.wire_bytes();
+    telemetry.comm.bytes_to_coordinator = wire_up;
+    telemetry.comm.bytes_broadcast = wire_down;
     if !v_final.is_empty() {
         let t_coord = Instant::now();
         let c_final = blackbox.cluster(&v_final, params.k, &mut rng);

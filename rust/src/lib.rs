@@ -6,6 +6,10 @@
 //! - [`coordinator`] — the SOCCER algorithm (Alg. 1 of the paper),
 //! - [`machines`] — the simulated machine fleet with communication and
 //!   per-machine time accounting,
+//! - [`transport`] — the wire layer under the fleet: a `Transport`
+//!   trait (length-prefixed frames), an mpsc-channel and a loopback-TCP
+//!   implementation with byte meters, and the direct-call fast path —
+//!   communication accounting is *measured*, not asserted,
 //! - [`baselines`] — k-means|| (Bahmani et al. 2012), EIM11 (Ene et al.
 //!   2011) and a centralized reference,
 //! - [`clustering`] — the centralized black-box algorithms the
@@ -29,6 +33,7 @@ pub mod data;
 pub mod machines;
 pub mod runtime;
 pub mod telemetry;
+pub mod transport;
 pub mod util;
 
 pub use crate::core::Matrix;

@@ -6,23 +6,80 @@
 //! sequentially on the coordinator thread (PJRT types are
 //! thread-confined). Either way each task is individually timed and a
 //! round's machine time is max_j t_j, matching the paper's metric.
+//!
+//! Communication model: every coordinator↔machine exchange goes through
+//! the fleet's [`FleetChannel`]. The default [`TransportKind::Direct`]
+//! channel invokes machine methods directly (zero serialization — the
+//! fast path benches run on). A wired channel
+//! ([`TransportKind::InProc`] / [`TransportKind::LoopbackTcp`])
+//! serializes every payload through `transport::wire` and meters the
+//! bytes, so `CommStats` byte fields are *measured*, not asserted. The
+//! two paths are deterministic twins: the codec round-trips f32/f64
+//! bit-exactly and both sides consume identical RNG streams, so a run
+//! over a wired fleet produces the same outcome as a direct one.
+//!
+//! Coordinator-side metadata (`total_live`, per-machine live sizes for
+//! quota draws, failure injection via `kill_machine`) is read directly
+//! in both modes: the coordinator legitimately tracks shard sizes from
+//! removal acks, and killing a machine models a crash, not a message.
+//! A killed machine's link stays open and keeps answering exchanges
+//! with empty payloads (zero points, zero counts) — failure injection
+//! crashes the *data*, not the link — so wired byte meters on a
+//! failure run include those empty control frames; the byte
+//! reconciliation tests therefore run on failure-free fleets.
 
-use super::machine::Machine;
+use super::machine::{Machine, Timed};
 use crate::core::Matrix;
 use crate::runtime::{Engine, NativeEngine};
+use crate::transport::wire::{FrameReader, FrameWriter};
+use crate::transport::{Down, FleetChannel, TransportKind, WiredChannel};
 use crate::util::pool::par_map_mut;
 use crate::util::rng::Pcg64;
 
 pub struct Fleet {
     machines: Vec<Machine>,
     pub workers: usize,
+    channel: FleetChannel,
 }
 
 /// Aggregated result of a fleet-wide step.
 pub struct StepOut<T> {
     pub value: T,
-    /// max over machines of the per-machine time (the paper's metric)
-    pub max_secs: f64,
+    /// per-machine times in machine order — kept so a round built from
+    /// several steps can attribute time as max_j Σ_steps t_j (the
+    /// paper's §8 metric) instead of Σ_steps max_j t_j
+    pub per_machine_secs: Vec<f64>,
+}
+
+impl<T> StepOut<T> {
+    pub fn from_parts(value: T, per_machine_secs: Vec<f64>) -> StepOut<T> {
+        StepOut {
+            value,
+            per_machine_secs,
+        }
+    }
+
+    /// max over machines of this single step's time (the paper's
+    /// metric for a one-step round).
+    pub fn max_secs(&self) -> f64 {
+        self.per_machine_secs.iter().fold(0.0f64, |a, &b| a.max(b))
+    }
+}
+
+/// Run `f` on every machine, parallel when the engine allows it.
+fn each_direct<R: Send>(
+    machines: &mut [Machine],
+    workers: usize,
+    engine: &dyn Engine,
+    f: impl Fn(&mut Machine, &dyn Engine) -> R + Sync,
+) -> Vec<R> {
+    if engine.parallel_safe() {
+        // parallel path: NativeEngine is a ZST with identical
+        // semantics, so hand each thread its own copy
+        par_map_mut(machines, workers, |_, m| f(m, &NativeEngine))
+    } else {
+        machines.iter_mut().map(|m| f(m, engine)).collect()
+    }
 }
 
 impl Fleet {
@@ -31,7 +88,15 @@ impl Fleet {
     /// an independent RNG stream derived from `seed`.
     pub fn new(points: &Matrix, m: usize, seed: u64) -> Fleet {
         assert!(m >= 1);
-        let shards = points.split_rows(m);
+        Fleet::from_shards(points.split_rows(m), seed)
+    }
+
+    /// Build a fleet from an explicit (arbitrary) partition. Machine
+    /// `j` holds `shards[j]` and the RNG stream derived from `seed`
+    /// with tag `j` — the same streams `Fleet::new` hands out, so a
+    /// fleet over `points.split_rows(m)` is identical to `new`.
+    pub fn from_shards(shards: Vec<Matrix>, seed: u64) -> Fleet {
+        assert!(!shards.is_empty());
         let mut root = Pcg64::new(seed);
         let machines = shards
             .into_iter()
@@ -41,7 +106,53 @@ impl Fleet {
         Fleet {
             machines,
             workers: crate::util::pool::default_workers(),
+            channel: FleetChannel::Direct,
         }
+    }
+
+    /// Build a fleet whose coordinator↔machine links run over the given
+    /// transport (see [`crate::transport`]). `TransportKind::Direct`
+    /// yields exactly `Fleet::new`.
+    pub fn with_transport(
+        points: &Matrix,
+        m: usize,
+        seed: u64,
+        kind: TransportKind,
+    ) -> crate::util::error::Result<Fleet> {
+        let mut fleet = Fleet::new(points, m, seed);
+        fleet.channel = FleetChannel::connect(kind, fleet.machines.len())?;
+        Ok(fleet)
+    }
+
+    /// Name of the transport the fleet's links run over.
+    pub fn transport_name(&self) -> &'static str {
+        self.channel.name()
+    }
+
+    /// Measured protocol bytes `(machines → coordinator, coordinator →
+    /// machines)` since the last meter reset. `(0, 0)` on a direct
+    /// fleet — the direct path has no wire to measure.
+    pub fn wire_bytes(&self) -> (usize, usize) {
+        match &self.channel {
+            FleetChannel::Direct => (0, 0),
+            FleetChannel::Wired(w) => w.wire_bytes(),
+        }
+    }
+
+    /// Zero the wire meters (coordinators call this at run start so a
+    /// run's telemetry reports that run's bytes only).
+    pub fn reset_wire_meter(&mut self) {
+        if let FleetChannel::Wired(w) = &mut self.channel {
+            w.reset_meter();
+        }
+    }
+
+    /// Split borrows: the machine slice and (when wired) the channel.
+    fn parts(&mut self) -> (&mut Vec<Machine>, Option<&mut WiredChannel>) {
+        let Fleet {
+            machines, channel, ..
+        } = self;
+        (machines, channel.wired_mut())
     }
 
     pub fn num_machines(&self) -> usize {
@@ -69,6 +180,7 @@ impl Fleet {
         for m in &mut self.machines {
             m.reset();
         }
+        self.reset_wire_meter();
     }
 
     /// Restore shards AND derive fresh per-machine RNG streams from
@@ -79,21 +191,7 @@ impl Fleet {
             m.reset();
             m.reseed(root.split(i as u64));
         }
-    }
-
-    /// Run `f` on every machine, parallel when the engine allows it.
-    fn each<R: Send>(
-        &mut self,
-        engine: &dyn Engine,
-        f: impl Fn(&mut Machine, &dyn Engine) -> R + Sync,
-    ) -> Vec<R> {
-        if engine.parallel_safe() {
-            // parallel path: NativeEngine is a ZST with identical
-            // semantics, so hand each thread its own copy
-            par_map_mut(&mut self.machines, self.workers, |_, m| f(m, &NativeEngine))
-        } else {
-            self.machines.iter_mut().map(|m| f(m, engine)).collect()
-        }
+        self.reset_wire_meter();
     }
 
     /// Per-machine quotas summing to exactly `min(total, total_live)`:
@@ -133,65 +231,178 @@ impl Fleet {
     /// without replacement. Returns two independent samples of exactly
     /// `total` points each (clamped by the fleet's live total). Machines
     /// run in parallel like `sample_pair_bernoulli`; the per-machine
-    /// task covers BOTH quota draws, so max_secs = max_j (t1_j + t2_j).
-    pub fn sample_pair_exact(&mut self, total: usize, coord_rng: &mut Pcg64) -> StepOut<(Matrix, Matrix)> {
+    /// task covers BOTH quota draws, so machine j's reported time is
+    /// t1_j + t2_j.
+    pub fn sample_pair_exact(
+        &mut self,
+        total: usize,
+        coord_rng: &mut Pcg64,
+    ) -> StepOut<(Matrix, Matrix)> {
+        // clamp before allocating: a huge requested sample on a tiny
+        // fleet must not reserve memory for points that cannot exist
+        let total = total.min(self.total_live());
         let q1 = self.exact_quotas(total, coord_rng);
         let q2 = self.exact_quotas(total, coord_rng);
         let dim = self.dim();
-        let outs = par_map_mut(&mut self.machines, self.workers, |i, m| {
+        let workers = self.workers;
+        let (machines, wired) = self.parts();
+
+        if let Some(chan) = wired {
+            // wire path: one quota message per machine (two u64 quotas),
+            // one reply carrying both samples + the machine's self-timed
+            // seconds
+            let reqs: Vec<Vec<u8>> = q1
+                .iter()
+                .zip(&q2)
+                .map(|(&a, &b)| {
+                    let mut w = FrameWriter::with_capacity(16);
+                    w.put_u64(a as u64);
+                    w.put_u64(b as u64);
+                    w.finish()
+                })
+                .collect();
+            let replies = chan.exchange(
+                machines,
+                &NativeEngine,
+                Down::PerMachine(&reqs),
+                |m, req, _e| {
+                    let mut r = FrameReader::new(req);
+                    let a = r.get_u64() as usize;
+                    let b = r.get_u64() as usize;
+                    let t1 = m.sample_exact(a);
+                    let t2 = m.sample_exact(b);
+                    let mut w = FrameWriter::new();
+                    w.put_matrix(&t1.value);
+                    w.put_matrix(&t2.value);
+                    w.put_f64(t1.secs + t2.secs);
+                    w.finish()
+                },
+            );
+            return Self::reduce_pair(&replies, total, dim);
+        }
+
+        let outs = par_map_mut(machines, workers, |i, m| {
             let t1 = m.sample_exact(q1[i]);
             let t2 = m.sample_exact(q2[i]);
             (t1, t2)
         });
         let mut p1 = Matrix::with_capacity(total, dim);
         let mut p2 = Matrix::with_capacity(total, dim);
-        let mut max_secs = 0.0f64;
+        let mut per = Vec::with_capacity(outs.len());
         for (t1, t2) in outs {
             p1.extend(&t1.value);
             p2.extend(&t2.value);
-            max_secs = max_secs.max(t1.secs + t2.secs);
+            per.push(t1.secs + t2.secs);
         }
-        StepOut {
-            value: (p1, p2),
-            max_secs,
-        }
+        StepOut::from_parts((p1, p2), per)
     }
 
     /// Bernoulli sampling exactly as written in Alg. 1 line 4.
     pub fn sample_pair_bernoulli(&mut self, alpha: f64) -> StepOut<(Matrix, Matrix)> {
         let dim = self.dim();
-        let outs = par_map_mut(&mut self.machines, self.workers, |_, m| {
-            m.sample_bernoulli_pair(alpha)
-        });
+        let workers = self.workers;
+        let (machines, wired) = self.parts();
+
+        if let Some(chan) = wired {
+            let mut w = FrameWriter::with_capacity(8);
+            w.put_f64(alpha);
+            let req = w.finish();
+            let replies =
+                chan.exchange(machines, &NativeEngine, Down::Broadcast(&req), |m, req, _e| {
+                    let mut r = FrameReader::new(req);
+                    let alpha = r.get_f64();
+                    let t = m.sample_bernoulli_pair(alpha);
+                    let mut w = FrameWriter::new();
+                    w.put_matrix(&t.value.0);
+                    w.put_matrix(&t.value.1);
+                    w.put_f64(t.secs);
+                    w.finish()
+                });
+            return Self::reduce_pair(&replies, 64, dim);
+        }
+
+        let outs = par_map_mut(machines, workers, |_, m| m.sample_bernoulli_pair(alpha));
         let mut p1 = Matrix::with_capacity(64, dim);
         let mut p2 = Matrix::with_capacity(64, dim);
-        let mut max_secs = 0.0f64;
+        let mut per = Vec::with_capacity(outs.len());
         for t in outs {
             p1.extend(&t.value.0);
             p2.extend(&t.value.1);
-            max_secs = max_secs.max(t.secs);
+            per.push(t.secs);
         }
-        StepOut {
-            value: (p1, p2),
-            max_secs,
-        }
+        StepOut::from_parts((p1, p2), per)
     }
 
     /// Broadcast (centers, v) and run the removal step on every machine.
     /// Returns total points removed.
-    pub fn broadcast_remove(&mut self, centers: &Matrix, v: f32, engine: &dyn Engine) -> StepOut<usize> {
-        let outs = self.each(engine, |m, e| m.remove_within(centers, v, e));
-        StepOut {
-            value: outs.iter().map(|t| t.value).sum(),
-            max_secs: outs.iter().map(|t| t.secs).fold(0.0, f64::max),
+    pub fn broadcast_remove(
+        &mut self,
+        centers: &Matrix,
+        v: f32,
+        engine: &dyn Engine,
+    ) -> StepOut<usize> {
+        let workers = self.workers;
+        let (machines, wired) = self.parts();
+
+        if let Some(chan) = wired {
+            let mut w = FrameWriter::new();
+            w.put_f32(v);
+            w.put_matrix(centers);
+            let req = w.finish();
+            let replies = chan.exchange(machines, engine, Down::Broadcast(&req), |m, req, e| {
+                let mut r = FrameReader::new(req);
+                let v = r.get_f32();
+                let centers = r.get_matrix();
+                let t = m.remove_within(&centers, v, e);
+                let mut w = FrameWriter::with_capacity(16);
+                w.put_u64(t.value as u64);
+                w.put_f64(t.secs);
+                w.finish()
+            });
+            let mut removed = 0usize;
+            let mut per = Vec::with_capacity(replies.len());
+            for reply in &replies {
+                let mut r = FrameReader::new(reply);
+                removed += r.get_u64() as usize;
+                per.push(r.get_f64());
+            }
+            return StepOut::from_parts(removed, per);
         }
+
+        let outs = each_direct(machines, workers, engine, |m, e| m.remove_within(centers, v, e));
+        StepOut::from_parts(
+            outs.iter().map(|t| t.value).sum(),
+            outs.iter().map(|t| t.secs).collect(),
+        )
     }
 
     /// Collect all remaining live points at the coordinator (line 15).
     pub fn drain(&mut self) -> Matrix {
         let dim = self.dim();
-        let mut v = Matrix::with_capacity(self.total_live(), dim);
-        for m in &mut self.machines {
+        let total = self.total_live();
+        let (machines, wired) = self.parts();
+
+        if let Some(chan) = wired {
+            let replies = chan.exchange(
+                machines,
+                &NativeEngine,
+                Down::Broadcast(&[]),
+                |m, _req, _e| {
+                    let mut w = FrameWriter::new();
+                    w.put_matrix(&m.drain());
+                    w.finish()
+                },
+            );
+            let mut v = Matrix::with_capacity(total, dim);
+            for reply in &replies {
+                let mut r = FrameReader::new(reply);
+                v.extend(&r.get_matrix());
+            }
+            return v;
+        }
+
+        let mut v = Matrix::with_capacity(total, dim);
+        for m in machines.iter_mut() {
             let part = m.drain();
             v.extend(&part);
         }
@@ -200,62 +411,199 @@ impl Fleet {
 
     /// Distributed evaluation of cost(X, centers) over ORIGINAL shards.
     pub fn cost_full(&mut self, centers: &Matrix, engine: &dyn Engine) -> StepOut<f64> {
-        let outs = self.each(engine, |m, e| m.cost_original(centers, e));
-        StepOut {
-            value: outs.iter().map(|t| t.value).sum(),
-            max_secs: outs.iter().map(|t| t.secs).fold(0.0, f64::max),
+        let workers = self.workers;
+        let (machines, wired) = self.parts();
+
+        if let Some(chan) = wired {
+            return Self::wired_scalar_step(chan, machines, engine, centers, |m, c, e| {
+                m.cost_original(c, e)
+            });
         }
+
+        let outs = each_direct(machines, workers, engine, |m, e| m.cost_original(centers, e));
+        StepOut::from_parts(
+            outs.iter().map(|t| t.value).sum(),
+            outs.iter().map(|t| t.secs).collect(),
+        )
     }
 
     /// Distributed cluster sizes of `centers` over X (reduction weights).
     pub fn counts_full(&mut self, centers: &Matrix, engine: &dyn Engine) -> StepOut<Vec<f64>> {
         let k = centers.rows();
-        let outs = self.each(engine, |m, e| m.counts_original(centers, e));
+        let workers = self.workers;
+        let (machines, wired) = self.parts();
+
+        if let Some(chan) = wired {
+            let mut w = FrameWriter::new();
+            w.put_matrix(centers);
+            let req = w.finish();
+            let replies = chan.exchange(machines, engine, Down::Broadcast(&req), |m, req, e| {
+                let mut r = FrameReader::new(req);
+                let centers = r.get_matrix();
+                let t = m.counts_original(&centers, e);
+                let mut w = FrameWriter::new();
+                w.put_f64s(&t.value);
+                w.put_f64(t.secs);
+                w.finish()
+            });
+            return Self::reduce_counts(k, &replies);
+        }
+
+        let outs = each_direct(machines, workers, engine, |m, e| m.counts_original(centers, e));
         let mut total = vec![0.0f64; k];
-        let mut max_secs = 0.0f64;
+        let mut per = Vec::with_capacity(outs.len());
         for t in outs {
             for (a, b) in total.iter_mut().zip(&t.value) {
                 *a += b;
             }
-            max_secs = max_secs.max(t.secs);
+            per.push(t.secs);
         }
-        StepOut {
-            value: total,
-            max_secs,
+        StepOut::from_parts(total, per)
+    }
+
+    /// Decode per-machine `(counts, secs)` replies and sum the counts.
+    fn reduce_counts(k: usize, replies: &[Vec<u8>]) -> StepOut<Vec<f64>> {
+        let mut total = vec![0.0f64; k];
+        let mut per = Vec::with_capacity(replies.len());
+        for reply in replies {
+            let mut r = FrameReader::new(reply);
+            let counts = r.get_f64s();
+            for (a, b) in total.iter_mut().zip(&counts) {
+                *a += b;
+            }
+            per.push(r.get_f64());
         }
+        StepOut::from_parts(total, per)
     }
 
     // ---- k-means|| fleet steps ---------------------------------------------
 
     pub fn kmpar_init(&mut self, initial: &Matrix, engine: &dyn Engine) -> StepOut<f64> {
-        let outs = self.each(engine, |m, e| m.kmpar_init(initial, e));
-        StepOut {
-            value: outs.iter().map(|t| t.value).sum(),
-            max_secs: outs.iter().map(|t| t.secs).fold(0.0, f64::max),
+        let workers = self.workers;
+        let (machines, wired) = self.parts();
+
+        if let Some(chan) = wired {
+            return Self::wired_scalar_step(chan, machines, engine, initial, |m, c, e| {
+                m.kmpar_init(c, e)
+            });
         }
+
+        let outs = each_direct(machines, workers, engine, |m, e| m.kmpar_init(initial, e));
+        StepOut::from_parts(
+            outs.iter().map(|t| t.value).sum(),
+            outs.iter().map(|t| t.secs).collect(),
+        )
     }
 
     pub fn kmpar_update(&mut self, new_centers: &Matrix, engine: &dyn Engine) -> StepOut<f64> {
-        let outs = self.each(engine, |m, e| m.kmpar_update(new_centers, e));
-        StepOut {
-            value: outs.iter().map(|t| t.value).sum(),
-            max_secs: outs.iter().map(|t| t.secs).fold(0.0, f64::max),
+        let workers = self.workers;
+        let (machines, wired) = self.parts();
+
+        if let Some(chan) = wired {
+            return Self::wired_scalar_step(chan, machines, engine, new_centers, |m, c, e| {
+                m.kmpar_update(c, e)
+            });
         }
+
+        let outs = each_direct(machines, workers, engine, |m, e| m.kmpar_update(new_centers, e));
+        StepOut::from_parts(
+            outs.iter().map(|t| t.value).sum(),
+            outs.iter().map(|t| t.secs).collect(),
+        )
+    }
+
+    /// The shared wired shape of every "broadcast a center set, reduce
+    /// an f64" step: encode the matrix once, exchange, decode
+    /// `(value, secs)` per machine and sum. One frame layout, one
+    /// place to change it.
+    fn wired_scalar_step(
+        chan: &mut WiredChannel,
+        machines: &mut [Machine],
+        engine: &dyn Engine,
+        centers: &Matrix,
+        op: impl Fn(&mut Machine, &Matrix, &dyn Engine) -> Timed<f64> + Sync,
+    ) -> StepOut<f64> {
+        let mut w = FrameWriter::new();
+        w.put_matrix(centers);
+        let req = w.finish();
+        let replies = chan.exchange(machines, engine, Down::Broadcast(&req), |m, req, e| {
+            let mut r = FrameReader::new(req);
+            let centers = r.get_matrix();
+            let t = op(m, &centers, e);
+            let mut w = FrameWriter::with_capacity(16);
+            w.put_f64(t.value);
+            w.put_f64(t.secs);
+            w.finish()
+        });
+        Self::reduce_scalar(&replies)
+    }
+
+    /// Decode per-machine `(matrix, matrix, secs)` replies into two
+    /// concatenated samples (shared by both sampling variants).
+    fn reduce_pair(replies: &[Vec<u8>], rows_hint: usize, dim: usize) -> StepOut<(Matrix, Matrix)> {
+        let mut p1 = Matrix::with_capacity(rows_hint, dim);
+        let mut p2 = Matrix::with_capacity(rows_hint, dim);
+        let mut per = Vec::with_capacity(replies.len());
+        for reply in replies {
+            let mut r = FrameReader::new(reply);
+            p1.extend(&r.get_matrix());
+            p2.extend(&r.get_matrix());
+            per.push(r.get_f64());
+        }
+        StepOut::from_parts((p1, p2), per)
+    }
+
+    /// Decode per-machine `(f64 value, secs)` replies and sum the values.
+    fn reduce_scalar(replies: &[Vec<u8>]) -> StepOut<f64> {
+        let mut total = 0.0f64;
+        let mut per = Vec::with_capacity(replies.len());
+        for reply in replies {
+            let mut r = FrameReader::new(reply);
+            total += r.get_f64();
+            per.push(r.get_f64());
+        }
+        StepOut::from_parts(total, per)
     }
 
     pub fn kmpar_sample(&mut self, l: f64, phi: f64) -> StepOut<Matrix> {
         let dim = self.dim();
-        let outs = par_map_mut(&mut self.machines, self.workers, |_, m| m.kmpar_sample(l, phi));
+        let workers = self.workers;
+        let (machines, wired) = self.parts();
+
+        if let Some(chan) = wired {
+            let mut w = FrameWriter::with_capacity(16);
+            w.put_f64(l);
+            w.put_f64(phi);
+            let req = w.finish();
+            let replies =
+                chan.exchange(machines, &NativeEngine, Down::Broadcast(&req), |m, req, _e| {
+                    let mut r = FrameReader::new(req);
+                    let l = r.get_f64();
+                    let phi = r.get_f64();
+                    let t = m.kmpar_sample(l, phi);
+                    let mut w = FrameWriter::new();
+                    w.put_matrix(&t.value);
+                    w.put_f64(t.secs);
+                    w.finish()
+                });
+            let mut all = Matrix::with_capacity(16, dim);
+            let mut per = Vec::with_capacity(replies.len());
+            for reply in &replies {
+                let mut r = FrameReader::new(reply);
+                all.extend(&r.get_matrix());
+                per.push(r.get_f64());
+            }
+            return StepOut::from_parts(all, per);
+        }
+
+        let outs = par_map_mut(machines, workers, |_, m| m.kmpar_sample(l, phi));
         let mut all = Matrix::with_capacity(16, dim);
-        let mut max_secs = 0.0f64;
+        let mut per = Vec::with_capacity(outs.len());
         for t in outs {
             all.extend(&t.value);
-            max_secs = max_secs.max(t.secs);
+            per.push(t.secs);
         }
-        StepOut {
-            value: all,
-            max_secs,
-        }
+        StepOut::from_parts(all, per)
     }
 
     /// Outlier-aware reduction weights: cluster sizes over points with
@@ -267,16 +615,39 @@ impl Fleet {
         engine: &dyn Engine,
     ) -> StepOut<Vec<f64>> {
         let k = centers.rows();
-        let outs = self.each(engine, |m, e| m.counts_original_below(centers, cutoff, e));
+        let workers = self.workers;
+        let (machines, wired) = self.parts();
+
+        if let Some(chan) = wired {
+            let mut w = FrameWriter::new();
+            w.put_f32(cutoff);
+            w.put_matrix(centers);
+            let req = w.finish();
+            let replies = chan.exchange(machines, engine, Down::Broadcast(&req), |m, req, e| {
+                let mut r = FrameReader::new(req);
+                let cutoff = r.get_f32();
+                let centers = r.get_matrix();
+                let t = m.counts_original_below(&centers, cutoff, e);
+                let mut w = FrameWriter::new();
+                w.put_f64s(&t.value);
+                w.put_f64(t.secs);
+                w.finish()
+            });
+            return Self::reduce_counts(k, &replies);
+        }
+
+        let outs = each_direct(machines, workers, engine, |m, e| {
+            m.counts_original_below(centers, cutoff, e)
+        });
         let mut total = vec![0.0f64; k];
-        let mut max_secs = 0.0f64;
+        let mut per = Vec::with_capacity(outs.len());
         for t in outs {
             for (a, b) in total.iter_mut().zip(&t.value) {
                 *a += b;
             }
-            max_secs = max_secs.max(t.secs);
+            per.push(t.secs);
         }
-        StepOut { value: total, max_secs }
+        StepOut::from_parts(total, per)
     }
 
     /// Kill a machine: its live shard is lost (crash without
@@ -295,7 +666,32 @@ impl Fleet {
     /// Per-point costs of `centers` over the ORIGINAL shards of all
     /// surviving machines, concatenated (for trimmed-cost evaluation).
     pub fn per_point_costs_full(&mut self, centers: &Matrix, engine: &dyn Engine) -> Vec<f32> {
-        let outs = self.each(engine, |m, e| m.per_point_costs_original(centers, e));
+        let workers = self.workers;
+        let (machines, wired) = self.parts();
+
+        if let Some(chan) = wired {
+            let mut w = FrameWriter::new();
+            w.put_matrix(centers);
+            let req = w.finish();
+            let replies = chan.exchange(machines, engine, Down::Broadcast(&req), |m, req, e| {
+                let mut r = FrameReader::new(req);
+                let centers = r.get_matrix();
+                let t = m.per_point_costs_original(&centers, e);
+                let mut w = FrameWriter::new();
+                w.put_f32s(&t.value);
+                w.finish()
+            });
+            let mut all = Vec::new();
+            for reply in &replies {
+                let mut r = FrameReader::new(reply);
+                all.extend(r.get_f32s());
+            }
+            return all;
+        }
+
+        let outs = each_direct(machines, workers, engine, |m, e| {
+            m.per_point_costs_original(centers, e)
+        });
         let mut all = Vec::new();
         for t in outs {
             all.extend(t.value);
@@ -309,13 +705,37 @@ impl Fleet {
         let total = self.total_live();
         assert!(total > 0);
         let mut target = coord_rng.below(total);
-        for m in &mut self.machines {
+        // resolve (machine, local index) from coordinator-side size
+        // metadata; the point itself still crosses the wire
+        let mut pick = None;
+        for (j, m) in self.machines.iter().enumerate() {
             if target < m.n_live() {
-                return m.live().select(&[target]);
+                pick = Some((j, target));
+                break;
             }
             target -= m.n_live();
         }
-        unreachable!("index within total")
+        let (j_pick, local) = pick.expect("index within total");
+        let (machines, wired) = self.parts();
+
+        if let Some(chan) = wired {
+            // only the picked machine participates: a single-link
+            // exchange keeps the meters free of skip-message traffic
+            let mut w = FrameWriter::with_capacity(8);
+            w.put_u64(local as u64);
+            let req = w.finish();
+            let reply = chan.exchange_one(j_pick, &mut machines[j_pick], &req, |m, req| {
+                let mut r = FrameReader::new(req);
+                let idx = r.get_u64() as usize;
+                let mut w = FrameWriter::new();
+                w.put_matrix(&m.live().select(&[idx]));
+                w.finish()
+            });
+            let mut r = FrameReader::new(&reply);
+            return r.get_matrix();
+        }
+
+        machines[j_pick].live().select(&[local])
     }
 }
 
@@ -330,6 +750,12 @@ mod tests {
         Fleet::new(&pts, m, 7)
     }
 
+    fn wired_fleet(n: usize, m: usize, kind: TransportKind) -> Fleet {
+        let mut rng = Pcg64::new(9);
+        let pts = Matrix::from_vec((0..n * 3).map(|_| rng.normal() as f32).collect(), n, 3);
+        Fleet::with_transport(&pts, m, 7, kind).unwrap()
+    }
+
     #[test]
     fn partition_covers_everything() {
         let f = fleet(1003, 50);
@@ -341,12 +767,38 @@ mod tests {
     }
 
     #[test]
+    fn from_shards_matches_new() {
+        let mut rng = Pcg64::new(12);
+        let pts = Matrix::from_vec((0..600).map(|_| rng.normal() as f32).collect(), 200, 3);
+        let mut a = Fleet::new(&pts, 5, 31);
+        let mut b = Fleet::from_shards(pts.split_rows(5), 31);
+        let mut ra = Pcg64::new(1);
+        let mut rb = Pcg64::new(1);
+        let sa = a.sample_pair_exact(40, &mut ra);
+        let sb = b.sample_pair_exact(40, &mut rb);
+        assert_eq!(sa.value.0, sb.value.0);
+        assert_eq!(sa.value.1, sb.value.1);
+    }
+
+    #[test]
     fn exact_sampling_sizes() {
         let mut f = fleet(5000, 13);
         let mut rng = Pcg64::new(1);
         let out = f.sample_pair_exact(400, &mut rng);
         assert_eq!(out.value.0.rows(), 400);
         assert_eq!(out.value.1.rows(), 400);
+        assert_eq!(out.per_machine_secs.len(), 13);
+    }
+
+    #[test]
+    fn exact_sampling_clamps_allocation_on_tiny_fleet() {
+        // regression: a huge requested total on a tiny fleet must clamp
+        // to the live total before reserving (no multi-GB reservation)
+        let mut f = fleet(50, 4);
+        let mut rng = Pcg64::new(2);
+        let out = f.sample_pair_exact(usize::MAX / 1024, &mut rng);
+        assert_eq!(out.value.0.rows(), 50);
+        assert_eq!(out.value.1.rows(), 50);
     }
 
     #[test]
@@ -425,6 +877,30 @@ mod tests {
     }
 
     #[test]
+    fn kmpar_steps_skip_dead_machines() {
+        // regression: a machine killed mid-run must stop contributing
+        // its shard to k-means|| (it used to keep sampling from its
+        // retained original shard)
+        let mut f = fleet(400, 4);
+        let eng = NativeEngine;
+        let c0 = Matrix::from_rows(&[&[0.0, 0.0, 0.0]]);
+        let phi_all = f.kmpar_init(&c0, &eng).value;
+        f.kill_machine(1);
+        let phi_after = f.kmpar_update(&c0, &eng).value;
+        // machine 1's shard is gone from the aggregate
+        assert!(phi_after < phi_all, "{phi_after} vs {phi_all}");
+        // the exact survivor mass: re-init over the 3 survivors
+        let phi_reinit = f.kmpar_init(&c0, &eng).value;
+        assert!((phi_after - phi_reinit).abs() <= 1e-9 * phi_reinit.max(1.0));
+        // kill everything: phi collapses to 0 and sampling yields nothing
+        for id in 0..4 {
+            f.kill_machine(id);
+        }
+        assert_eq!(f.kmpar_update(&c0, &eng).value, 0.0);
+        assert!(f.kmpar_sample(10.0, phi_all).value.is_empty());
+    }
+
+    #[test]
     #[should_panic(expected = "total > 0")]
     fn uniform_point_on_dead_fleet_panics() {
         let mut f = fleet(60, 3);
@@ -458,5 +934,98 @@ mod tests {
         assert_eq!(f.total_live(), 0);
         f.reset();
         assert_eq!(f.total_live(), 500);
+    }
+
+    // ---- wired-channel behavior --------------------------------------------
+
+    #[test]
+    fn transport_wired_steps_match_direct() {
+        // every fleet primitive must produce identical values over the
+        // wire: the codec is bit-exact and both modes consume the same
+        // RNG streams
+        let mut direct = fleet(800, 6);
+        let mut wired = wired_fleet(800, 6, TransportKind::InProc);
+        assert_eq!(wired.transport_name(), "inproc");
+        let eng = NativeEngine;
+        let mut r1 = Pcg64::new(3);
+        let mut r2 = Pcg64::new(3);
+
+        let sd = direct.sample_pair_exact(200, &mut r1);
+        let sw = wired.sample_pair_exact(200, &mut r2);
+        assert_eq!(sd.value.0, sw.value.0);
+        assert_eq!(sd.value.1, sw.value.1);
+        assert_eq!(sw.per_machine_secs.len(), 6);
+
+        let centers = Matrix::from_rows(&[&[0.0, 0.0, 0.0], &[1.0, 1.0, 1.0]]);
+        let rd = direct.broadcast_remove(&centers, 0.5, &eng);
+        let rw = wired.broadcast_remove(&centers, 0.5, &eng);
+        assert_eq!(rd.value, rw.value);
+        assert_eq!(direct.total_live(), wired.total_live());
+
+        assert_eq!(
+            direct.cost_full(&centers, &eng).value,
+            wired.cost_full(&centers, &eng).value
+        );
+        assert_eq!(
+            direct.counts_full(&centers, &eng).value,
+            wired.counts_full(&centers, &eng).value
+        );
+        assert_eq!(
+            direct.per_point_costs_full(&centers, &eng),
+            wired.per_point_costs_full(&centers, &eng)
+        );
+
+        let ud = direct.uniform_point(&mut r1);
+        let uw = wired.uniform_point(&mut r2);
+        assert_eq!(ud, uw);
+
+        let dd = direct.drain();
+        let dw = wired.drain();
+        assert_eq!(dd, dw);
+    }
+
+    #[test]
+    fn transport_meter_counts_protocol_bytes() {
+        use crate::transport::wire::{matrix_bytes, FRAME_OVERHEAD, MATRIX_HEADER};
+        let mut f = wired_fleet(300, 5, TransportKind::InProc);
+        assert_eq!(f.wire_bytes(), (0, 0));
+        let mut rng = Pcg64::new(8);
+        let out = f.sample_pair_exact(60, &mut rng);
+        let sampled = out.value.0.rows() + out.value.1.rows();
+        assert_eq!(sampled, 120);
+        let (up, down) = f.wire_bytes();
+        // down: 5 per-machine quota frames of two u64s
+        assert_eq!(down, 5 * (FRAME_OVERHEAD + 16));
+        // up: 5 replies of (matrix, matrix, f64 secs) carrying 120
+        // points of dimension 3 in total
+        assert_eq!(
+            up,
+            5 * (FRAME_OVERHEAD + 2 * MATRIX_HEADER + 8) + 4 * 3 * sampled
+        );
+        // a broadcast is metered once, not per machine
+        let centers = Matrix::from_rows(&[&[0.0, 0.0, 0.0]]);
+        f.reset_wire_meter();
+        f.broadcast_remove(&centers, 0.1, &NativeEngine);
+        let (_, down) = f.wire_bytes();
+        assert_eq!(down, FRAME_OVERHEAD + 4 + matrix_bytes(1, 3));
+        // reset() clears the meter
+        f.reset();
+        assert_eq!(f.wire_bytes(), (0, 0));
+    }
+
+    #[test]
+    fn transport_wired_fleet_with_dead_machines() {
+        let mut f = wired_fleet(200, 4, TransportKind::InProc);
+        let lost = f.kill_machine(2);
+        assert!(lost > 0);
+        let mut rng = Pcg64::new(5);
+        let out = f.sample_pair_exact(80, &mut rng);
+        assert_eq!(out.value.0.rows(), 80);
+        let centers = Matrix::from_rows(&[&[0.0, 0.0, 0.0]]);
+        let counts = f.counts_full(&centers, &NativeEngine).value;
+        assert_eq!(counts[0] as usize, f.total_original());
+        // sampling does not consume points; drain ships every survivor
+        let live = f.total_live();
+        assert_eq!(f.drain().rows(), live);
     }
 }

@@ -257,8 +257,13 @@ impl Machine {
     // ---- k-means|| machine-side state --------------------------------------
 
     /// Start a k-means|| run: distances to the (single-point) initial
-    /// center set.
+    /// center set. Dead machines contribute nothing (like
+    /// `cost_original`/`counts_original`).
     pub fn kmpar_init(&mut self, initial: &Matrix, engine: &dyn Engine) -> Timed<f64> {
+        if self.dead {
+            self.kmpar_dist.clear();
+            return timed(|| 0.0);
+        }
         let original = &self.original;
         let dist = &mut self.kmpar_dist;
         timed(|| {
@@ -276,7 +281,11 @@ impl Machine {
 
     /// Fold freshly broadcast centers into the per-point distances and
     /// return the machine's local cost Σ d² (for the coordinator's φ).
+    /// Dead machines contribute zero mass.
     pub fn kmpar_update(&mut self, new_centers: &Matrix, engine: &dyn Engine) -> Timed<f64> {
+        if self.dead {
+            return timed(|| 0.0);
+        }
         let original = &self.original;
         let dist = &mut self.kmpar_dist;
         timed(|| {
@@ -295,8 +304,14 @@ impl Machine {
     }
 
     /// k-means|| oversampling pass: select each point independently with
-    /// probability min(1, l·d²(x)/φ).
+    /// probability min(1, l·d²(x)/φ). A dead machine samples nothing —
+    /// and, crucially, consumes no RNG draws, so a fleet with a killed
+    /// machine replays identically to one whose shard never existed.
     pub fn kmpar_sample(&mut self, l: f64, phi: f64) -> Timed<Matrix> {
+        if self.dead {
+            let cols = self.original.cols();
+            return timed(|| Matrix::with_capacity(0, cols));
+        }
         let original = &self.original;
         let dist = &self.kmpar_dist;
         let rng = &mut self.rng;
@@ -402,6 +417,33 @@ mod tests {
         assert!(s.rows() < 100, "sampled {}", s.rows());
         // phi=0 -> empty
         assert_eq!(m.kmpar_sample(10.0, 0.0).value.rows(), 0);
+    }
+
+    #[test]
+    fn dead_machine_contributes_nothing_to_kmpar() {
+        // regression: kill() used to silence cost/counts but NOT the
+        // k-means|| steps, so a dead machine kept shipping samples
+        let mut m = mk(9, 150);
+        let eng = NativeEngine;
+        let c0 = Matrix::from_rows(&[&[0.0, 0.0]]);
+        let phi = m.kmpar_init(&c0, &eng).value;
+        assert!(phi > 0.0);
+        m.kill();
+        assert_eq!(m.kmpar_init(&c0, &eng).value, 0.0);
+        assert_eq!(m.kmpar_update(&c0, &eng).value, 0.0);
+        let rng_before = m.rng.clone();
+        let s = m.kmpar_sample(100.0, phi);
+        assert!(s.value.is_empty());
+        // and no RNG draws were consumed (replay parity with an
+        // empty-shard machine)
+        assert_eq!(m.rng.next_u64(), {
+            let mut r = rng_before;
+            r.next_u64()
+        });
+        // reset revives the machine
+        m.reset();
+        let phi2 = m.kmpar_init(&c0, &eng).value;
+        assert!((phi2 - phi).abs() < 1e-9 * phi.max(1.0));
     }
 
     #[test]

@@ -4,19 +4,31 @@
 //! machine running time (Σ over rounds of the max per-machine time,
 //! §8) and total wall-clock.
 
-/// Communication counters in *points* (the paper's unit; multiply by
-/// 4·d bytes for wire size).
+/// Communication counters. The point counts are analytic bookkeeping
+/// in the paper's unit (multiply by 4·d for data bytes); the byte
+/// counts are *measured* by the fleet's transport when it runs over a
+/// wired channel (`transport::InProcTransport` /
+/// `transport::LoopbackTcpTransport`) and stay 0 on the direct-call
+/// fast path. `tests/end_to_end.rs` asserts the two reconcile exactly:
+/// measured bytes = points × 4·d + the metered frame/control overhead.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommStats {
     /// points sent machines → coordinator
     pub to_coordinator: usize,
-    /// points broadcast coordinator → machines
+    /// points broadcast coordinator → machines (one broadcast = one
+    /// transmission, §3)
     pub broadcast: usize,
     /// scalar control messages — negligible on the wire but tracked for
     /// completeness: the per-round (v, |C_iter|) broadcast pair, plus
     /// either the per-machine quota messages (exact-size sampling, two
     /// per machine per round) or the α broadcast (Bernoulli sampling)
     pub control_scalars: usize,
+    /// measured bytes machines → coordinator (length prefixes included;
+    /// 0 on a direct fleet)
+    pub bytes_to_coordinator: usize,
+    /// measured bytes coordinator → machines, each broadcast counted
+    /// once (0 on a direct fleet)
+    pub bytes_broadcast: usize,
 }
 
 impl CommStats {
@@ -24,7 +36,24 @@ impl CommStats {
         self.to_coordinator += other.to_coordinator;
         self.broadcast += other.broadcast;
         self.control_scalars += other.control_scalars;
+        self.bytes_to_coordinator += other.bytes_to_coordinator;
+        self.bytes_broadcast += other.bytes_broadcast;
     }
+}
+
+/// The paper's §8 per-round machine time: a round is several fleet
+/// steps (legs), each reporting per-machine seconds; the round's
+/// machine time is `max_j Σ_legs t_legs[j]` — the slowest MACHINE's
+/// total, not the sum of per-leg maxima (which mixes machines and
+/// overstates whenever the slow sampler and the slow remover differ).
+pub fn per_machine_round_max(legs: &[&[f64]]) -> f64 {
+    let machines = legs.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut best = 0.0f64;
+    for j in 0..machines {
+        let total: f64 = legs.iter().map(|l| l.get(j).copied().unwrap_or(0.0)).sum();
+        best = best.max(total);
+    }
+    best
 }
 
 /// Per-round record.
@@ -131,14 +160,41 @@ mod tests {
             to_coordinator: 1,
             broadcast: 2,
             control_scalars: 3,
+            bytes_to_coordinator: 4,
+            bytes_broadcast: 5,
         };
         a.add(&CommStats {
             to_coordinator: 10,
             broadcast: 20,
             control_scalars: 30,
+            bytes_to_coordinator: 40,
+            bytes_broadcast: 50,
         });
         assert_eq!(a.to_coordinator, 11);
         assert_eq!(a.broadcast, 22);
         assert_eq!(a.control_scalars, 33);
+        assert_eq!(a.bytes_to_coordinator, 44);
+        assert_eq!(a.bytes_broadcast, 55);
+    }
+
+    #[test]
+    fn per_machine_round_max_is_max_of_totals() {
+        // the synthetic round of the §8 metric bugfix: machine 0 is the
+        // slow sampler, machine 1 the slow remover. The round's machine
+        // time is the slowest machine's TOTAL (1.1), not the old
+        // sum-of-maxima (2.0) which mixed two different machines.
+        let sample = [1.0, 0.1];
+        let removal = [0.1, 1.0];
+        let got = per_machine_round_max(&[&sample, &removal]);
+        assert!((got - 1.1).abs() < 1e-12, "{got}");
+        assert!(got < 2.0);
+        // one balanced machine dominating both legs
+        let got = per_machine_round_max(&[&[0.6, 0.1], &[0.6, 0.2]]);
+        assert!((got - 1.2).abs() < 1e-12);
+        // degenerate shapes: no legs, empty legs, ragged legs
+        assert_eq!(per_machine_round_max(&[]), 0.0);
+        assert_eq!(per_machine_round_max(&[&[], &[]]), 0.0);
+        let got = per_machine_round_max(&[&[1.0], &[0.5, 2.0]]);
+        assert!((got - 2.0).abs() < 1e-12);
     }
 }

@@ -1,0 +1,398 @@
+//! `FleetChannel`: the seam between the coordinator-side fleet
+//! orchestration and the per-machine transports.
+//!
+//! A wired channel owns both ends of every coordinator↔machine link
+//! (the machines run as threads in this process, so their endpoints
+//! live here too) and provides one primitive, [`WiredChannel::exchange`]:
+//! send a request down every link, run the machine-side handler on each
+//! machine concurrently, collect one reply per link. All protocol byte
+//! metering happens here:
+//!
+//! - `down_bytes` — coordinator → machines. A [`Down::Broadcast`] is
+//!   metered **once** regardless of fleet size (the coordinator model's
+//!   broadcast channel, paper §3); [`Down::PerMachine`] frames are
+//!   metered per machine.
+//! - `up_bytes` — machines → coordinator, metered per reply.
+//!
+//! Counts include the 4-byte frame length prefixes, so they reconcile
+//! exactly with the per-endpoint [`Transport`] counters (up to the
+//! broadcast-once convention, which the raw counters don't apply).
+
+use super::{InProcTransport, LoopbackTcpTransport, Transport, TransportKind};
+use crate::runtime::{Engine, NativeEngine};
+use crate::util::error::Result;
+
+/// The downlink payload of one exchange.
+pub enum Down<'a> {
+    /// One frame delivered to every machine, metered once (§3).
+    Broadcast(&'a [u8]),
+    /// One distinct frame per machine, metered per machine.
+    PerMachine(&'a [Vec<u8>]),
+}
+
+/// A fleet's communication fabric: either the direct-call fast path or
+/// a set of wired links.
+pub enum FleetChannel {
+    /// Direct method invocation, zero serialization, no metering — the
+    /// historical fast path benches run on.
+    Direct,
+    Wired(WiredChannel),
+}
+
+impl FleetChannel {
+    /// Open `n` coordinator↔machine links over the given transport.
+    pub fn connect(kind: TransportKind, n: usize) -> Result<FleetChannel> {
+        match kind {
+            TransportKind::Direct => Ok(FleetChannel::Direct),
+            TransportKind::InProc => {
+                let mut coord_eps: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+                let mut machine_eps: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let (c, m) = InProcTransport::pair();
+                    coord_eps.push(Box::new(c));
+                    machine_eps.push(Box::new(m));
+                }
+                Ok(FleetChannel::Wired(WiredChannel::new(coord_eps, machine_eps)))
+            }
+            TransportKind::LoopbackTcp => {
+                let mut coord_eps: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+                let mut machine_eps: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let (c, m) = LoopbackTcpTransport::pair()?;
+                    coord_eps.push(Box::new(c));
+                    machine_eps.push(Box::new(m));
+                }
+                Ok(FleetChannel::Wired(WiredChannel::new(coord_eps, machine_eps)))
+            }
+        }
+    }
+
+    pub fn wired_mut(&mut self) -> Option<&mut WiredChannel> {
+        match self {
+            FleetChannel::Direct => None,
+            FleetChannel::Wired(w) => Some(w),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetChannel::Direct => "direct",
+            FleetChannel::Wired(w) => w.name(),
+        }
+    }
+}
+
+/// The wired fabric: one transport pair per machine plus the protocol
+/// byte meters.
+pub struct WiredChannel {
+    coord_eps: Vec<Box<dyn Transport>>,
+    machine_eps: Vec<Box<dyn Transport>>,
+    up_bytes: usize,
+    down_bytes: usize,
+}
+
+impl WiredChannel {
+    pub fn new(
+        coord_eps: Vec<Box<dyn Transport>>,
+        machine_eps: Vec<Box<dyn Transport>>,
+    ) -> WiredChannel {
+        assert_eq!(coord_eps.len(), machine_eps.len(), "unpaired endpoints");
+        WiredChannel {
+            coord_eps,
+            machine_eps,
+            up_bytes: 0,
+            down_bytes: 0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.coord_eps
+            .first()
+            .map(|t| t.name())
+            .unwrap_or("wired")
+    }
+
+    /// Protocol bytes moved since the last [`WiredChannel::reset_meter`]:
+    /// `(machines → coordinator, coordinator → machines)`.
+    pub fn wire_bytes(&self) -> (usize, usize) {
+        (self.up_bytes, self.down_bytes)
+    }
+
+    pub fn reset_meter(&mut self) {
+        self.up_bytes = 0;
+        self.down_bytes = 0;
+    }
+
+    /// Raw per-endpoint byte totals since the links were opened:
+    /// `(coordinator received, coordinator sent)` — every physical copy
+    /// counted, broadcasts included once per machine.
+    pub fn raw_bytes(&self) -> (usize, usize) {
+        let recv = self.coord_eps.iter().map(|t| t.bytes_received()).sum();
+        let sent = self.coord_eps.iter().map(|t| t.bytes_sent()).sum();
+        (recv, sent)
+    }
+
+    /// One synchronous protocol step: deliver `down` to every machine,
+    /// run `handler` machine-side on each, return the replies in
+    /// machine order.
+    ///
+    /// Under a `parallel_safe` engine each machine runs on its own
+    /// thread with a `NativeEngine` while the coordinator streams
+    /// requests and drains replies concurrently — large frames can't
+    /// deadlock socket buffers. One thread per machine is deliberate,
+    /// NOT a missing `workers` cap: deadlock freedom requires every
+    /// machine endpoint to be actively draining while the coordinator
+    /// is still streaming requests (a capped pool serving machines
+    /// sequentially would stall the coordinator's send to a machine
+    /// whose worker is busy, while that worker stalls on a reply the
+    /// coordinator hasn't drained). Consequence: wired-mode machine
+    /// timings oversubscribe cores when machines ≫ cores — use
+    /// `TransportKind::Direct` for time benchmarks, wired modes for
+    /// byte measurement. Under a thread-confined engine machines run
+    /// sequentially on this thread with the real engine; a helper
+    /// thread plays coordinator for each link so framing stays
+    /// deadlock-free there too.
+    pub fn exchange<T: Send>(
+        &mut self,
+        items: &mut [T],
+        engine: &dyn Engine,
+        down: Down<'_>,
+        handler: impl Fn(&mut T, &[u8], &dyn Engine) -> Vec<u8> + Sync,
+    ) -> Vec<Vec<u8>> {
+        let n = items.len();
+        assert_eq!(n, self.coord_eps.len(), "items vs links mismatch");
+        match &down {
+            Down::Broadcast(f) => self.down_bytes += 4 + f.len(),
+            Down::PerMachine(fs) => {
+                assert_eq!(fs.len(), n, "per-machine frames vs links mismatch");
+                for f in fs.iter() {
+                    self.down_bytes += 4 + f.len();
+                }
+            }
+        }
+
+        let WiredChannel {
+            coord_eps,
+            machine_eps,
+            up_bytes,
+            ..
+        } = self;
+        let handler = &handler;
+        let mut replies: Vec<Vec<u8>> = Vec::with_capacity(n);
+
+        if engine.parallel_safe() {
+            std::thread::scope(|s| {
+                for (t, ep) in items.iter_mut().zip(machine_eps.iter_mut()) {
+                    s.spawn(move || {
+                        let req = ep.recv().expect("machine-side recv");
+                        let reply = handler(t, &req, &NativeEngine);
+                        ep.send(&reply).expect("machine-side send");
+                    });
+                }
+                for (j, ep) in coord_eps.iter_mut().enumerate() {
+                    let frame: &[u8] = match &down {
+                        Down::Broadcast(f) => *f,
+                        Down::PerMachine(fs) => fs[j].as_slice(),
+                    };
+                    ep.send(frame).expect("coordinator send");
+                }
+                for ep in coord_eps.iter_mut() {
+                    replies.push(ep.recv().expect("coordinator recv"));
+                }
+            });
+        } else {
+            for j in 0..n {
+                let frame: &[u8] = match &down {
+                    Down::Broadcast(f) => *f,
+                    Down::PerMachine(fs) => fs[j].as_slice(),
+                };
+                let cep = &mut coord_eps[j];
+                let mep = &mut machine_eps[j];
+                let item = &mut items[j];
+                let reply_frame = std::thread::scope(|s| {
+                    let h = s.spawn(move || {
+                        cep.send(frame).expect("coordinator send");
+                        cep.recv().expect("coordinator recv")
+                    });
+                    let req = mep.recv().expect("machine-side recv");
+                    let reply = handler(item, &req, engine);
+                    mep.send(&reply).expect("machine-side send");
+                    h.join().expect("coordinator I/O thread")
+                });
+                replies.push(reply_frame);
+            }
+        }
+
+        for r in &replies {
+            *up_bytes += 4 + r.len();
+        }
+        replies
+    }
+
+    /// One request/reply on a single link — for steps that involve
+    /// exactly one machine (e.g. fetching a uniformly drawn point), so
+    /// the other links carry no skip-message traffic and the meters
+    /// report only what the protocol actually needs.
+    ///
+    /// Runs inline on the calling thread: both frames must be small
+    /// enough to fit the transport's buffering (control frames and
+    /// single points are; don't use this for bulk payloads).
+    pub fn exchange_one<T>(
+        &mut self,
+        j: usize,
+        item: &mut T,
+        frame: &[u8],
+        handler: impl FnOnce(&mut T, &[u8]) -> Vec<u8>,
+    ) -> Vec<u8> {
+        self.down_bytes += 4 + frame.len();
+        let WiredChannel {
+            coord_eps,
+            machine_eps,
+            up_bytes,
+            ..
+        } = self;
+        coord_eps[j].send(frame).expect("coordinator send");
+        let req = machine_eps[j].recv().expect("machine-side recv");
+        let reply = handler(item, &req);
+        machine_eps[j].send(&reply).expect("machine-side send");
+        let got = coord_eps[j].recv().expect("coordinator recv");
+        *up_bytes += 4 + got.len();
+        got
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::wire::{FrameReader, FrameWriter};
+
+    fn wired(kind: TransportKind, n: usize) -> WiredChannel {
+        match FleetChannel::connect(kind, n).unwrap() {
+            FleetChannel::Wired(w) => w,
+            FleetChannel::Direct => panic!("expected wired"),
+        }
+    }
+
+    fn double_then_add(items: &mut [u64], chan: &mut WiredChannel, addend: u64) -> Vec<u64> {
+        let mut w = FrameWriter::new();
+        w.put_u64(addend);
+        let req = w.finish();
+        let replies = chan.exchange(
+            items,
+            &NativeEngine,
+            Down::Broadcast(&req),
+            |item, req, _e| {
+                let mut r = FrameReader::new(req);
+                let add = r.get_u64();
+                let mut w = FrameWriter::new();
+                w.put_u64(*item * 2 + add);
+                w.finish()
+            },
+        );
+        replies
+            .iter()
+            .map(|f| FrameReader::new(f).get_u64())
+            .collect()
+    }
+
+    #[test]
+    fn exchange_broadcast_inproc() {
+        let mut chan = wired(TransportKind::InProc, 3);
+        let mut items = [1u64, 2, 3];
+        assert_eq!(double_then_add(&mut items, &mut chan, 10), vec![12, 14, 16]);
+        // broadcast metered ONCE: 4 (prefix) + 8 (u64) down
+        // three replies: 3 × (4 + 8) up
+        assert_eq!(chan.wire_bytes(), (36, 12));
+        // raw counters see every physical copy of the broadcast
+        assert_eq!(chan.raw_bytes(), (36, 36));
+        chan.reset_meter();
+        assert_eq!(chan.wire_bytes(), (0, 0));
+    }
+
+    #[test]
+    fn exchange_per_machine_tcp() {
+        let mut chan = wired(TransportKind::LoopbackTcp, 2);
+        let mut items = [5u64, 7];
+        let reqs: Vec<Vec<u8>> = [100u64, 200]
+            .iter()
+            .map(|&v| {
+                let mut w = FrameWriter::new();
+                w.put_u64(v);
+                w.finish()
+            })
+            .collect();
+        let replies = chan.exchange(
+            &mut items,
+            &NativeEngine,
+            Down::PerMachine(&reqs),
+            |item, req, _e| {
+                let mut r = FrameReader::new(req);
+                let v = r.get_u64();
+                let mut w = FrameWriter::new();
+                w.put_u64(*item + v);
+                w.finish()
+            },
+        );
+        let got: Vec<u64> = replies.iter().map(|f| FrameReader::new(f).get_u64()).collect();
+        assert_eq!(got, vec![105, 207]);
+        // per-machine frames metered each: 2 × 12 down, 2 × 12 up
+        assert_eq!(chan.wire_bytes(), (24, 24));
+    }
+
+    #[test]
+    fn sequential_engine_path_works() {
+        // an engine that reports !parallel_safe drives the sequential
+        // (thread-confined) exchange variant
+        struct SequentialEngine;
+        impl Engine for SequentialEngine {
+            fn nearest(
+                &self,
+                points: &crate::core::Matrix,
+                centers: &crate::core::Matrix,
+                dist: &mut Vec<f32>,
+                idx: &mut Vec<u32>,
+            ) {
+                NativeEngine.nearest(points, centers, dist, idx)
+            }
+            fn removal_keep(
+                &self,
+                points: &crate::core::Matrix,
+                centers: &crate::core::Matrix,
+                v: f32,
+                keep: &mut Vec<bool>,
+            ) {
+                NativeEngine.removal_keep(points, centers, v, keep)
+            }
+            fn cost(&self, points: &crate::core::Matrix, centers: &crate::core::Matrix) -> f64 {
+                NativeEngine.cost(points, centers)
+            }
+            fn parallel_safe(&self) -> bool {
+                false
+            }
+            fn name(&self) -> &'static str {
+                "sequential-test"
+            }
+        }
+
+        let mut chan = wired(TransportKind::InProc, 4);
+        let mut items = [1u64, 2, 3, 4];
+        let mut w = FrameWriter::new();
+        w.put_u64(1000);
+        let req = w.finish();
+        let replies = chan.exchange(
+            &mut items,
+            &SequentialEngine,
+            Down::Broadcast(&req),
+            |item, req, e| {
+                assert_eq!(e.name(), "sequential-test");
+                let mut r = FrameReader::new(req);
+                let add = r.get_u64();
+                let mut w = FrameWriter::new();
+                w.put_u64(*item + add);
+                w.finish()
+            },
+        );
+        let got: Vec<u64> = replies.iter().map(|f| FrameReader::new(f).get_u64()).collect();
+        assert_eq!(got, vec![1001, 1002, 1003, 1004]);
+    }
+}

@@ -1,0 +1,138 @@
+//! In-process transport: an mpsc channel pair carrying length-prefixed
+//! frames. The zero-dependency wired mode — no syscalls, but every
+//! frame still passes through the same codec and framing as the socket
+//! transport, so byte meters read identically across the two.
+
+use super::Transport;
+use crate::format_err;
+use crate::util::error::Result;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+pub struct InProcTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    sent: usize,
+    received: usize,
+}
+
+impl InProcTransport {
+    /// Build the two ends of one duplex link.
+    pub fn pair() -> (InProcTransport, InProcTransport) {
+        let (atx, brx) = channel();
+        let (btx, arx) = channel();
+        (
+            InProcTransport {
+                tx: atx,
+                rx: arx,
+                sent: 0,
+                received: 0,
+            },
+            InProcTransport {
+                tx: btx,
+                rx: brx,
+                sent: 0,
+                received: 0,
+            },
+        )
+    }
+}
+
+impl Transport for InProcTransport {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        assert!(
+            payload.len() <= u32::MAX as usize,
+            "frame exceeds the u32 length prefix; shard the payload"
+        );
+        // the length prefix physically travels with the frame so the
+        // channel and socket transports count the same bytes
+        let mut frame = Vec::with_capacity(4 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(payload);
+        self.sent += frame.len();
+        self.tx
+            .send(frame)
+            .map_err(|_| format_err!("inproc transport: peer hung up on send"))
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let frame = self
+            .rx
+            .recv()
+            .map_err(|_| format_err!("inproc transport: peer hung up on recv"))?;
+        if frame.len() < 4 {
+            return Err(format_err!("inproc transport: frame shorter than prefix"));
+        }
+        let len = u32::from_le_bytes(frame[..4].try_into().expect("4 bytes")) as usize;
+        if frame.len() != 4 + len {
+            return Err(format_err!(
+                "inproc transport: length prefix {len} disagrees with frame size {}",
+                frame.len() - 4
+            ));
+        }
+        self.received += frame.len();
+        Ok(frame[4..].to_vec())
+    }
+
+    fn bytes_sent(&self) -> usize {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> usize {
+        self.received
+    }
+
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duplex_roundtrip_and_counters() {
+        let (mut a, mut b) = InProcTransport::pair();
+        a.send(&[1, 2, 3]).unwrap();
+        assert_eq!(b.recv().unwrap(), vec![1, 2, 3]);
+        b.send(&[]).unwrap();
+        assert_eq!(a.recv().unwrap(), Vec::<u8>::new());
+        // counters include the 4-byte length prefix
+        assert_eq!(a.bytes_sent(), 7);
+        assert_eq!(b.bytes_received(), 7);
+        assert_eq!(b.bytes_sent(), 4);
+        assert_eq!(a.bytes_received(), 4);
+    }
+
+    #[test]
+    fn frames_queue_in_order() {
+        let (mut a, mut b) = InProcTransport::pair();
+        for i in 0..5u8 {
+            a.send(&[i]).unwrap();
+        }
+        for i in 0..5u8 {
+            assert_eq!(b.recv().unwrap(), vec![i]);
+        }
+    }
+
+    #[test]
+    fn hangup_is_an_error() {
+        let (mut a, b) = InProcTransport::pair();
+        drop(b);
+        assert!(a.send(&[0]).is_err());
+        assert!(a.recv().is_err());
+    }
+
+    #[test]
+    fn works_across_threads() {
+        let (mut a, mut b) = InProcTransport::pair();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                let req = b.recv().unwrap();
+                b.send(&req.iter().map(|x| x * 2).collect::<Vec<u8>>()).unwrap();
+            });
+            a.send(&[10, 20]).unwrap();
+            assert_eq!(a.recv().unwrap(), vec![20, 40]);
+        });
+    }
+}

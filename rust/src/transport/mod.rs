@@ -1,0 +1,85 @@
+//! The transport layer: every coordinator↔machine exchange crosses a
+//! serialized boundary that meters itself, making the paper's
+//! communication accounting *physical* instead of asserted.
+//!
+//! A [`Transport`] moves length-prefixed frames between the two ends of
+//! one coordinator↔machine link. Two wire-backed implementations ship:
+//!
+//! - [`InProcTransport`] — an mpsc channel pair carrying encoded
+//!   frames. Zero dependencies, no syscalls, but every byte still goes
+//!   through the [`wire`] codec, so the meter readings are identical to
+//!   the socket transport's.
+//! - [`LoopbackTcpTransport`] — a real `std::net` TCP socket pair on
+//!   localhost. Frames cross the kernel's loopback stack.
+//!
+//! The third mode, [`TransportKind::Direct`], is the historical
+//! fast path: machine methods are invoked directly with no
+//! serialization (and therefore no byte meter). Benches default to it;
+//! the wired modes exist so tests can reconcile *measured* bytes
+//! against the analytic `points × 4·d` unit of the paper's tables.
+//!
+//! Protocol model (matches the paper's coordinator model, §3):
+//!
+//! - Rounds are phase-synchronous: both ends always know which message
+//!   comes next, so frames carry no type tags — just the payload.
+//! - A coordinator broadcast is **one** transmission no matter how many
+//!   machines listen (§3's broadcast channel); per-machine messages
+//!   (e.g. sampling quotas) are metered per machine.
+//! - The coordinator keeps per-machine live-size metadata locally (it
+//!   learns sizes from removal acks); quota computation does not cost
+//!   extra wire traffic beyond the quota messages themselves.
+//! - Transport failures are fatal: there is no retry layer yet, a
+//!   broken link panics the run.
+
+pub mod channel;
+pub mod inproc;
+pub mod tcp;
+pub mod wire;
+
+pub use channel::{Down, FleetChannel, WiredChannel};
+pub use inproc::InProcTransport;
+pub use tcp::LoopbackTcpTransport;
+
+use crate::util::error::Result;
+
+/// One end of a coordinator↔machine link: sends and receives
+/// length-prefixed frames, counting every byte that crosses.
+pub trait Transport: Send {
+    /// Send one frame (`payload` does not include the length prefix;
+    /// the transport adds a 4-byte little-endian length on the wire).
+    fn send(&mut self, payload: &[u8]) -> Result<()>;
+
+    /// Receive the next frame's payload, blocking until it arrives.
+    fn recv(&mut self) -> Result<Vec<u8>>;
+
+    /// Total bytes physically sent through this end, including the
+    /// 4-byte length prefixes.
+    fn bytes_sent(&self) -> usize;
+
+    /// Total bytes physically received, including length prefixes.
+    fn bytes_received(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Which transport a fleet's coordinator↔machine links run over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Direct method calls, zero serialization (the fast path; no byte
+    /// metering).
+    Direct,
+    /// In-process mpsc channels carrying encoded frames.
+    InProc,
+    /// Real TCP sockets over 127.0.0.1.
+    LoopbackTcp,
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Direct => "direct",
+            TransportKind::InProc => "inproc",
+            TransportKind::LoopbackTcp => "loopback-tcp",
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Loopback TCP transport: a real socket pair over 127.0.0.1. Frames
+//! cross the kernel's loopback stack, so byte meters here measure
+//! genuine wire traffic — the strongest form of the repo's
+//! "communication accounting is physical" claim that fits in one
+//! process.
+
+use super::Transport;
+use crate::util::error::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+pub struct LoopbackTcpTransport {
+    stream: TcpStream,
+    sent: usize,
+    received: usize,
+}
+
+impl LoopbackTcpTransport {
+    /// Build the two ends of one duplex link over a fresh ephemeral
+    /// localhost port (the listener is dropped after the accept).
+    pub fn pair() -> Result<(LoopbackTcpTransport, LoopbackTcpTransport)> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", 0)).context("loopback transport: bind failed")?;
+        let addr = listener
+            .local_addr()
+            .context("loopback transport: no local addr")?;
+        let a = TcpStream::connect(addr).context("loopback transport: connect failed")?;
+        let (b, _) = listener
+            .accept()
+            .context("loopback transport: accept failed")?;
+        // round-trip latency matters more than throughput for the small
+        // control frames; don't let Nagle sit on them
+        a.set_nodelay(true).context("set_nodelay")?;
+        b.set_nodelay(true).context("set_nodelay")?;
+        Ok((
+            LoopbackTcpTransport {
+                stream: a,
+                sent: 0,
+                received: 0,
+            },
+            LoopbackTcpTransport {
+                stream: b,
+                sent: 0,
+                received: 0,
+            },
+        ))
+    }
+}
+
+impl Transport for LoopbackTcpTransport {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        assert!(
+            payload.len() <= u32::MAX as usize,
+            "frame exceeds the u32 length prefix; shard the payload"
+        );
+        self.stream
+            .write_all(&(payload.len() as u32).to_le_bytes())
+            .context("loopback transport: send prefix")?;
+        self.stream
+            .write_all(payload)
+            .context("loopback transport: send payload")?;
+        self.sent += 4 + payload.len();
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut prefix = [0u8; 4];
+        self.stream
+            .read_exact(&mut prefix)
+            .context("loopback transport: recv prefix")?;
+        let len = u32::from_le_bytes(prefix) as usize;
+        let mut payload = vec![0u8; len];
+        self.stream
+            .read_exact(&mut payload)
+            .context("loopback transport: recv payload")?;
+        self.received += 4 + len;
+        Ok(payload)
+    }
+
+    fn bytes_sent(&self) -> usize {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> usize {
+        self.received
+    }
+
+    fn name(&self) -> &'static str {
+        "loopback-tcp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_tcp_duplex_roundtrip() {
+        let (mut a, mut b) = LoopbackTcpTransport::pair().unwrap();
+        a.send(&[9, 8, 7]).unwrap();
+        assert_eq!(b.recv().unwrap(), vec![9, 8, 7]);
+        b.send(&[1]).unwrap();
+        assert_eq!(a.recv().unwrap(), vec![1]);
+        assert_eq!(a.bytes_sent(), 7);
+        assert_eq!(b.bytes_received(), 7);
+        assert_eq!(b.bytes_sent(), 5);
+        assert_eq!(a.bytes_received(), 5);
+    }
+
+    #[test]
+    fn transport_tcp_large_frame_with_concurrent_peer() {
+        // a frame bigger than typical socket buffers must stream through
+        // while the peer drains concurrently (the fleet's exchange keeps
+        // both sides live for exactly this reason)
+        let (mut a, mut b) = LoopbackTcpTransport::pair().unwrap();
+        let big: Vec<u8> = (0..1_000_000usize).map(|i| (i % 251) as u8).collect();
+        std::thread::scope(|s| {
+            let big_ref = &big;
+            s.spawn(move || {
+                let got = b.recv().unwrap();
+                assert_eq!(&got, big_ref);
+                b.send(&[42]).unwrap();
+            });
+            a.send(&big).unwrap();
+            assert_eq!(a.recv().unwrap(), vec![42]);
+        });
+        assert_eq!(a.bytes_sent(), 4 + big.len());
+    }
+
+    #[test]
+    fn transport_tcp_empty_frame() {
+        let (mut a, mut b) = LoopbackTcpTransport::pair().unwrap();
+        a.send(&[]).unwrap();
+        assert_eq!(b.recv().unwrap(), Vec::<u8>::new());
+    }
+}

@@ -1,0 +1,244 @@
+//! Wire codec for the coordinator-model protocol: flat little-endian
+//! encodings of the few shapes that cross a link — `Matrix` point sets,
+//! quota/count scalars, and f32/f64 vectors.
+//!
+//! Layout (all little-endian):
+//!
+//! - `u32`/`u64`/`f32`/`f64` — their plain LE byte representation,
+//! - `Matrix` — `u32 rows`, `u32 cols`, then `rows·cols` f32 values
+//!   row-major ([`MATRIX_HEADER`] = 8 bytes of header, `4·rows·cols`
+//!   bytes of data — the paper's "points × 4·d" unit, plus the header),
+//! - `[f32]`/`[f64]` — `u32 len` then the values.
+//!
+//! The protocol is phase-synchronous (both ends know what's next), so
+//! frames carry no type tags; a shape mismatch is a protocol bug and
+//! panics with a message rather than limping on.
+//!
+//! f32/f64 values round-trip bit-exactly, which is what makes
+//! `DirectTransport` vs wired runs byte-identical in outcome.
+
+use crate::core::Matrix;
+
+/// Bytes every frame costs on the wire beyond its payload: the u32
+/// length prefix the transports add.
+pub const FRAME_OVERHEAD: usize = 4;
+
+/// Encoded-`Matrix` header size (u32 rows + u32 cols).
+pub const MATRIX_HEADER: usize = 8;
+
+/// Encoded size of a `rows × cols` matrix, header included.
+pub fn matrix_bytes(rows: usize, cols: usize) -> usize {
+    MATRIX_HEADER + 4 * rows * cols
+}
+
+/// Builds one frame payload.
+#[derive(Default)]
+pub struct FrameWriter {
+    buf: Vec<u8>,
+}
+
+impl FrameWriter {
+    pub fn new() -> FrameWriter {
+        FrameWriter { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(bytes: usize) -> FrameWriter {
+        FrameWriter {
+            buf: Vec::with_capacity(bytes),
+        }
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_matrix(&mut self, m: &Matrix) {
+        assert!(
+            m.rows() <= u32::MAX as usize && m.cols() <= u32::MAX as usize,
+            "matrix dims exceed the u32 wire header"
+        );
+        self.buf.reserve(matrix_bytes(m.rows(), m.cols()));
+        self.put_u32(m.rows() as u32);
+        self.put_u32(m.cols() as u32);
+        for v in m.data() {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.buf.reserve(4 + 4 * vs.len());
+        self.put_u32(vs.len() as u32);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn put_f64s(&mut self, vs: &[f64]) {
+        self.buf.reserve(4 + 8 * vs.len());
+        self.put_u32(vs.len() as u32);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Decodes one frame payload in write order.
+pub struct FrameReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> FrameReader<'a> {
+    pub fn new(buf: &'a [u8]) -> FrameReader<'a> {
+        FrameReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> &'a [u8] {
+        assert!(
+            self.pos + n <= self.buf.len(),
+            "wire: truncated frame (want {n} bytes at {}, frame is {})",
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        s
+    }
+
+    pub fn get_u32(&mut self) -> u32 {
+        u32::from_le_bytes(self.take(4).try_into().expect("4 bytes"))
+    }
+
+    pub fn get_u64(&mut self) -> u64 {
+        u64::from_le_bytes(self.take(8).try_into().expect("8 bytes"))
+    }
+
+    pub fn get_f32(&mut self) -> f32 {
+        f32::from_le_bytes(self.take(4).try_into().expect("4 bytes"))
+    }
+
+    pub fn get_f64(&mut self) -> f64 {
+        f64::from_le_bytes(self.take(8).try_into().expect("8 bytes"))
+    }
+
+    pub fn get_matrix(&mut self) -> Matrix {
+        let rows = self.get_u32() as usize;
+        let cols = self.get_u32() as usize;
+        let raw = self.take(4 * rows * cols);
+        let mut data = Vec::with_capacity(rows * cols);
+        for chunk in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes(chunk.try_into().expect("4 bytes")));
+        }
+        Matrix::from_vec(data, rows, cols)
+    }
+
+    pub fn get_f32s(&mut self) -> Vec<f32> {
+        let len = self.get_u32() as usize;
+        let raw = self.take(4 * len);
+        raw.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect()
+    }
+
+    pub fn get_f64s(&mut self) -> Vec<f64> {
+        let len = self.get_u32() as usize;
+        let raw = self.take(8 * len);
+        raw.chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().expect("8 bytes")))
+            .collect()
+    }
+
+    /// Bytes not yet consumed (0 when a frame was fully decoded).
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = FrameWriter::new();
+        w.put_u32(7);
+        w.put_u64(u64::MAX - 3);
+        w.put_f32(-1.5e-7);
+        w.put_f64(std::f64::consts::PI);
+        let frame = w.finish();
+        assert_eq!(frame.len(), 4 + 8 + 4 + 8);
+        let mut r = FrameReader::new(&frame);
+        assert_eq!(r.get_u32(), 7);
+        assert_eq!(r.get_u64(), u64::MAX - 3);
+        assert_eq!(r.get_f32(), -1.5e-7);
+        assert_eq!(r.get_f64(), std::f64::consts::PI);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn matrix_roundtrip_is_bit_exact() {
+        let m = Matrix::from_vec(vec![1.0, f32::MIN_POSITIVE, -0.0, 3.25e8, 5.0, -6.5], 3, 2);
+        let mut w = FrameWriter::new();
+        w.put_matrix(&m);
+        let frame = w.finish();
+        assert_eq!(frame.len(), matrix_bytes(3, 2));
+        let mut r = FrameReader::new(&frame);
+        let back = r.get_matrix();
+        assert_eq!(back, m);
+        // bit-exactness, not just PartialEq (−0.0 == 0.0 would pass ==)
+        for (a, b) in back.data().iter().zip(m.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_matrix_keeps_cols() {
+        let m = Matrix::zeros(0, 5);
+        let mut w = FrameWriter::new();
+        w.put_matrix(&m);
+        let frame = w.finish();
+        assert_eq!(frame.len(), MATRIX_HEADER);
+        let mut r = FrameReader::new(&frame);
+        let back = r.get_matrix();
+        assert!(back.is_empty());
+        assert_eq!(back.cols(), 5);
+    }
+
+    #[test]
+    fn vec_roundtrip() {
+        let mut w = FrameWriter::new();
+        w.put_f32s(&[1.0, -2.0]);
+        w.put_f64s(&[0.25, 1e300, -0.0]);
+        let frame = w.finish();
+        let mut r = FrameReader::new(&frame);
+        assert_eq!(r.get_f32s(), vec![1.0, -2.0]);
+        assert_eq!(r.get_f64s(), vec![0.25, 1e300, -0.0]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "truncated frame")]
+    fn truncated_frame_panics() {
+        let mut w = FrameWriter::new();
+        w.put_u32(3); // claims 3 f32s follow
+        let frame = w.finish();
+        let mut r = FrameReader::new(&frame);
+        r.get_f32s();
+    }
+}

@@ -54,6 +54,121 @@ fn headline_metric_gaussian_one_round_native() {
     assert!(out.cost < 3.0 * opt, "cost {} vs optimal {}", out.cost, opt);
 }
 
+/// Direct vs wired runs are deterministic twins, and the wired run's
+/// measured bytes reconcile EXACTLY with the analytic point counts:
+/// every data-plane point costs 4·d bytes on the wire, plus the metered
+/// frame prefixes, matrix headers, quota scalars and timing scalars the
+/// protocol structure fixes per round.
+#[test]
+fn transport_inproc_matches_direct_and_reconciles_bytes() {
+    use soccer::transport::wire::{matrix_bytes, FRAME_OVERHEAD, MATRIX_HEADER};
+    use soccer::transport::TransportKind;
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(20_000, 5);
+    let gm = soccer::data::gaussian::generate(&spec, &mut soccer::util::rng::Pcg64::new(51));
+    let m = 8usize;
+    let mut direct = Fleet::new(&gm.points, m, 52);
+    let mut wired =
+        Fleet::with_transport(&gm.points, m, 52, TransportKind::InProc).expect("inproc fleet");
+    let params = SoccerParams::new(5, 0.2);
+    let out_d = run_soccer(&mut direct, &NativeEngine, &params, &LloydKMeans::default(), 53);
+    let out_w = run_soccer(&mut wired, &NativeEngine, &params, &LloydKMeans::default(), 53);
+
+    // identical outcomes: the codec round-trips bit-exactly and both
+    // modes consume the same RNG streams
+    assert_eq!(out_d.c_out, out_w.c_out);
+    assert_eq!(out_d.final_centers, out_w.final_centers);
+    assert_eq!(out_d.rounds, out_w.rounds);
+    assert_eq!(out_d.output_size, out_w.output_size);
+    assert_eq!(out_d.cost.to_bits(), out_w.cost.to_bits());
+    assert_eq!(out_d.cost_c_out.to_bits(), out_w.cost_c_out.to_bits());
+    let (cd, cw) = (&out_d.telemetry.comm, &out_w.telemetry.comm);
+    assert_eq!(cd.to_coordinator, cw.to_coordinator);
+    assert_eq!(cd.broadcast, cw.broadcast);
+    assert_eq!(cd.control_scalars, cw.control_scalars);
+    // the direct fast path has no wire to measure
+    assert_eq!((cd.bytes_to_coordinator, cd.bytes_broadcast), (0, 0));
+
+    // measured bytes == analytic accounting, exactly
+    assert!(out_w.rounds >= 1, "need a real round to reconcile");
+    let d = gm.points.cols();
+    let sum_sampled: usize = out_w.telemetry.rounds.iter().map(|r| r.sampled).sum();
+    let drained = cw.to_coordinator - sum_sampled;
+    // drain: an empty broadcast request, one matrix reply per machine
+    let mut expect_down = FRAME_OVERHEAD;
+    let mut expect_up = m * (FRAME_OVERHEAD + MATRIX_HEADER) + 4 * d * drained;
+    for r in &out_w.telemetry.rounds {
+        // two u64 sampling quotas per machine (the control scalars)
+        expect_down += m * (FRAME_OVERHEAD + 16);
+        // the (v, C_iter) removal broadcast, metered once (§3)
+        expect_down += FRAME_OVERHEAD + 4 + matrix_bytes(r.broadcast, d);
+        // per machine: a sample-pair reply (two matrices + f64 secs)…
+        expect_up += m * (FRAME_OVERHEAD + 2 * MATRIX_HEADER + 8) + 4 * d * r.sampled;
+        // …and a removal ack (u64 removed + f64 secs)
+        expect_up += m * (FRAME_OVERHEAD + 16);
+    }
+    assert_eq!(cw.bytes_broadcast, expect_down, "downlink bytes drifted");
+    assert_eq!(cw.bytes_to_coordinator, expect_up, "uplink bytes drifted");
+    // headline sanity: the data plane dominates and is points × 4·d
+    assert!(cw.bytes_to_coordinator >= 4 * d * cw.to_coordinator);
+}
+
+/// The same protocol over real localhost TCP sockets: outcome and byte
+/// meters must agree with the channel transport to the byte.
+#[test]
+fn transport_loopback_tcp_end_to_end() {
+    use soccer::transport::TransportKind;
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(8_000, 4);
+    let gm = soccer::data::gaussian::generate(&spec, &mut soccer::util::rng::Pcg64::new(61));
+    let m = 6usize;
+    let params = SoccerParams::new(4, 0.2);
+    let mut inproc =
+        Fleet::with_transport(&gm.points, m, 62, TransportKind::InProc).expect("inproc fleet");
+    let mut tcp = Fleet::with_transport(&gm.points, m, 62, TransportKind::LoopbackTcp)
+        .expect("loopback-tcp fleet");
+    assert_eq!(tcp.transport_name(), "loopback-tcp");
+
+    let out_i = run_soccer(&mut inproc, &NativeEngine, &params, &LloydKMeans::default(), 63);
+    let out_t = run_soccer(&mut tcp, &NativeEngine, &params, &LloydKMeans::default(), 63);
+
+    assert_eq!(out_i.c_out, out_t.c_out);
+    assert_eq!(out_i.final_centers, out_t.final_centers);
+    assert_eq!(out_i.rounds, out_t.rounds);
+    assert_eq!(out_i.cost.to_bits(), out_t.cost.to_bits());
+    let (ci, ct) = (&out_i.telemetry.comm, &out_t.telemetry.comm);
+    // identical framing -> identical meters, socket or channel
+    assert_eq!(ci.bytes_to_coordinator, ct.bytes_to_coordinator);
+    assert_eq!(ci.bytes_broadcast, ct.bytes_broadcast);
+    assert!(ct.bytes_to_coordinator > 0 && ct.bytes_broadcast > 0);
+}
+
+/// Repetitions over a wired fleet: reset clears the meters, and a
+/// repeated run reports the same measured bytes as its twin.
+#[test]
+fn transport_meter_resets_between_repetitions() {
+    use soccer::transport::TransportKind;
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(6_000, 3);
+    let gm = soccer::data::gaussian::generate(&spec, &mut soccer::util::rng::Pcg64::new(71));
+    let mut fleet =
+        Fleet::with_transport(&gm.points, 5, 72, TransportKind::InProc).expect("inproc fleet");
+    let params = SoccerParams::new(3, 0.2);
+    let first = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 73);
+    fleet.reset();
+    assert_eq!(fleet.wire_bytes(), (0, 0));
+    let second = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 73);
+    assert_eq!(
+        first.telemetry.comm.bytes_to_coordinator,
+        second.telemetry.comm.bytes_to_coordinator
+    );
+    assert_eq!(
+        first.telemetry.comm.bytes_broadcast,
+        second.telemetry.comm.bytes_broadcast
+    );
+    assert_eq!(first.cost.to_bits(), second.cost.to_bits());
+}
+
 #[cfg(feature = "pjrt")]
 mod pjrt {
     use super::*;
