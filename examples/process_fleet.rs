@@ -1,0 +1,83 @@
+//! Process-backed fleet: run SOCCER with every machine as its own OS
+//! process — one spawned `soccer-machine` worker per shard, talking to
+//! the coordinator over Unix domain sockets (set
+//! `SOCCER_PROCESS_SOCKET=tcp` to force loopback TCP instead).
+//!
+//!   cargo build --release            # builds the soccer-machine worker
+//!   cargo run --release --example process_fleet
+//!
+//! The run is a deterministic twin of the in-process modes: same seed →
+//! bit-identical centers and cost, byte meters equal to the byte — only
+//! the processes, sockets, and measured machine seconds are real.
+
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::data::gaussian::{generate, GaussianMixtureSpec};
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::transport::TransportKind;
+use soccer::util::rng::Pcg64;
+
+fn main() {
+    let k = 10;
+    let n = 50_000;
+    let machines = 8;
+
+    let spec = GaussianMixtureSpec::paper(n, k);
+    let gm = generate(&spec, &mut Pcg64::new(42));
+    println!("generated {}x{} Gaussian mixture (k={k})", n, spec.dim);
+
+    // spawn the workers; each receives its shard + RNG stream over the
+    // wire at handshake
+    let mut process = match Fleet::with_transport(&gm.points, machines, 1, TransportKind::Process)
+    {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("could not spawn the process fleet: {e}");
+            eprintln!("hint: `cargo build --release` first so the soccer-machine binary exists");
+            std::process::exit(1);
+        }
+    };
+    let pids: Vec<u32> = process.worker_pids().into_iter().flatten().collect();
+    println!("spawned {} soccer-machine workers: {:?}", pids.len(), pids);
+
+    let params = SoccerParams::new(k, 0.1);
+    let out = run_soccer(&mut process, &NativeEngine, &params, &LloydKMeans::default(), 2);
+
+    println!("\nprocess fleet ({}):", process.transport_name());
+    println!("  rounds                  = {}", out.rounds);
+    println!("  cost(final k centers)   = {:.4}", out.cost);
+    println!(
+        "  machine time (measured in the workers) = {:.4}s",
+        out.telemetry.machine_time()
+    );
+    let comm = &out.telemetry.comm;
+    println!(
+        "  uplink   = {} bytes measured ({} points; data plane = points x 4d = {} bytes)",
+        comm.bytes_to_coordinator,
+        comm.to_coordinator,
+        4 * spec.dim * comm.to_coordinator
+    );
+    println!(
+        "  downlink = {} bytes measured ({} points broadcast, each metered once)",
+        comm.bytes_broadcast, comm.broadcast
+    );
+
+    // the deterministic-twin claim, live: an in-process fleet on the
+    // same seed lands on the identical outcome and identical meters
+    let mut inproc = Fleet::with_transport(&gm.points, machines, 1, TransportKind::InProc)
+        .expect("inproc fleet");
+    let twin = run_soccer(&mut inproc, &NativeEngine, &params, &LloydKMeans::default(), 2);
+    assert_eq!(out.final_centers, twin.final_centers);
+    assert_eq!(out.cost.to_bits(), twin.cost.to_bits());
+    assert_eq!(
+        out.telemetry.comm.bytes_to_coordinator,
+        twin.telemetry.comm.bytes_to_coordinator
+    );
+    assert_eq!(
+        out.telemetry.comm.bytes_broadcast,
+        twin.telemetry.comm.bytes_broadcast
+    );
+    println!("\nverified: bit-identical to the in-process twin, meters equal to the byte");
+    // dropping the fleet sends each worker a Shutdown frame and reaps it
+}

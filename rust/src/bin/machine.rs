@@ -1,0 +1,59 @@
+//! `soccer-machine` — one fleet machine as its own OS process.
+//!
+//! Spawned by a `TransportKind::Process` fleet, never run by hand
+//! (though you can: it only needs a coordinator socket to dial).
+//! Protocol: connect to `--connect` (`unix:<path>` or `tcp:<ip:port>`),
+//! send the hello frame, receive the `LoadShard` frame carrying this
+//! machine's id, RNG stream, and data shard, ack with the live-point
+//! count, then serve phase-synchronous requests until a `Shutdown`
+//! frame or peer disconnect. All machine-side seconds reported back to
+//! the coordinator are measured here, in this process.
+
+use soccer::runtime::NativeEngine;
+use soccer::transport::process::WorkerEndpoint;
+use soccer::transport::{protocol, Transport};
+use soccer::util::error::{Context, Result};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("soccer-machine: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_args() -> Result<(String, u64)> {
+    let mut connect = None;
+    let mut id = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--connect" => connect = args.next(),
+            "--id" => id = args.next(),
+            "--help" | "-h" => {
+                println!("usage: soccer-machine --connect <unix:PATH|tcp:IP:PORT> --id <N>");
+                std::process::exit(0);
+            }
+            other => soccer::bail!("unknown argument {other}"),
+        }
+    }
+    let connect = connect.context("missing --connect <unix:PATH|tcp:IP:PORT>")?;
+    let id = id
+        .context("missing --id <N>")?
+        .parse::<u64>()
+        .map_err(|_| soccer::format_err!("--id wants an integer"))?;
+    Ok((connect, id))
+}
+
+fn run() -> Result<()> {
+    let (addr, id) = parse_args()?;
+    let mut link = WorkerEndpoint::connect(&addr)?;
+    link.send(&protocol::encode_hello(id))?;
+    let shard_frame = link
+        .recv()
+        .map_err(|e| e.context("worker: coordinator hung up before shipping the shard"))?;
+    let mut machine = protocol::decode_load_shard(&shard_frame, id)?;
+    link.send(&protocol::encode_live_ack(machine.n_live()))?;
+    // the worker is always its own process: the native engine is the
+    // only one that exists here (PJRT stays coordinator-side)
+    protocol::serve(&mut link, &mut machine, &NativeEngine)
+}

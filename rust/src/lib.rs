@@ -8,8 +8,10 @@
 //!   per-machine time accounting,
 //! - [`transport`] — the wire layer under the fleet: a `Transport`
 //!   trait (length-prefixed frames), an mpsc-channel and a loopback-TCP
-//!   implementation with byte meters, and the direct-call fast path —
-//!   communication accounting is *measured*, not asserted,
+//!   implementation with byte meters, a multi-process mode that spawns
+//!   one `soccer-machine` worker process per machine over Unix/TCP
+//!   sockets, and the direct-call fast path — communication accounting
+//!   is *measured*, not asserted,
 //! - [`baselines`] — k-means|| (Bahmani et al. 2012), EIM11 (Ene et al.
 //!   2011) and a centralized reference,
 //! - [`clustering`] — the centralized black-box algorithms the

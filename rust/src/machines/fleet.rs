@@ -10,34 +10,72 @@
 //! Communication model: every coordinator↔machine exchange goes through
 //! the fleet's [`FleetChannel`]. The default [`TransportKind::Direct`]
 //! channel invokes machine methods directly (zero serialization — the
-//! fast path benches run on). A wired channel
-//! ([`TransportKind::InProc`] / [`TransportKind::LoopbackTcp`])
-//! serializes every payload through `transport::wire` and meters the
-//! bytes, so `CommStats` byte fields are *measured*, not asserted. The
-//! two paths are deterministic twins: the codec round-trips f32/f64
-//! bit-exactly and both sides consume identical RNG streams, so a run
-//! over a wired fleet produces the same outcome as a direct one.
+//! fast path benches run on). A wired channel serializes every payload
+//! through `transport::wire` and meters the bytes, so `CommStats` byte
+//! fields are *measured*, not asserted:
 //!
-//! Coordinator-side metadata (`total_live`, per-machine live sizes for
-//! quota draws, failure injection via `kill_machine`) is read directly
-//! in both modes: the coordinator legitimately tracks shard sizes from
-//! removal acks, and killing a machine models a crash, not a message.
-//! A killed machine's link stays open and keeps answering exchanges
-//! with empty payloads (zero points, zero counts) — failure injection
-//! crashes the *data*, not the link — so wired byte meters on a
-//! failure run include those empty control frames; the byte
-//! reconciliation tests therefore run on failure-free fleets.
+//! - [`TransportKind::InProc`] / [`TransportKind::LoopbackTcp`] keep
+//!   the machines in this process, answering requests through the
+//!   shared `transport::protocol` dispatcher on threads;
+//! - [`TransportKind::Process`] spawns one `soccer-machine` worker
+//!   process per machine and ships each its shard; the same dispatcher
+//!   runs in the worker, so the wire traffic is byte-identical and the
+//!   reported machine seconds are genuine other-process wall time.
+//!
+//! All modes are deterministic twins: the codec round-trips f32/f64
+//! bit-exactly and every mode consumes identical RNG streams, so a run
+//! over any wired fleet produces the same outcome as a direct one.
+//!
+//! Coordinator-side metadata: the coordinator legitimately tracks shard
+//! sizes (it learns them from removal acks), so quota draws and
+//! uniform-point routing read local metadata in every mode. On a
+//! process fleet that metadata is an explicit per-machine mirror
+//! (`MachineMeta`), updated from the acks that cross the wire.
+//!
+//! Failure injection via `kill_machine` models a crash, not a message.
+//! A killed in-process machine's link stays open and keeps answering
+//! exchanges with empty payloads (the crash loses the *data*, not the
+//! link), so wired byte meters on a failure run include those empty
+//! control frames; the byte reconciliation tests therefore run on
+//! failure-free fleets. Killing a machine on a process fleet terminates
+//! the worker process itself; its link is gone, later steps skip it,
+//! and a worker that crashes *uninvited* (the process dies mid-round)
+//! is detected by the transport error on its link and downgraded to
+//! dead the same way instead of deadlocking the run.
 
-use super::machine::{Machine, Timed};
+use super::machine::Machine;
 use crate::core::Matrix;
 use crate::runtime::{Engine, NativeEngine};
-use crate::transport::wire::{FrameReader, FrameWriter};
-use crate::transport::{Down, FleetChannel, TransportKind, WiredChannel};
+use crate::transport::process::WorkerSpec;
+use crate::transport::protocol::{self, Op};
+use crate::transport::wire::FrameReader;
+use crate::transport::{Down, FleetChannel, TransportKind};
 use crate::util::pool::par_map_mut;
 use crate::util::rng::Pcg64;
 
+/// Coordinator-side mirror of one remote machine's size metadata
+/// (process fleets only; in-process fleets read their machines).
+struct MachineMeta {
+    id: usize,
+    n_original: usize,
+    n_live: usize,
+    dead: bool,
+}
+
+impl MachineMeta {
+    fn downgrade(&mut self) {
+        self.dead = true;
+        self.n_live = 0;
+        self.n_original = 0;
+    }
+}
+
 pub struct Fleet {
     machines: Vec<Machine>,
+    /// `Some` ⟺ the machines live in worker processes; holds the
+    /// coordinator's size metadata for them.
+    meta: Option<Vec<MachineMeta>>,
+    dim: usize,
     pub workers: usize,
     channel: FleetChannel,
 }
@@ -97,6 +135,7 @@ impl Fleet {
     /// fleet over `points.split_rows(m)` is identical to `new`.
     pub fn from_shards(shards: Vec<Matrix>, seed: u64) -> Fleet {
         assert!(!shards.is_empty());
+        let dim = shards[0].cols();
         let mut root = Pcg64::new(seed);
         let machines = shards
             .into_iter()
@@ -105,6 +144,8 @@ impl Fleet {
             .collect();
         Fleet {
             machines,
+            meta: None,
+            dim,
             workers: crate::util::pool::default_workers(),
             channel: FleetChannel::Direct,
         }
@@ -112,16 +153,54 @@ impl Fleet {
 
     /// Build a fleet whose coordinator↔machine links run over the given
     /// transport (see [`crate::transport`]). `TransportKind::Direct`
-    /// yields exactly `Fleet::new`.
+    /// yields exactly `Fleet::new`; `TransportKind::Process` spawns one
+    /// `soccer-machine` worker per shard and ships it the shard plus
+    /// the same RNG stream `Fleet::new` would hand a local machine.
     pub fn with_transport(
         points: &Matrix,
         m: usize,
         seed: u64,
         kind: TransportKind,
     ) -> crate::util::error::Result<Fleet> {
+        if kind == TransportKind::Process {
+            assert!(m >= 1);
+            return Fleet::spawn_process_fleet(points.split_rows(m), seed);
+        }
         let mut fleet = Fleet::new(points, m, seed);
         fleet.channel = FleetChannel::connect(kind, fleet.machines.len())?;
         Ok(fleet)
+    }
+
+    fn spawn_process_fleet(shards: Vec<Matrix>, seed: u64) -> crate::util::error::Result<Fleet> {
+        assert!(!shards.is_empty());
+        let dim = shards[0].cols();
+        let mut root = Pcg64::new(seed);
+        let specs: Vec<WorkerSpec> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| WorkerSpec {
+                id,
+                rng: root.split(id as u64),
+                shard,
+            })
+            .collect();
+        let meta = specs
+            .iter()
+            .map(|s| MachineMeta {
+                id: s.id,
+                n_original: s.shard.rows(),
+                n_live: s.shard.rows(),
+                dead: false,
+            })
+            .collect();
+        let workers = crate::transport::process::spawn_fleet(specs)?;
+        Ok(Fleet {
+            machines: Vec::new(),
+            meta: Some(meta),
+            dim,
+            workers: crate::util::pool::default_workers(),
+            channel: FleetChannel::process(workers),
+        })
     }
 
     /// Name of the transport the fleet's links run over.
@@ -147,38 +226,79 @@ impl Fleet {
         }
     }
 
-    /// Split borrows: the machine slice and (when wired) the channel.
-    fn parts(&mut self) -> (&mut Vec<Machine>, Option<&mut WiredChannel>) {
-        let Fleet {
-            machines, channel, ..
-        } = self;
-        (machines, channel.wired_mut())
+    /// OS pids of the live worker processes behind a process fleet
+    /// (`None` per dead machine); empty on every other transport.
+    pub fn worker_pids(&self) -> Vec<Option<u32>> {
+        match &self.channel {
+            FleetChannel::Direct => Vec::new(),
+            FleetChannel::Wired(w) => w.worker_pids(),
+        }
+    }
+
+    fn is_wired(&self) -> bool {
+        matches!(self.channel, FleetChannel::Wired(_))
     }
 
     pub fn num_machines(&self) -> usize {
-        self.machines.len()
+        match &self.meta {
+            Some(meta) => meta.len(),
+            None => self.machines.len(),
+        }
     }
 
     pub fn total_live(&self) -> usize {
-        self.machines.iter().map(|m| m.n_live()).sum()
+        match &self.meta {
+            Some(meta) => meta.iter().map(|m| m.n_live).sum(),
+            None => self.machines.iter().map(|m| m.n_live()).sum(),
+        }
     }
 
     pub fn total_original(&self) -> usize {
-        self.machines.iter().map(|m| m.n_original()).sum()
+        match &self.meta {
+            Some(meta) => meta.iter().map(|m| m.n_original).sum(),
+            None => self.machines.iter().map(|m| m.n_original()).sum(),
+        }
     }
 
     pub fn dim(&self) -> usize {
-        self.machines[0].original().cols()
+        self.dim
     }
 
     pub fn live_sizes(&self) -> Vec<usize> {
-        self.machines.iter().map(|m| m.n_live()).collect()
+        match &self.meta {
+            Some(meta) => meta.iter().map(|m| m.n_live).collect(),
+            None => self.machines.iter().map(|m| m.n_live()).collect(),
+        }
+    }
+
+    /// Machines currently dead — killed via [`Fleet::kill_machine`] or
+    /// downgraded after their worker process crashed. Callers producing
+    /// measurements should check this: a nonzero count means aggregates
+    /// cover fewer points than the fleet was built with.
+    pub fn dead_machines(&self) -> usize {
+        match &self.meta {
+            Some(meta) => meta.iter().filter(|m| m.dead).count(),
+            None => self.machines.iter().filter(|m| m.is_dead()).count(),
+        }
     }
 
     /// Restore all machines for a fresh repetition (identical replay).
+    /// On a process fleet the `Reset` frame does the restoring in the
+    /// workers; machines whose worker process was killed stay dead — a
+    /// crashed process is gone, unlike a simulated in-process crash.
     pub fn reset(&mut self) {
-        for m in &mut self.machines {
-            m.reset();
+        let frames = self.meta.as_ref().map(|meta| {
+            let frame = protocol::request(Op::Reset).finish();
+            meta.iter()
+                .map(|mm| (!mm.dead).then(|| frame.clone()))
+                .collect::<Vec<_>>()
+        });
+        if let Some(frames) = frames {
+            self.control_round(&frames);
+        } else {
+            for m in &mut self.machines {
+                m.reset();
+            }
         }
         self.reset_wire_meter();
     }
@@ -187,11 +307,97 @@ impl Fleet {
     /// `seed` (independent repetition, the paper's protocol).
     pub fn reset_with_seed(&mut self, seed: u64) {
         let mut root = Pcg64::new(seed);
-        for (i, m) in self.machines.iter_mut().enumerate() {
-            m.reset();
-            m.reseed(root.split(i as u64));
+        let frames = self.meta.as_ref().map(|meta| {
+            meta.iter()
+                .enumerate()
+                .map(|(i, mm)| {
+                    // split for every machine, dead or not, so the
+                    // stream assignment matches an in-process fleet
+                    let rng = root.split(i as u64);
+                    if mm.dead {
+                        return None;
+                    }
+                    let mut w = protocol::request(Op::Reseed);
+                    for word in rng.to_raw() {
+                        w.put_u64(word);
+                    }
+                    Some(w.finish())
+                })
+                .collect::<Vec<_>>()
+        });
+        if let Some(frames) = frames {
+            self.control_round(&frames);
+        } else {
+            for (i, m) in self.machines.iter_mut().enumerate() {
+                m.reset();
+                m.reseed(root.split(i as u64));
+            }
         }
         self.reset_wire_meter();
+    }
+
+    /// Deliver lifecycle frames to the workers and fold the live-count
+    /// acks back into the metadata mirror (process fleets only).
+    fn control_round(&mut self, frames: &[Option<Vec<u8>>]) {
+        let chan = self.channel.wired_mut().expect("process fleet is wired");
+        let replies = chan.control(frames);
+        let meta = self.meta.as_mut().expect("process meta");
+        for (mm, reply) in meta.iter_mut().zip(replies) {
+            if mm.dead {
+                continue;
+            }
+            match reply {
+                Ok(ack) => mm.n_live = FrameReader::new(&ack).get_u64() as usize,
+                Err(e) => {
+                    eprintln!(
+                        "soccer: machine {} downgraded to dead during a lifecycle exchange: {e}",
+                        mm.id
+                    );
+                    mm.downgrade();
+                }
+            }
+        }
+    }
+
+    /// Run one protocol exchange over the wired channel. In-process
+    /// machines answer through `protocol::dispatch` on threads; worker
+    /// processes answer through the same dispatcher on their own CPU.
+    /// A failed link (crashed worker) yields `None` and downgrades the
+    /// machine to dead — the coordinator-side twin of `Machine::kill` —
+    /// instead of poisoning the run; on an in-process fleet a link
+    /// failure is a bug and panics.
+    fn wired_exchange(&mut self, engine: &dyn Engine, down: Down<'_>) -> Vec<Option<Vec<u8>>> {
+        let Fleet {
+            machines,
+            channel,
+            meta,
+            ..
+        } = self;
+        let chan = match channel {
+            FleetChannel::Wired(w) => w,
+            FleetChannel::Direct => unreachable!("wired_exchange on a direct fleet"),
+        };
+        let replies = chan.exchange(machines, engine, down, |m, req, e| {
+            protocol::dispatch(m, req, e).expect("machine-side protocol dispatch")
+        });
+        replies
+            .into_iter()
+            .enumerate()
+            .map(|(j, r)| match r {
+                Ok(frame) => Some(frame),
+                Err(e) => match meta {
+                    Some(meta) => {
+                        // loud on purpose: a silent downgrade would let a
+                        // run report paper-table numbers over a smaller n
+                        // than claimed with nothing flagging the loss
+                        eprintln!("soccer: machine {j} downgraded to dead after a link failure: {e}");
+                        meta[j].downgrade();
+                        None
+                    }
+                    None => panic!("machine {j}: in-process link failed: {e}"),
+                },
+            })
+            .collect()
     }
 
     /// Per-machine quotas summing to exactly `min(total, total_live)`:
@@ -201,7 +407,7 @@ impl Fleet {
     /// redistribution is deterministic (greedy, in machine order) so a
     /// fleet replay consumes the same coordinator RNG stream.
     fn exact_quotas(&self, total: usize, coord_rng: &mut Pcg64) -> Vec<usize> {
-        let caps: Vec<usize> = self.machines.iter().map(|m| m.n_live()).collect();
+        let caps = self.live_sizes();
         let cap_total: usize = caps.iter().sum();
         let total = total.min(cap_total);
         let weights: Vec<f64> = caps.iter().map(|&c| c as f64).collect();
@@ -244,10 +450,8 @@ impl Fleet {
         let q1 = self.exact_quotas(total, coord_rng);
         let q2 = self.exact_quotas(total, coord_rng);
         let dim = self.dim();
-        let workers = self.workers;
-        let (machines, wired) = self.parts();
 
-        if let Some(chan) = wired {
+        if self.is_wired() {
             // wire path: one quota message per machine (two u64 quotas),
             // one reply carrying both samples + the machine's self-timed
             // seconds
@@ -255,33 +459,18 @@ impl Fleet {
                 .iter()
                 .zip(&q2)
                 .map(|(&a, &b)| {
-                    let mut w = FrameWriter::with_capacity(16);
+                    let mut w = protocol::request(Op::SampleExactPair);
                     w.put_u64(a as u64);
                     w.put_u64(b as u64);
                     w.finish()
                 })
                 .collect();
-            let replies = chan.exchange(
-                machines,
-                &NativeEngine,
-                Down::PerMachine(&reqs),
-                |m, req, _e| {
-                    let mut r = FrameReader::new(req);
-                    let a = r.get_u64() as usize;
-                    let b = r.get_u64() as usize;
-                    let t1 = m.sample_exact(a);
-                    let t2 = m.sample_exact(b);
-                    let mut w = FrameWriter::new();
-                    w.put_matrix(&t1.value);
-                    w.put_matrix(&t2.value);
-                    w.put_f64(t1.secs + t2.secs);
-                    w.finish()
-                },
-            );
+            let replies = self.wired_exchange(&NativeEngine, Down::PerMachine(&reqs));
             return Self::reduce_pair(&replies, total, dim);
         }
 
-        let outs = par_map_mut(machines, workers, |i, m| {
+        let workers = self.workers;
+        let outs = par_map_mut(&mut self.machines, workers, |i, m| {
             let t1 = m.sample_exact(q1[i]);
             let t2 = m.sample_exact(q2[i]);
             (t1, t2)
@@ -300,28 +489,19 @@ impl Fleet {
     /// Bernoulli sampling exactly as written in Alg. 1 line 4.
     pub fn sample_pair_bernoulli(&mut self, alpha: f64) -> StepOut<(Matrix, Matrix)> {
         let dim = self.dim();
-        let workers = self.workers;
-        let (machines, wired) = self.parts();
 
-        if let Some(chan) = wired {
-            let mut w = FrameWriter::with_capacity(8);
+        if self.is_wired() {
+            let mut w = protocol::request(Op::SampleBernoulliPair);
             w.put_f64(alpha);
             let req = w.finish();
-            let replies =
-                chan.exchange(machines, &NativeEngine, Down::Broadcast(&req), |m, req, _e| {
-                    let mut r = FrameReader::new(req);
-                    let alpha = r.get_f64();
-                    let t = m.sample_bernoulli_pair(alpha);
-                    let mut w = FrameWriter::new();
-                    w.put_matrix(&t.value.0);
-                    w.put_matrix(&t.value.1);
-                    w.put_f64(t.secs);
-                    w.finish()
-                });
+            let replies = self.wired_exchange(&NativeEngine, Down::Broadcast(&req));
             return Self::reduce_pair(&replies, 64, dim);
         }
 
-        let outs = par_map_mut(machines, workers, |_, m| m.sample_bernoulli_pair(alpha));
+        let workers = self.workers;
+        let outs = par_map_mut(&mut self.machines, workers, |_, m| {
+            m.sample_bernoulli_pair(alpha)
+        });
         let mut p1 = Matrix::with_capacity(64, dim);
         let mut p2 = Matrix::with_capacity(64, dim);
         let mut per = Vec::with_capacity(outs.len());
@@ -341,35 +521,37 @@ impl Fleet {
         v: f32,
         engine: &dyn Engine,
     ) -> StepOut<usize> {
-        let workers = self.workers;
-        let (machines, wired) = self.parts();
-
-        if let Some(chan) = wired {
-            let mut w = FrameWriter::new();
+        if self.is_wired() {
+            let mut w = protocol::request(Op::Remove);
             w.put_f32(v);
-            w.put_matrix(centers);
+            w.put_matrix(centers).expect("centers fit the wire header");
             let req = w.finish();
-            let replies = chan.exchange(machines, engine, Down::Broadcast(&req), |m, req, e| {
-                let mut r = FrameReader::new(req);
-                let v = r.get_f32();
-                let centers = r.get_matrix();
-                let t = m.remove_within(&centers, v, e);
-                let mut w = FrameWriter::with_capacity(16);
-                w.put_u64(t.value as u64);
-                w.put_f64(t.secs);
-                w.finish()
-            });
+            let replies = self.wired_exchange(engine, Down::Broadcast(&req));
             let mut removed = 0usize;
             let mut per = Vec::with_capacity(replies.len());
-            for reply in &replies {
-                let mut r = FrameReader::new(reply);
-                removed += r.get_u64() as usize;
-                per.push(r.get_f64());
+            for (j, reply) in replies.iter().enumerate() {
+                match reply {
+                    Some(frame) => {
+                        let mut r = FrameReader::new(frame);
+                        let rj = r.get_u64() as usize;
+                        removed += rj;
+                        per.push(r.get_f64());
+                        // the removal ack is where the coordinator's
+                        // size metadata comes from (§3 model)
+                        if let Some(meta) = &mut self.meta {
+                            meta[j].n_live = meta[j].n_live.saturating_sub(rj);
+                        }
+                    }
+                    None => per.push(0.0),
+                }
             }
             return StepOut::from_parts(removed, per);
         }
 
-        let outs = each_direct(machines, workers, engine, |m, e| m.remove_within(centers, v, e));
+        let workers = self.workers;
+        let outs = each_direct(&mut self.machines, workers, engine, |m, e| {
+            m.remove_within(centers, v, e)
+        });
         StepOut::from_parts(
             outs.iter().map(|t| t.value).sum(),
             outs.iter().map(|t| t.secs).collect(),
@@ -380,29 +562,25 @@ impl Fleet {
     pub fn drain(&mut self) -> Matrix {
         let dim = self.dim();
         let total = self.total_live();
-        let (machines, wired) = self.parts();
 
-        if let Some(chan) = wired {
-            let replies = chan.exchange(
-                machines,
-                &NativeEngine,
-                Down::Broadcast(&[]),
-                |m, _req, _e| {
-                    let mut w = FrameWriter::new();
-                    w.put_matrix(&m.drain());
-                    w.finish()
-                },
-            );
+        if self.is_wired() {
+            let req = protocol::request(Op::Drain).finish();
+            let replies = self.wired_exchange(&NativeEngine, Down::Broadcast(&req));
             let mut v = Matrix::with_capacity(total, dim);
-            for reply in &replies {
+            for reply in replies.iter().flatten() {
                 let mut r = FrameReader::new(reply);
                 v.extend(&r.get_matrix());
+            }
+            if let Some(meta) = &mut self.meta {
+                for mm in meta.iter_mut() {
+                    mm.n_live = 0;
+                }
             }
             return v;
         }
 
         let mut v = Matrix::with_capacity(total, dim);
-        for m in machines.iter_mut() {
+        for m in self.machines.iter_mut() {
             let part = m.drain();
             v.extend(&part);
         }
@@ -411,16 +589,13 @@ impl Fleet {
 
     /// Distributed evaluation of cost(X, centers) over ORIGINAL shards.
     pub fn cost_full(&mut self, centers: &Matrix, engine: &dyn Engine) -> StepOut<f64> {
-        let workers = self.workers;
-        let (machines, wired) = self.parts();
-
-        if let Some(chan) = wired {
-            return Self::wired_scalar_step(chan, machines, engine, centers, |m, c, e| {
-                m.cost_original(c, e)
-            });
+        if self.is_wired() {
+            return self.wired_scalar_step(Op::CostFull, centers, engine);
         }
-
-        let outs = each_direct(machines, workers, engine, |m, e| m.cost_original(centers, e));
+        let workers = self.workers;
+        let outs = each_direct(&mut self.machines, workers, engine, |m, e| {
+            m.cost_original(centers, e)
+        });
         StepOut::from_parts(
             outs.iter().map(|t| t.value).sum(),
             outs.iter().map(|t| t.secs).collect(),
@@ -430,26 +605,19 @@ impl Fleet {
     /// Distributed cluster sizes of `centers` over X (reduction weights).
     pub fn counts_full(&mut self, centers: &Matrix, engine: &dyn Engine) -> StepOut<Vec<f64>> {
         let k = centers.rows();
-        let workers = self.workers;
-        let (machines, wired) = self.parts();
 
-        if let Some(chan) = wired {
-            let mut w = FrameWriter::new();
-            w.put_matrix(centers);
+        if self.is_wired() {
+            let mut w = protocol::request(Op::CountsFull);
+            w.put_matrix(centers).expect("centers fit the wire header");
             let req = w.finish();
-            let replies = chan.exchange(machines, engine, Down::Broadcast(&req), |m, req, e| {
-                let mut r = FrameReader::new(req);
-                let centers = r.get_matrix();
-                let t = m.counts_original(&centers, e);
-                let mut w = FrameWriter::new();
-                w.put_f64s(&t.value);
-                w.put_f64(t.secs);
-                w.finish()
-            });
+            let replies = self.wired_exchange(engine, Down::Broadcast(&req));
             return Self::reduce_counts(k, &replies);
         }
 
-        let outs = each_direct(machines, workers, engine, |m, e| m.counts_original(centers, e));
+        let workers = self.workers;
+        let outs = each_direct(&mut self.machines, workers, engine, |m, e| {
+            m.counts_original(centers, e)
+        });
         let mut total = vec![0.0f64; k];
         let mut per = Vec::with_capacity(outs.len());
         for t in outs {
@@ -462,16 +630,22 @@ impl Fleet {
     }
 
     /// Decode per-machine `(counts, secs)` replies and sum the counts.
-    fn reduce_counts(k: usize, replies: &[Vec<u8>]) -> StepOut<Vec<f64>> {
+    /// A `None` reply (downgraded machine) contributes nothing.
+    fn reduce_counts(k: usize, replies: &[Option<Vec<u8>>]) -> StepOut<Vec<f64>> {
         let mut total = vec![0.0f64; k];
         let mut per = Vec::with_capacity(replies.len());
         for reply in replies {
-            let mut r = FrameReader::new(reply);
-            let counts = r.get_f64s();
-            for (a, b) in total.iter_mut().zip(&counts) {
-                *a += b;
+            match reply {
+                Some(frame) => {
+                    let mut r = FrameReader::new(frame);
+                    let counts = r.get_f64s();
+                    for (a, b) in total.iter_mut().zip(&counts) {
+                        *a += b;
+                    }
+                    per.push(r.get_f64());
+                }
+                None => per.push(0.0),
             }
-            per.push(r.get_f64());
         }
         StepOut::from_parts(total, per)
     }
@@ -479,16 +653,13 @@ impl Fleet {
     // ---- k-means|| fleet steps ---------------------------------------------
 
     pub fn kmpar_init(&mut self, initial: &Matrix, engine: &dyn Engine) -> StepOut<f64> {
-        let workers = self.workers;
-        let (machines, wired) = self.parts();
-
-        if let Some(chan) = wired {
-            return Self::wired_scalar_step(chan, machines, engine, initial, |m, c, e| {
-                m.kmpar_init(c, e)
-            });
+        if self.is_wired() {
+            return self.wired_scalar_step(Op::KmparInit, initial, engine);
         }
-
-        let outs = each_direct(machines, workers, engine, |m, e| m.kmpar_init(initial, e));
+        let workers = self.workers;
+        let outs = each_direct(&mut self.machines, workers, engine, |m, e| {
+            m.kmpar_init(initial, e)
+        });
         StepOut::from_parts(
             outs.iter().map(|t| t.value).sum(),
             outs.iter().map(|t| t.secs).collect(),
@@ -496,16 +667,13 @@ impl Fleet {
     }
 
     pub fn kmpar_update(&mut self, new_centers: &Matrix, engine: &dyn Engine) -> StepOut<f64> {
-        let workers = self.workers;
-        let (machines, wired) = self.parts();
-
-        if let Some(chan) = wired {
-            return Self::wired_scalar_step(chan, machines, engine, new_centers, |m, c, e| {
-                m.kmpar_update(c, e)
-            });
+        if self.is_wired() {
+            return self.wired_scalar_step(Op::KmparUpdate, new_centers, engine);
         }
-
-        let outs = each_direct(machines, workers, engine, |m, e| m.kmpar_update(new_centers, e));
+        let workers = self.workers;
+        let outs = each_direct(&mut self.machines, workers, engine, |m, e| {
+            m.kmpar_update(new_centers, e)
+        });
         StepOut::from_parts(
             outs.iter().map(|t| t.value).sum(),
             outs.iter().map(|t| t.secs).collect(),
@@ -513,90 +681,84 @@ impl Fleet {
     }
 
     /// The shared wired shape of every "broadcast a center set, reduce
-    /// an f64" step: encode the matrix once, exchange, decode
+    /// an f64" step: encode the op + matrix once, exchange, decode
     /// `(value, secs)` per machine and sum. One frame layout, one
     /// place to change it.
-    fn wired_scalar_step(
-        chan: &mut WiredChannel,
-        machines: &mut [Machine],
-        engine: &dyn Engine,
-        centers: &Matrix,
-        op: impl Fn(&mut Machine, &Matrix, &dyn Engine) -> Timed<f64> + Sync,
-    ) -> StepOut<f64> {
-        let mut w = FrameWriter::new();
-        w.put_matrix(centers);
+    fn wired_scalar_step(&mut self, op: Op, centers: &Matrix, engine: &dyn Engine) -> StepOut<f64> {
+        let mut w = protocol::request(op);
+        w.put_matrix(centers).expect("centers fit the wire header");
         let req = w.finish();
-        let replies = chan.exchange(machines, engine, Down::Broadcast(&req), |m, req, e| {
-            let mut r = FrameReader::new(req);
-            let centers = r.get_matrix();
-            let t = op(m, &centers, e);
-            let mut w = FrameWriter::with_capacity(16);
-            w.put_f64(t.value);
-            w.put_f64(t.secs);
-            w.finish()
-        });
+        let replies = self.wired_exchange(engine, Down::Broadcast(&req));
         Self::reduce_scalar(&replies)
     }
 
     /// Decode per-machine `(matrix, matrix, secs)` replies into two
     /// concatenated samples (shared by both sampling variants).
-    fn reduce_pair(replies: &[Vec<u8>], rows_hint: usize, dim: usize) -> StepOut<(Matrix, Matrix)> {
+    fn reduce_pair(
+        replies: &[Option<Vec<u8>>],
+        rows_hint: usize,
+        dim: usize,
+    ) -> StepOut<(Matrix, Matrix)> {
         let mut p1 = Matrix::with_capacity(rows_hint, dim);
         let mut p2 = Matrix::with_capacity(rows_hint, dim);
         let mut per = Vec::with_capacity(replies.len());
         for reply in replies {
-            let mut r = FrameReader::new(reply);
-            p1.extend(&r.get_matrix());
-            p2.extend(&r.get_matrix());
-            per.push(r.get_f64());
+            match reply {
+                Some(frame) => {
+                    let mut r = FrameReader::new(frame);
+                    p1.extend(&r.get_matrix());
+                    p2.extend(&r.get_matrix());
+                    per.push(r.get_f64());
+                }
+                None => per.push(0.0),
+            }
         }
         StepOut::from_parts((p1, p2), per)
     }
 
     /// Decode per-machine `(f64 value, secs)` replies and sum the values.
-    fn reduce_scalar(replies: &[Vec<u8>]) -> StepOut<f64> {
+    fn reduce_scalar(replies: &[Option<Vec<u8>>]) -> StepOut<f64> {
         let mut total = 0.0f64;
         let mut per = Vec::with_capacity(replies.len());
         for reply in replies {
-            let mut r = FrameReader::new(reply);
-            total += r.get_f64();
-            per.push(r.get_f64());
+            match reply {
+                Some(frame) => {
+                    let mut r = FrameReader::new(frame);
+                    total += r.get_f64();
+                    per.push(r.get_f64());
+                }
+                None => per.push(0.0),
+            }
         }
         StepOut::from_parts(total, per)
     }
 
     pub fn kmpar_sample(&mut self, l: f64, phi: f64) -> StepOut<Matrix> {
         let dim = self.dim();
-        let workers = self.workers;
-        let (machines, wired) = self.parts();
 
-        if let Some(chan) = wired {
-            let mut w = FrameWriter::with_capacity(16);
+        if self.is_wired() {
+            let mut w = protocol::request(Op::KmparSample);
             w.put_f64(l);
             w.put_f64(phi);
             let req = w.finish();
-            let replies =
-                chan.exchange(machines, &NativeEngine, Down::Broadcast(&req), |m, req, _e| {
-                    let mut r = FrameReader::new(req);
-                    let l = r.get_f64();
-                    let phi = r.get_f64();
-                    let t = m.kmpar_sample(l, phi);
-                    let mut w = FrameWriter::new();
-                    w.put_matrix(&t.value);
-                    w.put_f64(t.secs);
-                    w.finish()
-                });
+            let replies = self.wired_exchange(&NativeEngine, Down::Broadcast(&req));
             let mut all = Matrix::with_capacity(16, dim);
             let mut per = Vec::with_capacity(replies.len());
             for reply in &replies {
-                let mut r = FrameReader::new(reply);
-                all.extend(&r.get_matrix());
-                per.push(r.get_f64());
+                match reply {
+                    Some(frame) => {
+                        let mut r = FrameReader::new(frame);
+                        all.extend(&r.get_matrix());
+                        per.push(r.get_f64());
+                    }
+                    None => per.push(0.0),
+                }
             }
             return StepOut::from_parts(all, per);
         }
 
-        let outs = par_map_mut(machines, workers, |_, m| m.kmpar_sample(l, phi));
+        let workers = self.workers;
+        let outs = par_map_mut(&mut self.machines, workers, |_, m| m.kmpar_sample(l, phi));
         let mut all = Matrix::with_capacity(16, dim);
         let mut per = Vec::with_capacity(outs.len());
         for t in outs {
@@ -615,28 +777,18 @@ impl Fleet {
         engine: &dyn Engine,
     ) -> StepOut<Vec<f64>> {
         let k = centers.rows();
-        let workers = self.workers;
-        let (machines, wired) = self.parts();
 
-        if let Some(chan) = wired {
-            let mut w = FrameWriter::new();
+        if self.is_wired() {
+            let mut w = protocol::request(Op::CountsFullBelow);
             w.put_f32(cutoff);
-            w.put_matrix(centers);
+            w.put_matrix(centers).expect("centers fit the wire header");
             let req = w.finish();
-            let replies = chan.exchange(machines, engine, Down::Broadcast(&req), |m, req, e| {
-                let mut r = FrameReader::new(req);
-                let cutoff = r.get_f32();
-                let centers = r.get_matrix();
-                let t = m.counts_original_below(&centers, cutoff, e);
-                let mut w = FrameWriter::new();
-                w.put_f64s(&t.value);
-                w.put_f64(t.secs);
-                w.finish()
-            });
+            let replies = self.wired_exchange(engine, Down::Broadcast(&req));
             return Self::reduce_counts(k, &replies);
         }
 
-        let outs = each_direct(machines, workers, engine, |m, e| {
+        let workers = self.workers;
+        let outs = each_direct(&mut self.machines, workers, engine, |m, e| {
             m.counts_original_below(centers, cutoff, e)
         });
         let mut total = vec![0.0f64; k];
@@ -653,8 +805,24 @@ impl Fleet {
     /// Kill a machine: its live shard is lost (crash without
     /// replication) and it stops contributing to every later step.
     /// Returns the number of live points lost. Killing an unknown or
-    /// already-dead machine is a no-op.
+    /// already-dead machine is a no-op. On a process fleet this
+    /// terminates the worker process itself (SIGKILL + reap): the crash
+    /// takes the machine, not just its data.
     pub fn kill_machine(&mut self, id: usize) -> usize {
+        if let Some(meta) = &mut self.meta {
+            let Some(j) = meta.iter().position(|mm| mm.id == id) else {
+                return 0;
+            };
+            if meta[j].dead {
+                return 0;
+            }
+            if let FleetChannel::Wired(w) = &mut self.channel {
+                w.kill_link(j);
+            }
+            let lost = meta[j].n_live;
+            meta[j].downgrade();
+            return lost;
+        }
         for m in &mut self.machines {
             if m.id == id {
                 return m.kill();
@@ -666,30 +834,21 @@ impl Fleet {
     /// Per-point costs of `centers` over the ORIGINAL shards of all
     /// surviving machines, concatenated (for trimmed-cost evaluation).
     pub fn per_point_costs_full(&mut self, centers: &Matrix, engine: &dyn Engine) -> Vec<f32> {
-        let workers = self.workers;
-        let (machines, wired) = self.parts();
-
-        if let Some(chan) = wired {
-            let mut w = FrameWriter::new();
-            w.put_matrix(centers);
+        if self.is_wired() {
+            let mut w = protocol::request(Op::PerPointCosts);
+            w.put_matrix(centers).expect("centers fit the wire header");
             let req = w.finish();
-            let replies = chan.exchange(machines, engine, Down::Broadcast(&req), |m, req, e| {
-                let mut r = FrameReader::new(req);
-                let centers = r.get_matrix();
-                let t = m.per_point_costs_original(&centers, e);
-                let mut w = FrameWriter::new();
-                w.put_f32s(&t.value);
-                w.finish()
-            });
+            let replies = self.wired_exchange(engine, Down::Broadcast(&req));
             let mut all = Vec::new();
-            for reply in &replies {
+            for reply in replies.iter().flatten() {
                 let mut r = FrameReader::new(reply);
                 all.extend(r.get_f32s());
             }
             return all;
         }
 
-        let outs = each_direct(machines, workers, engine, |m, e| {
+        let workers = self.workers;
+        let outs = each_direct(&mut self.machines, workers, engine, |m, e| {
             m.per_point_costs_original(centers, e)
         });
         let mut all = Vec::new();
@@ -700,42 +859,71 @@ impl Fleet {
     }
 
     /// Pick one uniformly random point across live shards (k-means||
-    /// initialization).
+    /// initialization). If the picked machine's worker process turns
+    /// out to have crashed, it is downgraded to dead and the draw is
+    /// repeated over the survivors. A fleet with no live points left —
+    /// all machines dead or drained — panics (`total > 0`), matching
+    /// the in-process contract: there is no point to return and the
+    /// caller's algorithm cannot proceed.
     pub fn uniform_point(&mut self, coord_rng: &mut Pcg64) -> Matrix {
-        let total = self.total_live();
-        assert!(total > 0);
-        let mut target = coord_rng.below(total);
-        // resolve (machine, local index) from coordinator-side size
-        // metadata; the point itself still crosses the wire
-        let mut pick = None;
-        for (j, m) in self.machines.iter().enumerate() {
-            if target < m.n_live() {
-                pick = Some((j, target));
-                break;
+        loop {
+            let total = self.total_live();
+            assert!(total > 0);
+            let mut target = coord_rng.below(total);
+            // resolve (machine, local index) from coordinator-side size
+            // metadata; the point itself still crosses the wire
+            let sizes = self.live_sizes();
+            let mut pick = None;
+            for (j, &sz) in sizes.iter().enumerate() {
+                if target < sz {
+                    pick = Some((j, target));
+                    break;
+                }
+                target -= sz;
             }
-            target -= m.n_live();
-        }
-        let (j_pick, local) = pick.expect("index within total");
-        let (machines, wired) = self.parts();
+            let (j_pick, local) = pick.expect("index within total");
 
-        if let Some(chan) = wired {
+            if !self.is_wired() {
+                return self.machines[j_pick].live().select(&[local]);
+            }
+
             // only the picked machine participates: a single-link
             // exchange keeps the meters free of skip-message traffic
-            let mut w = FrameWriter::with_capacity(8);
+            let mut w = protocol::request(Op::UniformPoint);
             w.put_u64(local as u64);
             let req = w.finish();
-            let reply = chan.exchange_one(j_pick, &mut machines[j_pick], &req, |m, req| {
-                let mut r = FrameReader::new(req);
-                let idx = r.get_u64() as usize;
-                let mut w = FrameWriter::new();
-                w.put_matrix(&m.live().select(&[idx]));
-                w.finish()
-            });
-            let mut r = FrameReader::new(&reply);
-            return r.get_matrix();
+            let Fleet {
+                machines,
+                channel,
+                meta,
+                ..
+            } = self;
+            let chan = channel.wired_mut().expect("wired");
+            let result = match meta {
+                None => chan.exchange_one(j_pick, &mut machines[j_pick], &req, |m, req| {
+                    protocol::dispatch(m, req, &NativeEngine)
+                        .expect("machine-side protocol dispatch")
+                }),
+                // worker processes dispatch on their side; the handler
+                // is never invoked (there is no local machine to hand it)
+                Some(_) => chan.exchange_one(j_pick, &mut (), &req, |_, _| {
+                    unreachable!("process links dispatch in the worker")
+                }),
+            };
+            match result {
+                Ok(reply) => return FrameReader::new(&reply).get_matrix(),
+                Err(e) => match meta {
+                    Some(meta) => {
+                        eprintln!(
+                            "soccer: machine {j_pick} downgraded to dead after a link failure: {e}"
+                        );
+                        meta[j_pick].downgrade();
+                        continue; // redraw over the survivors
+                    }
+                    None => panic!("machine {j_pick}: in-process link failed: {e}"),
+                },
+            }
         }
-
-        machines[j_pick].live().select(&[local])
     }
 }
 
@@ -986,7 +1174,7 @@ mod tests {
 
     #[test]
     fn transport_meter_counts_protocol_bytes() {
-        use crate::transport::wire::{matrix_bytes, FRAME_OVERHEAD, MATRIX_HEADER};
+        use crate::transport::wire::{matrix_bytes, FRAME_OVERHEAD, MATRIX_HEADER, OP_TAG};
         let mut f = wired_fleet(300, 5, TransportKind::InProc);
         assert_eq!(f.wire_bytes(), (0, 0));
         let mut rng = Pcg64::new(8);
@@ -994,8 +1182,8 @@ mod tests {
         let sampled = out.value.0.rows() + out.value.1.rows();
         assert_eq!(sampled, 120);
         let (up, down) = f.wire_bytes();
-        // down: 5 per-machine quota frames of two u64s
-        assert_eq!(down, 5 * (FRAME_OVERHEAD + 16));
+        // down: 5 per-machine quota frames of an op tag + two u64s
+        assert_eq!(down, 5 * (FRAME_OVERHEAD + OP_TAG + 16));
         // up: 5 replies of (matrix, matrix, f64 secs) carrying 120
         // points of dimension 3 in total
         assert_eq!(
@@ -1007,7 +1195,7 @@ mod tests {
         f.reset_wire_meter();
         f.broadcast_remove(&centers, 0.1, &NativeEngine);
         let (_, down) = f.wire_bytes();
-        assert_eq!(down, FRAME_OVERHEAD + 4 + matrix_bytes(1, 3));
+        assert_eq!(down, FRAME_OVERHEAD + OP_TAG + 4 + matrix_bytes(1, 3));
         // reset() clears the meter
         f.reset();
         assert_eq!(f.wire_bytes(), (0, 0));

@@ -7,10 +7,16 @@
 /// Communication counters. The point counts are analytic bookkeeping
 /// in the paper's unit (multiply by 4·d for data bytes); the byte
 /// counts are *measured* by the fleet's transport when it runs over a
-/// wired channel (`transport::InProcTransport` /
-/// `transport::LoopbackTcpTransport`) and stay 0 on the direct-call
-/// fast path. `tests/end_to_end.rs` asserts the two reconcile exactly:
-/// measured bytes = points × 4·d + the metered frame/control overhead.
+/// wired channel (in-process `InProc`/`LoopbackTcp` links, or the
+/// spawned `soccer-machine` worker processes of
+/// `TransportKind::Process`) and stay 0 on the direct-call fast path.
+/// All wired modes carry identical frames, so their meters agree to
+/// the byte; on a process fleet the per-machine seconds feeding
+/// `machine_time_max` are measured inside the worker processes and
+/// reported over the wire, not simulated coordinator-side.
+/// `tests/end_to_end.rs` asserts measurement and analysis reconcile
+/// exactly: measured bytes = points × 4·d + the metered frame/control
+/// overhead.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommStats {
     /// points sent machines → coordinator

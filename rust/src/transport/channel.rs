@@ -1,11 +1,21 @@
 //! `FleetChannel`: the seam between the coordinator-side fleet
 //! orchestration and the per-machine transports.
 //!
-//! A wired channel owns both ends of every coordinator↔machine link
-//! (the machines run as threads in this process, so their endpoints
-//! live here too) and provides one primitive, [`WiredChannel::exchange`]:
-//! send a request down every link, run the machine-side handler on each
-//! machine concurrently, collect one reply per link. All protocol byte
+//! A wired channel is one of two shapes:
+//!
+//! - **Local** (`InProc` / `LoopbackTcp`): the channel owns both ends
+//!   of every link; machine-side handling runs on threads in this
+//!   process, driven by the handler passed to
+//!   [`WiredChannel::exchange`].
+//! - **Process**: the machine ends live in spawned `soccer-machine`
+//!   worker processes ([`crate::transport::process`]). The channel owns
+//!   only the coordinator ends; the handler argument is ignored because
+//!   the workers run `protocol::dispatch` themselves.
+//!
+//! Either way [`WiredChannel::exchange`] is the one primitive: send a
+//! request down every link, collect one reply per link — returned as a
+//! per-machine `Result`, so a crashed worker process is a value the
+//! fleet can downgrade on, not a panic or a deadlock. All protocol byte
 //! metering happens here:
 //!
 //! - `down_bytes` — coordinator → machines. A [`Down::Broadcast`] is
@@ -17,8 +27,16 @@
 //! Counts include the 4-byte frame length prefixes, so they reconcile
 //! exactly with the per-endpoint [`Transport`] counters (up to the
 //! broadcast-once convention, which the raw counters don't apply).
+//! On a failure-free run the meters are byte-identical across InProc,
+//! LoopbackTcp and Process — the frames are the same. On a failure run
+//! they diverge by design: a dead *local* machine still answers with
+//! empty frames (the link outlives the simulated crash), while a dead
+//! *worker process* has no link left, so nothing is sent to it or
+//! metered for it.
 
+use super::process::WorkerLink;
 use super::{InProcTransport, LoopbackTcpTransport, Transport, TransportKind};
+use crate::format_err;
 use crate::runtime::{Engine, NativeEngine};
 use crate::util::error::Result;
 
@@ -28,6 +46,15 @@ pub enum Down<'a> {
     Broadcast(&'a [u8]),
     /// One distinct frame per machine, metered per machine.
     PerMachine(&'a [Vec<u8>]),
+}
+
+impl Down<'_> {
+    fn frame_for(&self, j: usize) -> &[u8] {
+        match self {
+            Down::Broadcast(f) => f,
+            Down::PerMachine(fs) => fs[j].as_slice(),
+        }
+    }
 }
 
 /// A fleet's communication fabric: either the direct-call fast path or
@@ -41,6 +68,9 @@ pub enum FleetChannel {
 
 impl FleetChannel {
     /// Open `n` coordinator↔machine links over the given transport.
+    /// `TransportKind::Process` links cannot be opened here — workers
+    /// are born holding their shard, so the fleet builds them through
+    /// [`FleetChannel::process`] with the shard data in hand.
     pub fn connect(kind: TransportKind, n: usize) -> Result<FleetChannel> {
         match kind {
             TransportKind::Direct => Ok(FleetChannel::Direct),
@@ -64,7 +94,16 @@ impl FleetChannel {
                 }
                 Ok(FleetChannel::Wired(WiredChannel::new(coord_eps, machine_eps)))
             }
+            TransportKind::Process => Err(format_err!(
+                "process links carry shards at birth; build the fleet with \
+                 Fleet::with_transport(.., TransportKind::Process)"
+            )),
         }
+    }
+
+    /// Wrap spawned worker links (see `process::spawn_fleet`).
+    pub fn process(workers: Vec<WorkerLink>) -> FleetChannel {
+        FleetChannel::Wired(WiredChannel::from_workers(workers))
     }
 
     pub fn wired_mut(&mut self) -> Option<&mut WiredChannel> {
@@ -82,11 +121,21 @@ impl FleetChannel {
     }
 }
 
-/// The wired fabric: one transport pair per machine plus the protocol
-/// byte meters.
+/// Where the machine ends of the links live.
+enum LinkSet {
+    /// Both endpoints in this process; machine-side handlers run on
+    /// threads driven by `exchange`.
+    Local {
+        coord_eps: Vec<Box<dyn Transport>>,
+        machine_eps: Vec<Box<dyn Transport>>,
+    },
+    /// Machine endpoints live in spawned worker processes.
+    Process { workers: Vec<WorkerLink> },
+}
+
+/// The wired fabric: the links plus the protocol byte meters.
 pub struct WiredChannel {
-    coord_eps: Vec<Box<dyn Transport>>,
-    machine_eps: Vec<Box<dyn Transport>>,
+    links: LinkSet,
     up_bytes: usize,
     down_bytes: usize,
 }
@@ -98,18 +147,37 @@ impl WiredChannel {
     ) -> WiredChannel {
         assert_eq!(coord_eps.len(), machine_eps.len(), "unpaired endpoints");
         WiredChannel {
-            coord_eps,
-            machine_eps,
+            links: LinkSet::Local {
+                coord_eps,
+                machine_eps,
+            },
+            up_bytes: 0,
+            down_bytes: 0,
+        }
+    }
+
+    pub fn from_workers(workers: Vec<WorkerLink>) -> WiredChannel {
+        WiredChannel {
+            links: LinkSet::Process { workers },
             up_bytes: 0,
             down_bytes: 0,
         }
     }
 
     pub fn name(&self) -> &'static str {
-        self.coord_eps
-            .first()
-            .map(|t| t.name())
-            .unwrap_or("wired")
+        match &self.links {
+            LinkSet::Local { coord_eps, .. } => {
+                coord_eps.first().map(|t| t.name()).unwrap_or("wired")
+            }
+            LinkSet::Process { .. } => "process",
+        }
+    }
+
+    fn num_links(&self) -> usize {
+        match &self.links {
+            LinkSet::Local { coord_eps, .. } => coord_eps.len(),
+            LinkSet::Process { workers } => workers.len(),
+        }
     }
 
     /// Protocol bytes moved since the last [`WiredChannel::reset_meter`]:
@@ -125,17 +193,47 @@ impl WiredChannel {
 
     /// Raw per-endpoint byte totals since the links were opened:
     /// `(coordinator received, coordinator sent)` — every physical copy
-    /// counted, broadcasts included once per machine.
+    /// counted, broadcasts included once per machine (and, on process
+    /// links, the handshake/lifecycle frames the protocol meters skip).
     pub fn raw_bytes(&self) -> (usize, usize) {
-        let recv = self.coord_eps.iter().map(|t| t.bytes_received()).sum();
-        let sent = self.coord_eps.iter().map(|t| t.bytes_sent()).sum();
-        (recv, sent)
+        match &self.links {
+            LinkSet::Local { coord_eps, .. } => {
+                let recv = coord_eps.iter().map(|t| t.bytes_received()).sum();
+                let sent = coord_eps.iter().map(|t| t.bytes_sent()).sum();
+                (recv, sent)
+            }
+            LinkSet::Process { workers } => {
+                let recv = workers.iter().map(|w| w.bytes_received()).sum();
+                let sent = workers.iter().map(|w| w.bytes_sent()).sum();
+                (recv, sent)
+            }
+        }
+    }
+
+    /// OS pids of the live worker processes (`None` per dead link);
+    /// empty on local links.
+    pub fn worker_pids(&self) -> Vec<Option<u32>> {
+        match &self.links {
+            LinkSet::Local { .. } => Vec::new(),
+            LinkSet::Process { workers } => workers.iter().map(|w| w.pid()).collect(),
+        }
+    }
+
+    /// Terminate the worker process behind link `j` (failure
+    /// injection). Local links have no process to kill: returns false.
+    pub fn kill_link(&mut self, j: usize) -> bool {
+        match &mut self.links {
+            LinkSet::Local { .. } => false,
+            LinkSet::Process { workers } => workers[j].kill(),
+        }
     }
 
     /// One synchronous protocol step: deliver `down` to every machine,
-    /// run `handler` machine-side on each, return the replies in
-    /// machine order.
+    /// collect one reply per link, in machine order. A link whose peer
+    /// is gone yields an `Err` entry — never a hang — and stays
+    /// silently skipped (no bytes metered for it) afterwards.
     ///
+    /// On local links the machine side runs `handler` in this process.
     /// Under a `parallel_safe` engine each machine runs on its own
     /// thread with a `NativeEngine` while the coordinator streams
     /// requests and drains replies concurrently — large frames can't
@@ -152,81 +250,154 @@ impl WiredChannel {
     /// sequentially on this thread with the real engine; a helper
     /// thread plays coordinator for each link so framing stays
     /// deadlock-free there too.
+    ///
+    /// On process links `items`, `engine` and `handler` are unused —
+    /// the workers are the machine side, and request/reply pipelining
+    /// across distinct sockets keeps the step deadlock-free (a worker
+    /// never sends before fully draining its request).
     pub fn exchange<T: Send>(
         &mut self,
         items: &mut [T],
         engine: &dyn Engine,
         down: Down<'_>,
         handler: impl Fn(&mut T, &[u8], &dyn Engine) -> Vec<u8> + Sync,
-    ) -> Vec<Vec<u8>> {
-        let n = items.len();
-        assert_eq!(n, self.coord_eps.len(), "items vs links mismatch");
-        match &down {
-            Down::Broadcast(f) => self.down_bytes += 4 + f.len(),
-            Down::PerMachine(fs) => {
-                assert_eq!(fs.len(), n, "per-machine frames vs links mismatch");
-                for f in fs.iter() {
-                    self.down_bytes += 4 + f.len();
-                }
-            }
+    ) -> Vec<Result<Vec<u8>>> {
+        let n = self.num_links();
+        if let Down::PerMachine(fs) = &down {
+            assert_eq!(fs.len(), n, "per-machine frames vs links mismatch");
         }
-
         let WiredChannel {
-            coord_eps,
-            machine_eps,
+            links,
             up_bytes,
-            ..
+            down_bytes,
         } = self;
-        let handler = &handler;
-        let mut replies: Vec<Vec<u8>> = Vec::with_capacity(n);
+        let replies = match links {
+            LinkSet::Local {
+                coord_eps,
+                machine_eps,
+            } => {
+                assert_eq!(items.len(), n, "items vs links mismatch");
+                // local links exist for byte measurement: every frame is
+                // deliverable, so the meter runs ahead of the I/O
+                match &down {
+                    Down::Broadcast(f) => *down_bytes += 4 + f.len(),
+                    Down::PerMachine(fs) => {
+                        for f in fs.iter() {
+                            *down_bytes += 4 + f.len();
+                        }
+                    }
+                }
+                Self::exchange_local(coord_eps, machine_eps, items, engine, &down, &handler)
+            }
+            LinkSet::Process { workers } => {
+                Self::exchange_process(workers, down_bytes, &down)
+            }
+        };
+        for r in replies.iter().flatten() {
+            *up_bytes += 4 + r.len();
+        }
+        replies
+    }
+
+    fn exchange_local<T: Send>(
+        coord_eps: &mut [Box<dyn Transport>],
+        machine_eps: &mut [Box<dyn Transport>],
+        items: &mut [T],
+        engine: &dyn Engine,
+        down: &Down<'_>,
+        handler: &(impl Fn(&mut T, &[u8], &dyn Engine) -> Vec<u8> + Sync),
+    ) -> Vec<Result<Vec<u8>>> {
+        let n = items.len();
+        let mut replies: Vec<Result<Vec<u8>>> = Vec::with_capacity(n);
 
         if engine.parallel_safe() {
             std::thread::scope(|s| {
                 for (t, ep) in items.iter_mut().zip(machine_eps.iter_mut()) {
                     s.spawn(move || {
-                        let req = ep.recv().expect("machine-side recv");
+                        // a vanished peer means the exchange is being
+                        // abandoned: exit the machine loop cleanly
+                        // instead of panicking the thread
+                        let req = match ep.recv() {
+                            Ok(req) => req,
+                            Err(_) => return,
+                        };
                         let reply = handler(t, &req, &NativeEngine);
-                        ep.send(&reply).expect("machine-side send");
+                        let _ = ep.send(&reply);
                     });
                 }
+                let mut send_errs: Vec<Option<crate::util::error::Error>> = Vec::with_capacity(n);
                 for (j, ep) in coord_eps.iter_mut().enumerate() {
-                    let frame: &[u8] = match &down {
-                        Down::Broadcast(f) => *f,
-                        Down::PerMachine(fs) => fs[j].as_slice(),
-                    };
-                    ep.send(frame).expect("coordinator send");
+                    send_errs.push(ep.send(down.frame_for(j)).err());
                 }
-                for ep in coord_eps.iter_mut() {
-                    replies.push(ep.recv().expect("coordinator recv"));
+                for (ep, send_err) in coord_eps.iter_mut().zip(send_errs) {
+                    replies.push(match send_err {
+                        Some(e) => Err(e),
+                        None => ep.recv(),
+                    });
                 }
             });
         } else {
             for j in 0..n {
-                let frame: &[u8] = match &down {
-                    Down::Broadcast(f) => *f,
-                    Down::PerMachine(fs) => fs[j].as_slice(),
-                };
+                let frame = down.frame_for(j);
                 let cep = &mut coord_eps[j];
                 let mep = &mut machine_eps[j];
                 let item = &mut items[j];
-                let reply_frame = std::thread::scope(|s| {
-                    let h = s.spawn(move || {
-                        cep.send(frame).expect("coordinator send");
-                        cep.recv().expect("coordinator recv")
+                let reply = std::thread::scope(|s| {
+                    let h = s.spawn(move || -> Result<Vec<u8>> {
+                        cep.send(frame)?;
+                        cep.recv()
                     });
-                    let req = mep.recv().expect("machine-side recv");
-                    let reply = handler(item, &req, engine);
-                    mep.send(&reply).expect("machine-side send");
+                    if let Ok(req) = mep.recv() {
+                        let reply = handler(item, &req, engine);
+                        let _ = mep.send(&reply);
+                    }
                     h.join().expect("coordinator I/O thread")
                 });
-                replies.push(reply_frame);
+                replies.push(reply);
             }
         }
-
-        for r in &replies {
-            *up_bytes += 4 + r.len();
-        }
         replies
+    }
+
+    /// Send to every live worker, then drain the replies. Dead links
+    /// yield `Err` without any I/O (or metering): the worker process is
+    /// gone, there is nobody to carry the frame to.
+    fn exchange_process(
+        workers: &mut [WorkerLink],
+        down_bytes: &mut usize,
+        down: &Down<'_>,
+    ) -> Vec<Result<Vec<u8>>> {
+        let n = workers.len();
+        let mut broadcast_metered = false;
+        let mut sent: Vec<Result<()>> = Vec::with_capacity(n);
+        for (j, w) in workers.iter_mut().enumerate() {
+            if w.is_dead() {
+                sent.push(Err(format_err!(
+                    "machine {}: worker process is dead",
+                    w.id()
+                )));
+                continue;
+            }
+            let frame = down.frame_for(j);
+            match w.send(frame) {
+                Ok(()) => {
+                    match down {
+                        Down::Broadcast(_) if !broadcast_metered => {
+                            *down_bytes += 4 + frame.len();
+                            broadcast_metered = true;
+                        }
+                        Down::Broadcast(_) => {}
+                        Down::PerMachine(_) => *down_bytes += 4 + frame.len(),
+                    }
+                    sent.push(Ok(()));
+                }
+                Err(e) => sent.push(Err(e)),
+            }
+        }
+        sent.into_iter()
+            .zip(workers.iter_mut())
+            .map(|(s, w)| s.and_then(|_| w.recv()))
+            .collect()
     }
 
     /// One request/reply on a single link — for steps that involve
@@ -243,21 +414,59 @@ impl WiredChannel {
         item: &mut T,
         frame: &[u8],
         handler: impl FnOnce(&mut T, &[u8]) -> Vec<u8>,
-    ) -> Vec<u8> {
-        self.down_bytes += 4 + frame.len();
+    ) -> Result<Vec<u8>> {
         let WiredChannel {
-            coord_eps,
-            machine_eps,
+            links,
             up_bytes,
-            ..
+            down_bytes,
         } = self;
-        coord_eps[j].send(frame).expect("coordinator send");
-        let req = machine_eps[j].recv().expect("machine-side recv");
-        let reply = handler(item, &req);
-        machine_eps[j].send(&reply).expect("machine-side send");
-        let got = coord_eps[j].recv().expect("coordinator recv");
+        let got = match links {
+            LinkSet::Local {
+                coord_eps,
+                machine_eps,
+            } => {
+                *down_bytes += 4 + frame.len();
+                coord_eps[j].send(frame)?;
+                let req = machine_eps[j].recv()?;
+                let reply = handler(item, &req);
+                machine_eps[j].send(&reply)?;
+                coord_eps[j].recv()?
+            }
+            LinkSet::Process { workers } => {
+                workers[j].send(frame)?;
+                *down_bytes += 4 + frame.len();
+                workers[j].recv()?
+            }
+        };
         *up_bytes += 4 + got.len();
-        got
+        Ok(got)
+    }
+
+    /// Lifecycle traffic on process links (`Reset` / `Reseed` frames):
+    /// one optional frame per machine, **unmetered** — these replace
+    /// the direct machine mutations an in-process fleet performs, which
+    /// cost nothing on its meters either. `None` skips the link; dead
+    /// links answer `Err`.
+    pub fn control(&mut self, frames: &[Option<Vec<u8>>]) -> Vec<Result<Vec<u8>>> {
+        match &mut self.links {
+            LinkSet::Local { .. } => {
+                unreachable!("control frames are a process-link lifecycle; local fleets mutate their machines directly")
+            }
+            LinkSet::Process { workers } => {
+                assert_eq!(frames.len(), workers.len(), "control frames vs links mismatch");
+                let mut sent: Vec<Option<Result<()>>> = Vec::with_capacity(workers.len());
+                for (w, f) in workers.iter_mut().zip(frames) {
+                    sent.push(f.as_ref().map(|f| w.send(f)));
+                }
+                sent.into_iter()
+                    .zip(workers.iter_mut())
+                    .map(|(s, w)| match s {
+                        None => Ok(Vec::new()),
+                        Some(r) => r.and_then(|_| w.recv()),
+                    })
+                    .collect()
+            }
+        }
     }
 }
 
@@ -291,7 +500,7 @@ mod tests {
         );
         replies
             .iter()
-            .map(|f| FrameReader::new(f).get_u64())
+            .map(|f| FrameReader::new(f.as_ref().expect("local link")).get_u64())
             .collect()
     }
 
@@ -307,6 +516,9 @@ mod tests {
         assert_eq!(chan.raw_bytes(), (36, 36));
         chan.reset_meter();
         assert_eq!(chan.wire_bytes(), (0, 0));
+        // no processes behind local links
+        assert!(chan.worker_pids().is_empty());
+        assert!(!chan.kill_link(0));
     }
 
     #[test]
@@ -333,7 +545,10 @@ mod tests {
                 w.finish()
             },
         );
-        let got: Vec<u64> = replies.iter().map(|f| FrameReader::new(f).get_u64()).collect();
+        let got: Vec<u64> = replies
+            .iter()
+            .map(|f| FrameReader::new(f.as_ref().unwrap()).get_u64())
+            .collect();
         assert_eq!(got, vec![105, 207]);
         // per-machine frames metered each: 2 × 12 down, 2 × 12 up
         assert_eq!(chan.wire_bytes(), (24, 24));
@@ -392,7 +607,15 @@ mod tests {
                 w.finish()
             },
         );
-        let got: Vec<u64> = replies.iter().map(|f| FrameReader::new(f).get_u64()).collect();
+        let got: Vec<u64> = replies
+            .iter()
+            .map(|f| FrameReader::new(f.as_ref().unwrap()).get_u64())
+            .collect();
         assert_eq!(got, vec![1001, 1002, 1003, 1004]);
+    }
+
+    #[test]
+    fn process_links_cannot_connect_without_shards() {
+        assert!(FleetChannel::connect(TransportKind::Process, 3).is_err());
     }
 }

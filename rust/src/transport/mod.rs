@@ -11,8 +11,12 @@
 //!   the socket transport's.
 //! - [`LoopbackTcpTransport`] — a real `std::net` TCP socket pair on
 //!   localhost. Frames cross the kernel's loopback stack.
+//! - [`process`] — one spawned `soccer-machine` OS process per machine
+//!   over a Unix domain socket (loopback TCP fallback). The machines
+//!   are physically separate from the coordinator, as the paper's §3
+//!   model assumes; machine-side seconds are measured in the worker.
 //!
-//! The third mode, [`TransportKind::Direct`], is the historical
+//! The remaining mode, [`TransportKind::Direct`], is the historical
 //! fast path: machine methods are invoked directly with no
 //! serialization (and therefore no byte meter). Benches default to it;
 //! the wired modes exist so tests can reconcile *measured* bytes
@@ -20,19 +24,26 @@
 //!
 //! Protocol model (matches the paper's coordinator model, §3):
 //!
-//! - Rounds are phase-synchronous: both ends always know which message
-//!   comes next, so frames carry no type tags — just the payload.
+//! - Requests start with a u32 [`protocol::Op`] tag (so an
+//!   out-of-process worker knows which step to run); replies are
+//!   tag-free — rounds are phase-synchronous, both ends always know
+//!   which reply comes next. All wired modes carry the identical
+//!   frames, which is why their byte meters agree exactly.
 //! - A coordinator broadcast is **one** transmission no matter how many
 //!   machines listen (§3's broadcast channel); per-machine messages
 //!   (e.g. sampling quotas) are metered per machine.
 //! - The coordinator keeps per-machine live-size metadata locally (it
 //!   learns sizes from removal acks); quota computation does not cost
 //!   extra wire traffic beyond the quota messages themselves.
-//! - Transport failures are fatal: there is no retry layer yet, a
-//!   broken link panics the run.
+//! - A broken link is surfaced as a per-machine `Result` by the
+//!   channel. In-process fleets treat it as a bug (panic at the fleet
+//!   layer); a process fleet downgrades the machine to dead — the
+//!   crash-failure model — and the run continues on the survivors.
 
 pub mod channel;
 pub mod inproc;
+pub mod process;
+pub mod protocol;
 pub mod tcp;
 pub mod wire;
 
@@ -40,7 +51,36 @@ pub use channel::{Down, FleetChannel, WiredChannel};
 pub use inproc::InProcTransport;
 pub use tcp::LoopbackTcpTransport;
 
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
+
+/// Write one `u32 length (checked) + payload` frame to a byte stream —
+/// the single definition of the socket framing, shared by the loopback
+/// TCP transport and both ends of a process link.
+pub(crate) fn write_frame<W: std::io::Write>(
+    w: &mut W,
+    payload: &[u8],
+    what: &'static str,
+) -> Result<()> {
+    let len = wire::u32_header(payload.len(), "frame length")?;
+    w.write_all(&len.to_le_bytes())
+        .with_context(|| format!("{what}: send prefix"))?;
+    w.write_all(payload)
+        .with_context(|| format!("{what}: send payload"))?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame from a byte stream (twin of
+/// [`write_frame`]).
+pub(crate) fn read_frame<R: std::io::Read>(r: &mut R, what: &'static str) -> Result<Vec<u8>> {
+    let mut prefix = [0u8; 4];
+    r.read_exact(&mut prefix)
+        .with_context(|| format!("{what}: recv prefix"))?;
+    let len = u32::from_le_bytes(prefix) as usize;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("{what}: recv payload"))?;
+    Ok(payload)
+}
 
 /// One end of a coordinator↔machine link: sends and receives
 /// length-prefixed frames, counting every byte that crosses.
@@ -72,6 +112,9 @@ pub enum TransportKind {
     InProc,
     /// Real TCP sockets over 127.0.0.1.
     LoopbackTcp,
+    /// One spawned `soccer-machine` worker process per machine, over a
+    /// Unix domain socket (loopback TCP where unavailable).
+    Process,
 }
 
 impl TransportKind {
@@ -80,6 +123,7 @@ impl TransportKind {
             TransportKind::Direct => "direct",
             TransportKind::InProc => "inproc",
             TransportKind::LoopbackTcp => "loopback-tcp",
+            TransportKind::Process => "process",
         }
     }
 }

@@ -1,0 +1,550 @@
+//! The process transport: each fleet machine is a spawned
+//! `soccer-machine` OS process, talking to the coordinator over a Unix
+//! domain socket (loopback TCP where Unix sockets are unavailable, or
+//! when `SOCCER_PROCESS_SOCKET=tcp` forces it). This is the mode that
+//! makes the repo a *real* distributed system: machine-side work runs
+//! on another process's CPU, its self-timed seconds are genuine
+//! other-process wall time, and every protocol byte crosses a kernel
+//! socket.
+//!
+//! Lifecycle of one link (coordinator side, [`spawn_fleet`]):
+//!
+//! 1. bind a fresh listener (one socket per machine — no id
+//!    multiplexing on a shared accept loop),
+//! 2. spawn `soccer-machine --connect <addr> --id <j>`,
+//! 3. accept with a bounded timeout that also notices the child dying
+//!    before it ever connects (no hung coordinator),
+//! 4. handshake: worker sends a hello (magic, protocol version, id);
+//!    coordinator ships the [`Op::LoadShard`] frame (id, RNG state,
+//!    shard) over the same length-prefixed codec the data plane uses;
+//!    worker acks with its live-point count.
+//!
+//! After the handshake the link speaks exactly the phase-synchronous
+//! request/reply protocol of `transport::protocol`. Teardown sends an
+//! [`Op::Shutdown`] frame, waits briefly for a voluntary exit, then
+//! kills and always reaps the child — dropping a fleet never leaks
+//! zombies. A link whose worker vanishes mid-protocol turns into a
+//! transport error on the next send/recv; the fleet downgrades that
+//! machine to dead instead of deadlocking.
+
+use crate::core::Matrix;
+use crate::transport::protocol::{self, Op};
+use crate::transport::wire::FrameReader;
+use crate::transport::Transport;
+use crate::util::error::{Context, Result};
+use crate::util::rng::Pcg64;
+use crate::{bail, format_err};
+use std::io::ErrorKind;
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// How long the coordinator waits for a spawned worker to connect
+/// before declaring the spawn failed.
+const ACCEPT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// How long a worker keeps trying to reach the coordinator's socket.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Grace period between the Shutdown frame and a SIGKILL at teardown.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
+
+/// Bound on the handshake reads (hello, shard ack): generous enough to
+/// decode a multi-hundred-MB shard, finite so a connected-but-silent
+/// worker cannot hang the spawn.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Distinguishes concurrent fleets in one coordinator process when
+/// naming Unix socket paths.
+static WORKER_NONCE: AtomicU64 = AtomicU64::new(0);
+
+/// Coordinator-side read timeout, **disabled by default**: a crashed
+/// worker already surfaces instantly as EOF on its socket, so a data-
+/// plane timeout's only effect would be to kill a healthy-but-slow
+/// worker mid-computation and silently downgrade it — at paper scale
+/// (n = 10M shards) that turns slow compute into data loss. Set
+/// `SOCCER_PROCESS_TIMEOUT_SECS` to bound the wait anyway when livelock
+/// protection matters more than big shards (0 keeps it disabled).
+fn read_timeout() -> Option<Duration> {
+    let secs = std::env::var("SOCCER_PROCESS_TIMEOUT_SECS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0);
+    (secs > 0).then_some(Duration::from_secs(secs))
+}
+
+/// One end of a process link: a Unix or TCP stream. Framing is the
+/// shared `transport::{write_frame, read_frame}` pair the loopback TCP
+/// transport also uses — one codec, one place to change it.
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn send_frame(&mut self, payload: &[u8]) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => crate::transport::write_frame(s, payload, "process transport"),
+            #[cfg(unix)]
+            Stream::Unix(s) => crate::transport::write_frame(s, payload, "process transport"),
+        }
+    }
+
+    fn recv_frame(&mut self) -> Result<Vec<u8>> {
+        match self {
+            Stream::Tcp(s) => crate::transport::read_frame(s, "process transport"),
+            #[cfg(unix)]
+            Stream::Unix(s) => crate::transport::read_frame(s, "process transport"),
+        }
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(t).context("set_read_timeout"),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(t).context("set_read_timeout"),
+        }
+    }
+}
+
+// ---- worker side ------------------------------------------------------------
+
+#[cfg(unix)]
+fn connect_unix(path: &str) -> Result<Stream> {
+    Ok(Stream::Unix(UnixStream::connect(path).with_context(
+        || format!("worker: connecting to unix socket {path}"),
+    )?))
+}
+
+#[cfg(not(unix))]
+fn connect_unix(path: &str) -> Result<Stream> {
+    bail!("worker: unix socket address {path} on a platform without unix sockets")
+}
+
+/// The worker process's end of its link, used by the `soccer-machine`
+/// binary. Implements [`Transport`] so `protocol::serve` drives it.
+pub struct WorkerEndpoint {
+    stream: Stream,
+    sent: usize,
+    received: usize,
+}
+
+impl WorkerEndpoint {
+    /// Connect back to the coordinator. `addr` is the worker's
+    /// `--connect` argument: `unix:<path>` or `tcp:<ip:port>`.
+    pub fn connect(addr: &str) -> Result<WorkerEndpoint> {
+        let stream = if let Some(path) = addr.strip_prefix("unix:") {
+            connect_unix(path)?
+        } else if let Some(hostport) = addr.strip_prefix("tcp:") {
+            let sock = hostport
+                .parse()
+                .map_err(|_| format_err!("worker: bad tcp address {hostport}"))?;
+            let s = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)
+                .with_context(|| format!("worker: connecting to {hostport}"))?;
+            s.set_nodelay(true).context("set_nodelay")?;
+            Stream::Tcp(s)
+        } else {
+            bail!("worker: --connect wants unix:<path> or tcp:<ip:port>, got {addr}");
+        };
+        // the worker blocks indefinitely between requests — the
+        // coordinator may legitimately think for a long time
+        stream.set_read_timeout(None)?;
+        Ok(WorkerEndpoint {
+            stream,
+            sent: 0,
+            received: 0,
+        })
+    }
+}
+
+impl Transport for WorkerEndpoint {
+    fn send(&mut self, payload: &[u8]) -> Result<()> {
+        self.stream.send_frame(payload)?;
+        self.sent += 4 + payload.len();
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let payload = self.stream.recv_frame()?;
+        self.received += 4 + payload.len();
+        Ok(payload)
+    }
+
+    fn bytes_sent(&self) -> usize {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> usize {
+        self.received
+    }
+
+    fn name(&self) -> &'static str {
+        "process"
+    }
+}
+
+// ---- coordinator side -------------------------------------------------------
+
+/// Everything one worker needs at birth: identity, RNG stream, shard.
+pub struct WorkerSpec {
+    pub id: usize,
+    pub rng: Pcg64,
+    pub shard: Matrix,
+}
+
+/// The coordinator's handle on one spawned machine: the socket, the
+/// child process, and the raw byte counters.
+pub struct WorkerLink {
+    id: usize,
+    stream: Option<Stream>,
+    child: Option<Child>,
+    sock_path: Option<PathBuf>,
+    dead: bool,
+    sent: usize,
+    received: usize,
+}
+
+impl WorkerLink {
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    /// OS pid of the live worker (None once the link is dead).
+    pub fn pid(&self) -> Option<u32> {
+        self.child.as_ref().map(|c| c.id())
+    }
+
+    pub fn bytes_sent(&self) -> usize {
+        self.sent
+    }
+
+    pub fn bytes_received(&self) -> usize {
+        self.received
+    }
+
+    pub fn send(&mut self, payload: &[u8]) -> Result<()> {
+        let stream = match self.stream.as_mut() {
+            Some(s) => s,
+            None => bail!("machine {}: worker process is dead", self.id),
+        };
+        match stream.send_frame(payload) {
+            Ok(()) => {
+                self.sent += 4 + payload.len();
+                Ok(())
+            }
+            Err(e) => {
+                self.fail();
+                Err(e.context(format!("machine {}: worker link failed on send", self.id)))
+            }
+        }
+    }
+
+    pub fn recv(&mut self) -> Result<Vec<u8>> {
+        let stream = match self.stream.as_mut() {
+            Some(s) => s,
+            None => bail!("machine {}: worker process is dead", self.id),
+        };
+        match stream.recv_frame() {
+            Ok(payload) => {
+                self.received += 4 + payload.len();
+                Ok(payload)
+            }
+            Err(e) => {
+                self.fail();
+                Err(e.context(format!("machine {}: worker link failed on recv", self.id)))
+            }
+        }
+    }
+
+    /// Terminate the worker immediately (failure injection, or teardown
+    /// of a link that already errored). Returns false if already dead.
+    pub fn kill(&mut self) -> bool {
+        if self.dead {
+            return false;
+        }
+        self.fail();
+        true
+    }
+
+    /// Close the link, SIGKILL the child, and reap it.
+    fn fail(&mut self) {
+        self.dead = true;
+        self.stream = None;
+        if let Some(mut child) = self.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+
+    /// Clean teardown: Shutdown frame, brief grace for a voluntary
+    /// exit, then SIGKILL. Always reaps; always removes the socket file.
+    fn graceful_shutdown(&mut self) {
+        if !self.dead {
+            if let Some(s) = self.stream.as_mut() {
+                let _ = s.send_frame(&protocol::request(Op::Shutdown).finish());
+            }
+            // closing our end makes the worker see EOF even if the
+            // Shutdown frame got lost — either signal ends its loop
+            self.stream = None;
+            if let Some(mut child) = self.child.take() {
+                let deadline = Instant::now() + SHUTDOWN_GRACE;
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        _ => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+            self.dead = true;
+        }
+        if let Some(p) = self.sock_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for WorkerLink {
+    fn drop(&mut self) {
+        self.graceful_shutdown();
+    }
+}
+
+/// Resolve the `soccer-machine` binary: `SOCCER_MACHINE_BIN` wins,
+/// otherwise look next to the current executable (covers the main
+/// binary, test binaries in `deps/`, and `examples/`).
+pub fn worker_binary() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("SOCCER_MACHINE_BIN") {
+        let p = PathBuf::from(p);
+        if p.is_file() {
+            return Ok(p);
+        }
+        bail!("SOCCER_MACHINE_BIN={} is not a file", p.display());
+    }
+    let name = format!("soccer-machine{}", std::env::consts::EXE_SUFFIX);
+    let exe = std::env::current_exe().context("resolving current executable")?;
+    let mut dir = exe.parent();
+    for _ in 0..3 {
+        let Some(d) = dir else { break };
+        let cand = d.join(&name);
+        if cand.is_file() {
+            return Ok(cand);
+        }
+        dir = d.parent();
+    }
+    bail!(
+        "soccer-machine binary not found near {}; `cargo build` (or --release) it first, \
+         or point SOCCER_MACHINE_BIN at it",
+        exe.display()
+    )
+}
+
+/// Spawn one worker per spec, handshake, and ship each its shard.
+pub fn spawn_fleet(specs: Vec<WorkerSpec>) -> Result<Vec<WorkerLink>> {
+    let bin = worker_binary()?;
+    let mut links = Vec::with_capacity(specs.len());
+    for spec in specs {
+        // an early failure drops the already-spawned links, whose Drop
+        // shuts their workers down — no orphan processes
+        links.push(spawn_worker(&bin, spec)?);
+    }
+    Ok(links)
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+/// Bind the listening socket for one worker: Unix domain socket by
+/// default where available, loopback TCP otherwise or when
+/// `SOCCER_PROCESS_SOCKET=tcp` asks for it. Returns the listener, the
+/// worker's `--connect` argument, and the socket file to clean up.
+fn bind_listener(id: usize) -> Result<(Listener, String, Option<PathBuf>)> {
+    #[cfg(unix)]
+    {
+        let force_tcp =
+            matches!(std::env::var("SOCCER_PROCESS_SOCKET").as_deref(), Ok("tcp"));
+        if !force_tcp {
+            let nonce = WORKER_NONCE.fetch_add(1, Ordering::Relaxed);
+            let path = std::env::temp_dir().join(format!(
+                "soccer-{}-{id}-{nonce}.sock",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_file(&path);
+            let listener = UnixListener::bind(&path)
+                .with_context(|| format!("binding unix socket {}", path.display()))?;
+            let addr = format!("unix:{}", path.display());
+            return Ok((Listener::Unix(listener), addr, Some(path)));
+        }
+    }
+    let _ = WORKER_NONCE.fetch_add(1, Ordering::Relaxed); // keep ids moving either way
+    let listener =
+        TcpListener::bind(("127.0.0.1", 0)).context("process transport: bind failed")?;
+    let addr = listener
+        .local_addr()
+        .context("process transport: no local addr")?;
+    Ok((Listener::Tcp(listener), format!("tcp:{addr}"), None))
+}
+
+/// Accept with a deadline, noticing a child that died before
+/// connecting — the hang this transport refuses to have.
+fn accept_worker(listener: &Listener, child: &mut Child, id: usize) -> Result<Stream> {
+    match listener {
+        Listener::Tcp(l) => l.set_nonblocking(true).context("set_nonblocking")?,
+        #[cfg(unix)]
+        Listener::Unix(l) => l.set_nonblocking(true).context("set_nonblocking")?,
+    }
+    let deadline = Instant::now() + ACCEPT_TIMEOUT;
+    loop {
+        let accepted = match listener {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                s.set_nodelay(true).ok();
+                Stream::Tcp(s)
+            }),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        };
+        match accepted {
+            Ok(stream) => {
+                match &stream {
+                    Stream::Tcp(s) => s.set_nonblocking(false).context("set_nonblocking")?,
+                    #[cfg(unix)]
+                    Stream::Unix(s) => s.set_nonblocking(false).context("set_nonblocking")?,
+                }
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if let Ok(Some(status)) = child.try_wait() {
+                    bail!("machine {id}: worker exited before connecting ({status})");
+                }
+                if Instant::now() >= deadline {
+                    bail!(
+                        "machine {id}: worker did not connect within {ACCEPT_TIMEOUT:?} \
+                         (accept timed out)"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e).context(format!("machine {id}: accept failed")),
+        }
+    }
+}
+
+fn spawn_worker(bin: &Path, spec: WorkerSpec) -> Result<WorkerLink> {
+    let (listener, addr, sock_path) = bind_listener(spec.id)?;
+    let mut child = Command::new(bin)
+        .arg("--connect")
+        .arg(addr)
+        .arg("--id")
+        .arg(spec.id.to_string())
+        .stdin(Stdio::null())
+        .spawn()
+        .with_context(|| format!("spawning {}", bin.display()))?;
+    let stream = match accept_worker(&listener, &mut child, spec.id) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            if let Some(p) = &sock_path {
+                let _ = std::fs::remove_file(p);
+            }
+            return Err(e);
+        }
+    };
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let mut link = WorkerLink {
+        id: spec.id,
+        stream: Some(stream),
+        child: Some(child),
+        sock_path,
+        dead: false,
+        sent: 0,
+        received: 0,
+    };
+    // handshake: hello ← , LoadShard → , live-count ack ←. These use
+    // the link's raw framing; the fleet's protocol meters never see
+    // them (setup, not the paper's communication).
+    let hello = link
+        .recv()
+        .map_err(|e| e.context(format!("machine {}: no hello from worker", link.id)))?;
+    let got = protocol::decode_hello(&hello)?;
+    if got != link.id as u64 {
+        bail!("machine {}: worker introduced itself as machine {got}", link.id);
+    }
+    let shard_rows = spec.shard.rows();
+    link.send(&protocol::encode_load_shard(
+        spec.id as u64,
+        &spec.rng,
+        &spec.shard,
+    )?)?;
+    let ack = link
+        .recv()
+        .map_err(|e| e.context(format!("machine {}: no shard ack from worker", link.id)))?;
+    let loaded = FrameReader::new(&ack).get_u64() as usize;
+    if loaded != shard_rows {
+        bail!(
+            "machine {}: worker loaded {loaded} rows, coordinator shipped {shard_rows}",
+            link.id
+        );
+    }
+    // handshake done: the data plane blocks indefinitely by default (a
+    // dead worker is an instant EOF; only SOCCER_PROCESS_TIMEOUT_SECS
+    // opts into bounding slow computation)
+    if let Some(s) = link.stream.as_ref() {
+        s.set_read_timeout(read_timeout())?;
+    }
+    // both ends are connected: the socket file has done its job
+    if let Some(p) = link.sock_path.take() {
+        let _ = std::fs::remove_file(p);
+    }
+    Ok(link)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg(unix)]
+    fn framing_roundtrip_over_socketpair() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let mut tx = Stream::Unix(a);
+        let mut rx = Stream::Unix(b);
+        tx.send_frame(&[1, 2, 3]).unwrap();
+        tx.send_frame(&[]).unwrap();
+        assert_eq!(rx.recv_frame().unwrap(), vec![1, 2, 3]);
+        assert_eq!(rx.recv_frame().unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn recv_on_closed_peer_is_an_error() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let mut rx = Stream::Unix(a);
+        drop(b);
+        assert!(rx.recv_frame().is_err());
+    }
+
+    #[test]
+    fn worker_endpoint_rejects_bad_addresses() {
+        assert!(WorkerEndpoint::connect("nonsense").is_err());
+        assert!(WorkerEndpoint::connect("tcp:not-an-addr").is_err());
+    }
+}

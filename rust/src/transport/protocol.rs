@@ -1,0 +1,389 @@
+//! The machine-side half of the coordinator-model wire protocol.
+//!
+//! Every coordinator→machine request frame starts with a u32 [`Op`]
+//! tag followed by the op's arguments; the machine executes the step
+//! and sends back the op's (tag-free) reply frame. This module is the
+//! single definition of both sides' frame layouts: the fleet builds
+//! requests with [`request`], and *every* wired machine — an in-process
+//! thread under `TransportKind::InProc`/`LoopbackTcp`, or a spawned
+//! `soccer-machine` worker process under `TransportKind::Process` —
+//! answers them through the same [`dispatch`]. That sharing is what
+//! makes the three wired modes byte-identical on the wire and
+//! bit-identical in outcome.
+//!
+//! Lifecycle frames ([`Op::LoadShard`], [`Op::Reset`], [`Op::Reseed`],
+//! [`Op::Shutdown`], plus the worker's hello) exist only on
+//! process-backed links: in-process fleets mutate their machines
+//! directly. They are deliberately *not* metered by the fleet's
+//! protocol byte counters — they are setup/teardown, not the paper's
+//! communication — so a process fleet's measured protocol bytes equal
+//! an in-process fleet's exactly.
+//!
+//! Machine-side timing: `dispatch` runs the `Machine` methods that
+//! self-time, and the measured seconds travel back inside the reply
+//! frames. On a process fleet those seconds are genuine other-process
+//! wall time, not a simulation.
+
+use crate::machines::Machine;
+use crate::runtime::Engine;
+use crate::transport::wire::{FrameReader, FrameWriter};
+use crate::transport::Transport;
+use crate::util::error::Result;
+use crate::util::rng::Pcg64;
+use crate::{bail, format_err};
+
+/// First frame on a process link, worker → coordinator.
+pub const HELLO_MAGIC: u32 = 0x534F_4343; // "SOCC"
+
+/// Bumped whenever a frame layout changes; the coordinator refuses a
+/// worker speaking a different version instead of decoding garbage.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Request opcodes. Data-plane ops are the fleet steps every wired
+/// transport meters; lifecycle ops exist only on process links.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u32)]
+pub enum Op {
+    // ---- lifecycle (process links only; never metered) ----------------
+    /// coordinator → worker at handshake: machine id, RNG state, shard
+    LoadShard = 1,
+    /// restore the pre-run shard and RNG stream (repetition replay)
+    Reset = 2,
+    /// restore the shard and install a fresh RNG stream
+    Reseed = 3,
+    /// drain the link and exit cleanly (replaces the thread join)
+    Shutdown = 4,
+    // ---- data plane (all wired transports; metered) --------------------
+    SampleExactPair = 16,
+    SampleBernoulliPair = 17,
+    Remove = 18,
+    Drain = 19,
+    CostFull = 20,
+    CountsFull = 21,
+    CountsFullBelow = 22,
+    PerPointCosts = 23,
+    KmparInit = 24,
+    KmparUpdate = 25,
+    KmparSample = 26,
+    UniformPoint = 27,
+}
+
+impl Op {
+    pub fn from_u32(v: u32) -> Option<Op> {
+        Some(match v {
+            1 => Op::LoadShard,
+            2 => Op::Reset,
+            3 => Op::Reseed,
+            4 => Op::Shutdown,
+            16 => Op::SampleExactPair,
+            17 => Op::SampleBernoulliPair,
+            18 => Op::Remove,
+            19 => Op::Drain,
+            20 => Op::CostFull,
+            21 => Op::CountsFull,
+            22 => Op::CountsFullBelow,
+            23 => Op::PerPointCosts,
+            24 => Op::KmparInit,
+            25 => Op::KmparUpdate,
+            26 => Op::KmparSample,
+            27 => Op::UniformPoint,
+            _ => return None,
+        })
+    }
+}
+
+/// Start a request frame: the op tag, ready for the op's arguments.
+pub fn request(op: Op) -> FrameWriter {
+    let mut w = FrameWriter::new();
+    w.put_u32(op as u32);
+    w
+}
+
+/// The worker's opening frame: magic, protocol version, machine id.
+pub fn encode_hello(id: u64) -> Vec<u8> {
+    let mut w = FrameWriter::with_capacity(16);
+    w.put_u32(HELLO_MAGIC);
+    w.put_u32(PROTOCOL_VERSION);
+    w.put_u64(id);
+    w.finish()
+}
+
+/// Verify a hello frame and return the worker's machine id.
+pub fn decode_hello(frame: &[u8]) -> Result<u64> {
+    if frame.len() != 16 {
+        bail!("process handshake: hello frame is {} bytes, want 16", frame.len());
+    }
+    let mut r = FrameReader::new(frame);
+    let magic = r.get_u32();
+    if magic != HELLO_MAGIC {
+        bail!("process handshake: bad magic {magic:#010x} (not a soccer-machine?)");
+    }
+    let version = r.get_u32();
+    if version != PROTOCOL_VERSION {
+        bail!("process handshake: worker speaks protocol v{version}, coordinator v{PROTOCOL_VERSION}");
+    }
+    Ok(r.get_u64())
+}
+
+/// The shard-loading frame the coordinator ships right after the hello:
+/// machine id, the machine's initial RNG state, and its data shard.
+pub fn encode_load_shard(id: u64, rng: &Pcg64, shard: &crate::core::Matrix) -> Result<Vec<u8>> {
+    let mut w = request(Op::LoadShard);
+    w.put_u64(id);
+    for word in rng.to_raw() {
+        w.put_u64(word);
+    }
+    w.put_matrix(shard)?;
+    Ok(w.finish())
+}
+
+/// Decode [`encode_load_shard`] into a ready [`Machine`], verifying the
+/// id matches the one the worker was spawned with.
+pub fn decode_load_shard(frame: &[u8], expect_id: u64) -> Result<Machine> {
+    let mut r = FrameReader::new(frame);
+    let op = r.get_u32();
+    if Op::from_u32(op) != Some(Op::LoadShard) {
+        bail!("worker expected a LoadShard frame, got op {op}");
+    }
+    let id = r.get_u64();
+    if id != expect_id {
+        bail!("shard frame is for machine {id}, this worker is machine {expect_id}");
+    }
+    let raw = [r.get_u64(), r.get_u64(), r.get_u64(), r.get_u64()];
+    let shard = r.get_matrix();
+    Ok(Machine::new(id as usize, shard, Pcg64::from_raw(raw)))
+}
+
+/// The ack closing a lifecycle exchange: the machine's live-point count
+/// (the coordinator's size metadata comes from these).
+pub fn encode_live_ack(n_live: usize) -> Vec<u8> {
+    let mut w = FrameWriter::with_capacity(8);
+    w.put_u64(n_live as u64);
+    w.finish()
+}
+
+/// Execute one data-plane or lifecycle request on a machine and encode
+/// the reply. This is the exact logic the PR-2 fleet ran in per-step
+/// closures, now shared between in-process machine threads and the
+/// `soccer-machine` worker loop.
+pub fn dispatch(m: &mut Machine, req: &[u8], engine: &dyn Engine) -> Result<Vec<u8>> {
+    let mut r = FrameReader::new(req);
+    let op = Op::from_u32(r.get_u32()).ok_or_else(|| format_err!("unknown protocol op"))?;
+    let mut w = FrameWriter::new();
+    match op {
+        Op::SampleExactPair => {
+            let a = r.get_u64() as usize;
+            let b = r.get_u64() as usize;
+            let t1 = m.sample_exact(a);
+            let t2 = m.sample_exact(b);
+            w.put_matrix(&t1.value)?;
+            w.put_matrix(&t2.value)?;
+            w.put_f64(t1.secs + t2.secs);
+        }
+        Op::SampleBernoulliPair => {
+            let alpha = r.get_f64();
+            let t = m.sample_bernoulli_pair(alpha);
+            w.put_matrix(&t.value.0)?;
+            w.put_matrix(&t.value.1)?;
+            w.put_f64(t.secs);
+        }
+        Op::Remove => {
+            let v = r.get_f32();
+            let centers = r.get_matrix();
+            let t = m.remove_within(&centers, v, engine);
+            w.put_u64(t.value as u64);
+            w.put_f64(t.secs);
+        }
+        Op::Drain => {
+            w.put_matrix(&m.drain())?;
+        }
+        Op::CostFull => {
+            let centers = r.get_matrix();
+            let t = m.cost_original(&centers, engine);
+            w.put_f64(t.value);
+            w.put_f64(t.secs);
+        }
+        Op::CountsFull => {
+            let centers = r.get_matrix();
+            let t = m.counts_original(&centers, engine);
+            w.put_f64s(&t.value)?;
+            w.put_f64(t.secs);
+        }
+        Op::CountsFullBelow => {
+            let cutoff = r.get_f32();
+            let centers = r.get_matrix();
+            let t = m.counts_original_below(&centers, cutoff, engine);
+            w.put_f64s(&t.value)?;
+            w.put_f64(t.secs);
+        }
+        Op::PerPointCosts => {
+            let centers = r.get_matrix();
+            let t = m.per_point_costs_original(&centers, engine);
+            w.put_f32s(&t.value)?;
+        }
+        Op::KmparInit => {
+            let initial = r.get_matrix();
+            let t = m.kmpar_init(&initial, engine);
+            w.put_f64(t.value);
+            w.put_f64(t.secs);
+        }
+        Op::KmparUpdate => {
+            let centers = r.get_matrix();
+            let t = m.kmpar_update(&centers, engine);
+            w.put_f64(t.value);
+            w.put_f64(t.secs);
+        }
+        Op::KmparSample => {
+            let l = r.get_f64();
+            let phi = r.get_f64();
+            let t = m.kmpar_sample(l, phi);
+            w.put_matrix(&t.value)?;
+            w.put_f64(t.secs);
+        }
+        Op::UniformPoint => {
+            let idx = r.get_u64() as usize;
+            w.put_matrix(&m.live().select(&[idx]))?;
+        }
+        Op::Reset => {
+            m.reset();
+            return Ok(encode_live_ack(m.n_live()));
+        }
+        Op::Reseed => {
+            let raw = [r.get_u64(), r.get_u64(), r.get_u64(), r.get_u64()];
+            m.reset();
+            m.reseed(Pcg64::from_raw(raw));
+            return Ok(encode_live_ack(m.n_live()));
+        }
+        Op::LoadShard | Op::Shutdown => {
+            bail!("op {op:?} is a link-lifecycle frame, not a dispatchable step");
+        }
+    }
+    Ok(w.finish())
+}
+
+/// The worker's request loop: answer dispatched requests until a
+/// [`Op::Shutdown`] frame arrives (clean exit) or the peer disconnects
+/// (also a clean exit — the coordinator dropping the link IS the
+/// shutdown signal when it tears down without the courtesy frame).
+pub fn serve(link: &mut dyn Transport, m: &mut Machine, engine: &dyn Engine) -> Result<()> {
+    loop {
+        let req = match link.recv() {
+            Ok(req) => req,
+            // a vanished peer is a normal end-of-service, not a panic
+            Err(_) => return Ok(()),
+        };
+        if req.len() >= 4 && FrameReader::new(&req).get_u32() == Op::Shutdown as u32 {
+            return Ok(());
+        }
+        let reply = dispatch(m, &req, engine)?;
+        link.send(&reply)?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Matrix;
+    use crate::runtime::NativeEngine;
+
+    fn machine(n: usize) -> Machine {
+        let mut rng = Pcg64::new(3);
+        let data = (0..n * 2).map(|_| rng.normal() as f32).collect();
+        Machine::new(0, Matrix::from_vec(data, n, 2), Pcg64::new(4))
+    }
+
+    #[test]
+    fn op_tags_roundtrip() {
+        for op in [
+            Op::LoadShard,
+            Op::Reset,
+            Op::Reseed,
+            Op::Shutdown,
+            Op::SampleExactPair,
+            Op::SampleBernoulliPair,
+            Op::Remove,
+            Op::Drain,
+            Op::CostFull,
+            Op::CountsFull,
+            Op::CountsFullBelow,
+            Op::PerPointCosts,
+            Op::KmparInit,
+            Op::KmparUpdate,
+            Op::KmparSample,
+            Op::UniformPoint,
+        ] {
+            assert_eq!(Op::from_u32(op as u32), Some(op));
+        }
+        assert_eq!(Op::from_u32(0), None);
+        assert_eq!(Op::from_u32(999), None);
+    }
+
+    #[test]
+    fn hello_roundtrip_and_rejections() {
+        assert_eq!(decode_hello(&encode_hello(7)).unwrap(), 7);
+        assert!(decode_hello(&[1, 2, 3]).is_err());
+        let mut bad_magic = encode_hello(7);
+        bad_magic[0] ^= 0xff;
+        assert!(decode_hello(&bad_magic).is_err());
+        let mut bad_version = encode_hello(7);
+        bad_version[4] ^= 0xff;
+        assert!(decode_hello(&bad_version).is_err());
+    }
+
+    #[test]
+    fn load_shard_rebuilds_the_exact_machine() {
+        let shard = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 3, 2);
+        let rng = Pcg64::new(11);
+        let frame = encode_load_shard(5, &rng, &shard).unwrap();
+        let mut worker = decode_load_shard(&frame, 5).unwrap();
+        let mut local = Machine::new(5, shard, rng);
+        // identical shard, identical RNG stream
+        assert_eq!(worker.original(), local.original());
+        let a = worker.sample_exact(2).value;
+        let b = local.sample_exact(2).value;
+        assert_eq!(a, b);
+        // id mismatch is refused
+        let frame = encode_load_shard(5, &Pcg64::new(11), worker.original()).unwrap();
+        assert!(decode_load_shard(&frame, 6).is_err());
+    }
+
+    #[test]
+    fn dispatch_matches_direct_machine_calls() {
+        let eng = NativeEngine;
+        let mut a = machine(200);
+        let mut b = machine(200);
+        let centers = Matrix::from_rows(&[&[0.0, 0.0]]);
+
+        // remove: same removed count over the wire frames
+        let mut w = request(Op::Remove);
+        w.put_f32(0.5);
+        w.put_matrix(&centers).unwrap();
+        let reply = dispatch(&mut a, &w.finish(), &eng).unwrap();
+        let mut r = FrameReader::new(&reply);
+        let removed_wire = r.get_u64() as usize;
+        let removed_direct = b.remove_within(&centers, 0.5, &eng).value;
+        assert_eq!(removed_wire, removed_direct);
+
+        // cost: bit-identical f64
+        let mut w = request(Op::CostFull);
+        w.put_matrix(&centers).unwrap();
+        let reply = dispatch(&mut a, &w.finish(), &eng).unwrap();
+        let cost_wire = FrameReader::new(&reply).get_f64();
+        let cost_direct = b.cost_original(&centers, &eng).value;
+        assert_eq!(cost_wire.to_bits(), cost_direct.to_bits());
+
+        // reset ack carries the restored live size
+        let reply = dispatch(&mut a, &request(Op::Reset).finish(), &eng).unwrap();
+        assert_eq!(FrameReader::new(&reply).get_u64(), 200);
+    }
+
+    #[test]
+    fn dispatch_rejects_lifecycle_and_unknown_ops() {
+        let eng = NativeEngine;
+        let mut m = machine(10);
+        assert!(dispatch(&mut m, &request(Op::Shutdown).finish(), &eng).is_err());
+        let mut w = FrameWriter::new();
+        w.put_u32(999);
+        assert!(dispatch(&mut m, &w.finish(), &eng).is_err());
+    }
+}

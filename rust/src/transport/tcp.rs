@@ -5,9 +5,44 @@
 //! process.
 
 use super::Transport;
+use crate::bail;
 use crate::util::error::{Context, Result};
-use std::io::{Read, Write};
+use std::io::ErrorKind;
 use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Bound on pair setup: an unreachable listener or a peer that never
+/// connects turns into a transport error instead of hanging the
+/// coordinator forever.
+const PAIR_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Accept on a listener with a deadline. The listener is flipped to
+/// non-blocking; the accepted stream is flipped back.
+fn accept_with_timeout(listener: &TcpListener, timeout: Duration) -> Result<TcpStream> {
+    listener
+        .set_nonblocking(true)
+        .context("loopback transport: set_nonblocking")?;
+    let deadline = Instant::now() + timeout;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false)
+                    .context("loopback transport: accepted stream set_nonblocking")?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "loopback transport: accept timed out after {timeout:?} \
+                         (peer never connected)"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(e).context("loopback transport: accept failed"),
+        }
+    }
+}
 
 pub struct LoopbackTcpTransport {
     stream: TcpStream,
@@ -17,17 +52,18 @@ pub struct LoopbackTcpTransport {
 
 impl LoopbackTcpTransport {
     /// Build the two ends of one duplex link over a fresh ephemeral
-    /// localhost port (the listener is dropped after the accept).
+    /// localhost port (the listener is dropped after the accept). Both
+    /// the connect and the accept are bounded by [`PAIR_TIMEOUT`] — a
+    /// half-open setup is an error, never a hang.
     pub fn pair() -> Result<(LoopbackTcpTransport, LoopbackTcpTransport)> {
         let listener =
             TcpListener::bind(("127.0.0.1", 0)).context("loopback transport: bind failed")?;
         let addr = listener
             .local_addr()
             .context("loopback transport: no local addr")?;
-        let a = TcpStream::connect(addr).context("loopback transport: connect failed")?;
-        let (b, _) = listener
-            .accept()
-            .context("loopback transport: accept failed")?;
+        let a = TcpStream::connect_timeout(&addr, PAIR_TIMEOUT)
+            .context("loopback transport: connect failed")?;
+        let b = accept_with_timeout(&listener, PAIR_TIMEOUT)?;
         // round-trip latency matters more than throughput for the small
         // control frames; don't let Nagle sit on them
         a.set_nodelay(true).context("set_nodelay")?;
@@ -49,31 +85,16 @@ impl LoopbackTcpTransport {
 
 impl Transport for LoopbackTcpTransport {
     fn send(&mut self, payload: &[u8]) -> Result<()> {
-        assert!(
-            payload.len() <= u32::MAX as usize,
-            "frame exceeds the u32 length prefix; shard the payload"
-        );
-        self.stream
-            .write_all(&(payload.len() as u32).to_le_bytes())
-            .context("loopback transport: send prefix")?;
-        self.stream
-            .write_all(payload)
-            .context("loopback transport: send payload")?;
+        // the shared framing does the checked-u32 length conversion: an
+        // oversized frame is a WireError, not a silent truncation
+        crate::transport::write_frame(&mut self.stream, payload, "loopback transport")?;
         self.sent += 4 + payload.len();
         Ok(())
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        let mut prefix = [0u8; 4];
-        self.stream
-            .read_exact(&mut prefix)
-            .context("loopback transport: recv prefix")?;
-        let len = u32::from_le_bytes(prefix) as usize;
-        let mut payload = vec![0u8; len];
-        self.stream
-            .read_exact(&mut payload)
-            .context("loopback transport: recv payload")?;
-        self.received += 4 + len;
+        let payload = crate::transport::read_frame(&mut self.stream, "loopback transport")?;
+        self.received += 4 + payload.len();
         Ok(payload)
     }
 
@@ -132,5 +153,16 @@ mod tests {
         let (mut a, mut b) = LoopbackTcpTransport::pair().unwrap();
         a.send(&[]).unwrap();
         assert_eq!(b.recv().unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn transport_tcp_accept_timeout_is_an_error_not_a_hang() {
+        // regression: a peer that dies before connecting used to hang
+        // the blocking accept forever; now it's a bounded error
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let t0 = Instant::now();
+        let err = accept_with_timeout(&listener, Duration::from_millis(50)).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert!(err.to_string().contains("timed out"), "{err}");
     }
 }

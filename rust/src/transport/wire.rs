@@ -10,14 +10,21 @@
 //!   bytes of data — the paper's "points × 4·d" unit, plus the header),
 //! - `[f32]`/`[f64]` — `u32 len` then the values.
 //!
-//! The protocol is phase-synchronous (both ends know what's next), so
-//! frames carry no type tags; a shape mismatch is a protocol bug and
-//! panics with a message rather than limping on.
+//! Every coordinator→machine request starts with a u32 opcode
+//! ([`OP_TAG`] bytes; see [`crate::transport::protocol`]) so a worker
+//! that lives in a separate process knows which step to run. Replies
+//! stay tag-free — the protocol is phase-synchronous, both ends know
+//! which reply shape comes next — and a shape mismatch is a protocol
+//! bug that panics with a message rather than limping on. Oversized
+//! dimensions that would not fit the u32 headers are a [`WireError`]
+//! (a `usize` silently truncated by `as u32` decodes as garbage on the
+//! other end).
 //!
 //! f32/f64 values round-trip bit-exactly, which is what makes
 //! `DirectTransport` vs wired runs byte-identical in outcome.
 
 use crate::core::Matrix;
+use std::fmt;
 
 /// Bytes every frame costs on the wire beyond its payload: the u32
 /// length prefix the transports add.
@@ -25,6 +32,38 @@ pub const FRAME_OVERHEAD: usize = 4;
 
 /// Encoded-`Matrix` header size (u32 rows + u32 cols).
 pub const MATRIX_HEADER: usize = 8;
+
+/// Bytes every coordinator→machine request spends on its u32 opcode.
+pub const OP_TAG: usize = 4;
+
+/// A value that cannot be encoded: a dimension or length exceeds the
+/// u32 wire header. Returned instead of silently truncating with
+/// `as u32` (which would decode as garbage on the receiving end).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireError {
+    what: &'static str,
+    value: usize,
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "wire: {} {} exceeds the u32 header (max {}); shard the payload",
+            self.what,
+            self.value,
+            u32::MAX
+        )
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Checked `usize → u32` for wire headers — the fix for the silent
+/// `as u32` truncation bug on matrices/vectors with ≥ 2³² entries.
+pub fn u32_header(value: usize, what: &'static str) -> Result<u32, WireError> {
+    u32::try_from(value).map_err(|_| WireError { what, value })
+}
 
 /// Encoded size of a `rows × cols` matrix, header included.
 pub fn matrix_bytes(rows: usize, cols: usize) -> usize {
@@ -64,33 +103,36 @@ impl FrameWriter {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    pub fn put_matrix(&mut self, m: &Matrix) {
-        assert!(
-            m.rows() <= u32::MAX as usize && m.cols() <= u32::MAX as usize,
-            "matrix dims exceed the u32 wire header"
-        );
+    pub fn put_matrix(&mut self, m: &Matrix) -> Result<(), WireError> {
+        let rows = u32_header(m.rows(), "matrix rows")?;
+        let cols = u32_header(m.cols(), "matrix cols")?;
         self.buf.reserve(matrix_bytes(m.rows(), m.cols()));
-        self.put_u32(m.rows() as u32);
-        self.put_u32(m.cols() as u32);
+        self.put_u32(rows);
+        self.put_u32(cols);
         for v in m.data() {
             self.buf.extend_from_slice(&v.to_le_bytes());
         }
+        Ok(())
     }
 
-    pub fn put_f32s(&mut self, vs: &[f32]) {
+    pub fn put_f32s(&mut self, vs: &[f32]) -> Result<(), WireError> {
+        let len = u32_header(vs.len(), "f32 vector length")?;
         self.buf.reserve(4 + 4 * vs.len());
-        self.put_u32(vs.len() as u32);
+        self.put_u32(len);
         for v in vs {
             self.buf.extend_from_slice(&v.to_le_bytes());
         }
+        Ok(())
     }
 
-    pub fn put_f64s(&mut self, vs: &[f64]) {
+    pub fn put_f64s(&mut self, vs: &[f64]) -> Result<(), WireError> {
+        let len = u32_header(vs.len(), "f64 vector length")?;
         self.buf.reserve(4 + 8 * vs.len());
-        self.put_u32(vs.len() as u32);
+        self.put_u32(len);
         for v in vs {
             self.buf.extend_from_slice(&v.to_le_bytes());
         }
+        Ok(())
     }
 
     pub fn finish(self) -> Vec<u8> {
@@ -195,7 +237,7 @@ mod tests {
     fn matrix_roundtrip_is_bit_exact() {
         let m = Matrix::from_vec(vec![1.0, f32::MIN_POSITIVE, -0.0, 3.25e8, 5.0, -6.5], 3, 2);
         let mut w = FrameWriter::new();
-        w.put_matrix(&m);
+        w.put_matrix(&m).unwrap();
         let frame = w.finish();
         assert_eq!(frame.len(), matrix_bytes(3, 2));
         let mut r = FrameReader::new(&frame);
@@ -211,7 +253,7 @@ mod tests {
     fn empty_matrix_keeps_cols() {
         let m = Matrix::zeros(0, 5);
         let mut w = FrameWriter::new();
-        w.put_matrix(&m);
+        w.put_matrix(&m).unwrap();
         let frame = w.finish();
         assert_eq!(frame.len(), MATRIX_HEADER);
         let mut r = FrameReader::new(&frame);
@@ -223,8 +265,8 @@ mod tests {
     #[test]
     fn vec_roundtrip() {
         let mut w = FrameWriter::new();
-        w.put_f32s(&[1.0, -2.0]);
-        w.put_f64s(&[0.25, 1e300, -0.0]);
+        w.put_f32s(&[1.0, -2.0]).unwrap();
+        w.put_f64s(&[0.25, 1e300, -0.0]).unwrap();
         let frame = w.finish();
         let mut r = FrameReader::new(&frame);
         assert_eq!(r.get_f32s(), vec![1.0, -2.0]);
@@ -240,5 +282,19 @@ mod tests {
         let frame = w.finish();
         let mut r = FrameReader::new(&frame);
         r.get_f32s();
+    }
+
+    #[test]
+    fn u32_header_boundary() {
+        // a ≥2^32-entry payload cannot be allocated in a test, so the
+        // checked conversion itself is the unit under test: the exact
+        // boundary passes, one past it is a typed WireError instead of
+        // the old silent `as u32` truncation
+        assert_eq!(u32_header(0, "rows"), Ok(0));
+        assert_eq!(u32_header(u32::MAX as usize, "rows"), Ok(u32::MAX));
+        let err = u32_header(u32::MAX as usize + 1, "matrix rows").unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("matrix rows"), "{text}");
+        assert!(text.contains("exceeds the u32 header"), "{text}");
     }
 }

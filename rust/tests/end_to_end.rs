@@ -61,7 +61,7 @@ fn headline_metric_gaussian_one_round_native() {
 /// protocol structure fixes per round.
 #[test]
 fn transport_inproc_matches_direct_and_reconciles_bytes() {
-    use soccer::transport::wire::{matrix_bytes, FRAME_OVERHEAD, MATRIX_HEADER};
+    use soccer::transport::wire::{matrix_bytes, FRAME_OVERHEAD, MATRIX_HEADER, OP_TAG};
     use soccer::transport::TransportKind;
 
     let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(20_000, 5);
@@ -94,14 +94,15 @@ fn transport_inproc_matches_direct_and_reconciles_bytes() {
     let d = gm.points.cols();
     let sum_sampled: usize = out_w.telemetry.rounds.iter().map(|r| r.sampled).sum();
     let drained = cw.to_coordinator - sum_sampled;
-    // drain: an empty broadcast request, one matrix reply per machine
-    let mut expect_down = FRAME_OVERHEAD;
+    // drain: an op-tag-only broadcast request, one matrix reply per
+    // machine (replies are tag-free — the protocol is phase-synchronous)
+    let mut expect_down = FRAME_OVERHEAD + OP_TAG;
     let mut expect_up = m * (FRAME_OVERHEAD + MATRIX_HEADER) + 4 * d * drained;
     for r in &out_w.telemetry.rounds {
         // two u64 sampling quotas per machine (the control scalars)
-        expect_down += m * (FRAME_OVERHEAD + 16);
+        expect_down += m * (FRAME_OVERHEAD + OP_TAG + 16);
         // the (v, C_iter) removal broadcast, metered once (§3)
-        expect_down += FRAME_OVERHEAD + 4 + matrix_bytes(r.broadcast, d);
+        expect_down += FRAME_OVERHEAD + OP_TAG + 4 + matrix_bytes(r.broadcast, d);
         // per machine: a sample-pair reply (two matrices + f64 secs)…
         expect_up += m * (FRAME_OVERHEAD + 2 * MATRIX_HEADER + 8) + 4 * d * r.sampled;
         // …and a removal ack (u64 removed + f64 secs)
@@ -167,6 +168,185 @@ fn transport_meter_resets_between_repetitions() {
         second.telemetry.comm.bytes_broadcast
     );
     assert_eq!(first.cost.to_bits(), second.cost.to_bits());
+}
+
+/// Point the fleet at the worker binary cargo built for this test run.
+/// (Outside tests the fleet finds it next to the current executable or
+/// via SOCCER_MACHINE_BIN; in tests cargo hands us the exact path.)
+/// The write is guarded by a `Once`: tests run on parallel threads and
+/// concurrent `setenv` is UB on glibc — one write, completed before any
+/// process test proceeds to the env reads in the spawn path, is safe.
+fn use_test_worker_binary() {
+    static SET: std::sync::Once = std::sync::Once::new();
+    SET.call_once(|| std::env::set_var("SOCCER_MACHINE_BIN", env!("CARGO_BIN_EXE_soccer-machine")));
+}
+
+/// The tentpole claim of the multi-process fleet: spawned
+/// `soccer-machine` workers produce BIT-identical clustering output to
+/// the direct and in-process modes on the same seed, and their byte
+/// meters agree with the in-process meters exactly (the frames are the
+/// same; only the processes are real). Equality with the InProc meters
+/// plus `transport_inproc_matches_direct_and_reconciles_bytes` above
+/// pins the process meters to the analytic points × 4·d accounting.
+#[test]
+fn process_transport_matches_direct_and_inproc_bitwise() {
+    use soccer::transport::TransportKind;
+    use_test_worker_binary();
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(6_000, 4);
+    let gm = soccer::data::gaussian::generate(&spec, &mut soccer::util::rng::Pcg64::new(81));
+    let m = 4usize;
+    let params = SoccerParams::new(4, 0.2);
+    let mut direct = Fleet::new(&gm.points, m, 82);
+    let mut inproc =
+        Fleet::with_transport(&gm.points, m, 82, TransportKind::InProc).expect("inproc fleet");
+    let mut process =
+        Fleet::with_transport(&gm.points, m, 82, TransportKind::Process).expect("process fleet");
+    assert_eq!(process.transport_name(), "process");
+    assert_eq!(process.total_live(), 6_000);
+    assert_eq!(process.dim(), gm.points.cols());
+    assert_eq!(process.worker_pids().iter().flatten().count(), m);
+
+    let out_d = run_soccer(&mut direct, &NativeEngine, &params, &LloydKMeans::default(), 83);
+    let out_i = run_soccer(&mut inproc, &NativeEngine, &params, &LloydKMeans::default(), 83);
+    let out_p = run_soccer(&mut process, &NativeEngine, &params, &LloydKMeans::default(), 83);
+
+    // bit-identical outcomes across all three modes
+    assert_eq!(out_d.c_out, out_p.c_out);
+    assert_eq!(out_d.final_centers, out_p.final_centers);
+    assert_eq!(out_d.rounds, out_p.rounds);
+    assert_eq!(out_d.output_size, out_p.output_size);
+    assert_eq!(out_d.cost.to_bits(), out_p.cost.to_bits());
+    assert_eq!(out_d.cost_c_out.to_bits(), out_p.cost_c_out.to_bits());
+    assert_eq!(out_i.cost.to_bits(), out_p.cost.to_bits());
+
+    // byte meters: process ≡ inproc exactly, and both measured > 0
+    let (ci, cp) = (&out_i.telemetry.comm, &out_p.telemetry.comm);
+    assert_eq!(ci.to_coordinator, cp.to_coordinator);
+    assert_eq!(ci.broadcast, cp.broadcast);
+    assert_eq!(ci.bytes_to_coordinator, cp.bytes_to_coordinator);
+    assert_eq!(ci.bytes_broadcast, cp.bytes_broadcast);
+    assert!(cp.bytes_to_coordinator > 0 && cp.bytes_broadcast > 0);
+    // headline sanity: the uplink is dominated by points × 4·d
+    let d = gm.points.cols();
+    assert!(cp.bytes_to_coordinator >= 4 * d * cp.to_coordinator);
+
+    // machine seconds were measured in the workers and crossed the wire
+    assert!(out_p.telemetry.rounds.iter().all(|r| r.machine_time_max > 0.0));
+}
+
+/// Repetitions on a process fleet: the `Reset` lifecycle frame restores
+/// the workers, the meters clear, and the rerun is a bit-exact replay.
+/// Dropping the fleet at the end is the clean-shutdown path (Shutdown
+/// frame, voluntary worker exit, reap) — a hang here fails CI's timeout.
+#[test]
+fn process_fleet_reset_replays_bit_exactly() {
+    use soccer::transport::TransportKind;
+    use_test_worker_binary();
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(4_000, 3);
+    let gm = soccer::data::gaussian::generate(&spec, &mut soccer::util::rng::Pcg64::new(91));
+    let mut fleet =
+        Fleet::with_transport(&gm.points, 3, 92, TransportKind::Process).expect("process fleet");
+    let params = SoccerParams::new(3, 0.2);
+    let first = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 93);
+    fleet.reset();
+    assert_eq!(fleet.wire_bytes(), (0, 0));
+    assert_eq!(fleet.total_live(), 4_000);
+    let second = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 93);
+    assert_eq!(first.cost.to_bits(), second.cost.to_bits());
+    assert_eq!(
+        first.telemetry.comm.bytes_to_coordinator,
+        second.telemetry.comm.bytes_to_coordinator
+    );
+    assert_eq!(
+        first.telemetry.comm.bytes_broadcast,
+        second.telemetry.comm.bytes_broadcast
+    );
+}
+
+/// Crash-failure handling: SIGKILL a worker mid-run (out-of-band, as a
+/// real crash would be) and the coordinator must downgrade the machine
+/// to dead within the timeout — never deadlock. The surviving workers
+/// finish the run. Unix-only: the out-of-band kill shells out to
+/// `kill -9` (in-band termination is covered by the kill_machine test
+/// on every platform).
+#[test]
+#[cfg(unix)]
+fn process_worker_crash_downgrades_within_timeout() {
+    use soccer::transport::TransportKind;
+    use_test_worker_binary();
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(3_000, 3);
+    let gm = soccer::data::gaussian::generate(&spec, &mut soccer::util::rng::Pcg64::new(101));
+    let mut fleet =
+        Fleet::with_transport(&gm.points, 3, 102, TransportKind::Process).expect("process fleet");
+    let original_total = fleet.total_original();
+    assert_eq!(original_total, 3_000);
+
+    // a healthy step first, so the crash lands mid-protocol
+    let mut rng = soccer::util::rng::Pcg64::new(103);
+    let out = fleet.sample_pair_exact(100, &mut rng);
+    assert_eq!(out.value.0.rows(), 100);
+
+    // SIGKILL worker 1 behind the coordinator's back
+    let pids = fleet.worker_pids();
+    let victim = pids[1].expect("worker 1 alive");
+    let status = std::process::Command::new("kill")
+        .args(["-9", &victim.to_string()])
+        .status()
+        .expect("spawn kill");
+    assert!(status.success(), "kill -9 failed");
+
+    // the next steps must complete within the watchdog window with the
+    // dead machine downgraded, not hang the coordinator
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let centers = soccer::core::Matrix::from_rows(&[&[0.0f32; 15]]);
+        let counts = fleet.counts_full(&centers, &NativeEngine).value;
+        let survivors = fleet.total_original();
+        let dead = fleet.dead_machines();
+        // the fleet keeps working on the survivors end to end
+        let params = SoccerParams::new(3, 0.2);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 104);
+        tx.send((counts, survivors, dead, out.cost)).expect("report");
+    });
+    let (counts, survivors, dead, cost) = rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("coordinator deadlocked after worker crash");
+    handle.join().expect("watchdog thread");
+    // worker 1's shard is gone from the aggregates (shards are 1000
+    // points each), and the coordinator both knows it and reports it
+    assert_eq!(dead, 1);
+    assert_eq!(survivors, 2_000);
+    assert_eq!(counts[0] as usize, 2_000);
+    assert!(cost.is_finite() && cost >= 0.0);
+}
+
+/// `kill_machine` on a process fleet is real failure injection: the
+/// worker process is terminated (its pid slot empties) and the fleet
+/// continues on the survivors.
+#[test]
+fn process_kill_machine_terminates_the_worker() {
+    use soccer::transport::TransportKind;
+    use_test_worker_binary();
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(1_200, 2);
+    let gm = soccer::data::gaussian::generate(&spec, &mut soccer::util::rng::Pcg64::new(111));
+    let mut fleet =
+        Fleet::with_transport(&gm.points, 3, 112, TransportKind::Process).expect("process fleet");
+    assert_eq!(fleet.worker_pids().iter().flatten().count(), 3);
+    let lost = fleet.kill_machine(0);
+    assert_eq!(lost, 400);
+    assert!(fleet.worker_pids()[0].is_none());
+    assert_eq!(fleet.total_live(), 800);
+    // killing again is a no-op; the survivors still answer
+    assert_eq!(fleet.kill_machine(0), 0);
+    let centers = soccer::core::Matrix::from_rows(&[&[0.0f32; 15]]);
+    let counts = fleet.counts_full(&centers, &NativeEngine).value;
+    assert_eq!(counts[0] as usize, 800);
+    let drained = fleet.drain();
+    assert_eq!(drained.rows(), 800);
 }
 
 #[cfg(feature = "pjrt")]
