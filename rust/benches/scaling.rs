@@ -2,7 +2,11 @@
 //! - n-sweep: SOCCER rounds stay flat while η grows as nᵉ;
 //! - m-sweep: per-machine communication 2η/m shrinks with the fleet
 //!   while total communication is unchanged;
-//! - machine time vs m: more machines → smaller shards → faster rounds.
+//! - machine time vs m: more machines → smaller shards → faster rounds;
+//! - machines-per-worker sweep: the same fleet packed onto fewer
+//!   worker processes — bring-up (concurrent spawn + handshake) and
+//!   run wall-clock vs process count, with outcomes identical across
+//!   packings (skipped when the soccer-machine binary isn't built).
 
 use soccer::clustering::LloydKMeans;
 use soccer::coordinator::{run_soccer, SoccerParams};
@@ -10,8 +14,10 @@ use soccer::bench_support::{fmt_val, Table};
 use soccer::data::gaussian::{generate, GaussianMixtureSpec};
 use soccer::machines::Fleet;
 use soccer::runtime::NativeEngine;
+use soccer::transport::TransportKind;
 use soccer::util::json::Json;
 use soccer::util::rng::Pcg64;
+use std::time::Instant;
 
 fn main() {
     let k = 10usize;
@@ -68,6 +74,54 @@ fn main() {
         ]));
     }
     t2.print();
+
+    // machines-per-worker axis: a packed process fleet. Fewer workers
+    // means fewer OS processes and fewer sockets for the same m logical
+    // machines; bring-up stays O(m/w) because spawn + handshake run
+    // concurrently. Shard shipping dominates bring-up at this n.
+    let n3 = n.min(50_000);
+    let gm3 = generate(&GaussianMixtureSpec::paper(n3, k), &mut Pcg64::new(7));
+    let mut t3 = Table::new(
+        &format!("machines-per-worker sweep (n={n3}, m=8, process fleet)"),
+        &["mach/worker", "workers", "bringup(s)", "run(s)", "rounds", "cost"],
+    );
+    for mpw in [1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        let mut fleet =
+            match Fleet::with_placement(&gm3.points, 8, 8, TransportKind::Process, mpw) {
+                Ok(f) => f,
+                Err(e) => {
+                    println!("skipping the machines-per-worker sweep: {e}");
+                    break;
+                }
+            };
+        let bringup = t0.elapsed().as_secs_f64();
+        let workers = {
+            let mut pids: Vec<u32> = fleet.worker_pids().into_iter().flatten().collect();
+            pids.dedup();
+            pids.len()
+        };
+        let params = SoccerParams::new(k, eps);
+        let t1 = Instant::now();
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 9);
+        let run_secs = t1.elapsed().as_secs_f64();
+        t3.row(vec![
+            mpw.to_string(),
+            workers.to_string(),
+            format!("{bringup:.3}"),
+            format!("{run_secs:.3}"),
+            out.rounds.to_string(),
+            fmt_val(out.cost),
+        ]);
+        log.push(Json::obj(vec![
+            ("machines_per_worker", Json::num(mpw as f64)),
+            ("workers", Json::num(workers as f64)),
+            ("bringup_secs", Json::num(bringup)),
+            ("run_secs", Json::num(run_secs)),
+        ]));
+    }
+    t3.print();
+
     let path =
         soccer::bench_support::harness::write_log("scaling", Json::obj(vec![("rows", Json::Arr(log))]));
     println!("log: {}", path.display());

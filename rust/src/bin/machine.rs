@@ -1,13 +1,17 @@
-//! `soccer-machine` — one fleet machine as its own OS process.
+//! `soccer-machine` — one fleet worker process, hosting one or more
+//! fleet machines behind a single coordinator socket.
 //!
 //! Spawned by a `TransportKind::Process` fleet, never run by hand
 //! (though you can: it only needs a coordinator socket to dial).
 //! Protocol: connect to `--connect` (`unix:<path>` or `tcp:<ip:port>`),
-//! send the hello frame, receive the `LoadShard` frame carrying this
-//! machine's id, RNG stream, and data shard, ack with the live-point
-//! count, then serve phase-synchronous requests until a `Shutdown`
-//! frame or peer disconnect. All machine-side seconds reported back to
-//! the coordinator are measured here, in this process.
+//! send the hello frame carrying this worker's `--id` index, receive
+//! the batched `LoadShard` frame carrying every hosted machine's id,
+//! RNG stream, and data shard, ack with the per-machine live-point
+//! counts, then serve phase-synchronous requests — routed per machine
+//! by the u32 machine field in every request header; broadcasts fan out
+//! to every hosted machine in slot order — until a `Shutdown` frame or
+//! peer disconnect. All machine-side seconds reported back to the
+//! coordinator are measured here, in this process.
 
 use soccer::runtime::NativeEngine;
 use soccer::transport::process::WorkerEndpoint;
@@ -45,15 +49,16 @@ fn parse_args() -> Result<(String, u64)> {
 }
 
 fn run() -> Result<()> {
-    let (addr, id) = parse_args()?;
+    let (addr, worker_index) = parse_args()?;
     let mut link = WorkerEndpoint::connect(&addr)?;
-    link.send(&protocol::encode_hello(id))?;
+    link.send(&protocol::encode_hello(worker_index))?;
     let shard_frame = link
         .recv()
-        .map_err(|e| e.context("worker: coordinator hung up before shipping the shard"))?;
-    let mut machine = protocol::decode_load_shard(&shard_frame, id)?;
-    link.send(&protocol::encode_live_ack(machine.n_live()))?;
+        .map_err(|e| e.context("worker: coordinator hung up before shipping the shards"))?;
+    let mut machines = protocol::decode_load_shards(&shard_frame)?;
+    let live: Vec<usize> = machines.iter().map(|m| m.n_live()).collect();
+    link.send(&protocol::encode_live_acks(&live)?)?;
     // the worker is always its own process: the native engine is the
     // only one that exists here (PJRT stays coordinator-side)
-    protocol::serve(&mut link, &mut machine, &NativeEngine)
+    protocol::serve(&mut link, &mut machines, &NativeEngine)
 }

@@ -17,10 +17,14 @@
 //! - [`TransportKind::InProc`] / [`TransportKind::LoopbackTcp`] keep
 //!   the machines in this process, answering requests through the
 //!   shared `transport::protocol` dispatcher on threads;
-//! - [`TransportKind::Process`] spawns one `soccer-machine` worker
-//!   process per machine and ships each its shard; the same dispatcher
-//!   runs in the worker, so the wire traffic is byte-identical and the
-//!   reported machine seconds are genuine other-process wall time.
+//! - [`TransportKind::Process`] spawns `soccer-machine` worker
+//!   processes — **concurrently** — and ships each the batch of shards
+//!   it hosts; the same dispatcher runs in the worker, so the wire
+//!   traffic is byte-identical and the reported machine seconds are
+//!   genuine other-process wall time. The placement policy
+//!   ([`Fleet::with_placement`], `machines_per_worker`) packs m logical
+//!   machines onto w = ⌈m / machines_per_worker⌉ processes; requests
+//!   are routed per machine by the frame header.
 //!
 //! All modes are deterministic twins: the codec round-trips f32/f64
 //! bit-exactly and every mode consumes identical RNG streams, so a run
@@ -38,15 +42,19 @@
 //! link), so wired byte meters on a failure run include those empty
 //! control frames; the byte reconciliation tests therefore run on
 //! failure-free fleets. Killing a machine on a process fleet terminates
-//! the worker process itself; its link is gone, later steps skip it,
-//! and a worker that crashes *uninvited* (the process dies mid-round)
-//! is detected by the transport error on its link and downgraded to
-//! dead the same way instead of deadlocking the run.
+//! the worker process itself — and with it **every** machine that
+//! worker hosted (the crash-failure unit is the process, not the
+//! shard): all of them downgrade to dead, their links are gone, later
+//! steps skip them. A worker that crashes *uninvited* (the process dies
+//! mid-round) is detected by the transport error on its link and every
+//! hosted machine is downgraded the same way instead of deadlocking
+//! the run.
 
 use super::machine::Machine;
 use crate::core::Matrix;
+use crate::format_err;
 use crate::runtime::{Engine, NativeEngine};
-use crate::transport::process::WorkerSpec;
+use crate::transport::process::{MachineSpec, WorkerSpec};
 use crate::transport::protocol::{self, Op};
 use crate::transport::wire::FrameReader;
 use crate::transport::{Down, FleetChannel, TransportKind};
@@ -154,31 +162,65 @@ impl Fleet {
     /// Build a fleet whose coordinator↔machine links run over the given
     /// transport (see [`crate::transport`]). `TransportKind::Direct`
     /// yields exactly `Fleet::new`; `TransportKind::Process` spawns one
-    /// `soccer-machine` worker per shard and ships it the shard plus
-    /// the same RNG stream `Fleet::new` would hand a local machine.
+    /// `soccer-machine` worker per shard (the 1-machine-per-worker
+    /// placement) and ships it the shard plus the same RNG stream
+    /// `Fleet::new` would hand a local machine. Use
+    /// [`Fleet::with_placement`] to pack several machines per worker.
     pub fn with_transport(
         points: &Matrix,
         m: usize,
         seed: u64,
         kind: TransportKind,
     ) -> crate::util::error::Result<Fleet> {
+        Fleet::with_placement(points, m, seed, kind, 1)
+    }
+
+    /// [`Fleet::with_transport`] with a placement policy: each spawned
+    /// worker process hosts up to `machines_per_worker` logical
+    /// machines (contiguous blocks, so machine j lives on worker
+    /// j / machines_per_worker), and the m machines map onto
+    /// w = ⌈m / machines_per_worker⌉ processes, spawned and handshaken
+    /// **concurrently**. Outcomes and protocol byte meters are
+    /// independent of the packing — a fleet of 8 machines on 3 workers
+    /// is a bit-identical twin of the same fleet on 8 workers, or of a
+    /// direct fleet. Only `TransportKind::Process` has worker processes
+    /// to pack; the other kinds require `machines_per_worker == 1`.
+    pub fn with_placement(
+        points: &Matrix,
+        m: usize,
+        seed: u64,
+        kind: TransportKind,
+        machines_per_worker: usize,
+    ) -> crate::util::error::Result<Fleet> {
+        assert!(m >= 1);
+        assert!(machines_per_worker >= 1);
         if kind == TransportKind::Process {
-            assert!(m >= 1);
-            return Fleet::spawn_process_fleet(points.split_rows(m), seed);
+            return Fleet::spawn_process_fleet(points.split_rows(m), seed, machines_per_worker);
+        }
+        if machines_per_worker != 1 {
+            return Err(format_err!(
+                "machines_per_worker={machines_per_worker} needs TransportKind::Process; \
+                 {} links are one per machine",
+                kind.name()
+            ));
         }
         let mut fleet = Fleet::new(points, m, seed);
         fleet.channel = FleetChannel::connect(kind, fleet.machines.len())?;
         Ok(fleet)
     }
 
-    fn spawn_process_fleet(shards: Vec<Matrix>, seed: u64) -> crate::util::error::Result<Fleet> {
+    fn spawn_process_fleet(
+        shards: Vec<Matrix>,
+        seed: u64,
+        machines_per_worker: usize,
+    ) -> crate::util::error::Result<Fleet> {
         assert!(!shards.is_empty());
         let dim = shards[0].cols();
         let mut root = Pcg64::new(seed);
-        let specs: Vec<WorkerSpec> = shards
+        let specs: Vec<MachineSpec> = shards
             .into_iter()
             .enumerate()
-            .map(|(id, shard)| WorkerSpec {
+            .map(|(id, shard)| MachineSpec {
                 id,
                 rng: root.split(id as u64),
                 shard,
@@ -193,13 +235,32 @@ impl Fleet {
                 dead: false,
             })
             .collect();
-        let workers = crate::transport::process::spawn_fleet(specs)?;
+        let m = specs.len();
+        // contiguous blocks: machine j → (worker j / mpw, slot j % mpw)
+        let placement: Vec<(usize, usize)> = (0..m)
+            .map(|j| (j / machines_per_worker, j % machines_per_worker))
+            .collect();
+        let mut worker_specs: Vec<WorkerSpec> = Vec::new();
+        for (j, spec) in specs.into_iter().enumerate() {
+            if j % machines_per_worker == 0 {
+                worker_specs.push(WorkerSpec {
+                    index: worker_specs.len(),
+                    machines: Vec::with_capacity(machines_per_worker),
+                });
+            }
+            worker_specs
+                .last_mut()
+                .expect("just pushed a worker spec")
+                .machines
+                .push(spec);
+        }
+        let workers = crate::transport::process::spawn_fleet(worker_specs)?;
         Ok(Fleet {
             machines: Vec::new(),
             meta: Some(meta),
             dim,
             workers: crate::util::pool::default_workers(),
-            channel: FleetChannel::process(workers),
+            channel: FleetChannel::process(workers, placement),
         })
     }
 
@@ -226,8 +287,10 @@ impl Fleet {
         }
     }
 
-    /// OS pids of the live worker processes behind a process fleet
-    /// (`None` per dead machine); empty on every other transport.
+    /// OS pids of the live worker processes behind a process fleet,
+    /// one entry per MACHINE (`None` per dead machine) — machines
+    /// packed onto the same worker report the same pid. Empty on every
+    /// other transport.
     pub fn worker_pids(&self) -> Vec<Option<u32>> {
         match &self.channel {
             FleetChannel::Direct => Vec::new(),
@@ -288,9 +351,10 @@ impl Fleet {
     /// crashed process is gone, unlike a simulated in-process crash.
     pub fn reset(&mut self) {
         let frames = self.meta.as_ref().map(|meta| {
-            let frame = protocol::request(Op::Reset).finish();
             meta.iter()
-                .map(|mm| (!mm.dead).then(|| frame.clone()))
+                .map(|mm| {
+                    (!mm.dead).then(|| protocol::request_to(Op::Reset, mm.id as u32).finish())
+                })
                 .collect::<Vec<_>>()
         });
         if let Some(frames) = frames {
@@ -317,7 +381,7 @@ impl Fleet {
                     if mm.dead {
                         return None;
                     }
-                    let mut w = protocol::request(Op::Reseed);
+                    let mut w = protocol::request_to(Op::Reseed, mm.id as u32);
                     for word in rng.to_raw() {
                         w.put_u64(word);
                     }
@@ -390,8 +454,14 @@ impl Fleet {
                         // loud on purpose: a silent downgrade would let a
                         // run report paper-table numbers over a smaller n
                         // than claimed with nothing flagging the loss
-                        eprintln!("soccer: machine {j} downgraded to dead after a link failure: {e}");
-                        meta[j].downgrade();
+                        // (once per machine — an already-dead machine
+                        // errors on every later exchange by design)
+                        if !meta[j].dead {
+                            eprintln!(
+                                "soccer: machine {j} downgraded to dead after a link failure: {e}"
+                            );
+                            meta[j].downgrade();
+                        }
                         None
                     }
                     None => panic!("machine {j}: in-process link failed: {e}"),
@@ -458,8 +528,9 @@ impl Fleet {
             let reqs: Vec<Vec<u8>> = q1
                 .iter()
                 .zip(&q2)
-                .map(|(&a, &b)| {
-                    let mut w = protocol::request(Op::SampleExactPair);
+                .enumerate()
+                .map(|(j, (&a, &b))| {
+                    let mut w = protocol::request_to(Op::SampleExactPair, j as u32);
                     w.put_u64(a as u64);
                     w.put_u64(b as u64);
                     w.finish()
@@ -806,8 +877,10 @@ impl Fleet {
     /// replication) and it stops contributing to every later step.
     /// Returns the number of live points lost. Killing an unknown or
     /// already-dead machine is a no-op. On a process fleet this
-    /// terminates the worker process itself (SIGKILL + reap): the crash
-    /// takes the machine, not just its data.
+    /// terminates the worker process itself (SIGKILL + reap), and the
+    /// crash-failure unit is the *process*: every machine the worker
+    /// hosted downgrades to dead with it, and the returned count covers
+    /// all of their live points.
     pub fn kill_machine(&mut self, id: usize) -> usize {
         if let Some(meta) = &mut self.meta {
             let Some(j) = meta.iter().position(|mm| mm.id == id) else {
@@ -816,11 +889,21 @@ impl Fleet {
             if meta[j].dead {
                 return 0;
             }
-            if let FleetChannel::Wired(w) = &mut self.channel {
-                w.kill_link(j);
+            let group = match &mut self.channel {
+                FleetChannel::Wired(w) => {
+                    let group = w.colocated(j);
+                    w.kill_link(j);
+                    group
+                }
+                FleetChannel::Direct => vec![j],
+            };
+            let mut lost = 0;
+            for &g in &group {
+                if !meta[g].dead {
+                    lost += meta[g].n_live;
+                    meta[g].downgrade();
+                }
             }
-            let lost = meta[j].n_live;
-            meta[j].downgrade();
             return lost;
         }
         for m in &mut self.machines {
@@ -889,7 +972,8 @@ impl Fleet {
 
             // only the picked machine participates: a single-link
             // exchange keeps the meters free of skip-message traffic
-            let mut w = protocol::request(Op::UniformPoint);
+            // (the routing field picks it out of its worker's batch)
+            let mut w = protocol::request_to(Op::UniformPoint, j_pick as u32);
             w.put_u64(local as u64);
             let req = w.finish();
             let Fleet {
@@ -1174,7 +1258,9 @@ mod tests {
 
     #[test]
     fn transport_meter_counts_protocol_bytes() {
-        use crate::transport::wire::{matrix_bytes, FRAME_OVERHEAD, MATRIX_HEADER, OP_TAG};
+        use crate::transport::wire::{
+            matrix_bytes, FRAME_OVERHEAD, MACHINE_TAG, MATRIX_HEADER, OP_TAG,
+        };
         let mut f = wired_fleet(300, 5, TransportKind::InProc);
         assert_eq!(f.wire_bytes(), (0, 0));
         let mut rng = Pcg64::new(8);
@@ -1182,8 +1268,9 @@ mod tests {
         let sampled = out.value.0.rows() + out.value.1.rows();
         assert_eq!(sampled, 120);
         let (up, down) = f.wire_bytes();
-        // down: 5 per-machine quota frames of an op tag + two u64s
-        assert_eq!(down, 5 * (FRAME_OVERHEAD + OP_TAG + 16));
+        // down: 5 per-machine quota frames of an op tag + routing field
+        // + two u64s
+        assert_eq!(down, 5 * (FRAME_OVERHEAD + OP_TAG + MACHINE_TAG + 16));
         // up: 5 replies of (matrix, matrix, f64 secs) carrying 120
         // points of dimension 3 in total
         assert_eq!(
@@ -1195,7 +1282,10 @@ mod tests {
         f.reset_wire_meter();
         f.broadcast_remove(&centers, 0.1, &NativeEngine);
         let (_, down) = f.wire_bytes();
-        assert_eq!(down, FRAME_OVERHEAD + OP_TAG + 4 + matrix_bytes(1, 3));
+        assert_eq!(
+            down,
+            FRAME_OVERHEAD + OP_TAG + MACHINE_TAG + 4 + matrix_bytes(1, 3)
+        );
         // reset() clears the meter
         f.reset();
         assert_eq!(f.wire_bytes(), (0, 0));

@@ -4,19 +4,22 @@
 //! A wired channel is one of two shapes:
 //!
 //! - **Local** (`InProc` / `LoopbackTcp`): the channel owns both ends
-//!   of every link; machine-side handling runs on threads in this
-//!   process, driven by the handler passed to
+//!   of every link, one link per machine; machine-side handling runs on
+//!   threads in this process, driven by the handler passed to
 //!   [`WiredChannel::exchange`].
 //! - **Process**: the machine ends live in spawned `soccer-machine`
-//!   worker processes ([`crate::transport::process`]). The channel owns
-//!   only the coordinator ends; the handler argument is ignored because
-//!   the workers run `protocol::dispatch` themselves.
+//!   worker processes ([`crate::transport::process`]), and one worker
+//!   may host **several** machines. The channel owns the coordinator
+//!   ends plus a placement table mapping machine j → (worker, slot);
+//!   the handler argument is ignored because the workers run
+//!   `protocol::dispatch` themselves, routed by the machine field in
+//!   every frame header.
 //!
-//! Either way [`WiredChannel::exchange`] is the one primitive: send a
-//! request down every link, collect one reply per link — returned as a
+//! Either way [`WiredChannel::exchange`] is the one primitive: deliver
+//! a request for every machine, collect one reply per machine — as a
 //! per-machine `Result`, so a crashed worker process is a value the
-//! fleet can downgrade on, not a panic or a deadlock. All protocol byte
-//! metering happens here:
+//! fleet can downgrade on (every machine the worker hosted errors), not
+//! a panic or a deadlock. All protocol byte metering happens here:
 //!
 //! - `down_bytes` — coordinator → machines. A [`Down::Broadcast`] is
 //!   metered **once** regardless of fleet size (the coordinator model's
@@ -26,13 +29,15 @@
 //!
 //! Counts include the 4-byte frame length prefixes, so they reconcile
 //! exactly with the per-endpoint [`Transport`] counters (up to the
-//! broadcast-once convention, which the raw counters don't apply).
-//! On a failure-free run the meters are byte-identical across InProc,
-//! LoopbackTcp and Process — the frames are the same. On a failure run
-//! they diverge by design: a dead *local* machine still answers with
-//! empty frames (the link outlives the simulated crash), while a dead
-//! *worker process* has no link left, so nothing is sent to it or
-//! metered for it.
+//! broadcast-once convention, which the raw counters don't apply —
+//! raw counters also see one physical broadcast copy per *worker*, not
+//! per machine, on a packed process fleet).
+//! On a failure-free run the protocol meters are byte-identical across
+//! InProc, LoopbackTcp and Process — the frames are the same, whatever
+//! the packing. On a failure run they diverge by design: a dead *local*
+//! machine still answers with empty frames (the link outlives the
+//! simulated crash), while a dead *worker process* has no link left, so
+//! nothing is sent to any machine it hosted or metered for them.
 
 use super::process::WorkerLink;
 use super::{InProcTransport, LoopbackTcpTransport, Transport, TransportKind};
@@ -69,8 +74,8 @@ pub enum FleetChannel {
 impl FleetChannel {
     /// Open `n` coordinator↔machine links over the given transport.
     /// `TransportKind::Process` links cannot be opened here — workers
-    /// are born holding their shard, so the fleet builds them through
-    /// [`FleetChannel::process`] with the shard data in hand.
+    /// are born holding their shard batches, so the fleet builds them
+    /// through [`FleetChannel::process`] with the shard data in hand.
     pub fn connect(kind: TransportKind, n: usize) -> Result<FleetChannel> {
         match kind {
             TransportKind::Direct => Ok(FleetChannel::Direct),
@@ -102,8 +107,10 @@ impl FleetChannel {
     }
 
     /// Wrap spawned worker links (see `process::spawn_fleet`).
-    pub fn process(workers: Vec<WorkerLink>) -> FleetChannel {
-        FleetChannel::Wired(WiredChannel::from_workers(workers))
+    /// `placement[j] = (worker, slot)` maps machine j onto the worker
+    /// hosting it and its position in that worker's batch.
+    pub fn process(workers: Vec<WorkerLink>, placement: Vec<(usize, usize)>) -> FleetChannel {
+        FleetChannel::Wired(WiredChannel::from_workers(workers, placement))
     }
 
     pub fn wired_mut(&mut self) -> Option<&mut WiredChannel> {
@@ -123,14 +130,18 @@ impl FleetChannel {
 
 /// Where the machine ends of the links live.
 enum LinkSet {
-    /// Both endpoints in this process; machine-side handlers run on
-    /// threads driven by `exchange`.
+    /// Both endpoints in this process, one link per machine;
+    /// machine-side handlers run on threads driven by `exchange`.
     Local {
         coord_eps: Vec<Box<dyn Transport>>,
         machine_eps: Vec<Box<dyn Transport>>,
     },
-    /// Machine endpoints live in spawned worker processes.
-    Process { workers: Vec<WorkerLink> },
+    /// Machine endpoints live in spawned worker processes; a worker may
+    /// host several machines. `placement[j] = (worker, slot)`.
+    Process {
+        workers: Vec<WorkerLink>,
+        placement: Vec<(usize, usize)>,
+    },
 }
 
 /// The wired fabric: the links plus the protocol byte meters.
@@ -156,9 +167,27 @@ impl WiredChannel {
         }
     }
 
-    pub fn from_workers(workers: Vec<WorkerLink>) -> WiredChannel {
+    pub fn from_workers(workers: Vec<WorkerLink>, placement: Vec<(usize, usize)>) -> WiredChannel {
+        assert!(
+            placement.iter().all(|&(w, _)| w < workers.len()),
+            "placement references a worker that does not exist"
+        );
+        // broadcast replies are drained in machine order but produced in
+        // slot order, so correctness requires machine order within a
+        // worker == slot order: machine j's slot must equal its rank
+        // among the machines already placed on its worker. Validate it
+        // here rather than trusting the caller — a future non-contiguous
+        // packing that broke this would mispair replies silently.
+        let mut seen_per_worker = vec![0usize; workers.len()];
+        for &(w, slot) in &placement {
+            assert_eq!(
+                slot, seen_per_worker[w],
+                "placement is not in slot order within worker {w}; broadcast replies would mispair"
+            );
+            seen_per_worker[w] += 1;
+        }
         WiredChannel {
-            links: LinkSet::Process { workers },
+            links: LinkSet::Process { workers, placement },
             up_bytes: 0,
             down_bytes: 0,
         }
@@ -173,10 +202,10 @@ impl WiredChannel {
         }
     }
 
-    fn num_links(&self) -> usize {
+    fn num_machines(&self) -> usize {
         match &self.links {
             LinkSet::Local { coord_eps, .. } => coord_eps.len(),
-            LinkSet::Process { workers } => workers.len(),
+            LinkSet::Process { placement, .. } => placement.len(),
         }
     }
 
@@ -193,8 +222,9 @@ impl WiredChannel {
 
     /// Raw per-endpoint byte totals since the links were opened:
     /// `(coordinator received, coordinator sent)` — every physical copy
-    /// counted, broadcasts included once per machine (and, on process
-    /// links, the handshake/lifecycle frames the protocol meters skip).
+    /// counted: broadcasts once per link (once per *worker* on a packed
+    /// process fleet) and, on process links, the handshake/lifecycle
+    /// frames the protocol meters skip.
     pub fn raw_bytes(&self) -> (usize, usize) {
         match &self.links {
             LinkSet::Local { coord_eps, .. } => {
@@ -202,7 +232,7 @@ impl WiredChannel {
                 let sent = coord_eps.iter().map(|t| t.bytes_sent()).sum();
                 (recv, sent)
             }
-            LinkSet::Process { workers } => {
+            LinkSet::Process { workers, .. } => {
                 let recv = workers.iter().map(|w| w.bytes_received()).sum();
                 let sent = workers.iter().map(|w| w.bytes_sent()).sum();
                 (recv, sent)
@@ -210,27 +240,51 @@ impl WiredChannel {
         }
     }
 
-    /// OS pids of the live worker processes (`None` per dead link);
-    /// empty on local links.
+    /// OS pids per MACHINE (`None` per dead machine): machines hosted
+    /// by the same worker report the same pid. Empty on local links.
     pub fn worker_pids(&self) -> Vec<Option<u32>> {
         match &self.links {
             LinkSet::Local { .. } => Vec::new(),
-            LinkSet::Process { workers } => workers.iter().map(|w| w.pid()).collect(),
+            LinkSet::Process { workers, placement } => placement
+                .iter()
+                .map(|&(w, _)| workers[w].pid())
+                .collect(),
         }
     }
 
-    /// Terminate the worker process behind link `j` (failure
-    /// injection). Local links have no process to kill: returns false.
+    /// Machine indices hosted by the same worker as machine `j`
+    /// (including `j` itself). On local links a machine is its own
+    /// worker: `[j]`. This is the kill-granularity set — terminating
+    /// machine `j`'s worker takes every machine in `colocated(j)`.
+    pub fn colocated(&self, j: usize) -> Vec<usize> {
+        match &self.links {
+            LinkSet::Local { .. } => vec![j],
+            LinkSet::Process { placement, .. } => {
+                let w = placement[j].0;
+                placement
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &(wi, _))| wi == w)
+                    .map(|(i, _)| i)
+                    .collect()
+            }
+        }
+    }
+
+    /// Terminate the worker process hosting machine `j` (failure
+    /// injection) — on a packed fleet this takes every colocated
+    /// machine down with it. Local links have no process to kill:
+    /// returns false.
     pub fn kill_link(&mut self, j: usize) -> bool {
         match &mut self.links {
             LinkSet::Local { .. } => false,
-            LinkSet::Process { workers } => workers[j].kill(),
+            LinkSet::Process { workers, placement } => workers[placement[j].0].kill(),
         }
     }
 
     /// One synchronous protocol step: deliver `down` to every machine,
-    /// collect one reply per link, in machine order. A link whose peer
-    /// is gone yields an `Err` entry — never a hang — and stays
+    /// collect one reply per machine, in machine order. A machine whose
+    /// worker is gone yields an `Err` entry — never a hang — and stays
     /// silently skipped (no bytes metered for it) afterwards.
     ///
     /// On local links the machine side runs `handler` in this process.
@@ -252,9 +306,14 @@ impl WiredChannel {
     /// deadlock-free there too.
     ///
     /// On process links `items`, `engine` and `handler` are unused —
-    /// the workers are the machine side, and request/reply pipelining
-    /// across distinct sockets keeps the step deadlock-free (a worker
-    /// never sends before fully draining its request).
+    /// the workers are the machine side. A broadcast crosses each
+    /// worker's socket once and fans out inside the worker (one reply
+    /// per hosted machine, in slot order); per-machine frames are
+    /// routed to the hosting worker. Request/reply pipelining across
+    /// distinct sockets keeps the step deadlock-free (a worker never
+    /// sends before fully draining a request, and the coordinator
+    /// drains replies in machine order, which is arrival order per
+    /// worker).
     pub fn exchange<T: Send>(
         &mut self,
         items: &mut [T],
@@ -262,9 +321,9 @@ impl WiredChannel {
         down: Down<'_>,
         handler: impl Fn(&mut T, &[u8], &dyn Engine) -> Vec<u8> + Sync,
     ) -> Vec<Result<Vec<u8>>> {
-        let n = self.num_links();
+        let n = self.num_machines();
         if let Down::PerMachine(fs) = &down {
-            assert_eq!(fs.len(), n, "per-machine frames vs links mismatch");
+            assert_eq!(fs.len(), n, "per-machine frames vs machines mismatch");
         }
         let WiredChannel {
             links,
@@ -289,8 +348,8 @@ impl WiredChannel {
                 }
                 Self::exchange_local(coord_eps, machine_eps, items, engine, &down, &handler)
             }
-            LinkSet::Process { workers } => {
-                Self::exchange_process(workers, down_bytes, &down)
+            LinkSet::Process { workers, placement } => {
+                Self::exchange_process(workers, placement, down_bytes, &down)
             }
         };
         for r in replies.iter().flatten() {
@@ -359,51 +418,88 @@ impl WiredChannel {
         replies
     }
 
-    /// Send to every live worker, then drain the replies. Dead links
-    /// yield `Err` without any I/O (or metering): the worker process is
-    /// gone, there is nobody to carry the frame to.
+    /// Deliver to every live worker, then drain one reply per machine
+    /// in machine order. Machines on a dead worker yield `Err` without
+    /// any I/O (or metering): the worker process is gone, there is
+    /// nobody to carry their frames.
+    ///
+    /// Pipelining note: all downlink frames are written before any
+    /// reply is drained, so the per-machine frames queued on one packed
+    /// worker's socket must fit its buffer while the worker is busy
+    /// with an earlier slot. Today's per-machine requests are a few
+    /// dozen bytes (quotas, reseeds), far below any socket buffer;
+    /// bulk payloads travel as broadcasts (one frame per worker) or
+    /// replies (drained while later workers compute).
     fn exchange_process(
         workers: &mut [WorkerLink],
+        placement: &[(usize, usize)],
         down_bytes: &mut usize,
         down: &Down<'_>,
     ) -> Vec<Result<Vec<u8>>> {
-        let n = workers.len();
-        let mut broadcast_metered = false;
-        let mut sent: Vec<Result<()>> = Vec::with_capacity(n);
-        for (j, w) in workers.iter_mut().enumerate() {
-            if w.is_dead() {
-                sent.push(Err(format_err!(
-                    "machine {}: worker process is dead",
-                    w.id()
-                )));
-                continue;
-            }
-            let frame = down.frame_for(j);
-            match w.send(frame) {
-                Ok(()) => {
-                    match down {
-                        Down::Broadcast(_) if !broadcast_metered => {
-                            *down_bytes += 4 + frame.len();
-                            broadcast_metered = true;
-                        }
-                        Down::Broadcast(_) => {}
-                        Down::PerMachine(_) => *down_bytes += 4 + frame.len(),
+        let m = placement.len();
+        let mut sent: Vec<Result<()>> = Vec::with_capacity(m);
+        match down {
+            Down::Broadcast(f) => {
+                // one physical copy per live worker; metered once (§3).
+                // The worker fans the frame out to every machine it
+                // hosts and answers once per machine.
+                let mut per_worker: Vec<Option<String>> = Vec::with_capacity(workers.len());
+                let mut metered = false;
+                for w in workers.iter_mut() {
+                    if w.is_dead() {
+                        per_worker.push(Some(format!("worker {}: process is dead", w.id())));
+                        continue;
                     }
-                    sent.push(Ok(()));
+                    match w.send(f) {
+                        Ok(()) => {
+                            if !metered {
+                                *down_bytes += 4 + f.len();
+                                metered = true;
+                            }
+                            per_worker.push(None);
+                        }
+                        Err(e) => per_worker.push(Some(e.to_string())),
+                    }
                 }
-                Err(e) => sent.push(Err(e)),
+                for (j, &(wi, _)) in placement.iter().enumerate() {
+                    sent.push(match &per_worker[wi] {
+                        None => Ok(()),
+                        Some(msg) => Err(format_err!("machine {j}: {msg}")),
+                    });
+                }
+            }
+            Down::PerMachine(fs) => {
+                for (j, f) in fs.iter().enumerate() {
+                    let w = &mut workers[placement[j].0];
+                    if w.is_dead() {
+                        sent.push(Err(format_err!(
+                            "machine {j}: worker {} is dead",
+                            w.id()
+                        )));
+                        continue;
+                    }
+                    match w.send(f) {
+                        Ok(()) => {
+                            *down_bytes += 4 + f.len();
+                            sent.push(Ok(()));
+                        }
+                        Err(e) => sent.push(Err(e)),
+                    }
+                }
             }
         }
         sent.into_iter()
-            .zip(workers.iter_mut())
-            .map(|(s, w)| s.and_then(|_| w.recv()))
+            .enumerate()
+            .map(|(j, s)| s.and_then(|_| workers[placement[j].0].recv()))
             .collect()
     }
 
-    /// One request/reply on a single link — for steps that involve
-    /// exactly one machine (e.g. fetching a uniformly drawn point), so
-    /// the other links carry no skip-message traffic and the meters
-    /// report only what the protocol actually needs.
+    /// One request/reply on a single machine's link — for steps that
+    /// involve exactly one machine (e.g. fetching a uniformly drawn
+    /// point), so the other links carry no skip-message traffic and the
+    /// meters report only what the protocol actually needs. On a packed
+    /// process fleet the frame's routing field picks the machine out of
+    /// its worker's batch.
     ///
     /// Runs inline on the calling thread: both frames must be small
     /// enough to fit the transport's buffering (control frames and
@@ -432,10 +528,11 @@ impl WiredChannel {
                 machine_eps[j].send(&reply)?;
                 coord_eps[j].recv()?
             }
-            LinkSet::Process { workers } => {
-                workers[j].send(frame)?;
+            LinkSet::Process { workers, placement } => {
+                let w = &mut workers[placement[j].0];
+                w.send(frame)?;
                 *down_bytes += 4 + frame.len();
-                workers[j].recv()?
+                w.recv()?
             }
         };
         *up_bytes += 4 + got.len();
@@ -445,24 +542,28 @@ impl WiredChannel {
     /// Lifecycle traffic on process links (`Reset` / `Reseed` frames):
     /// one optional frame per machine, **unmetered** — these replace
     /// the direct machine mutations an in-process fleet performs, which
-    /// cost nothing on its meters either. `None` skips the link; dead
-    /// links answer `Err`.
+    /// cost nothing on its meters either. `None` skips the machine;
+    /// machines on dead workers answer `Err`.
     pub fn control(&mut self, frames: &[Option<Vec<u8>>]) -> Vec<Result<Vec<u8>>> {
         match &mut self.links {
             LinkSet::Local { .. } => {
                 unreachable!("control frames are a process-link lifecycle; local fleets mutate their machines directly")
             }
-            LinkSet::Process { workers } => {
-                assert_eq!(frames.len(), workers.len(), "control frames vs links mismatch");
-                let mut sent: Vec<Option<Result<()>>> = Vec::with_capacity(workers.len());
-                for (w, f) in workers.iter_mut().zip(frames) {
-                    sent.push(f.as_ref().map(|f| w.send(f)));
+            LinkSet::Process { workers, placement } => {
+                assert_eq!(
+                    frames.len(),
+                    placement.len(),
+                    "control frames vs machines mismatch"
+                );
+                let mut sent: Vec<Option<Result<()>>> = Vec::with_capacity(frames.len());
+                for (j, f) in frames.iter().enumerate() {
+                    sent.push(f.as_ref().map(|f| workers[placement[j].0].send(f)));
                 }
                 sent.into_iter()
-                    .zip(workers.iter_mut())
-                    .map(|(s, w)| match s {
+                    .enumerate()
+                    .map(|(j, s)| match s {
                         None => Ok(Vec::new()),
-                        Some(r) => r.and_then(|_| w.recv()),
+                        Some(r) => r.and_then(|_| workers[placement[j].0].recv()),
                     })
                     .collect()
             }
@@ -516,8 +617,10 @@ mod tests {
         assert_eq!(chan.raw_bytes(), (36, 36));
         chan.reset_meter();
         assert_eq!(chan.wire_bytes(), (0, 0));
-        // no processes behind local links
+        // no processes behind local links; each machine is its own
+        // kill-granularity group
         assert!(chan.worker_pids().is_empty());
+        assert_eq!(chan.colocated(1), vec![1]);
         assert!(!chan.kill_link(0));
     }
 

@@ -11,10 +11,12 @@
 //!   the socket transport's.
 //! - [`LoopbackTcpTransport`] — a real `std::net` TCP socket pair on
 //!   localhost. Frames cross the kernel's loopback stack.
-//! - [`process`] — one spawned `soccer-machine` OS process per machine
-//!   over a Unix domain socket (loopback TCP fallback). The machines
-//!   are physically separate from the coordinator, as the paper's §3
-//!   model assumes; machine-side seconds are measured in the worker.
+//! - [`process`] — spawned `soccer-machine` OS processes over Unix
+//!   domain sockets (loopback TCP fallback), each hosting one or more
+//!   machines (the `machines_per_worker` placement). The machines are
+//!   physically separate from the coordinator, as the paper's §3 model
+//!   assumes; machine-side seconds are measured in the worker, and
+//!   fleet bring-up spawns + handshakes the workers concurrently.
 //!
 //! The remaining mode, [`TransportKind::Direct`], is the historical
 //! fast path: machine methods are invoked directly with no
@@ -24,11 +26,13 @@
 //!
 //! Protocol model (matches the paper's coordinator model, §3):
 //!
-//! - Requests start with a u32 [`protocol::Op`] tag (so an
-//!   out-of-process worker knows which step to run); replies are
-//!   tag-free — rounds are phase-synchronous, both ends always know
-//!   which reply comes next. All wired modes carry the identical
-//!   frames, which is why their byte meters agree exactly.
+//! - Requests start with a u32 [`protocol::Op`] tag plus a u32
+//!   machine-routing field (so an out-of-process worker hosting several
+//!   machines knows which step to run and on which machine; broadcasts
+//!   carry [`protocol::ALL_MACHINES`]); replies are tag-free — rounds
+//!   are phase-synchronous, both ends always know which reply comes
+//!   next. All wired modes carry the identical frames, which is why
+//!   their byte meters agree exactly, whatever the packing.
 //! - A coordinator broadcast is **one** transmission no matter how many
 //!   machines listen (§3's broadcast channel); per-machine messages
 //!   (e.g. sampling quotas) are metered per machine.
@@ -112,8 +116,9 @@ pub enum TransportKind {
     InProc,
     /// Real TCP sockets over 127.0.0.1.
     LoopbackTcp,
-    /// One spawned `soccer-machine` worker process per machine, over a
-    /// Unix domain socket (loopback TCP where unavailable).
+    /// Spawned `soccer-machine` worker processes over Unix domain
+    /// sockets (loopback TCP where unavailable), each hosting one or
+    /// more machines (see `Fleet::with_placement`).
     Process,
 }
 

@@ -1,38 +1,50 @@
-//! The process transport: each fleet machine is a spawned
-//! `soccer-machine` OS process, talking to the coordinator over a Unix
-//! domain socket (loopback TCP where Unix sockets are unavailable, or
+//! The process transport: the fleet's machines live in spawned
+//! `soccer-machine` OS processes, talking to the coordinator over Unix
+//! domain sockets (loopback TCP where Unix sockets are unavailable, or
 //! when `SOCCER_PROCESS_SOCKET=tcp` forces it). This is the mode that
 //! makes the repo a *real* distributed system: machine-side work runs
 //! on another process's CPU, its self-timed seconds are genuine
 //! other-process wall time, and every protocol byte crosses a kernel
 //! socket.
 //!
+//! One worker process can host **several** fleet machines (a
+//! [`WorkerSpec`] carries a batch of [`MachineSpec`]s), so m logical
+//! machines map onto w ≤ m processes — the packing production fleets
+//! assume. Requests are routed per machine by the u32 routing field in
+//! every frame header (`transport::protocol`).
+//!
 //! Lifecycle of one link (coordinator side, [`spawn_fleet`]):
 //!
-//! 1. bind a fresh listener (one socket per machine — no id
-//!    multiplexing on a shared accept loop),
-//! 2. spawn `soccer-machine --connect <addr> --id <j>`,
+//! 1. bind a fresh listener (one socket per worker — no multiplexing on
+//!    a shared accept loop),
+//! 2. spawn `soccer-machine --connect <addr> --id <w>`,
 //! 3. accept with a bounded timeout that also notices the child dying
 //!    before it ever connects (no hung coordinator),
-//! 4. handshake: worker sends a hello (magic, protocol version, id);
-//!    coordinator ships the [`Op::LoadShard`] frame (id, RNG state,
-//!    shard) over the same length-prefixed codec the data plane uses;
-//!    worker acks with its live-point count.
+//! 4. handshake: worker sends a hello (magic, protocol version, worker
+//!    index); coordinator ships one batched [`Op::LoadShard`] frame
+//!    (every hosted machine's id, PCG64 raw state, shard matrix) over
+//!    the same length-prefixed codec the data plane uses; worker acks
+//!    with per-machine live-point counts.
+//!
+//! [`spawn_fleet`] runs spawn + handshake for every worker
+//! **concurrently** on the in-tree `util::pool`, so bring-up wall-clock
+//! is O(m/w) handshakes, not O(m) sequential ones. If any worker fails
+//! to come up, the already-spawned links are torn down *explicitly*
+//! (kill + reap, not an implicit `Drop`) before the error returns — a
+//! mid-spawn failure leaves no zombie or orphan workers behind.
 //!
 //! After the handshake the link speaks exactly the phase-synchronous
 //! request/reply protocol of `transport::protocol`. Teardown sends an
 //! [`Op::Shutdown`] frame, waits briefly for a voluntary exit, then
 //! kills and always reaps the child — dropping a fleet never leaks
 //! zombies. A link whose worker vanishes mid-protocol turns into a
-//! transport error on the next send/recv; the fleet downgrades that
-//! machine to dead instead of deadlocking.
+//! transport error on the next send/recv; the fleet downgrades *every*
+//! machine the worker hosted to dead instead of deadlocking.
 
-use crate::core::Matrix;
 use crate::transport::protocol::{self, Op};
-use crate::transport::wire::FrameReader;
 use crate::transport::Transport;
 use crate::util::error::{Context, Result};
-use crate::util::rng::Pcg64;
+use crate::util::pool::par_map_mut;
 use crate::{bail, format_err};
 use std::io::ErrorKind;
 use std::net::{TcpListener, TcpStream};
@@ -42,6 +54,8 @@ use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
+
+pub use crate::transport::protocol::MachineSpec;
 
 /// How long the coordinator waits for a spawned worker to connect
 /// before declaring the spawn failed.
@@ -54,9 +68,14 @@ const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
 
 /// Bound on the handshake reads (hello, shard ack): generous enough to
-/// decode a multi-hundred-MB shard, finite so a connected-but-silent
-/// worker cannot hang the spawn.
+/// decode a multi-hundred-MB shard batch, finite so a connected-but-
+/// silent worker cannot hang the spawn.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Cap on concurrent spawn+handshake threads during fleet bring-up:
+/// enough to make startup O(m/w)-parallel at any realistic fleet size
+/// without unbounded thread fan-out on a huge one.
+const MAX_SPAWN_CONCURRENCY: usize = 32;
 
 /// Distinguishes concurrent fleets in one coordinator process when
 /// naming Unix socket paths.
@@ -190,16 +209,18 @@ impl Transport for WorkerEndpoint {
 
 // ---- coordinator side -------------------------------------------------------
 
-/// Everything one worker needs at birth: identity, RNG stream, shard.
+/// Everything one worker process needs at birth: its index (the `--id`
+/// argument) and the batch of machines it hosts, in slot order.
 pub struct WorkerSpec {
-    pub id: usize,
-    pub rng: Pcg64,
-    pub shard: Matrix,
+    pub index: usize,
+    pub machines: Vec<MachineSpec>,
 }
 
-/// The coordinator's handle on one spawned machine: the socket, the
-/// child process, and the raw byte counters.
+/// The coordinator's handle on one spawned worker process: the socket,
+/// the child process, and the raw byte counters. One link can carry the
+/// traffic of several machines; routing is the frame header's job.
 pub struct WorkerLink {
+    /// worker index (NOT a machine id — the link may host several)
     id: usize,
     stream: Option<Stream>,
     child: Option<Child>,
@@ -234,7 +255,7 @@ impl WorkerLink {
     pub fn send(&mut self, payload: &[u8]) -> Result<()> {
         let stream = match self.stream.as_mut() {
             Some(s) => s,
-            None => bail!("machine {}: worker process is dead", self.id),
+            None => bail!("worker {}: process is dead", self.id),
         };
         match stream.send_frame(payload) {
             Ok(()) => {
@@ -243,7 +264,7 @@ impl WorkerLink {
             }
             Err(e) => {
                 self.fail();
-                Err(e.context(format!("machine {}: worker link failed on send", self.id)))
+                Err(e.context(format!("worker {}: link failed on send", self.id)))
             }
         }
     }
@@ -251,7 +272,7 @@ impl WorkerLink {
     pub fn recv(&mut self) -> Result<Vec<u8>> {
         let stream = match self.stream.as_mut() {
             Some(s) => s,
-            None => bail!("machine {}: worker process is dead", self.id),
+            None => bail!("worker {}: process is dead", self.id),
         };
         match stream.recv_frame() {
             Ok(payload) => {
@@ -260,19 +281,29 @@ impl WorkerLink {
             }
             Err(e) => {
                 self.fail();
-                Err(e.context(format!("machine {}: worker link failed on recv", self.id)))
+                Err(e.context(format!("worker {}: link failed on recv", self.id)))
             }
         }
     }
 
     /// Terminate the worker immediately (failure injection, or teardown
     /// of a link that already errored). Returns false if already dead.
+    /// Every machine the worker hosted dies with it — the caller
+    /// downgrades them all.
     pub fn kill(&mut self) -> bool {
         if self.dead {
             return false;
         }
         self.fail();
         true
+    }
+
+    /// Explicit clean teardown — what `Drop` also does, callable
+    /// directly so the mid-spawn failure path reaps deterministically
+    /// (and tests can assert the reap happened before the error
+    /// surfaces, rather than depending on drop order).
+    pub fn teardown(&mut self) {
+        self.graceful_shutdown();
     }
 
     /// Close the link, SIGKILL the child, and reap it.
@@ -354,14 +385,33 @@ pub fn worker_binary() -> Result<PathBuf> {
     )
 }
 
-/// Spawn one worker per spec, handshake, and ship each its shard.
-pub fn spawn_fleet(specs: Vec<WorkerSpec>) -> Result<Vec<WorkerLink>> {
+/// Spawn one worker process per spec — **concurrently** — handshake,
+/// and ship each its batch of shards. Links return in spec order.
+///
+/// On any failure the already-spawned links are torn down explicitly
+/// (Shutdown → SIGKILL → reap) before the first error returns: a
+/// mid-spawn failure never leaks a running worker or a zombie pid.
+pub fn spawn_fleet(mut specs: Vec<WorkerSpec>) -> Result<Vec<WorkerLink>> {
     let bin = worker_binary()?;
-    let mut links = Vec::with_capacity(specs.len());
-    for spec in specs {
-        // an early failure drops the already-spawned links, whose Drop
-        // shuts their workers down — no orphan processes
-        links.push(spawn_worker(&bin, spec)?);
+    let concurrency = specs.len().min(MAX_SPAWN_CONCURRENCY);
+    let results = par_map_mut(&mut specs, concurrency, |_, spec| spawn_worker(&bin, spec));
+    let mut links = Vec::with_capacity(results.len());
+    let mut first_err = None;
+    for r in results {
+        match r {
+            Ok(link) => links.push(link),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        for link in &mut links {
+            link.teardown();
+        }
+        return Err(e.context("fleet bring-up failed; already-spawned workers were torn down"));
     }
     Ok(links)
 }
@@ -376,7 +426,7 @@ enum Listener {
 /// default where available, loopback TCP otherwise or when
 /// `SOCCER_PROCESS_SOCKET=tcp` asks for it. Returns the listener, the
 /// worker's `--connect` argument, and the socket file to clean up.
-fn bind_listener(id: usize) -> Result<(Listener, String, Option<PathBuf>)> {
+fn bind_listener(index: usize) -> Result<(Listener, String, Option<PathBuf>)> {
     #[cfg(unix)]
     {
         let force_tcp =
@@ -384,7 +434,7 @@ fn bind_listener(id: usize) -> Result<(Listener, String, Option<PathBuf>)> {
         if !force_tcp {
             let nonce = WORKER_NONCE.fetch_add(1, Ordering::Relaxed);
             let path = std::env::temp_dir().join(format!(
-                "soccer-{}-{id}-{nonce}.sock",
+                "soccer-{}-w{index}-{nonce}.sock",
                 std::process::id()
             ));
             let _ = std::fs::remove_file(&path);
@@ -405,7 +455,7 @@ fn bind_listener(id: usize) -> Result<(Listener, String, Option<PathBuf>)> {
 
 /// Accept with a deadline, noticing a child that died before
 /// connecting — the hang this transport refuses to have.
-fn accept_worker(listener: &Listener, child: &mut Child, id: usize) -> Result<Stream> {
+fn accept_worker(listener: &Listener, child: &mut Child, index: usize) -> Result<Stream> {
     match listener {
         Listener::Tcp(l) => l.set_nonblocking(true).context("set_nonblocking")?,
         #[cfg(unix)]
@@ -432,45 +482,54 @@ fn accept_worker(listener: &Listener, child: &mut Child, id: usize) -> Result<St
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
                 if let Ok(Some(status)) = child.try_wait() {
-                    bail!("machine {id}: worker exited before connecting ({status})");
+                    bail!("worker {index}: exited before connecting ({status})");
                 }
                 if Instant::now() >= deadline {
                     bail!(
-                        "machine {id}: worker did not connect within {ACCEPT_TIMEOUT:?} \
+                        "worker {index}: did not connect within {ACCEPT_TIMEOUT:?} \
                          (accept timed out)"
                     );
                 }
                 std::thread::sleep(Duration::from_millis(2));
             }
-            Err(e) => return Err(e).context(format!("machine {id}: accept failed")),
+            Err(e) => return Err(e).context(format!("worker {index}: accept failed")),
         }
     }
 }
 
-fn spawn_worker(bin: &Path, spec: WorkerSpec) -> Result<WorkerLink> {
-    let (listener, addr, sock_path) = bind_listener(spec.id)?;
+fn spawn_worker(bin: &Path, spec: &WorkerSpec) -> Result<WorkerLink> {
+    if spec.machines.is_empty() {
+        bail!("worker {}: spec hosts zero machines", spec.index);
+    }
+    let (listener, addr, sock_path) = bind_listener(spec.index)?;
     let mut child = Command::new(bin)
         .arg("--connect")
         .arg(addr)
         .arg("--id")
-        .arg(spec.id.to_string())
+        .arg(spec.index.to_string())
         .stdin(Stdio::null())
         .spawn()
         .with_context(|| format!("spawning {}", bin.display()))?;
-    let stream = match accept_worker(&listener, &mut child, spec.id) {
-        Ok(s) => s,
-        Err(e) => {
-            let _ = child.kill();
-            let _ = child.wait();
-            if let Some(p) = &sock_path {
-                let _ = std::fs::remove_file(p);
-            }
-            return Err(e);
+    // until the WorkerLink below owns the child, every early return
+    // must kill + reap it itself — a bare `?` here would leak a live
+    // orphan the no-zombie bring-up guarantee forbids
+    let early_cleanup = |child: &mut Child, e: crate::util::error::Error| {
+        let _ = child.kill();
+        let _ = child.wait();
+        if let Some(p) = &sock_path {
+            let _ = std::fs::remove_file(p);
         }
+        e
     };
-    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let stream = match accept_worker(&listener, &mut child, spec.index) {
+        Ok(s) => s,
+        Err(e) => return Err(early_cleanup(&mut child, e)),
+    };
+    if let Err(e) = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT)) {
+        return Err(early_cleanup(&mut child, e));
+    }
     let mut link = WorkerLink {
-        id: spec.id,
+        id: spec.index,
         stream: Some(stream),
         child: Some(child),
         sock_path,
@@ -478,31 +537,38 @@ fn spawn_worker(bin: &Path, spec: WorkerSpec) -> Result<WorkerLink> {
         sent: 0,
         received: 0,
     };
-    // handshake: hello ← , LoadShard → , live-count ack ←. These use
-    // the link's raw framing; the fleet's protocol meters never see
-    // them (setup, not the paper's communication).
+    // handshake: hello ← , batched LoadShard → , live-count acks ←.
+    // These use the link's raw framing; the fleet's protocol meters
+    // never see them (setup, not the paper's communication).
     let hello = link
         .recv()
-        .map_err(|e| e.context(format!("machine {}: no hello from worker", link.id)))?;
+        .map_err(|e| e.context(format!("worker {}: no hello", link.id)))?;
     let got = protocol::decode_hello(&hello)?;
     if got != link.id as u64 {
-        bail!("machine {}: worker introduced itself as machine {got}", link.id);
+        bail!("worker {}: introduced itself as worker {got}", link.id);
     }
-    let shard_rows = spec.shard.rows();
-    link.send(&protocol::encode_load_shard(
-        spec.id as u64,
-        &spec.rng,
-        &spec.shard,
-    )?)?;
+    link.send(&protocol::encode_load_shards(&spec.machines)?)?;
     let ack = link
         .recv()
-        .map_err(|e| e.context(format!("machine {}: no shard ack from worker", link.id)))?;
-    let loaded = FrameReader::new(&ack).get_u64() as usize;
-    if loaded != shard_rows {
+        .map_err(|e| e.context(format!("worker {}: no shard ack", link.id)))?;
+    let loaded = protocol::decode_live_acks(&ack)?;
+    if loaded.len() != spec.machines.len() {
         bail!(
-            "machine {}: worker loaded {loaded} rows, coordinator shipped {shard_rows}",
-            link.id
+            "worker {}: acked {} machines, coordinator shipped {}",
+            link.id,
+            loaded.len(),
+            spec.machines.len()
         );
+    }
+    for (s, &n) in spec.machines.iter().zip(&loaded) {
+        if n != s.shard.rows() {
+            bail!(
+                "worker {}: machine {} loaded {n} rows, coordinator shipped {}",
+                link.id,
+                s.id,
+                s.shard.rows()
+            );
+        }
     }
     // handshake done: the data plane blocks indefinitely by default (a
     // dead worker is an instant EOF; only SOCCER_PROCESS_TIMEOUT_SECS

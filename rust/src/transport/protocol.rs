@@ -1,20 +1,30 @@
 //! The machine-side half of the coordinator-model wire protocol.
 //!
-//! Every coordinator→machine request frame starts with a u32 [`Op`]
-//! tag followed by the op's arguments; the machine executes the step
-//! and sends back the op's (tag-free) reply frame. This module is the
-//! single definition of both sides' frame layouts: the fleet builds
-//! requests with [`request`], and *every* wired machine — an in-process
-//! thread under `TransportKind::InProc`/`LoopbackTcp`, or a spawned
-//! `soccer-machine` worker process under `TransportKind::Process` —
-//! answers them through the same [`dispatch`]. That sharing is what
-//! makes the three wired modes byte-identical on the wire and
-//! bit-identical in outcome.
+//! Every coordinator→machine request frame starts with a fixed header:
+//! a u32 [`Op`] tag, then a u32 **machine-routing field** — the id of
+//! the machine the request is for, or [`ALL_MACHINES`] on a broadcast.
+//! The routing field is what lets one worker process host *several*
+//! fleet machines behind a single socket: the worker reads the header,
+//! routes the request to the right hosted machine (or to every hosted
+//! machine, in slot order, for a broadcast), and sends one reply per
+//! addressed machine. Replies stay tag-free — the protocol is
+//! phase-synchronous, both ends always know which reply comes next.
+//!
+//! The header is identical on every wired transport — in-process
+//! threads under `TransportKind::InProc`/`LoopbackTcp` carry (and
+//! ignore) the routing field too — which is what keeps the three wired
+//! modes byte-identical on the meters and bit-identical in outcome.
+//! The fleet builds requests with [`request`] (broadcast) or
+//! [`request_to`] (one machine); *every* wired machine answers them
+//! through the same [`dispatch`].
 //!
 //! Lifecycle frames ([`Op::LoadShard`], [`Op::Reset`], [`Op::Reseed`],
 //! [`Op::Shutdown`], plus the worker's hello) exist only on
 //! process-backed links: in-process fleets mutate their machines
-//! directly. They are deliberately *not* metered by the fleet's
+//! directly. [`Op::LoadShard`] is **batched**: one frame carries every
+//! (id, RNG state, shard) triple the worker hosts, so a w-worker fleet
+//! handshakes in w exchanges no matter how many machines it packs.
+//! Lifecycle frames are deliberately *not* metered by the fleet's
 //! protocol byte counters — they are setup/teardown, not the paper's
 //! communication — so a process fleet's measured protocol bytes equal
 //! an in-process fleet's exactly.
@@ -24,9 +34,10 @@
 //! frames. On a process fleet those seconds are genuine other-process
 //! wall time, not a simulation.
 
+use crate::core::Matrix;
 use crate::machines::Machine;
 use crate::runtime::Engine;
-use crate::transport::wire::{FrameReader, FrameWriter};
+use crate::transport::wire::{u32_header, FrameReader, FrameWriter};
 use crate::transport::Transport;
 use crate::util::error::Result;
 use crate::util::rng::Pcg64;
@@ -37,7 +48,14 @@ pub const HELLO_MAGIC: u32 = 0x534F_4343; // "SOCC"
 
 /// Bumped whenever a frame layout changes; the coordinator refuses a
 /// worker speaking a different version instead of decoding garbage.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// v2: requests carry the machine-routing u32; LoadShard and its ack
+/// are batched per worker; the hello carries the worker index.
+pub const PROTOCOL_VERSION: u32 = 2;
+
+/// Routing value meaning "every machine this worker hosts" — the
+/// coordinator-model broadcast channel. A worker answering it sends one
+/// reply per hosted machine, in slot order.
+pub const ALL_MACHINES: u32 = u32::MAX;
 
 /// Request opcodes. Data-plane ops are the fleet steps every wired
 /// transport meters; lifecycle ops exist only on process links.
@@ -45,7 +63,8 @@ pub const PROTOCOL_VERSION: u32 = 1;
 #[repr(u32)]
 pub enum Op {
     // ---- lifecycle (process links only; never metered) ----------------
-    /// coordinator → worker at handshake: machine id, RNG state, shard
+    /// coordinator → worker at handshake: the batch of machines this
+    /// worker hosts (ids, RNG states, shards)
     LoadShard = 1,
     /// restore the pre-run shard and RNG stream (repetition replay)
     Reset = 2,
@@ -92,23 +111,31 @@ impl Op {
     }
 }
 
-/// Start a request frame: the op tag, ready for the op's arguments.
+/// Start a broadcast request frame: op tag + [`ALL_MACHINES`] routing,
+/// ready for the op's arguments.
 pub fn request(op: Op) -> FrameWriter {
+    request_to(op, ALL_MACHINES)
+}
+
+/// Start a request frame addressed to one machine: op tag + the
+/// machine's id in the routing field, ready for the op's arguments.
+pub fn request_to(op: Op, machine: u32) -> FrameWriter {
     let mut w = FrameWriter::new();
     w.put_u32(op as u32);
+    w.put_u32(machine);
     w
 }
 
-/// The worker's opening frame: magic, protocol version, machine id.
-pub fn encode_hello(id: u64) -> Vec<u8> {
+/// The worker's opening frame: magic, protocol version, worker index.
+pub fn encode_hello(worker_index: u64) -> Vec<u8> {
     let mut w = FrameWriter::with_capacity(16);
     w.put_u32(HELLO_MAGIC);
     w.put_u32(PROTOCOL_VERSION);
-    w.put_u64(id);
+    w.put_u64(worker_index);
     w.finish()
 }
 
-/// Verify a hello frame and return the worker's machine id.
+/// Verify a hello frame and return the worker's index.
 pub fn decode_hello(frame: &[u8]) -> Result<u64> {
     if frame.len() != 16 {
         bail!("process handshake: hello frame is {} bytes, want 16", frame.len());
@@ -125,50 +152,109 @@ pub fn decode_hello(frame: &[u8]) -> Result<u64> {
     Ok(r.get_u64())
 }
 
+/// Everything one hosted machine needs at birth: identity, RNG stream,
+/// shard. A worker process receives a batch of these in its
+/// [`Op::LoadShard`] frame.
+pub struct MachineSpec {
+    pub id: usize,
+    pub rng: Pcg64,
+    pub shard: Matrix,
+}
+
 /// The shard-loading frame the coordinator ships right after the hello:
-/// machine id, the machine's initial RNG state, and its data shard.
-pub fn encode_load_shard(id: u64, rng: &Pcg64, shard: &crate::core::Matrix) -> Result<Vec<u8>> {
-    let mut w = request(Op::LoadShard);
-    w.put_u64(id);
-    for word in rng.to_raw() {
-        w.put_u64(word);
+/// the full batch of machines this worker hosts. The routing field
+/// carries the batch size (there is no single target machine yet).
+pub fn encode_load_shards(machines: &[MachineSpec]) -> Result<Vec<u8>> {
+    if machines.is_empty() {
+        bail!("load-shard batch: a worker must host at least one machine");
     }
-    w.put_matrix(shard)?;
+    let mut w = FrameWriter::new();
+    w.put_u32(Op::LoadShard as u32);
+    w.put_u32(u32_header(machines.len(), "load-shard batch size")?);
+    for s in machines {
+        w.put_u64(s.id as u64);
+        for word in s.rng.to_raw() {
+            w.put_u64(word);
+        }
+        w.put_matrix(&s.shard)?;
+    }
     Ok(w.finish())
 }
 
-/// Decode [`encode_load_shard`] into a ready [`Machine`], verifying the
-/// id matches the one the worker was spawned with.
-pub fn decode_load_shard(frame: &[u8], expect_id: u64) -> Result<Machine> {
+/// Decode [`encode_load_shards`] into ready [`Machine`]s, in the slot
+/// order the coordinator will route by.
+pub fn decode_load_shards(frame: &[u8]) -> Result<Vec<Machine>> {
     let mut r = FrameReader::new(frame);
     let op = r.get_u32();
     if Op::from_u32(op) != Some(Op::LoadShard) {
         bail!("worker expected a LoadShard frame, got op {op}");
     }
-    let id = r.get_u64();
-    if id != expect_id {
-        bail!("shard frame is for machine {id}, this worker is machine {expect_id}");
+    let count = r.get_u32() as usize;
+    if count == 0 {
+        bail!("load-shard batch carries zero machines");
     }
-    let raw = [r.get_u64(), r.get_u64(), r.get_u64(), r.get_u64()];
-    let shard = r.get_matrix();
-    Ok(Machine::new(id as usize, shard, Pcg64::from_raw(raw)))
+    let mut machines: Vec<Machine> = Vec::with_capacity(count);
+    for _ in 0..count {
+        let id = r.get_u64() as usize;
+        if machines.iter().any(|m| m.id == id) {
+            bail!("load-shard batch repeats machine {id}");
+        }
+        let raw = [r.get_u64(), r.get_u64(), r.get_u64(), r.get_u64()];
+        let shard = r.get_matrix();
+        machines.push(Machine::new(id, shard, Pcg64::from_raw(raw)));
+    }
+    if r.remaining() != 0 {
+        bail!("load-shard frame has {} trailing bytes", r.remaining());
+    }
+    Ok(machines)
 }
 
-/// The ack closing a lifecycle exchange: the machine's live-point count
-/// (the coordinator's size metadata comes from these).
+/// The ack closing a Reset/Reseed exchange: one machine's live-point
+/// count (the coordinator's size metadata comes from these).
 pub fn encode_live_ack(n_live: usize) -> Vec<u8> {
     let mut w = FrameWriter::with_capacity(8);
     w.put_u64(n_live as u64);
     w.finish()
 }
 
+/// The ack closing a batched [`Op::LoadShard`] handshake: per-machine
+/// live-point counts, in slot order.
+pub fn encode_live_acks(n_live: &[usize]) -> Result<Vec<u8>> {
+    let mut w = FrameWriter::with_capacity(4 + 8 * n_live.len());
+    w.put_u32(u32_header(n_live.len(), "live-ack batch size")?);
+    for &n in n_live {
+        w.put_u64(n as u64);
+    }
+    Ok(w.finish())
+}
+
+/// Decode [`encode_live_acks`], validating the frame length against the
+/// claimed batch size.
+pub fn decode_live_acks(frame: &[u8]) -> Result<Vec<usize>> {
+    if frame.len() < 4 {
+        bail!("live-count ack is {} bytes, want at least 4", frame.len());
+    }
+    let mut r = FrameReader::new(frame);
+    let count = r.get_u32() as usize;
+    if frame.len() != 4 + 8 * count {
+        bail!(
+            "live-count ack claims {count} machines but is {} bytes",
+            frame.len()
+        );
+    }
+    Ok((0..count).map(|_| r.get_u64() as usize).collect())
+}
+
 /// Execute one data-plane or lifecycle request on a machine and encode
-/// the reply. This is the exact logic the PR-2 fleet ran in per-step
-/// closures, now shared between in-process machine threads and the
-/// `soccer-machine` worker loop.
+/// the reply. The routing field was already consumed by whoever picked
+/// `m` (the worker's [`serve`] loop, or the channel on local links), so
+/// it is skipped here. This is the exact logic the PR-2 fleet ran in
+/// per-step closures, now shared between in-process machine threads and
+/// the `soccer-machine` worker loop.
 pub fn dispatch(m: &mut Machine, req: &[u8], engine: &dyn Engine) -> Result<Vec<u8>> {
     let mut r = FrameReader::new(req);
     let op = Op::from_u32(r.get_u32()).ok_or_else(|| format_err!("unknown protocol op"))?;
+    let _route = r.get_u32(); // routing already resolved to `m`
     let mut w = FrameWriter::new();
     match op {
         Op::SampleExactPair => {
@@ -261,22 +347,43 @@ pub fn dispatch(m: &mut Machine, req: &[u8], engine: &dyn Engine) -> Result<Vec<
     Ok(w.finish())
 }
 
-/// The worker's request loop: answer dispatched requests until a
+/// The worker's request loop over its hosted machines: route each
+/// request by the header's machine field — [`ALL_MACHINES`] fans out to
+/// every hosted machine in slot order, one reply per machine — until a
 /// [`Op::Shutdown`] frame arrives (clean exit) or the peer disconnects
 /// (also a clean exit — the coordinator dropping the link IS the
 /// shutdown signal when it tears down without the courtesy frame).
-pub fn serve(link: &mut dyn Transport, m: &mut Machine, engine: &dyn Engine) -> Result<()> {
+pub fn serve(link: &mut dyn Transport, machines: &mut [Machine], engine: &dyn Engine) -> Result<()> {
     loop {
         let req = match link.recv() {
             Ok(req) => req,
             // a vanished peer is a normal end-of-service, not a panic
             Err(_) => return Ok(()),
         };
-        if req.len() >= 4 && FrameReader::new(&req).get_u32() == Op::Shutdown as u32 {
+        if req.len() < 8 {
+            bail!("runt request frame ({} bytes, want at least 8)", req.len());
+        }
+        let mut r = FrameReader::new(&req);
+        let op = r.get_u32();
+        if op == Op::Shutdown as u32 {
             return Ok(());
         }
-        let reply = dispatch(m, &req, engine)?;
-        link.send(&reply)?;
+        let route = r.get_u32();
+        if route == ALL_MACHINES {
+            for m in machines.iter_mut() {
+                let reply = dispatch(m, &req, engine)?;
+                link.send(&reply)?;
+            }
+        } else {
+            let m = machines
+                .iter_mut()
+                .find(|m| m.id == route as usize)
+                .ok_or_else(|| {
+                    format_err!("request routed to machine {route}, not hosted by this worker")
+                })?;
+            let reply = dispatch(m, &req, engine)?;
+            link.send(&reply)?;
+        }
     }
 }
 
@@ -285,11 +392,12 @@ mod tests {
     use super::*;
     use crate::core::Matrix;
     use crate::runtime::NativeEngine;
+    use crate::transport::InProcTransport;
 
-    fn machine(n: usize) -> Machine {
-        let mut rng = Pcg64::new(3);
+    fn machine(id: usize, n: usize) -> Machine {
+        let mut rng = Pcg64::new(3 + id as u64);
         let data = (0..n * 2).map(|_| rng.normal() as f32).collect();
-        Machine::new(0, Matrix::from_vec(data, n, 2), Pcg64::new(4))
+        Machine::new(id, Matrix::from_vec(data, n, 2), Pcg64::new(4 + id as u64))
     }
 
     #[test]
@@ -319,6 +427,18 @@ mod tests {
     }
 
     #[test]
+    fn request_headers_carry_the_route() {
+        let frame = request(Op::Drain).finish();
+        let mut r = FrameReader::new(&frame);
+        assert_eq!(r.get_u32(), Op::Drain as u32);
+        assert_eq!(r.get_u32(), ALL_MACHINES);
+        let frame = request_to(Op::SampleExactPair, 5).finish();
+        let mut r = FrameReader::new(&frame);
+        assert_eq!(r.get_u32(), Op::SampleExactPair as u32);
+        assert_eq!(r.get_u32(), 5);
+    }
+
+    #[test]
     fn hello_roundtrip_and_rejections() {
         assert_eq!(decode_hello(&encode_hello(7)).unwrap(), 7);
         assert!(decode_hello(&[1, 2, 3]).is_err());
@@ -331,27 +451,79 @@ mod tests {
     }
 
     #[test]
-    fn load_shard_rebuilds_the_exact_machine() {
-        let shard = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 3, 2);
-        let rng = Pcg64::new(11);
-        let frame = encode_load_shard(5, &rng, &shard).unwrap();
-        let mut worker = decode_load_shard(&frame, 5).unwrap();
-        let mut local = Machine::new(5, shard, rng);
-        // identical shard, identical RNG stream
-        assert_eq!(worker.original(), local.original());
-        let a = worker.sample_exact(2).value;
-        let b = local.sample_exact(2).value;
+    fn load_shard_batch_rebuilds_the_exact_machines() {
+        let shard_a = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 3, 2);
+        let shard_b = Matrix::from_vec(vec![7.0, 8.0], 1, 2);
+        let specs = vec![
+            MachineSpec {
+                id: 5,
+                rng: Pcg64::new(11),
+                shard: shard_a.clone(),
+            },
+            MachineSpec {
+                id: 6,
+                rng: Pcg64::new(12),
+                shard: shard_b.clone(),
+            },
+        ];
+        let frame = encode_load_shards(&specs).unwrap();
+        let mut workers = decode_load_shards(&frame).unwrap();
+        assert_eq!(workers.len(), 2);
+        let mut local_a = Machine::new(5, shard_a, Pcg64::new(11));
+        // identical shard, identical RNG stream, slot order preserved
+        assert_eq!(workers[0].id, 5);
+        assert_eq!(workers[1].id, 6);
+        assert_eq!(workers[0].original(), local_a.original());
+        assert_eq!(workers[1].original(), &shard_b);
+        let a = workers[0].sample_exact(2).value;
+        let b = local_a.sample_exact(2).value;
         assert_eq!(a, b);
-        // id mismatch is refused
-        let frame = encode_load_shard(5, &Pcg64::new(11), worker.original()).unwrap();
-        assert!(decode_load_shard(&frame, 6).is_err());
+    }
+
+    #[test]
+    fn load_shard_batch_rejections() {
+        // an empty batch cannot be encoded or decoded
+        assert!(encode_load_shards(&[]).is_err());
+        let mut w = FrameWriter::new();
+        w.put_u32(Op::LoadShard as u32);
+        w.put_u32(0);
+        assert!(decode_load_shards(&w.finish()).is_err());
+        // a repeated machine id is refused
+        let dup = vec![
+            MachineSpec {
+                id: 3,
+                rng: Pcg64::new(1),
+                shard: Matrix::zeros(1, 2),
+            },
+            MachineSpec {
+                id: 3,
+                rng: Pcg64::new(2),
+                shard: Matrix::zeros(1, 2),
+            },
+        ];
+        let frame = encode_load_shards(&dup).unwrap();
+        assert!(decode_load_shards(&frame).is_err());
+        // a non-LoadShard frame is refused
+        let frame = request(Op::Drain).finish();
+        assert!(decode_load_shards(&frame).is_err());
+    }
+
+    #[test]
+    fn live_acks_roundtrip_and_rejections() {
+        let acks = encode_live_acks(&[10, 0, 7]).unwrap();
+        assert_eq!(decode_live_acks(&acks).unwrap(), vec![10, 0, 7]);
+        assert!(decode_live_acks(&[1, 2]).is_err());
+        // a count that disagrees with the frame length is refused
+        let mut truncated = encode_live_acks(&[10, 0, 7]).unwrap();
+        truncated.truncate(12);
+        assert!(decode_live_acks(&truncated).is_err());
     }
 
     #[test]
     fn dispatch_matches_direct_machine_calls() {
         let eng = NativeEngine;
-        let mut a = machine(200);
-        let mut b = machine(200);
+        let mut a = machine(0, 200);
+        let mut b = machine(0, 200);
         let centers = Matrix::from_rows(&[&[0.0, 0.0]]);
 
         // remove: same removed count over the wire frames
@@ -364,8 +536,8 @@ mod tests {
         let removed_direct = b.remove_within(&centers, 0.5, &eng).value;
         assert_eq!(removed_wire, removed_direct);
 
-        // cost: bit-identical f64
-        let mut w = request(Op::CostFull);
+        // cost: bit-identical f64, whether routed broadcast or direct
+        let mut w = request_to(Op::CostFull, 0);
         w.put_matrix(&centers).unwrap();
         let reply = dispatch(&mut a, &w.finish(), &eng).unwrap();
         let cost_wire = FrameReader::new(&reply).get_f64();
@@ -380,10 +552,58 @@ mod tests {
     #[test]
     fn dispatch_rejects_lifecycle_and_unknown_ops() {
         let eng = NativeEngine;
-        let mut m = machine(10);
+        let mut m = machine(0, 10);
         assert!(dispatch(&mut m, &request(Op::Shutdown).finish(), &eng).is_err());
         let mut w = FrameWriter::new();
         w.put_u32(999);
+        w.put_u32(ALL_MACHINES);
         assert!(dispatch(&mut m, &w.finish(), &eng).is_err());
+    }
+
+    #[test]
+    fn serve_routes_by_machine_and_fans_out_broadcasts() {
+        let (mut coord, mut worker_ep) = InProcTransport::pair();
+        let server = std::thread::spawn(move || {
+            let mut machines = vec![machine(4, 30), machine(9, 50)];
+            protocol_serve_entry(&mut worker_ep, &mut machines)
+        });
+        // broadcast: one reply per hosted machine, in slot order
+        let centers = Matrix::from_rows(&[&[0.0, 0.0]]);
+        let mut w = request(Op::CountsFull);
+        w.put_matrix(&centers).unwrap();
+        coord.send(&w.finish()).unwrap();
+        let first = coord.recv().unwrap();
+        let second = coord.recv().unwrap();
+        assert_eq!(FrameReader::new(&first).get_f64s(), vec![30.0]);
+        assert_eq!(FrameReader::new(&second).get_f64s(), vec![50.0]);
+        // targeted: only machine 9 answers
+        let mut w = request_to(Op::CountsFull, 9);
+        w.put_matrix(&centers).unwrap();
+        coord.send(&w.finish()).unwrap();
+        let only = coord.recv().unwrap();
+        assert_eq!(FrameReader::new(&only).get_f64s(), vec![50.0]);
+        // a route to a machine this worker does not host is an error
+        let mut w = request_to(Op::CountsFull, 77);
+        w.put_matrix(&centers).unwrap();
+        coord.send(&w.finish()).unwrap();
+        assert!(server.join().expect("serve thread").is_err());
+    }
+
+    #[test]
+    fn serve_exits_cleanly_on_shutdown() {
+        let (mut coord, mut worker_ep) = InProcTransport::pair();
+        let server = std::thread::spawn(move || {
+            let mut machines = vec![machine(0, 10)];
+            protocol_serve_entry(&mut worker_ep, &mut machines)
+        });
+        coord.send(&request(Op::Shutdown).finish()).unwrap();
+        assert!(server.join().expect("serve thread").is_ok());
+    }
+
+    fn protocol_serve_entry(
+        link: &mut InProcTransport,
+        machines: &mut [Machine],
+    ) -> Result<()> {
+        serve(link, machines, &NativeEngine)
     }
 }

@@ -11,8 +11,9 @@
 //! - `[f32]`/`[f64]` — `u32 len` then the values.
 //!
 //! Every coordinator→machine request starts with a u32 opcode
-//! ([`OP_TAG`] bytes; see [`crate::transport::protocol`]) so a worker
-//! that lives in a separate process knows which step to run. Replies
+//! ([`OP_TAG`] bytes) and a u32 machine-routing field ([`MACHINE_TAG`]
+//! bytes; see [`crate::transport::protocol`]) so a worker process that
+//! hosts several machines knows which step to run and on which. Replies
 //! stay tag-free — the protocol is phase-synchronous, both ends know
 //! which reply shape comes next — and a shape mismatch is a protocol
 //! bug that panics with a message rather than limping on. Oversized
@@ -35,6 +36,13 @@ pub const MATRIX_HEADER: usize = 8;
 
 /// Bytes every coordinator→machine request spends on its u32 opcode.
 pub const OP_TAG: usize = 4;
+
+/// Bytes every coordinator→machine request spends on its u32
+/// machine-routing field (a machine id, or `protocol::ALL_MACHINES` on
+/// a broadcast). The field is what lets one worker process host many
+/// machines; it is present — and metered — on every wired transport so
+/// the modes stay byte-identical.
+pub const MACHINE_TAG: usize = 4;
 
 /// A value that cannot be encoded: a dimension or length exceeds the
 /// u32 wire header. Returned instead of silently truncating with

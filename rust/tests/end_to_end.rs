@@ -61,8 +61,12 @@ fn headline_metric_gaussian_one_round_native() {
 /// protocol structure fixes per round.
 #[test]
 fn transport_inproc_matches_direct_and_reconciles_bytes() {
-    use soccer::transport::wire::{matrix_bytes, FRAME_OVERHEAD, MATRIX_HEADER, OP_TAG};
+    use soccer::transport::wire::{
+        matrix_bytes, FRAME_OVERHEAD, MACHINE_TAG, MATRIX_HEADER, OP_TAG,
+    };
     use soccer::transport::TransportKind;
+    // every request spends its opcode plus the machine-routing field
+    let req_tags = OP_TAG + MACHINE_TAG;
 
     let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(20_000, 5);
     let gm = soccer::data::gaussian::generate(&spec, &mut soccer::util::rng::Pcg64::new(51));
@@ -94,15 +98,15 @@ fn transport_inproc_matches_direct_and_reconciles_bytes() {
     let d = gm.points.cols();
     let sum_sampled: usize = out_w.telemetry.rounds.iter().map(|r| r.sampled).sum();
     let drained = cw.to_coordinator - sum_sampled;
-    // drain: an op-tag-only broadcast request, one matrix reply per
+    // drain: a header-only broadcast request, one matrix reply per
     // machine (replies are tag-free — the protocol is phase-synchronous)
-    let mut expect_down = FRAME_OVERHEAD + OP_TAG;
+    let mut expect_down = FRAME_OVERHEAD + req_tags;
     let mut expect_up = m * (FRAME_OVERHEAD + MATRIX_HEADER) + 4 * d * drained;
     for r in &out_w.telemetry.rounds {
         // two u64 sampling quotas per machine (the control scalars)
-        expect_down += m * (FRAME_OVERHEAD + OP_TAG + 16);
+        expect_down += m * (FRAME_OVERHEAD + req_tags + 16);
         // the (v, C_iter) removal broadcast, metered once (§3)
-        expect_down += FRAME_OVERHEAD + OP_TAG + 4 + matrix_bytes(r.broadcast, d);
+        expect_down += FRAME_OVERHEAD + req_tags + 4 + matrix_bytes(r.broadcast, d);
         // per machine: a sample-pair reply (two matrices + f64 secs)…
         expect_up += m * (FRAME_OVERHEAD + 2 * MATRIX_HEADER + 8) + 4 * d * r.sampled;
         // …and a removal ack (u64 removed + f64 secs)
@@ -347,6 +351,157 @@ fn process_kill_machine_terminates_the_worker() {
     assert_eq!(counts[0] as usize, 800);
     let drained = fleet.drain();
     assert_eq!(drained.rows(), 800);
+}
+
+/// The packed-placement tentpole claim: m machines mapped onto w < m
+/// worker processes (here 8 machines on 3 workers) are a bit-identical
+/// twin of the direct and in-process modes — same clustering output,
+/// byte meters equal to the byte — because the frames are identical
+/// (every request carries the machine-routing field on every wired
+/// transport) and only the processes behind them differ. Bring-up
+/// concurrency itself is asserted by the `process_parallel_bringup_*`
+/// test (tests/process_spawn.rs) via a wall-clock bound.
+#[test]
+fn process_packed_workers_match_direct_and_inproc_bitwise() {
+    use soccer::transport::TransportKind;
+    use_test_worker_binary();
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(6_000, 4);
+    let gm = soccer::data::gaussian::generate(&spec, &mut soccer::util::rng::Pcg64::new(121));
+    let m = 8usize;
+    let params = SoccerParams::new(4, 0.2);
+    let mut direct = Fleet::new(&gm.points, m, 122);
+    let mut inproc =
+        Fleet::with_transport(&gm.points, m, 122, TransportKind::InProc).expect("inproc fleet");
+    let mut packed =
+        Fleet::with_placement(&gm.points, m, 122, TransportKind::Process, 3)
+            .expect("packed process fleet");
+    assert_eq!(packed.transport_name(), "process");
+    assert_eq!(packed.num_machines(), m);
+    assert_eq!(packed.total_live(), 6_000);
+
+    // 8 machines, but only 3 distinct worker processes behind them,
+    // packed in contiguous blocks: [0,1,2], [3,4,5], [6,7]
+    let pids = packed.worker_pids();
+    assert_eq!(pids.len(), m);
+    assert!(pids.iter().all(|p| p.is_some()));
+    let mut distinct: Vec<u32> = pids.iter().flatten().copied().collect();
+    distinct.dedup();
+    assert_eq!(distinct.len(), 3, "expected 3 workers behind 8 machines");
+    assert_eq!(pids[0], pids[2]);
+    assert_eq!(pids[3], pids[5]);
+    assert_eq!(pids[6], pids[7]);
+    assert_ne!(pids[2], pids[3]);
+
+    let out_d = run_soccer(&mut direct, &NativeEngine, &params, &LloydKMeans::default(), 123);
+    let out_i = run_soccer(&mut inproc, &NativeEngine, &params, &LloydKMeans::default(), 123);
+    let out_p = run_soccer(&mut packed, &NativeEngine, &params, &LloydKMeans::default(), 123);
+
+    // bit-identical outcomes across all three modes
+    assert_eq!(out_d.c_out, out_p.c_out);
+    assert_eq!(out_d.final_centers, out_p.final_centers);
+    assert_eq!(out_d.rounds, out_p.rounds);
+    assert_eq!(out_d.output_size, out_p.output_size);
+    assert_eq!(out_d.cost.to_bits(), out_p.cost.to_bits());
+    assert_eq!(out_d.cost_c_out.to_bits(), out_p.cost_c_out.to_bits());
+    assert_eq!(out_i.cost.to_bits(), out_p.cost.to_bits());
+
+    // byte meters: packed process ≡ inproc exactly — the packing moves
+    // frames onto fewer sockets but changes none of them
+    let (ci, cp) = (&out_i.telemetry.comm, &out_p.telemetry.comm);
+    assert_eq!(ci.to_coordinator, cp.to_coordinator);
+    assert_eq!(ci.broadcast, cp.broadcast);
+    assert_eq!(ci.bytes_to_coordinator, cp.bytes_to_coordinator);
+    assert_eq!(ci.bytes_broadcast, cp.bytes_broadcast);
+    assert!(cp.bytes_to_coordinator > 0 && cp.bytes_broadcast > 0);
+
+    // machine seconds were measured in the workers and crossed the wire
+    assert!(out_p.telemetry.rounds.iter().all(|r| r.machine_time_max > 0.0));
+
+    // in-band kill takes the whole worker: machines 0..3 share a
+    // process, so killing machine 0 downgrades all three
+    assert_eq!(packed.dead_machines(), 0);
+    packed.kill_machine(0);
+    assert_eq!(packed.dead_machines(), 3);
+    let pids = packed.worker_pids();
+    assert!(pids[0].is_none() && pids[1].is_none() && pids[2].is_none());
+    assert!(pids[3].is_some() && pids[7].is_some());
+}
+
+/// Chaos: SIGKILL a multi-shard worker mid-protocol (out-of-band, as a
+/// real crash would be). Every machine the worker hosted must downgrade
+/// to dead — `Fleet::dead_machines()` counts each — within the watchdog
+/// window, and the completed run must match the equivalent fleet whose
+/// dead machines never had any data (empty shards): a crashed process
+/// loses exactly its shards, nothing else.
+#[test]
+#[cfg(unix)]
+fn process_packed_worker_crash_downgrades_all_its_machines() {
+    use soccer::transport::TransportKind;
+    use_test_worker_binary();
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(3_000, 3);
+    let gm = soccer::data::gaussian::generate(&spec, &mut soccer::util::rng::Pcg64::new(131));
+    let m = 6usize;
+    // 2 machines per worker: workers host [0,1], [2,3], [4,5]
+    let mut fleet = Fleet::with_placement(&gm.points, m, 132, TransportKind::Process, 2)
+        .expect("packed process fleet");
+    assert_eq!(fleet.total_original(), 3_000);
+
+    // a healthy, RNG-free step first, so the crash lands mid-protocol
+    // with the victim having already participated
+    let centers = soccer::core::Matrix::from_rows(&[&[0.0f32; 15]]);
+    let counts = fleet.counts_full(&centers, &NativeEngine).value;
+    assert_eq!(counts[0] as usize, 3_000);
+
+    // SIGKILL the worker hosting machines 2 and 3, behind the
+    // coordinator's back
+    let pids = fleet.worker_pids();
+    assert_eq!(pids[2], pids[3], "machines 2 and 3 share a worker");
+    let victim = pids[2].expect("worker alive");
+    let status = std::process::Command::new("kill")
+        .args(["-9", &victim.to_string()])
+        .status()
+        .expect("spawn kill");
+    assert!(status.success(), "kill -9 failed");
+
+    // the next steps must complete within the watchdog window with ALL
+    // the worker's machines downgraded, not hang the coordinator
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let centers = soccer::core::Matrix::from_rows(&[&[0.0f32; 15]]);
+        let counts = fleet.counts_full(&centers, &NativeEngine).value;
+        let dead = fleet.dead_machines();
+        let survivors = fleet.total_original();
+        let params = SoccerParams::new(3, 0.2);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 134);
+        tx.send((counts, dead, survivors, out)).expect("report");
+    });
+    let (counts, dead, survivors, out_p) = rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("coordinator deadlocked after worker crash");
+    handle.join().expect("watchdog thread");
+    // BOTH hosted machines died with the process (500 points each)
+    assert_eq!(dead, 2);
+    assert_eq!(survivors, 2_000);
+    assert_eq!(counts[0] as usize, 2_000);
+
+    // the run over the survivors is a bit-exact twin of a fleet whose
+    // machines 2 and 3 simply hold empty shards: same machine RNG
+    // stream assignment (by index), same coordinator stream, and the
+    // dead machines contribute nothing either way
+    let d = gm.points.cols();
+    let mut shards = gm.points.split_rows(m);
+    shards[2] = soccer::core::Matrix::zeros(0, d);
+    shards[3] = soccer::core::Matrix::zeros(0, d);
+    let mut twin = Fleet::from_shards(shards, 132);
+    let params = SoccerParams::new(3, 0.2);
+    let out_t = run_soccer(&mut twin, &NativeEngine, &params, &LloydKMeans::default(), 134);
+    assert_eq!(out_p.c_out, out_t.c_out);
+    assert_eq!(out_p.final_centers, out_t.final_centers);
+    assert_eq!(out_p.rounds, out_t.rounds);
+    assert_eq!(out_p.cost.to_bits(), out_t.cost.to_bits());
+    assert_eq!(out_p.cost_c_out.to_bits(), out_t.cost_c_out.to_bits());
 }
 
 #[cfg(feature = "pjrt")]

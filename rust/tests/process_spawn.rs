@@ -1,0 +1,162 @@
+//! Bring-up behaviour of the process fleet, pinned down with a wrapper
+//! script standing in for the worker binary:
+//!
+//! - parallel spawn: fleet bring-up pays a per-worker startup delay
+//!   ONCE, not once per worker — the spawn→handshake loop really runs
+//!   concurrently;
+//! - mid-spawn failure: when one worker dies before connecting, the
+//!   already-spawned siblings are torn down explicitly and *reaped* —
+//!   no zombie pids, no orphaned workers survive the error.
+//!
+//! These live in their own test binary on purpose: they point
+//! `SOCCER_MACHINE_BIN` at throwaway wrapper scripts, and env vars are
+//! process-global — the other suites (which want the real binary) must
+//! not share a process with us. Within this binary the two tests
+//! serialize on a mutex for the same reason.
+
+#![cfg(unix)]
+
+use soccer::core::Matrix;
+use soccer::machines::Fleet;
+use soccer::transport::TransportKind;
+use soccer::util::rng::Pcg64;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Serializes the tests in this binary: each points SOCCER_MACHINE_BIN
+/// at its own wrapper script.
+static BIN_LOCK: Mutex<()> = Mutex::new(());
+
+fn test_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "soccer-spawn-test-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create test dir");
+    dir
+}
+
+fn write_script(path: &Path, body: &str) {
+    use std::os::unix::fs::PermissionsExt;
+    std::fs::write(path, body).expect("write wrapper script");
+    std::fs::set_permissions(path, std::fs::Permissions::from_mode(0o755))
+        .expect("chmod wrapper script");
+}
+
+fn points(n: usize) -> Matrix {
+    let mut rng = Pcg64::new(41);
+    Matrix::from_vec((0..n * 3).map(|_| rng.normal() as f32).collect(), n, 3)
+}
+
+/// The acceptance claim for parallel bring-up, as a wall-clock bound:
+/// every worker sleeps 1s before connecting, so a sequential
+/// spawn→handshake loop over 4 workers would take ≥ 4s while the
+/// concurrent one pays the delay once (~1s). The generous 3s ceiling
+/// keeps the assertion robust on slow CI while still cleanly separating
+/// O(w) from O(1) bring-up.
+#[test]
+fn process_parallel_bringup_spawns_workers_concurrently() {
+    let _guard = BIN_LOCK.lock().unwrap();
+    let dir = test_dir("bringup");
+    let script = dir.join("slow-machine.sh");
+    write_script(
+        &script,
+        &format!(
+            "#!/bin/sh\nsleep 1\nexec \"{real}\" \"$@\"\n",
+            real = env!("CARGO_BIN_EXE_soccer-machine")
+        ),
+    );
+    std::env::set_var("SOCCER_MACHINE_BIN", &script);
+
+    let pts = points(240);
+    let t0 = Instant::now();
+    // 8 machines packed 2-per-worker: 4 worker processes to bring up
+    let fleet = Fleet::with_placement(&pts, 8, 7, TransportKind::Process, 2)
+        .expect("packed fleet over the slow wrapper");
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed >= Duration::from_millis(900),
+        "wrapper delay not in effect ({elapsed:?}) — is the script being used?"
+    );
+    assert!(
+        elapsed < Duration::from_secs(3),
+        "bring-up looks sequential: 4 workers with 1s startup each took {elapsed:?}"
+    );
+    // the fleet that came up is whole: 8 machines on 4 distinct workers
+    assert_eq!(fleet.num_machines(), 8);
+    assert_eq!(fleet.total_live(), 240);
+    let mut pids: Vec<u32> = fleet.worker_pids().into_iter().flatten().collect();
+    assert_eq!(pids.len(), 8);
+    pids.dedup();
+    assert_eq!(pids.len(), 4, "expected 4 distinct worker processes");
+
+    drop(fleet);
+    std::env::remove_var("SOCCER_MACHINE_BIN");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Mid-spawn failure hygiene: worker 1 records its pid and dies before
+/// connecting; its siblings record theirs and come up healthy. The
+/// spawn must fail — and every recorded pid must be fully reaped, not
+/// left as a zombie or a live orphan attached to this process. (The
+/// teardown is explicit in `spawn_fleet`, not an accident of drop
+/// order.)
+#[test]
+#[cfg(target_os = "linux")]
+fn process_mid_spawn_failure_reaps_every_spawned_worker() {
+    let _guard = BIN_LOCK.lock().unwrap();
+    let dir = test_dir("midspawn");
+    let pid_log = dir.join("pids");
+    let script = dir.join("failing-machine.sh");
+    write_script(
+        &script,
+        &format!(
+            "#!/bin/sh\necho $$ >> \"{log}\"\nif [ \"$4\" = \"1\" ]; then exit 3; fi\nexec \"{real}\" \"$@\"\n",
+            log = pid_log.display(),
+            real = env!("CARGO_BIN_EXE_soccer-machine")
+        ),
+    );
+    std::env::set_var("SOCCER_MACHINE_BIN", &script);
+
+    let pts = points(180);
+    // 6 machines packed 2-per-worker: workers 0, 2 come up, worker 1
+    // (the wrapper's "$4" is the --id argument) exits before connecting
+    let spawn = Fleet::with_placement(&pts, 6, 9, TransportKind::Process, 2);
+    assert!(spawn.is_err(), "worker 1 was rigged to fail the spawn");
+
+    let recorded = std::fs::read_to_string(&pid_log).expect("workers recorded their pids");
+    let pids: Vec<u32> = recorded
+        .lines()
+        .filter_map(|l| l.trim().parse().ok())
+        .collect();
+    assert!(
+        pids.len() >= 2,
+        "expected several spawned workers, got {pids:?}"
+    );
+    let me = std::process::id();
+    for pid in pids {
+        // a reaped child releases its pid: /proc/<pid> is gone (or the
+        // pid was recycled by an unrelated process with another parent).
+        // Anything still parented to us — zombie (state Z) or live — is
+        // a teardown leak.
+        let Ok(stat) = std::fs::read_to_string(format!("/proc/{pid}/stat")) else {
+            continue;
+        };
+        // /proc/<pid>/stat: "pid (comm) state ppid ..." — comm may
+        // contain spaces, so parse from the last ')'
+        let after = stat.rsplit(')').next().unwrap_or("");
+        let mut fields = after.split_whitespace();
+        let state = fields.next().unwrap_or("?");
+        let ppid: u32 = fields.next().and_then(|p| p.parse().ok()).unwrap_or(0);
+        assert_ne!(
+            ppid, me,
+            "worker pid {pid} (state {state}) is still a child of the test process — \
+             spawn_fleet's failure path leaked it"
+        );
+    }
+
+    std::env::remove_var("SOCCER_MACHINE_BIN");
+    let _ = std::fs::remove_dir_all(&dir);
+}

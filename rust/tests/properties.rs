@@ -1,6 +1,9 @@
 //! Property-based tests (via the in-repo mini framework,
 //! util::proptest): randomized invariants of the coordinator, the cost
-//! machinery, the sampling primitives and the reduction step.
+//! machinery, the sampling primitives and the reduction step — plus
+//! the `properties_`-prefixed randomized transport suites (wire-codec
+//! round-trips, packed process-fleet parity) that CI additionally runs
+//! as a release-mode gate.
 
 use soccer::clustering::{weighted, BlackBox, LloydKMeans};
 use soccer::coordinator::{run_soccer, SoccerParams};
@@ -212,6 +215,229 @@ fn prop_weighted_reduction_preserves_cost_scale() {
                 c_red,
                 c_dir
             );
+            Ok(())
+        },
+    );
+}
+
+// ---- randomized transport suites (the CI `properties_` gate) --------------
+
+/// Wire-codec round-trip: random matrices (including empty ones and
+/// awkward float bit patterns), sampling quotas, scalars, f32/f64
+/// vectors and raw PCG64 RNG states all encode→decode bit-identically.
+/// Bit-exactness here is what makes every wired fleet a deterministic
+/// twin of a direct one.
+#[test]
+fn properties_wire_codec_roundtrip_bit_identical() {
+    use soccer::transport::wire::{FrameReader, FrameWriter};
+    forall(
+        "wire-codec-roundtrip",
+        60,
+        21,
+        |g| {
+            let rows = g.int(0, 40);
+            let cols = g.int(1, 6);
+            let scale = g.f64(1e-20, 1e20);
+            let specials = [f32::MIN_POSITIVE, -0.0f32, f32::MAX, -1e-38, 0.0];
+            let data: Vec<f32> = (0..rows * cols)
+                .map(|i| {
+                    if i % 7 == 3 {
+                        specials[i % specials.len()]
+                    } else {
+                        (g.rng.normal() * scale) as f32
+                    }
+                })
+                .collect();
+            let quotas = (
+                g.rng.below(usize::MAX >> 8) as u64,
+                g.rng.below(usize::MAX >> 8) as u64,
+            );
+            let scalar32 = (g.rng.normal() * scale) as f32;
+            let scalar64 = g.rng.normal() * scale;
+            let rng_state = Pcg64::new(g.rng.below(1 << 30) as u64).to_raw();
+            let f64s: Vec<f64> = (0..g.int(0, 12)).map(|_| g.rng.normal() * scale).collect();
+            (rows, cols, data, quotas, scalar32, scalar64, rng_state, f64s)
+        },
+        |(rows, cols, data, quotas, scalar32, scalar64, rng_state, f64s)| {
+            let m = Matrix::from_vec(data.clone(), *rows, *cols);
+            let mut w = FrameWriter::new();
+            w.put_matrix(&m).map_err(|e| e.to_string())?;
+            w.put_u64(quotas.0);
+            w.put_u64(quotas.1);
+            w.put_f32(*scalar32);
+            w.put_f64(*scalar64);
+            for word in rng_state {
+                w.put_u64(*word);
+            }
+            w.put_f32s(data).map_err(|e| e.to_string())?;
+            w.put_f64s(f64s).map_err(|e| e.to_string())?;
+            let frame = w.finish();
+
+            let mut r = FrameReader::new(&frame);
+            let m_back = r.get_matrix();
+            prop_assert!(
+                m_back.rows() == *rows && m_back.cols() == *cols,
+                "matrix shape drifted: {}x{}",
+                m_back.rows(),
+                m_back.cols()
+            );
+            for (a, b) in m_back.data().iter().zip(m.data()) {
+                prop_assert!(a.to_bits() == b.to_bits(), "matrix f32 bits drifted");
+            }
+            prop_assert!(r.get_u64() == quotas.0, "quota 0 drifted");
+            prop_assert!(r.get_u64() == quotas.1, "quota 1 drifted");
+            prop_assert!(
+                r.get_f32().to_bits() == scalar32.to_bits(),
+                "f32 scalar bits drifted"
+            );
+            prop_assert!(
+                r.get_f64().to_bits() == scalar64.to_bits(),
+                "f64 scalar bits drifted"
+            );
+            let state_back = [r.get_u64(), r.get_u64(), r.get_u64(), r.get_u64()];
+            prop_assert!(state_back == *rng_state, "RNG raw state drifted");
+            // a rebuilt generator must continue the exact stream
+            let mut a = Pcg64::from_raw(*rng_state);
+            let mut b = Pcg64::from_raw(state_back);
+            for _ in 0..8 {
+                prop_assert!(a.f64().to_bits() == b.f64().to_bits(), "RNG stream drifted");
+            }
+            let f32s_back = r.get_f32s();
+            prop_assert!(f32s_back.len() == data.len(), "f32 vec length drifted");
+            for (a, b) in f32s_back.iter().zip(data) {
+                prop_assert!(a.to_bits() == b.to_bits(), "f32 vec bits drifted");
+            }
+            let f64s_back = r.get_f64s();
+            prop_assert!(f64s_back.len() == f64s.len(), "f64 vec length drifted");
+            for (a, b) in f64s_back.iter().zip(f64s) {
+                prop_assert!(a.to_bits() == b.to_bits(), "f64 vec bits drifted");
+            }
+            prop_assert!(r.remaining() == 0, "{} trailing bytes", r.remaining());
+            Ok(())
+        },
+    );
+}
+
+/// Header-overflow inputs: any dimension or length that fits the u32
+/// wire header encodes exactly; anything beyond it is a typed
+/// `WireError` naming the field — never the old silent `as u32`
+/// truncation (which decoded as garbage on the receiving end).
+#[test]
+fn properties_wire_header_overflow_is_error() {
+    use soccer::transport::wire::u32_header;
+    forall(
+        "wire-header-overflow",
+        200,
+        22,
+        |g| {
+            let fits = g.int(0, u32::MAX as usize);
+            let over = u32::MAX as usize + 1 + g.int(0, 1 << 40);
+            (fits, over)
+        },
+        |&(fits, over)| {
+            match u32_header(fits, "rows") {
+                Ok(v) => prop_assert!(v as usize == fits, "in-range value {fits} drifted to {v}"),
+                Err(e) => return Err(format!("in-range value {fits} rejected: {e}")),
+            }
+            let err = match u32_header(over, "matrix rows") {
+                Ok(v) => return Err(format!("overflow {over} silently truncated to {v}")),
+                Err(e) => e.to_string(),
+            };
+            prop_assert!(
+                err.contains("matrix rows") && err.contains("exceeds the u32 header"),
+                "overflow error lost its context: {err}"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Point the fleet at the worker binary cargo built for this test run
+/// (same pattern as tests/end_to_end.rs; `Once` because tests run on
+/// parallel threads and concurrent setenv is UB on glibc).
+fn use_test_worker_binary() {
+    static SET: std::sync::Once = std::sync::Once::new();
+    SET.call_once(|| std::env::set_var("SOCCER_MACHINE_BIN", env!("CARGO_BIN_EXE_soccer-machine")));
+}
+
+/// Randomized parity across the whole transport stack: for random
+/// (n, m, machines_per_worker, seed), a Direct, an InProc and a packed
+/// Process fleet produce bit-identical SOCCER outcomes, and the two
+/// wired fleets' byte meters agree to the byte — whatever the packing.
+#[test]
+fn properties_process_packed_parity_randomized() {
+    use soccer::transport::TransportKind;
+    use_test_worker_binary();
+    forall(
+        "packed-process-parity",
+        4,
+        23,
+        |g| {
+            let n = g.int(600, 2_400);
+            let m = g.int(2, 6);
+            let mpw = g.int(1, 4);
+            let k = g.int(2, 4);
+            let seed = g.rng.below(1 << 20) as u64;
+            (n, m, mpw, k, seed)
+        },
+        |&(n, m, mpw, k, seed)| {
+            let mut rng = Pcg64::new(seed);
+            let mut pts = Matrix::zeros(n, 4);
+            for i in 0..n {
+                let c = rng.below(k);
+                for v in pts.row_mut(i) {
+                    *v = (c as f64 * 20.0 + rng.normal()) as f32;
+                }
+            }
+            let params = SoccerParams::new(k, 0.2);
+            let mut direct = Fleet::new(&pts, m, seed + 1);
+            let mut inproc = Fleet::with_transport(&pts, m, seed + 1, TransportKind::InProc)
+                .map_err(|e| e.to_string())?;
+            let mut packed =
+                Fleet::with_placement(&pts, m, seed + 1, TransportKind::Process, mpw)
+                    .map_err(|e| format!("packed fleet spawn: {e}"))?;
+            let expected_workers = m.div_ceil(mpw);
+            let mut pids: Vec<u32> = packed.worker_pids().into_iter().flatten().collect();
+            prop_assert!(pids.len() == m, "want one pid per machine");
+            pids.dedup();
+            prop_assert!(
+                pids.len() == expected_workers,
+                "m={m} mpw={mpw}: {} distinct workers, want {expected_workers}",
+                pids.len()
+            );
+
+            let out_d = run_soccer(&mut direct, &NativeEngine, &params, &LloydKMeans::default(), seed + 2);
+            let out_i = run_soccer(&mut inproc, &NativeEngine, &params, &LloydKMeans::default(), seed + 2);
+            let out_p = run_soccer(&mut packed, &NativeEngine, &params, &LloydKMeans::default(), seed + 2);
+
+            prop_assert!(out_d.c_out == out_p.c_out, "C_out drifted direct vs process");
+            prop_assert!(
+                out_d.final_centers == out_p.final_centers,
+                "final centers drifted direct vs process"
+            );
+            prop_assert!(out_d.rounds == out_p.rounds, "round count drifted");
+            prop_assert!(
+                out_d.cost.to_bits() == out_p.cost.to_bits(),
+                "cost bits drifted direct vs process"
+            );
+            prop_assert!(
+                out_i.cost.to_bits() == out_p.cost.to_bits(),
+                "cost bits drifted inproc vs process"
+            );
+            let (ci, cp) = (&out_i.telemetry.comm, &out_p.telemetry.comm);
+            prop_assert!(
+                ci.bytes_to_coordinator == cp.bytes_to_coordinator,
+                "uplink meters diverged: inproc {} vs process {}",
+                ci.bytes_to_coordinator,
+                cp.bytes_to_coordinator
+            );
+            prop_assert!(
+                ci.bytes_broadcast == cp.bytes_broadcast,
+                "downlink meters diverged: inproc {} vs process {}",
+                ci.bytes_broadcast,
+                cp.bytes_broadcast
+            );
+            prop_assert!(cp.bytes_to_coordinator > 0, "process fleet measured nothing");
             Ok(())
         },
     );
