@@ -1,0 +1,121 @@
+//! Remote-capable fleet: the coordinator binds ONE listening endpoint
+//! and the workers are launched by something else entirely — here a
+//! plain `std::process::Command` loop standing in for "anything": a
+//! shell script, systemd, an orchestrator on another host. Each worker
+//! is told exactly two things — the coordinator's address and the
+//! worker index to claim — then dials in, registers, receives its shard
+//! batch over the wire, and serves rounds.
+//!
+//!   cargo build --release            # builds the soccer-machine worker
+//!   cargo run --release --example remote_fleet
+//!
+//! The run is a deterministic twin of every other mode: same seed →
+//! bit-identical centers and cost versus a `TransportKind::Direct`
+//! fleet, byte meters equal to the byte versus an in-process wired
+//! fleet. Swap `127.0.0.1` for a routable host and the same launch
+//! line brings up genuinely remote workers.
+
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::data::gaussian::{generate, GaussianMixtureSpec};
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::transport::{Endpoint, TransportKind};
+use soccer::util::rng::Pcg64;
+use std::process::{Command, Stdio};
+
+fn main() {
+    let k = 10;
+    let n = 50_000;
+    let machines = 8;
+    let machines_per_worker = 2; // 8 machines packed onto 4 workers
+
+    let spec = GaussianMixtureSpec::paper(n, k);
+    let gm = generate(&spec, &mut Pcg64::new(42));
+    println!("generated {}x{} Gaussian mixture (k={k})", n, spec.dim);
+
+    // 1. bind the listener FIRST, so the address exists before any
+    //    worker is launched
+    let endpoint = Endpoint::bind("127.0.0.1:0").expect("bind the worker listener");
+    let addr = endpoint.connect_addr().to_string();
+    let workers = machines.div_ceil(machines_per_worker);
+    println!("coordinator listening on {addr}; launching {workers} workers externally");
+
+    // 2. launch the workers out-of-band — NOT through spawn_fleet. The
+    //    coordinator never learns these pids; the processes could just
+    //    as well be on another machine.
+    let bin = match soccer::transport::process::worker_binary() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("could not find the soccer-machine binary: {e}");
+            eprintln!("hint: `cargo build --release` first");
+            std::process::exit(1);
+        }
+    };
+    let mut children: Vec<_> = (0..workers)
+        .map(|i| {
+            Command::new(&bin)
+                .arg("--connect")
+                .arg(&addr)
+                .arg("--id")
+                .arg(i.to_string())
+                .stdin(Stdio::null())
+                .spawn()
+                .expect("launch worker")
+        })
+        .collect();
+
+    // 3. accept + register the fleet: each dialer claims its index,
+    //    ships nothing, receives its shard batch, acks its live counts
+    let mut remote = Fleet::with_endpoint(&gm.points, machines, 1, machines_per_worker, endpoint)
+        .expect("remote fleet registration");
+    println!(
+        "registered {} machines on {workers} externally-launched workers (transport: {})",
+        remote.num_machines(),
+        remote.transport_name()
+    );
+
+    let params = SoccerParams::new(k, 0.1);
+    let out = run_soccer(&mut remote, &NativeEngine, &params, &LloydKMeans::default(), 2);
+    println!("\nremote fleet:");
+    println!("  rounds                = {}", out.rounds);
+    println!("  cost(final k centers) = {:.4}", out.cost);
+    println!(
+        "  machine time (measured in the workers) = {:.4}s",
+        out.telemetry.machine_time()
+    );
+    let comm = &out.telemetry.comm;
+    println!(
+        "  uplink   = {} bytes measured ({} points)",
+        comm.bytes_to_coordinator, comm.to_coordinator
+    );
+    println!(
+        "  downlink = {} bytes measured ({} points broadcast, each metered once)",
+        comm.bytes_broadcast, comm.broadcast
+    );
+
+    // the deterministic-twin claim, live: a direct fleet on the same
+    // seed lands on the identical outcome, and an in-process wired twin
+    // on identical meters
+    let mut direct = Fleet::new(&gm.points, machines, 1);
+    let twin = run_soccer(&mut direct, &NativeEngine, &params, &LloydKMeans::default(), 2);
+    assert_eq!(out.final_centers, twin.final_centers);
+    assert_eq!(out.cost.to_bits(), twin.cost.to_bits());
+    let mut inproc = Fleet::with_transport(&gm.points, machines, 1, TransportKind::InProc)
+        .expect("inproc fleet");
+    let wired_twin = run_soccer(&mut inproc, &NativeEngine, &params, &LloydKMeans::default(), 2);
+    assert_eq!(
+        comm.bytes_to_coordinator,
+        wired_twin.telemetry.comm.bytes_to_coordinator
+    );
+    assert_eq!(comm.bytes_broadcast, wired_twin.telemetry.comm.bytes_broadcast);
+    println!("\nverified: bit-identical to the direct twin, meters equal to the in-process twin");
+
+    // dropping the fleet closes the links; the workers exit on EOF (or
+    // the Shutdown frame) and the launcher — us — reaps its own children
+    drop(remote);
+    for c in &mut children {
+        let _ = c.wait();
+    }
+    println!("all externally-launched workers exited cleanly");
+}

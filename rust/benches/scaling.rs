@@ -6,7 +6,12 @@
 //! - machines-per-worker sweep: the same fleet packed onto fewer
 //!   worker processes — bring-up (concurrent spawn + handshake) and
 //!   run wall-clock vs process count, with outcomes identical across
-//!   packings (skipped when the soccer-machine binary isn't built).
+//!   packings (skipped when the soccer-machine binary isn't built);
+//! - core-pinned machine time (opt-in, `SOCCER_PIN_CORES=1`): each
+//!   worker process pinned to its own disjoint core, the coordinator
+//!   to core 0, so the reported machine seconds are measured under
+//!   REAL core separation — no oversubscription, no steal — and the
+//!   coordinator-vs-machine split of the wall clock is honest.
 
 use soccer::clustering::LloydKMeans;
 use soccer::coordinator::{run_soccer, SoccerParams};
@@ -122,7 +127,84 @@ fn main() {
     }
     t3.print();
 
+    // opt-in: machine time under REAL core separation. Each worker
+    // process gets its own core (via `taskset -cp`, Linux), the
+    // coordinator gets core 0, so worker self-timing measures genuinely
+    // dedicated silicon and the coordinator/machine split of the wall
+    // clock stops being muddied by oversubscription.
+    if std::env::var("SOCCER_PIN_CORES").as_deref() == Ok("1") {
+        pinned_core_axis(k, eps, &mut log);
+    } else {
+        println!("(set SOCCER_PIN_CORES=1 for the core-pinned coordinator-vs-machine axis)");
+    }
+
     let path =
         soccer::bench_support::harness::write_log("scaling", Json::obj(vec![("rows", Json::Arr(log))]));
     println!("log: {}", path.display());
+}
+
+/// Pin `pid` to one CPU via `taskset`. Returns false when pinning is
+/// unavailable (no taskset, or it refused) — the axis still runs,
+/// labelled unpinned.
+fn pin_to_core(pid: u32, core: usize) -> bool {
+    std::process::Command::new("taskset")
+        .args(["-cp", &core.to_string(), &pid.to_string()])
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .status()
+        .map(|s| s.success())
+        .unwrap_or(false)
+}
+
+fn pinned_core_axis(k: usize, eps: f64, log: &mut Vec<Json>) {
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    // coordinator on core 0, workers on 1..; need at least one worker core
+    let m = cores.saturating_sub(1).clamp(1, 4);
+    let n = soccer::bench_support::harness::bench_n(100_000).min(100_000);
+    let gm = generate(&GaussianMixtureSpec::paper(n, k), &mut Pcg64::new(11));
+    let mut fleet = match Fleet::with_placement(&gm.points, m, 12, TransportKind::Process, 1) {
+        Ok(f) => f,
+        Err(e) => {
+            println!("skipping the core-pinned axis: {e}");
+            return;
+        }
+    };
+    let mut pinned = pin_to_core(std::process::id(), 0);
+    let mut pids: Vec<u32> = fleet.worker_pids().into_iter().flatten().collect();
+    pids.dedup();
+    for (i, pid) in pids.iter().enumerate() {
+        pinned &= pin_to_core(*pid, 1 + (i % cores.saturating_sub(1).max(1)));
+    }
+    if !pinned {
+        println!("(taskset unavailable or refused — running the axis unpinned)");
+    }
+
+    let params = SoccerParams::new(k, eps);
+    let t0 = Instant::now();
+    let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 13);
+    let wall = t0.elapsed().as_secs_f64();
+    let t_machine = out.telemetry.machine_time();
+    let t_coord = (wall - t_machine).max(0.0);
+
+    let mut t4 = Table::new(
+        &format!(
+            "core separation (n={n}, m={m} workers on disjoint cores, pinned={pinned})"
+        ),
+        &["rounds", "wall(s)", "T_mach(s)", "T_coord(s)", "mach/wall"],
+    );
+    t4.row(vec![
+        out.rounds.to_string(),
+        format!("{wall:.4}"),
+        format!("{t_machine:.4}"),
+        format!("{t_coord:.4}"),
+        format!("{:.3}", t_machine / wall.max(1e-12)),
+    ]);
+    t4.print();
+    log.push(Json::obj(vec![
+        ("pinned_cores", Json::num(if pinned { 1.0 } else { 0.0 })),
+        ("pin_workers", Json::num(m as f64)),
+        ("pin_wall_secs", Json::num(wall)),
+        ("pin_machine_secs", Json::num(t_machine)),
+        ("pin_coordinator_secs", Json::num(t_coord)),
+    ]));
 }

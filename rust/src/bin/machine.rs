@@ -1,17 +1,23 @@
 //! `soccer-machine` — one fleet worker process, hosting one or more
 //! fleet machines behind a single coordinator socket.
 //!
-//! Spawned by a `TransportKind::Process` fleet, never run by hand
-//! (though you can: it only needs a coordinator socket to dial).
-//! Protocol: connect to `--connect` (`unix:<path>` or `tcp:<ip:port>`),
-//! send the hello frame carrying this worker's `--id` index, receive
-//! the batched `LoadShard` frame carrying every hosted machine's id,
-//! RNG stream, and data shard, ack with the per-machine live-point
-//! counts, then serve phase-synchronous requests — routed per machine
-//! by the u32 machine field in every request header; broadcasts fan out
-//! to every hosted machine in slot order — until a `Shutdown` frame or
-//! peer disconnect. All machine-side seconds reported back to the
-//! coordinator are measured here, in this process.
+//! Launched by **anything**: `spawn_fleet` on the coordinator's host, a
+//! shell loop, an orchestrator on a different machine. All it needs is
+//! the coordinator's listening address and the worker index it should
+//! claim. Protocol: dial `--connect` (`unix:<path>`, `tcp:<host:port>`,
+//! or a bare `host:port` — hostnames resolve, refused connections retry
+//! while the coordinator's listener comes up), send the registration
+//! hello carrying this worker's `--id` index, and wait for the
+//! coordinator's accept/reject ack — a refused registration (version
+//! mismatch, duplicate index) exits loudly with the coordinator's
+//! reason. Once accepted: receive the batched `LoadShard` frame
+//! carrying every hosted machine's id, RNG stream, and data shard, ack
+//! with the per-machine live-point counts, then serve
+//! phase-synchronous requests — routed per machine by the u32 machine
+//! field in every request header; broadcasts fan out to every hosted
+//! machine in slot order — until a `Shutdown` frame or peer disconnect.
+//! All machine-side seconds reported back to the coordinator are
+//! measured here, in this process.
 
 use soccer::runtime::NativeEngine;
 use soccer::transport::process::WorkerEndpoint;
@@ -34,13 +40,13 @@ fn parse_args() -> Result<(String, u64)> {
             "--connect" => connect = args.next(),
             "--id" => id = args.next(),
             "--help" | "-h" => {
-                println!("usage: soccer-machine --connect <unix:PATH|tcp:IP:PORT> --id <N>");
+                println!("usage: soccer-machine --connect <unix:PATH|tcp:HOST:PORT|HOST:PORT> --id <N>");
                 std::process::exit(0);
             }
             other => soccer::bail!("unknown argument {other}"),
         }
     }
-    let connect = connect.context("missing --connect <unix:PATH|tcp:IP:PORT>")?;
+    let connect = connect.context("missing --connect <unix:PATH|tcp:HOST:PORT|HOST:PORT>")?;
     let id = id
         .context("missing --id <N>")?
         .parse::<u64>()
@@ -52,6 +58,13 @@ fn run() -> Result<()> {
     let (addr, worker_index) = parse_args()?;
     let mut link = WorkerEndpoint::connect(&addr)?;
     link.send(&protocol::encode_hello(worker_index))?;
+    // registration: the coordinator accepts or refuses the claimed
+    // index before any data moves; a refusal is a loud exit carrying
+    // the coordinator's exact reason. The ack read is bounded (size
+    // and time) — the peer is not yet known to be a coordinator.
+    let ack = link.recv_registration_ack()?;
+    protocol::decode_register_ack(&ack)
+        .map_err(|e| e.context(format!("worker {worker_index}: registration failed")))?;
     let shard_frame = link
         .recv()
         .map_err(|e| e.context("worker: coordinator hung up before shipping the shards"))?;

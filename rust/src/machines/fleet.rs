@@ -17,14 +17,19 @@
 //! - [`TransportKind::InProc`] / [`TransportKind::LoopbackTcp`] keep
 //!   the machines in this process, answering requests through the
 //!   shared `transport::protocol` dispatcher on threads;
-//! - [`TransportKind::Process`] spawns `soccer-machine` worker
-//!   processes — **concurrently** — and ships each the batch of shards
-//!   it hosts; the same dispatcher runs in the worker, so the wire
-//!   traffic is byte-identical and the reported machine seconds are
-//!   genuine other-process wall time. The placement policy
+//! - [`TransportKind::Process`] puts the machines in `soccer-machine`
+//!   worker processes that dial the coordinator's listening endpoint
+//!   and *register*: [`Fleet::with_transport`]/[`Fleet::with_placement`]
+//!   spawn the workers locally (concurrent spawn + registration), while
+//!   [`Fleet::with_endpoint`] accepts workers **someone else launched**
+//!   — possibly on another host, over non-loopback TCP. Either way the
+//!   same dispatcher runs in the worker, so the wire traffic is
+//!   byte-identical and the reported machine seconds are genuine
+//!   other-process wall time. The placement policy
 //!   ([`Fleet::with_placement`], `machines_per_worker`) packs m logical
 //!   machines onto w = ⌈m / machines_per_worker⌉ processes; requests
-//!   are routed per machine by the frame header.
+//!   are routed per machine by the frame header, and each worker's
+//!   round I/O runs concurrently so a slow link only delays itself.
 //!
 //! All modes are deterministic twins: the codec round-trips f32/f64
 //! bit-exactly and every mode consumes identical RNG streams, so a run
@@ -60,6 +65,13 @@ use crate::transport::wire::FrameReader;
 use crate::transport::{Down, FleetChannel, TransportKind};
 use crate::util::pool::par_map_mut;
 use crate::util::rng::Pcg64;
+use std::time::Duration;
+
+/// How long [`Fleet::with_endpoint`] waits for every externally
+/// launched worker to dial in and register. Generous: a human, a CI
+/// runner, or an orchestrator on another host is slower than
+/// `spawn_fleet`'s children dialing loopback.
+const REMOTE_REGISTER_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Coordinator-side mirror of one remote machine's size metadata
 /// (process fleets only; in-process fleets read their machines).
@@ -209,12 +221,17 @@ impl Fleet {
         Ok(fleet)
     }
 
-    fn spawn_process_fleet(
+    /// Shared process-fleet prep: shard the data into per-machine
+    /// specs, derive the contiguous-blocks placement, and batch the
+    /// specs into per-worker specs — everything a worker needs at
+    /// registration, however the workers get launched.
+    fn process_specs(
         shards: Vec<Matrix>,
         seed: u64,
         machines_per_worker: usize,
-    ) -> crate::util::error::Result<Fleet> {
+    ) -> (Vec<MachineMeta>, Vec<(usize, usize)>, Vec<WorkerSpec>, usize) {
         assert!(!shards.is_empty());
+        assert!(machines_per_worker >= 1);
         let dim = shards[0].cols();
         let mut root = Pcg64::new(seed);
         let specs: Vec<MachineSpec> = shards
@@ -254,7 +271,54 @@ impl Fleet {
                 .machines
                 .push(spec);
         }
+        (meta, placement, worker_specs, dim)
+    }
+
+    fn spawn_process_fleet(
+        shards: Vec<Matrix>,
+        seed: u64,
+        machines_per_worker: usize,
+    ) -> crate::util::error::Result<Fleet> {
+        let (meta, placement, worker_specs, dim) =
+            Self::process_specs(shards, seed, machines_per_worker);
         let workers = crate::transport::process::spawn_fleet(worker_specs)?;
+        Ok(Fleet {
+            machines: Vec::new(),
+            meta: Some(meta),
+            dim,
+            workers: crate::util::pool::default_workers(),
+            channel: FleetChannel::process(workers, placement),
+        })
+    }
+
+    /// Build a process fleet from workers **someone else launches**:
+    /// the remote-deployment shape. The caller binds an
+    /// [`Endpoint`](crate::transport::Endpoint) first (so the address
+    /// is known), hands `endpoint.connect_addr()` to whatever starts
+    /// the `soccer-machine` workers — a shell loop, an orchestrator, a
+    /// host far away — and then calls this, which runs the bounded
+    /// accept/registration loop, ships each registering worker its
+    /// shard batch, and returns the assembled fleet. The coordinator
+    /// never learns (or needs) the workers' pids; killing the *process*
+    /// behind a link out-of-band downgrades exactly the machines it
+    /// hosted, like any worker crash.
+    ///
+    /// Deterministic twin guarantee: the same `(points, m, seed,
+    /// machines_per_worker)` produces bit-identical outcomes and
+    /// byte-identical protocol meters whether the workers are spawned
+    /// locally, launched externally, or simulated in-process.
+    pub fn with_endpoint(
+        points: &Matrix,
+        m: usize,
+        seed: u64,
+        machines_per_worker: usize,
+        endpoint: crate::transport::Endpoint,
+    ) -> crate::util::error::Result<Fleet> {
+        assert!(m >= 1);
+        let (meta, placement, worker_specs, dim) =
+            Self::process_specs(points.split_rows(m), seed, machines_per_worker);
+        let workers =
+            endpoint.accept_fleet(worker_specs, REMOTE_REGISTER_TIMEOUT, |_| Ok(()))?;
         Ok(Fleet {
             machines: Vec::new(),
             meta: Some(meta),

@@ -5,6 +5,8 @@
 //!   soccer run --dataset gaussian --n 200000 --k 25 --eps 0.1
 //!   soccer run --alg kmeans-par --rounds 5 --k 25
 //!   soccer run --engine pjrt --dataset higgs --k 50
+//!   soccer run --transport process --machines 8 --machines-per-worker 2
+//!   soccer run --listen 0.0.0.0:7070 --machines 8   # workers dial in
 //!   soccer gen --dataset kdd --n 1000000 --out kdd.bin
 //!   soccer info
 
@@ -31,6 +33,9 @@ fn main() {
         .opt("delta", Some("0.1"), "SOCCER confidence parameter")
         .opt("rounds", Some("5"), "k-means|| rounds (it has no stopping rule)")
         .opt("machines", Some("50"), "number of simulated machines")
+        .opt("transport", Some("direct"), "fleet links: direct | inproc | tcp | process")
+        .opt("machines-per-worker", Some("1"), "machines packed per worker process (process transport)")
+        .opt("listen", None, "bind HOST:PORT and await externally launched soccer-machine workers")
         .opt("engine", Some("native"), "distance engine: native | pjrt")
         .opt("blackbox", Some("kmeans"), "centralized black box: kmeans | minibatch")
         .opt("seed", Some("20220501"), "PRNG seed")
@@ -66,6 +71,85 @@ fn load_points(args: &soccer::util::cli::Args) -> soccer::Matrix {
     }
 }
 
+/// Build the fleet the chosen transport asks for: direct calls, wired
+/// in-process links, locally spawned worker processes, or — with
+/// `--listen` — a bound endpoint awaiting externally launched workers.
+fn build_fleet(args: &soccer::util::cli::Args, points: &soccer::Matrix, machines: usize, seed: u64) -> Fleet {
+    use soccer::transport::{Endpoint, TransportKind};
+    let mpw = args.usize("machines-per-worker", 1).max(1);
+    if let Some(addr) = args.get("listen") {
+        // --listen IS the process transport (workers dial in); any other
+        // explicit --transport contradicts it
+        let transport = args.get_or("transport", "direct");
+        if transport != "direct" && transport != "process" {
+            eprintln!("--listen awaits external worker processes; it cannot combine with --transport {transport}");
+            std::process::exit(2);
+        }
+        let endpoint = match Endpoint::bind(addr) {
+            Ok(ep) => ep,
+            Err(e) => {
+                eprintln!("could not bind --listen {addr}: {e}");
+                std::process::exit(2);
+            }
+        };
+        let workers = machines.div_ceil(mpw);
+        println!(
+            "listening on {} for {workers} workers; launch each (anywhere that can reach this host) as:",
+            endpoint.connect_addr()
+        );
+        // a wildcard bind is not dialable — tell the launcher to
+        // substitute a routable host instead of printing 0.0.0.0 (the
+        // host component is matched exactly: 10.0.0.0 is a real host)
+        let dial = endpoint.connect_addr().to_string();
+        let hostport = dial.strip_prefix("tcp:").unwrap_or(&dial);
+        let (shown, wildcard) = match hostport.rsplit_once(':') {
+            Some((host, port)) if host == "0.0.0.0" || host == "[::]" || host == "::" => {
+                (format!("tcp:<this-host>:{port}"), true)
+            }
+            _ => (dial.clone(), false),
+        };
+        println!(
+            "  soccer-machine --connect {} --id <0..{}>",
+            shown,
+            workers - 1
+        );
+        if wildcard {
+            println!("  (bound on a wildcard address: replace <this-host> with an address workers can route to)");
+        }
+        return match Fleet::with_endpoint(points, machines, seed, mpw, endpoint) {
+            Ok(fleet) => fleet,
+            Err(e) => {
+                eprintln!("remote fleet bring-up failed: {e}");
+                std::process::exit(2);
+            }
+        };
+    }
+    let kind = match args.get_or("transport", "direct").as_str() {
+        "direct" => TransportKind::Direct,
+        "inproc" => TransportKind::InProc,
+        "tcp" | "loopback-tcp" => TransportKind::LoopbackTcp,
+        "process" => TransportKind::Process,
+        other => {
+            eprintln!("unknown --transport '{other}'");
+            std::process::exit(2);
+        }
+    };
+    if kind != TransportKind::Process && mpw != 1 {
+        eprintln!("--machines-per-worker needs --transport process (got --transport {})", args.get_or("transport", "direct"));
+        std::process::exit(2);
+    }
+    if kind == TransportKind::Direct {
+        return Fleet::new(points, machines, seed);
+    }
+    match Fleet::with_placement(points, machines, seed, kind, mpw) {
+        Ok(fleet) => fleet,
+        Err(e) => {
+            eprintln!("could not build the {} fleet: {e}", kind.name());
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_run(args: &soccer::util::cli::Args) {
     let alg = args.get_or("alg", "soccer");
     let k = args.usize("k", 25);
@@ -87,7 +171,8 @@ fn cmd_run(args: &soccer::util::cli::Args) {
 
     match alg.as_str() {
         "soccer" => {
-            let mut fleet = Fleet::new(&points, machines, seed);
+            let mut fleet = build_fleet(args, &points, machines, seed);
+            println!("fleet transport: {}", fleet.transport_name());
             let mut params = SoccerParams::new(k, eps);
             params.delta = args.f64("delta", 0.1);
             params.exact_sampling = !args.flag("bernoulli");
@@ -116,9 +201,16 @@ fn cmd_run(args: &soccer::util::cli::Args) {
                 out.telemetry.machine_time(),
                 out.total_secs
             );
+            let comm = &out.telemetry.comm;
+            if comm.bytes_to_coordinator > 0 || comm.bytes_broadcast > 0 {
+                println!(
+                    "measured wire: {} bytes to coordinator, {} bytes broadcast (once per §3 broadcast)",
+                    comm.bytes_to_coordinator, comm.bytes_broadcast
+                );
+            }
         }
         "kmeans-par" => {
-            let mut fleet = Fleet::new(&points, machines, seed);
+            let mut fleet = build_fleet(args, &points, machines, seed);
             let rounds = args.usize("rounds", 5);
             let km = KmeansParallel::new(k, rounds);
             let out = km.run(&mut fleet, engine, blackbox.as_ref(), seed + 1);
@@ -132,7 +224,7 @@ fn cmd_run(args: &soccer::util::cli::Args) {
             );
         }
         "eim11" => {
-            let mut fleet = Fleet::new(&points, machines, seed);
+            let mut fleet = build_fleet(args, &points, machines, seed);
             let alg = Eim11::new(k, eps);
             let out = alg.run(&mut fleet, engine, blackbox.as_ref(), seed + 1);
             let bcast: usize = out.telemetry.rounds.iter().map(|r| r.broadcast).sum();

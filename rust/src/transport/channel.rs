@@ -44,6 +44,25 @@ use super::{InProcTransport, LoopbackTcpTransport, Transport, TransportKind};
 use crate::format_err;
 use crate::runtime::{Engine, NativeEngine};
 use crate::util::error::Result;
+use crate::util::pool::par_map_mut;
+
+/// Cap on concurrent per-worker round-I/O threads: one per worker up
+/// to this bound. Worker processes are independent, so the cap cannot
+/// deadlock; and because each round is a send phase then a recv phase,
+/// a fleet larger than the cap still computes fully in parallel — the
+/// chunking only batches the frame I/O itself.
+const MAX_ROUND_IO_CONCURRENCY: usize = 64;
+
+/// What happened to one machine's downlink in a round's send phase.
+enum SlotSend {
+    /// Frame delivered — a reply is owed (drained in the recv phase).
+    Sent,
+    /// Nothing to send for this machine (control rounds only); it
+    /// resolves to an empty `Ok` without any I/O.
+    Skipped,
+    /// Send failed — the error IS the machine's result.
+    Failed(crate::util::error::Error),
+}
 
 /// The downlink payload of one exchange.
 pub enum Down<'a> {
@@ -137,10 +156,14 @@ enum LinkSet {
         machine_eps: Vec<Box<dyn Transport>>,
     },
     /// Machine endpoints live in spawned worker processes; a worker may
-    /// host several machines. `placement[j] = (worker, slot)`.
+    /// host several machines. `placement[j] = (worker, slot)`;
+    /// `by_worker[w]` is the inverse — machine indices hosted by worker
+    /// w, in slot order — computed once at construction because every
+    /// round's I/O groups by it.
     Process {
         workers: Vec<WorkerLink>,
         placement: Vec<(usize, usize)>,
+        by_worker: Vec<Vec<usize>>,
     },
 }
 
@@ -179,15 +202,21 @@ impl WiredChannel {
         // here rather than trusting the caller — a future non-contiguous
         // packing that broke this would mispair replies silently.
         let mut seen_per_worker = vec![0usize; workers.len()];
-        for &(w, slot) in &placement {
+        let mut by_worker: Vec<Vec<usize>> = vec![Vec::new(); workers.len()];
+        for (j, &(w, slot)) in placement.iter().enumerate() {
             assert_eq!(
                 slot, seen_per_worker[w],
                 "placement is not in slot order within worker {w}; broadcast replies would mispair"
             );
             seen_per_worker[w] += 1;
+            by_worker[w].push(j);
         }
         WiredChannel {
-            links: LinkSet::Process { workers, placement },
+            links: LinkSet::Process {
+                workers,
+                placement,
+                by_worker,
+            },
             up_bytes: 0,
             down_bytes: 0,
         }
@@ -245,7 +274,9 @@ impl WiredChannel {
     pub fn worker_pids(&self) -> Vec<Option<u32>> {
         match &self.links {
             LinkSet::Local { .. } => Vec::new(),
-            LinkSet::Process { workers, placement } => placement
+            LinkSet::Process {
+                workers, placement, ..
+            } => placement
                 .iter()
                 .map(|&(w, _)| workers[w].pid())
                 .collect(),
@@ -278,7 +309,9 @@ impl WiredChannel {
     pub fn kill_link(&mut self, j: usize) -> bool {
         match &mut self.links {
             LinkSet::Local { .. } => false,
-            LinkSet::Process { workers, placement } => workers[placement[j].0].kill(),
+            LinkSet::Process {
+                workers, placement, ..
+            } => workers[placement[j].0].kill(),
         }
     }
 
@@ -309,11 +342,11 @@ impl WiredChannel {
     /// the workers are the machine side. A broadcast crosses each
     /// worker's socket once and fans out inside the worker (one reply
     /// per hosted machine, in slot order); per-machine frames are
-    /// routed to the hosting worker. Request/reply pipelining across
-    /// distinct sockets keeps the step deadlock-free (a worker never
-    /// sends before fully draining a request, and the coordinator
-    /// drains replies in machine order, which is arrival order per
-    /// worker).
+    /// routed to the hosting worker. Each worker's send + recv runs as
+    /// its own `util::pool` task, so a slow or high-latency link (a
+    /// genuinely remote worker) delays only its own replies instead of
+    /// serializing the round; replies are folded back in machine order
+    /// deterministically.
     pub fn exchange<T: Send>(
         &mut self,
         items: &mut [T],
@@ -348,9 +381,11 @@ impl WiredChannel {
                 }
                 Self::exchange_local(coord_eps, machine_eps, items, engine, &down, &handler)
             }
-            LinkSet::Process { workers, placement } => {
-                Self::exchange_process(workers, placement, down_bytes, &down)
-            }
+            LinkSet::Process {
+                workers,
+                placement,
+                by_worker,
+            } => Self::exchange_process(workers, placement, by_worker, down_bytes, &down),
         };
         for r in replies.iter().flatten() {
             *up_bytes += 4 + r.len();
@@ -418,80 +453,148 @@ impl WiredChannel {
         replies
     }
 
-    /// Deliver to every live worker, then drain one reply per machine
-    /// in machine order. Machines on a dead worker yield `Err` without
-    /// any I/O (or metering): the worker process is gone, there is
-    /// nobody to carry their frames.
+    /// One round of **concurrent per-worker I/O**, in two pooled
+    /// phases: first every worker's downlink is written (send phase),
+    /// then every worker's replies are drained (recv phase), each phase
+    /// fanned out on `util::pool`. The phase split matters: no reply is
+    /// awaited until *every* worker holds its requests, so all workers
+    /// compute in parallel even when the fleet exceeds the thread cap
+    /// and chunks share a pool thread — and within each phase a slow or
+    /// high-latency link (a genuinely remote worker) delays only its
+    /// own frames instead of serializing the round. Replies are folded
+    /// back in machine order; per worker they arrive in slot order,
+    /// which is machine order within the worker. Machines on a dead
+    /// worker yield `Err` without any I/O (or metering): the worker
+    /// process is gone, there is nobody to carry their frames.
     ///
-    /// Pipelining note: all downlink frames are written before any
-    /// reply is drained, so the per-machine frames queued on one packed
+    /// Metering is folded between the phases and is byte-identical to
+    /// the serial exchange this replaces: a broadcast is metered once
+    /// iff at least one live worker received it (§3's broadcast
+    /// channel); per-machine frames are metered per successful send.
+    ///
+    /// Pipelining note: the whole downlink is written before any reply
+    /// is drained, so the per-machine frames queued on one packed
     /// worker's socket must fit its buffer while the worker is busy
     /// with an earlier slot. Today's per-machine requests are a few
-    /// dozen bytes (quotas, reseeds), far below any socket buffer;
-    /// bulk payloads travel as broadcasts (one frame per worker) or
-    /// replies (drained while later workers compute).
+    /// dozen bytes (quotas, reseeds), far below any socket buffer; bulk
+    /// payloads travel as broadcasts (one frame per worker) or replies
+    /// (drained concurrently in the recv phase).
     fn exchange_process(
         workers: &mut [WorkerLink],
         placement: &[(usize, usize)],
+        by_worker: &[Vec<usize>],
         down_bytes: &mut usize,
         down: &Down<'_>,
     ) -> Vec<Result<Vec<u8>>> {
         let m = placement.len();
-        let mut sent: Vec<Result<()>> = Vec::with_capacity(m);
-        match down {
-            Down::Broadcast(f) => {
-                // one physical copy per live worker; metered once (§3).
-                // The worker fans the frame out to every machine it
-                // hosts and answers once per machine.
-                let mut per_worker: Vec<Option<String>> = Vec::with_capacity(workers.len());
-                let mut metered = false;
-                for w in workers.iter_mut() {
-                    if w.is_dead() {
-                        per_worker.push(Some(format!("worker {}: process is dead", w.id())));
-                        continue;
+        let (bytes_per_worker, replies) = Self::two_phase_round(workers, by_worker, m, |w, js| {
+            // a worker with no machines cannot exist (bring-up refuses
+            // empty specs), but never address one if it somehow does
+            if js.is_empty() {
+                return (0, Vec::new());
+            }
+            if w.is_dead() {
+                let msg = format!("worker {}: process is dead", w.id());
+                return (
+                    0,
+                    js.iter()
+                        .map(|&j| SlotSend::Failed(format_err!("machine {j}: {msg}")))
+                        .collect(),
+                );
+            }
+            match down {
+                Down::Broadcast(f) => match w.send(f) {
+                    // the worker fans the one frame out to every
+                    // machine it hosts
+                    Ok(()) => (4 + f.len(), js.iter().map(|_| SlotSend::Sent).collect()),
+                    Err(e) => {
+                        let msg = e.to_string();
+                        (
+                            0,
+                            js.iter()
+                                .map(|&j| SlotSend::Failed(format_err!("machine {j}: {msg}")))
+                                .collect(),
+                        )
                     }
-                    match w.send(f) {
-                        Ok(()) => {
-                            if !metered {
-                                *down_bytes += 4 + f.len();
-                                metered = true;
+                },
+                Down::PerMachine(fs) => {
+                    let mut bytes = 0usize;
+                    let slots = js
+                        .iter()
+                        .map(|&j| match w.send(&fs[j]) {
+                            Ok(()) => {
+                                bytes += 4 + fs[j].len();
+                                SlotSend::Sent
                             }
-                            per_worker.push(None);
-                        }
-                        Err(e) => per_worker.push(Some(e.to_string())),
-                    }
-                }
-                for (j, &(wi, _)) in placement.iter().enumerate() {
-                    sent.push(match &per_worker[wi] {
-                        None => Ok(()),
-                        Some(msg) => Err(format_err!("machine {j}: {msg}")),
-                    });
+                            Err(e) => SlotSend::Failed(e),
+                        })
+                        .collect();
+                    (bytes, slots)
                 }
             }
-            Down::PerMachine(fs) => {
-                for (j, f) in fs.iter().enumerate() {
-                    let w = &mut workers[placement[j].0];
-                    if w.is_dead() {
-                        sent.push(Err(format_err!(
-                            "machine {j}: worker {} is dead",
-                            w.id()
-                        )));
-                        continue;
-                    }
-                    match w.send(f) {
-                        Ok(()) => {
-                            *down_bytes += 4 + f.len();
-                            sent.push(Ok(()));
-                        }
-                        Err(e) => sent.push(Err(e)),
-                    }
+        });
+        match down {
+            // one §3 broadcast, metered once however many live workers
+            // physically received a copy
+            Down::Broadcast(_) => {
+                if let Some(&b) = bytes_per_worker.iter().find(|&&b| b > 0) {
+                    *down_bytes += b;
+                }
+            }
+            Down::PerMachine(_) => *down_bytes += bytes_per_worker.iter().sum::<usize>(),
+        }
+        replies
+    }
+
+    /// The shared two-phase round machinery: fan the per-worker `send`
+    /// closure out on the pool (phase 1 — every worker's downlink lands
+    /// before any reply is awaited, so all workers compute in parallel
+    /// whatever the thread cap), scatter per-slot send outcomes into
+    /// machine order, then drain one reply per successfully-addressed
+    /// machine concurrently (phase 2), slot order per worker. Returns
+    /// the per-worker down-byte counts (for the caller's metering
+    /// policy) and the per-machine replies.
+    fn two_phase_round(
+        workers: &mut [WorkerLink],
+        by_worker: &[Vec<usize>],
+        m: usize,
+        send: impl Fn(&mut WorkerLink, &[usize]) -> (usize, Vec<SlotSend>) + Sync,
+    ) -> (Vec<usize>, Vec<Result<Vec<u8>>>) {
+        let concurrency = workers.len().min(MAX_ROUND_IO_CONCURRENCY);
+        let sends: Vec<(usize, Vec<SlotSend>)> =
+            par_map_mut(workers, concurrency, |wi, w| send(w, &by_worker[wi]));
+        let mut out: Vec<Option<Result<Vec<u8>>>> = (0..m).map(|_| None).collect();
+        let mut bytes_per_worker = Vec::with_capacity(sends.len());
+        for (wi, (bytes, slots)) in sends.into_iter().enumerate() {
+            bytes_per_worker.push(bytes);
+            for (&j, s) in by_worker[wi].iter().zip(slots) {
+                match s {
+                    SlotSend::Sent => {} // reply drained below
+                    SlotSend::Skipped => out[j] = Some(Ok(Vec::new())),
+                    SlotSend::Failed(e) => out[j] = Some(Err(e)),
                 }
             }
         }
-        sent.into_iter()
-            .enumerate()
-            .map(|(j, s)| s.and_then(|_| workers[placement[j].0].recv()))
-            .collect()
+        // recv phase (a link that died after a partial send errors
+        // here instead, downgrading the rest of its machines)
+        let need: Vec<Vec<usize>> = by_worker
+            .iter()
+            .map(|js| js.iter().copied().filter(|&j| out[j].is_none()).collect())
+            .collect();
+        let need = &need;
+        let recvs: Vec<Vec<Result<Vec<u8>>>> = par_map_mut(workers, concurrency, |wi, w| {
+            need[wi].iter().map(|_| w.recv()).collect()
+        });
+        for (wi, replies) in recvs.into_iter().enumerate() {
+            for (&j, r) in need[wi].iter().zip(replies) {
+                out[j] = Some(r);
+            }
+        }
+        let replies = out
+            .into_iter()
+            .map(|r| r.expect("every machine answered, errored, or was skipped"))
+            .collect();
+        (bytes_per_worker, replies)
     }
 
     /// One request/reply on a single machine's link — for steps that
@@ -521,14 +624,18 @@ impl WiredChannel {
                 coord_eps,
                 machine_eps,
             } => {
-                *down_bytes += 4 + frame.len();
+                // meter only after the send succeeds — a failed send
+                // moved no bytes (same rule as the Process arm below)
                 coord_eps[j].send(frame)?;
+                *down_bytes += 4 + frame.len();
                 let req = machine_eps[j].recv()?;
                 let reply = handler(item, &req);
                 machine_eps[j].send(&reply)?;
                 coord_eps[j].recv()?
             }
-            LinkSet::Process { workers, placement } => {
+            LinkSet::Process {
+                workers, placement, ..
+            } => {
                 let w = &mut workers[placement[j].0];
                 w.send(frame)?;
                 *down_bytes += 4 + frame.len();
@@ -543,29 +650,43 @@ impl WiredChannel {
     /// one optional frame per machine, **unmetered** — these replace
     /// the direct machine mutations an in-process fleet performs, which
     /// cost nothing on its meters either. `None` skips the machine;
-    /// machines on dead workers answer `Err`.
+    /// machines on dead workers answer `Err`. Like the data plane, the
+    /// per-worker send + recv runs concurrently on `util::pool`, so one
+    /// slow link doesn't serialize a fleet-wide reset.
     pub fn control(&mut self, frames: &[Option<Vec<u8>>]) -> Vec<Result<Vec<u8>>> {
         match &mut self.links {
             LinkSet::Local { .. } => {
                 unreachable!("control frames are a process-link lifecycle; local fleets mutate their machines directly")
             }
-            LinkSet::Process { workers, placement } => {
+            LinkSet::Process {
+                workers,
+                placement,
+                by_worker,
+            } => {
                 assert_eq!(
                     frames.len(),
                     placement.len(),
                     "control frames vs machines mismatch"
                 );
-                let mut sent: Vec<Option<Result<()>>> = Vec::with_capacity(frames.len());
-                for (j, f) in frames.iter().enumerate() {
-                    sent.push(f.as_ref().map(|f| workers[placement[j].0].send(f)));
-                }
-                sent.into_iter()
-                    .enumerate()
-                    .map(|(j, s)| match s {
-                        None => Ok(Vec::new()),
-                        Some(r) => r.and_then(|_| workers[placement[j].0].recv()),
-                    })
-                    .collect()
+                // shared (not &mut) view for the Sync closure below
+                let by_worker = &*by_worker;
+                // same two-phase machinery as the data plane (bytes are
+                // unused: lifecycle traffic is deliberately unmetered)
+                let (_bytes, replies) =
+                    Self::two_phase_round(workers, by_worker, frames.len(), |w, js| {
+                        let slots = js
+                            .iter()
+                            .map(|&j| match frames[j].as_ref() {
+                                None => SlotSend::Skipped,
+                                Some(f) => match w.send(f) {
+                                    Ok(()) => SlotSend::Sent,
+                                    Err(e) => SlotSend::Failed(e),
+                                },
+                            })
+                            .collect();
+                        (0, slots)
+                    });
+                replies
             }
         }
     }
@@ -720,5 +841,54 @@ mod tests {
     #[test]
     fn process_links_cannot_connect_without_shards() {
         assert!(FleetChannel::connect(TransportKind::Process, 3).is_err());
+    }
+
+    /// A transport whose link is gone: every send and recv errors.
+    struct DeadTransport;
+    impl Transport for DeadTransport {
+        fn send(&mut self, _payload: &[u8]) -> Result<()> {
+            Err(format_err!("dead transport: send failed"))
+        }
+        fn recv(&mut self) -> Result<Vec<u8>> {
+            Err(format_err!("dead transport: recv failed"))
+        }
+        fn bytes_sent(&self) -> usize {
+            0
+        }
+        fn bytes_received(&self) -> usize {
+            0
+        }
+        fn name(&self) -> &'static str {
+            "dead"
+        }
+    }
+
+    #[test]
+    fn exchange_one_meters_only_successful_sends() {
+        // regression: the Local arm used to meter down_bytes BEFORE the
+        // send, so a failed send left phantom bytes on the meter (the
+        // Process arm already metered after success) — both arms must
+        // count only frames that actually left
+        let mut chan = WiredChannel::new(
+            vec![Box::new(DeadTransport) as Box<dyn Transport>],
+            vec![Box::new(DeadTransport) as Box<dyn Transport>],
+        );
+        let mut item = 0u64;
+        let err = chan.exchange_one(0, &mut item, &[1, 2, 3], |_, _| Vec::new());
+        assert!(err.is_err());
+        assert_eq!(
+            chan.wire_bytes(),
+            (0, 0),
+            "a failed send must not move the meters"
+        );
+        // and a successful one still meters both directions (prefix
+        // included): sanity-check against an inproc link
+        let mut chan = wired(TransportKind::InProc, 1);
+        let mut item = 7u64;
+        let reply = chan
+            .exchange_one(0, &mut item, &[9, 9], |_, req| req.to_vec())
+            .unwrap();
+        assert_eq!(reply, vec![9, 9]);
+        assert_eq!(chan.wire_bytes(), (6, 6));
     }
 }

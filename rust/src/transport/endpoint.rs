@@ -1,0 +1,685 @@
+//! The coordinator's listening endpoint: bind **one** socket, let
+//! workers dial in and *register*. This inverts the PR-3/PR-4 spawn
+//! design (one private listener per spawned child) into the shape real
+//! distributed deployments have: the coordinator is a server address,
+//! and the workers — launched by anything: `spawn_fleet`, a shell loop,
+//! an orchestrator on another host — connect to it and claim a worker
+//! index.
+//!
+//! Registration protocol (one dialer, coordinator side):
+//!
+//! 1. accept the connection (bounded, non-blocking accept loop),
+//! 2. read the hello (magic, `PROTOCOL_VERSION`, claimed worker index),
+//! 3. validate: bad magic, a version mismatch, an out-of-range index,
+//!    or a duplicate claim is refused **loudly** — a typed
+//!    [`protocol::RegisterRefusal`] goes back to the dialer in a reject
+//!    frame, and the same refusal fails the whole bring-up fast (the
+//!    registration window is strict: every dialer that *speaks* must be
+//!    one of ours — though a connection that closes before saying hello
+//!    is mere network noise, logged and dropped),
+//! 4. ack the registration (status + the coordinator's version, closing
+//!    the version negotiation), ship the worker's batched
+//!    [`protocol::Op::LoadShard`] frame, and collect the per-machine
+//!    live-count acks.
+//!
+//! Handshakes run **concurrently** on a bounded pool while the accept
+//! loop keeps accepting, so bring-up wall-clock stays O(m/w) whatever
+//! launches the workers. The listener is consumed by
+//! [`Endpoint::accept_fleet`]: once the fleet is assembled the
+//! registration window is closed and late dialers get connection
+//! refused. All registration traffic is handshake, not the paper's
+//! communication — it lands in the links' raw byte counters but never
+//! in the fleet's protocol meters.
+
+use crate::transport::process::{read_timeout, WorkerLink, WorkerSpec};
+use crate::transport::protocol::{self, RegisterRefusal};
+use crate::util::error::{Context, Error, Result};
+use crate::{bail, format_err};
+use std::io::ErrorKind;
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Bound on the first read of a new connection (the hello). A real
+/// worker sends its 16-byte hello immediately after connecting, so
+/// this can be tight — which also bounds how long a silent stray
+/// (scanner, health check) can occupy a handshake thread.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Bound on the post-hello handshake reads (shard ack): generous
+/// enough to decode a multi-hundred-MB shard batch, finite so a
+/// registered-but-stuck worker cannot hang bring-up forever.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Cap on concurrent registration handshakes: enough to keep bring-up
+/// O(m/w)-parallel at any realistic fleet size without unbounded
+/// thread fan-out on a huge one. The pool always has a couple of
+/// threads beyond the expected worker count, so a silent stray
+/// occupying one (for up to [`HELLO_TIMEOUT`]) cannot starve a small
+/// fleet's real dialers.
+const MAX_REGISTRATION_CONCURRENCY: usize = 32;
+
+/// Spare handshake threads beyond the expected worker count (see
+/// [`MAX_REGISTRATION_CONCURRENCY`]).
+const SPARE_REGISTRATION_THREADS: usize = 2;
+
+/// Cap on the hello frame a brand-new, untrusted connection may claim:
+/// a real hello is exactly 16 bytes; a little slack lets a runt or
+/// overlong-but-small frame reach `decode_hello` for a typed refusal,
+/// while an adversarial 4 GiB length prefix is dropped as noise before
+/// any allocation.
+const HELLO_MAX_FRAME: usize = 64;
+
+/// Distinguishes concurrent endpoints in one coordinator process when
+/// naming Unix socket paths.
+static ENDPOINT_NONCE: AtomicU64 = AtomicU64::new(0);
+
+/// One end of a process link: a Unix or TCP stream. Framing is the
+/// shared `transport::{write_frame, read_frame}` pair the loopback TCP
+/// transport also uses — one codec, one place to change it.
+pub(crate) enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    pub(crate) fn send_frame(&mut self, payload: &[u8]) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => crate::transport::write_frame(s, payload, "process transport"),
+            #[cfg(unix)]
+            Stream::Unix(s) => crate::transport::write_frame(s, payload, "process transport"),
+        }
+    }
+
+    pub(crate) fn recv_frame(&mut self) -> Result<Vec<u8>> {
+        match self {
+            Stream::Tcp(s) => crate::transport::read_frame(s, "process transport"),
+            #[cfg(unix)]
+            Stream::Unix(s) => crate::transport::read_frame(s, "process transport"),
+        }
+    }
+
+    /// Length-capped receive for frames from a peer not yet trusted
+    /// (the registration hello): an adversarial length prefix is
+    /// refused before any allocation.
+    pub(crate) fn recv_frame_bounded(&mut self, max_len: usize) -> Result<Vec<u8>> {
+        match self {
+            Stream::Tcp(s) => {
+                crate::transport::read_frame_bounded(s, max_len, "process transport")
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                crate::transport::read_frame_bounded(s, max_len, "process transport")
+            }
+        }
+    }
+
+    pub(crate) fn set_read_timeout(&self, t: Option<Duration>) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(t).context("set_read_timeout"),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(t).context("set_read_timeout"),
+        }
+    }
+
+    pub(crate) fn set_write_timeout(&self, t: Option<Duration>) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_write_timeout(t).context("set_write_timeout"),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_write_timeout(t).context("set_write_timeout"),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self, v: bool) -> Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(v).context("set_nonblocking"),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(v).context("set_nonblocking"),
+        }
+    }
+
+    /// One non-blocking accept attempt: `Ok(Some)` on a connection,
+    /// `Ok(None)` when nobody is dialing right now.
+    fn try_accept(&self) -> Result<Option<Stream>> {
+        let accepted = match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                s.set_nodelay(true).ok();
+                Stream::Tcp(s)
+            }),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        };
+        match accepted {
+            Ok(stream) => {
+                match &stream {
+                    Stream::Tcp(s) => s.set_nonblocking(false).context("set_nonblocking")?,
+                    #[cfg(unix)]
+                    Stream::Unix(s) => s.set_nonblocking(false).context("set_nonblocking")?,
+                }
+                Ok(Some(stream))
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e).context("endpoint: accept failed"),
+        }
+    }
+}
+
+/// Accept one connection on a TCP listener with a deadline — the
+/// single-link helper the loopback transport's `pair()` builds on.
+pub(crate) fn accept_one_with_deadline(
+    listener: &TcpListener,
+    timeout: Duration,
+) -> Result<TcpStream> {
+    listener
+        .set_nonblocking(true)
+        .context("endpoint: set_nonblocking")?;
+    let deadline = Instant::now() + timeout;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false)
+                    .context("endpoint: accepted stream set_nonblocking")?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!("accept timed out after {timeout:?} (peer never connected)");
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(e).context("endpoint: accept failed"),
+        }
+    }
+}
+
+/// The coordinator's bound listener plus the address workers dial. Bind
+/// first (so the port is known and can be handed to whatever launches
+/// the workers), then consume it with [`Endpoint::accept_fleet`].
+pub struct Endpoint {
+    listener: Listener,
+    connect_addr: String,
+    sock_path: Option<PathBuf>,
+}
+
+impl Endpoint {
+    /// Bind a listening endpoint. `addr` is `tcp:HOST:PORT`, a bare
+    /// `HOST:PORT` (TCP), or `unix:PATH`. Port 0 picks an ephemeral
+    /// port; [`Endpoint::connect_addr`] reports the resolved one.
+    pub fn bind(addr: &str) -> Result<Endpoint> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            return Endpoint::bind_unix(PathBuf::from(path));
+        }
+        let hostport = addr.strip_prefix("tcp:").unwrap_or(addr);
+        let listener = TcpListener::bind(hostport)
+            .with_context(|| format!("endpoint: binding tcp listener on {hostport}"))?;
+        let local = listener
+            .local_addr()
+            .context("endpoint: no local addr")?;
+        Ok(Endpoint {
+            listener: Listener::Tcp(listener),
+            connect_addr: format!("tcp:{local}"),
+            sock_path: None,
+        })
+    }
+
+    #[cfg(unix)]
+    fn bind_unix(path: PathBuf) -> Result<Endpoint> {
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)
+            .with_context(|| format!("endpoint: binding unix socket {}", path.display()))?;
+        Ok(Endpoint {
+            listener: Listener::Unix(listener),
+            connect_addr: format!("unix:{}", path.display()),
+            sock_path: Some(path),
+        })
+    }
+
+    #[cfg(not(unix))]
+    fn bind_unix(path: PathBuf) -> Result<Endpoint> {
+        bail!(
+            "endpoint: unix socket address {} on a platform without unix sockets",
+            path.display()
+        )
+    }
+
+    /// The default local endpoint `spawn_fleet` uses: a Unix domain
+    /// socket where available (loopback TCP when `SOCCER_PROCESS_SOCKET
+    /// =tcp` forces it, or on platforms without Unix sockets).
+    pub(crate) fn bind_local() -> Result<Endpoint> {
+        let nonce = ENDPOINT_NONCE.fetch_add(1, Ordering::Relaxed);
+        #[cfg(unix)]
+        {
+            let force_tcp =
+                matches!(std::env::var("SOCCER_PROCESS_SOCKET").as_deref(), Ok("tcp"));
+            if !force_tcp {
+                let path = std::env::temp_dir().join(format!(
+                    "soccer-{}-ep{nonce}.sock",
+                    std::process::id()
+                ));
+                return Endpoint::bind_unix(path);
+            }
+        }
+        let _ = nonce; // tcp addresses need no nonce; the kernel picks the port
+        Endpoint::bind("tcp:127.0.0.1:0")
+    }
+
+    /// The address workers pass to `soccer-machine --connect` —
+    /// `tcp:IP:PORT` or `unix:PATH`. (When bound on a wildcard address
+    /// like `0.0.0.0`, substitute a host the workers can actually
+    /// route to.)
+    pub fn connect_addr(&self) -> &str {
+        &self.connect_addr
+    }
+
+    /// Run the bounded accept/registration loop until every spec in
+    /// `specs` has been claimed by a dialing worker and shipped its
+    /// shards. Links return in worker-index order.
+    ///
+    /// `register_timeout` bounds how long the bring-up tolerates **no
+    /// registration progress** (no new index claimed, no handshake
+    /// completed, and no connection queued or mid-handshake) — the
+    /// deadline refreshes on every step forward and never fires while a
+    /// handshake is in flight, so a big fleet whose handshakes queue
+    /// behind the bounded pool is not penalized for shipping shards,
+    /// while a stalled bring-up still fails after one quiet window.
+    /// Each individual handshake read AND write is additionally
+    /// bounded, so neither a connected-but-silent dialer nor one that
+    /// stops reading mid-ship can hang bring-up; and once the window
+    /// has expired, new connections are no longer admitted (in-flight
+    /// ones drain), so an endless trickle of stray probes cannot defer
+    /// the deadline forever. `doomed` is the launcher's liveness probe —
+    /// called with the per-index claimed mask on every loop tick, it
+    /// lets `spawn_fleet` fail fast when a child it spawned died before
+    /// registering; launchers with no such knowledge pass `|_| Ok(())`.
+    ///
+    /// Any refused registration (bad magic, version mismatch, duplicate
+    /// or out-of-range index) fails the whole bring-up fast: the typed
+    /// refusal is sent back to the dialer and returned as the error.
+    /// A connection that dies *before* saying hello, though, is network
+    /// noise (port scanners and health checks are routine on a
+    /// non-loopback listener): it is logged and dropped, and the loop
+    /// keeps accepting. The caller owns teardown of whatever it
+    /// launched.
+    pub fn accept_fleet(
+        self,
+        specs: Vec<WorkerSpec>,
+        register_timeout: Duration,
+        mut doomed: impl FnMut(&[bool]) -> Result<()>,
+    ) -> Result<Vec<WorkerLink>> {
+        let expected = specs.len();
+        if expected == 0 {
+            bail!("endpoint: a fleet needs at least one worker");
+        }
+        for (i, spec) in specs.iter().enumerate() {
+            if spec.index != i {
+                bail!(
+                    "endpoint: spec {i} claims worker index {} (specs must be in index order)",
+                    spec.index
+                );
+            }
+            if spec.machines.is_empty() {
+                bail!("worker {i}: spec hosts zero machines");
+            }
+        }
+        self.listener.set_nonblocking(true)?;
+
+        // a handshake thread claims spec i by take()-ing its slot; a
+        // second dialer claiming i finds it empty -> DuplicateIndex
+        let slots: Vec<Mutex<Option<WorkerSpec>>> =
+            specs.into_iter().map(|s| Mutex::new(Some(s))).collect();
+        let claimed: Vec<AtomicBool> = (0..expected).map(|_| AtomicBool::new(false)).collect();
+        let links: Mutex<Vec<Option<WorkerLink>>> =
+            Mutex::new((0..expected).map(|_| None).collect());
+        let done = AtomicUsize::new(0);
+        let inflight = AtomicUsize::new(0);
+        let first_err: Mutex<Option<Error>> = Mutex::new(None);
+        let closing = AtomicBool::new(false);
+        let (tx, rx) = mpsc::channel::<Stream>();
+        let rx = Mutex::new(rx);
+
+        let outcome: Result<()> = std::thread::scope(|s| {
+            let pool = (expected + SPARE_REGISTRATION_THREADS).min(MAX_REGISTRATION_CONCURRENCY);
+            for _ in 0..pool {
+                s.spawn(|| loop {
+                    // dequeue under the lock, handshake outside it:
+                    // registrations run concurrently across the pool
+                    let stream = {
+                        let guard = rx.lock().expect("registration queue");
+                        match guard.recv() {
+                            Ok(stream) => stream,
+                            Err(_) => return, // window closed
+                        }
+                    };
+                    // the window closed while this connection sat in the
+                    // queue: it is a stray — drop it (EOF to the dialer)
+                    // instead of spending a handshake timeout on it
+                    if closing.load(Ordering::Acquire) {
+                        inflight.fetch_sub(1, Ordering::AcqRel);
+                        continue;
+                    }
+                    let outcome = register_one(stream, &slots, &claimed);
+                    inflight.fetch_sub(1, Ordering::AcqRel);
+                    match outcome {
+                        Ok(Registration::Registered(index, link)) => {
+                            links.lock().expect("links")[index] = Some(link);
+                            done.fetch_add(1, Ordering::Release);
+                        }
+                        Ok(Registration::Noise(e)) => {
+                            eprintln!(
+                                "soccer: endpoint ignored a connection that closed before \
+                                 registering: {e}"
+                            );
+                        }
+                        Err(e) => {
+                            let mut g = first_err.lock().expect("first_err");
+                            if g.is_none() {
+                                *g = Some(e);
+                            }
+                        }
+                    }
+                });
+            }
+
+            let mut deadline = Instant::now() + register_timeout;
+            let mut last_progress = 0usize;
+            let result = loop {
+                if let Some(e) = first_err.lock().expect("first_err").take() {
+                    break Err(e);
+                }
+                if done.load(Ordering::Acquire) == expected {
+                    break Ok(());
+                }
+                let mask: Vec<bool> =
+                    claimed.iter().map(|c| c.load(Ordering::Acquire)).collect();
+                if let Err(e) = doomed(&mask) {
+                    break Err(e);
+                }
+                // the deadline is a STALL bound: a new claim or a
+                // finished handshake buys a fresh window, and it never
+                // fires while a connection is queued or mid-handshake —
+                // a legitimately long shard ship is progress, bounded by
+                // its own per-read timeout, not by this one. Noise
+                // connections defer the deadline only while they occupy
+                // a slot (at most HELLO_TIMEOUT each); they never
+                // refresh the window, so a scanner-probed listener whose
+                // workers never arrive still times out.
+                let progress =
+                    mask.iter().filter(|&&c| c).count() + done.load(Ordering::Acquire);
+                if progress > last_progress {
+                    last_progress = progress;
+                    deadline = Instant::now() + register_timeout;
+                }
+                if Instant::now() >= deadline {
+                    if inflight.load(Ordering::Acquire) == 0 {
+                        let got = mask.iter().filter(|&&c| c).count();
+                        break Err(format_err!(
+                            "endpoint: only {got}/{expected} workers registered \
+                             ({register_timeout:?} with no registration progress)"
+                        ));
+                    }
+                    // window expired but handshakes are still in flight:
+                    // DRAIN, don't admit. Every in-flight step is
+                    // time-bounded (hello/write/ack timeouts), so the
+                    // drain terminates: either one registers (progress —
+                    // the window refreshes and admission resumes) or
+                    // inflight hits zero and the stall fails above. Not
+                    // admitting here is what stops an endless trickle of
+                    // stray probes from deferring the deadline forever.
+                    std::thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
+                match self.listener.try_accept() {
+                    Ok(Some(stream)) => {
+                        // counted until its handshake resolves, so the
+                        // stall check above cannot fire on a connection
+                        // that is merely waiting for a pool thread
+                        inflight.fetch_add(1, Ordering::AcqRel);
+                        let _ = tx.send(stream);
+                    }
+                    Ok(None) => std::thread::sleep(Duration::from_millis(2)),
+                    Err(e) => break Err(e),
+                }
+            };
+            // close the registration window: queued strays are dropped
+            // undialed, in-flight handshakes finish (each read is
+            // HANDSHAKE_TIMEOUT-bounded), then the pool exits and the
+            // scope join returns
+            closing.store(true, Ordering::Release);
+            drop(tx);
+            result
+        });
+
+        outcome?;
+        let links = links
+            .into_inner()
+            .expect("links")
+            .into_iter()
+            .enumerate()
+            .map(|(i, l)| l.ok_or_else(|| format_err!("worker {i}: registration incomplete")))
+            .collect::<Result<Vec<WorkerLink>>>()?;
+        Ok(links)
+    }
+}
+
+impl Drop for Endpoint {
+    fn drop(&mut self) {
+        if let Some(p) = self.sock_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Refuse a dialer: best-effort reject frame (so the worker dies loudly
+/// with the coordinator's reason), then surface the refusal as the
+/// bring-up error.
+fn refuse(stream: &mut Stream, refusal: RegisterRefusal) -> Error {
+    let _ = stream.send_frame(&protocol::encode_register_reject(&refusal));
+    format_err!("registration refused: {refusal}")
+}
+
+/// Outcome of handling one accepted connection.
+enum Registration {
+    /// A worker claimed `index` and holds its shards: the ready link.
+    Registered(usize, WorkerLink),
+    /// The connection vanished before ever saying hello — routine
+    /// network noise on a public listener (scanners, health checks),
+    /// logged and dropped rather than failing bring-up.
+    Noise(Error),
+}
+
+/// One registration handshake: hello → validate/claim → accept-ack →
+/// LoadShard → live acks. A decoded-but-invalid hello or any post-claim
+/// failure is an `Err` (fails bring-up); a connection that dies before
+/// the hello is [`Registration::Noise`].
+fn register_one(
+    mut stream: Stream,
+    slots: &[Mutex<Option<WorkerSpec>>],
+    claimed: &[AtomicBool],
+) -> Result<Registration> {
+    // a real worker speaks immediately: bound the hello tightly (in
+    // both time and claimed size) so a silent or garbage-spewing stray
+    // frees its handshake thread fast and cannot make us allocate.
+    // Writes are bounded too: a dialer that says hello and then stops
+    // READING would otherwise wedge the shard ship forever once the
+    // socket buffer fills — every handshake step must terminate.
+    stream.set_read_timeout(Some(HELLO_TIMEOUT))?;
+    stream.set_write_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let mut sent = 0usize;
+    let mut received = 0usize;
+
+    let hello = match stream.recv_frame_bounded(HELLO_MAX_FRAME) {
+        Ok(hello) => hello,
+        Err(e) => return Ok(Registration::Noise(e)),
+    };
+    received += 4 + hello.len();
+    // from here the reads can be bulky (the shard-ack follows a
+    // possibly huge LoadShard decode): switch to the generous bound
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let index = match protocol::decode_hello(&hello) {
+        Ok(i) => i,
+        Err(refusal) => return Err(refuse(&mut stream, refusal)),
+    };
+    if index as usize >= slots.len() {
+        return Err(refuse(
+            &mut stream,
+            RegisterRefusal::IndexOutOfRange {
+                index,
+                workers: slots.len(),
+            },
+        ));
+    }
+    let index = index as usize;
+    let taken = slots[index].lock().expect("spec slot").take();
+    let Some(spec) = taken else {
+        return Err(refuse(
+            &mut stream,
+            RegisterRefusal::DuplicateIndex {
+                index: index as u64,
+            },
+        ));
+    };
+    claimed[index].store(true, Ordering::Release);
+
+    let ack = protocol::encode_register_accept();
+    stream
+        .send_frame(&ack)
+        .map_err(|e| e.context(format!("worker {index}: registration ack failed")))?;
+    sent += 4 + ack.len();
+
+    let shards = protocol::encode_load_shards(&spec.machines)?;
+    stream
+        .send_frame(&shards)
+        .map_err(|e| e.context(format!("worker {index}: shipping shards failed")))?;
+    sent += 4 + shards.len();
+
+    let ack = stream
+        .recv_frame()
+        .map_err(|e| e.context(format!("worker {index}: no shard ack")))?;
+    received += 4 + ack.len();
+    let loaded = protocol::decode_live_acks(&ack)?;
+    if loaded.len() != spec.machines.len() {
+        bail!(
+            "worker {index}: acked {} machines, coordinator shipped {}",
+            loaded.len(),
+            spec.machines.len()
+        );
+    }
+    for (s, &n) in spec.machines.iter().zip(&loaded) {
+        if n != s.shard.rows() {
+            bail!(
+                "worker {index}: machine {} loaded {n} rows, coordinator shipped {}",
+                s.id,
+                s.shard.rows()
+            );
+        }
+    }
+    // handshake done: the data plane blocks indefinitely by default (a
+    // dead worker is an instant EOF; only SOCCER_PROCESS_TIMEOUT_SECS
+    // opts into bounding slow computation)
+    stream.set_read_timeout(read_timeout())?;
+    stream.set_write_timeout(None)?;
+    Ok(Registration::Registered(
+        index,
+        WorkerLink::registered(index, stream, sent, received),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Matrix;
+    use crate::transport::process::MachineSpec;
+    use crate::util::rng::Pcg64;
+
+    fn spec(index: usize) -> WorkerSpec {
+        WorkerSpec {
+            index,
+            machines: vec![MachineSpec {
+                id: index,
+                rng: Pcg64::new(index as u64 + 1),
+                shard: Matrix::zeros(2, 3),
+            }],
+        }
+    }
+
+    #[test]
+    fn endpoint_bind_reports_a_dialable_tcp_addr() {
+        let ep = Endpoint::bind("127.0.0.1:0").unwrap();
+        let addr = ep.connect_addr().to_string();
+        let hostport = addr.strip_prefix("tcp:").expect("tcp address");
+        assert!(hostport.starts_with("127.0.0.1:"), "{addr}");
+        // the listener really is there
+        TcpStream::connect(hostport).expect("dial the endpoint");
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn endpoint_bind_unix_cleans_up_its_socket_file() {
+        let path = std::env::temp_dir().join(format!(
+            "soccer-endpoint-test-{}.sock",
+            std::process::id()
+        ));
+        let ep = Endpoint::bind(&format!("unix:{}", path.display())).unwrap();
+        assert!(path.exists());
+        assert_eq!(ep.connect_addr(), &format!("unix:{}", path.display()));
+        drop(ep);
+        assert!(!path.exists(), "drop removes the socket file");
+    }
+
+    #[test]
+    fn accept_fleet_rejects_malformed_spec_lists() {
+        let ep = Endpoint::bind("127.0.0.1:0").unwrap();
+        let err = ep
+            .accept_fleet(Vec::new(), Duration::from_millis(50), |_| Ok(()))
+            .err()
+            .expect("bring-up must fail");
+        assert!(err.to_string().contains("at least one"), "{err}");
+        // out-of-order indices are refused before any I/O
+        let ep = Endpoint::bind("127.0.0.1:0").unwrap();
+        let err = ep
+            .accept_fleet(vec![spec(1)], Duration::from_millis(50), |_| Ok(()))
+            .err()
+            .expect("bring-up must fail");
+        assert!(err.to_string().contains("index order"), "{err}");
+    }
+
+    #[test]
+    fn accept_fleet_times_out_when_nobody_dials() {
+        let ep = Endpoint::bind("127.0.0.1:0").unwrap();
+        let t0 = Instant::now();
+        let err = ep
+            .accept_fleet(vec![spec(0)], Duration::from_millis(100), |_| Ok(()))
+            .err()
+            .expect("bring-up must fail");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert!(err.to_string().contains("0/1 workers"), "{err}");
+    }
+
+    #[test]
+    fn accept_fleet_fails_fast_when_the_launcher_says_doomed() {
+        let ep = Endpoint::bind("127.0.0.1:0").unwrap();
+        let t0 = Instant::now();
+        let err = ep
+            .accept_fleet(vec![spec(0)], Duration::from_secs(30), |claimed| {
+                assert_eq!(claimed, &[false]);
+                Err(format_err!("launcher: child died before registering"))
+            })
+            .err()
+            .expect("bring-up must fail");
+        assert!(t0.elapsed() < Duration::from_secs(5), "doomed probe ignored");
+        assert!(err.to_string().contains("child died"), "{err}");
+    }
+}

@@ -11,12 +11,16 @@
 //!   the socket transport's.
 //! - [`LoopbackTcpTransport`] — a real `std::net` TCP socket pair on
 //!   localhost. Frames cross the kernel's loopback stack.
-//! - [`process`] — spawned `soccer-machine` OS processes over Unix
-//!   domain sockets (loopback TCP fallback), each hosting one or more
-//!   machines (the `machines_per_worker` placement). The machines are
-//!   physically separate from the coordinator, as the paper's §3 model
-//!   assumes; machine-side seconds are measured in the worker, and
-//!   fleet bring-up spawns + handshakes the workers concurrently.
+//! - [`process`] — `soccer-machine` OS worker processes, each hosting
+//!   one or more machines (the `machines_per_worker` placement). The
+//!   machines are physically separate from the coordinator, as the
+//!   paper's §3 model assumes; machine-side seconds are measured in the
+//!   worker. The coordinator binds **one** listening [`Endpoint`]
+//!   (Unix socket or TCP — including non-loopback TCP for genuinely
+//!   remote workers) and workers dial in and *register* by claiming a
+//!   worker index; `process::spawn_fleet` is just the local launcher
+//!   (spawn children, let them dial loopback) layered on the same
+//!   registration path, with concurrent handshakes either way.
 //!
 //! The remaining mode, [`TransportKind::Direct`], is the historical
 //! fast path: machine methods are invoked directly with no
@@ -45,6 +49,7 @@
 //!   crash-failure model — and the run continues on the survivors.
 
 pub mod channel;
+pub mod endpoint;
 pub mod inproc;
 pub mod process;
 pub mod protocol;
@@ -52,6 +57,7 @@ pub mod tcp;
 pub mod wire;
 
 pub use channel::{Down, FleetChannel, WiredChannel};
+pub use endpoint::Endpoint;
 pub use inproc::InProcTransport;
 pub use tcp::LoopbackTcpTransport;
 
@@ -76,10 +82,25 @@ pub(crate) fn write_frame<W: std::io::Write>(
 /// Read one length-prefixed frame from a byte stream (twin of
 /// [`write_frame`]).
 pub(crate) fn read_frame<R: std::io::Read>(r: &mut R, what: &'static str) -> Result<Vec<u8>> {
+    read_frame_bounded(r, u32::MAX as usize, what)
+}
+
+/// [`read_frame`] with a cap on the claimed payload length, refused
+/// BEFORE allocating. For reads where the peer is not yet trusted (the
+/// registration hello): an adversarial 4-byte prefix must not be able
+/// to reserve gigabytes.
+pub(crate) fn read_frame_bounded<R: std::io::Read>(
+    r: &mut R,
+    max_len: usize,
+    what: &'static str,
+) -> Result<Vec<u8>> {
     let mut prefix = [0u8; 4];
     r.read_exact(&mut prefix)
         .with_context(|| format!("{what}: recv prefix"))?;
     let len = u32::from_le_bytes(prefix) as usize;
+    if len > max_len {
+        crate::bail!("{what}: frame claims {len} bytes, bound is {max_len}");
+    }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)
         .with_context(|| format!("{what}: recv payload"))?;

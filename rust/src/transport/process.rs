@@ -1,85 +1,105 @@
-//! The process transport: the fleet's machines live in spawned
-//! `soccer-machine` OS processes, talking to the coordinator over Unix
-//! domain sockets (loopback TCP where Unix sockets are unavailable, or
-//! when `SOCCER_PROCESS_SOCKET=tcp` forces it). This is the mode that
-//! makes the repo a *real* distributed system: machine-side work runs
-//! on another process's CPU, its self-timed seconds are genuine
-//! other-process wall time, and every protocol byte crosses a kernel
-//! socket.
+//! The process transport: the fleet's machines live in `soccer-machine`
+//! OS worker processes, talking to the coordinator over a socket. This
+//! is the mode that makes the repo a *real* distributed system:
+//! machine-side work runs on another process's CPU, its self-timed
+//! seconds are genuine other-process wall time, and every protocol byte
+//! crosses a kernel socket.
 //!
-//! One worker process can host **several** fleet machines (a
-//! [`WorkerSpec`] carries a batch of [`MachineSpec`]s), so m logical
-//! machines map onto w ≤ m processes — the packing production fleets
-//! assume. Requests are routed per machine by the u32 routing field in
-//! every frame header (`transport::protocol`).
+//! Since the listener/registration inversion the coordinator does not
+//! hand workers pre-connected sockets: it binds **one**
+//! [`crate::transport::endpoint::Endpoint`], and workers — launched by
+//! anything, anywhere — dial it with `--connect` and *register* by
+//! claiming their worker index (see `transport::endpoint` for the
+//! handshake). This module keeps the two sides of a registered link:
 //!
-//! Lifecycle of one link (coordinator side, [`spawn_fleet`]):
+//! - [`WorkerEndpoint`] — the worker process's end, used by the
+//!   `soccer-machine` binary. `--connect` takes `unix:<path>`,
+//!   `tcp:<host:port>`, or a bare `host:port` (TCP, hostname resolved,
+//!   retried until the coordinator's listener is up — the form remote
+//!   launch scripts use).
+//! - [`WorkerLink`] — the coordinator's handle on one registered
+//!   worker: the socket, the child process *if this coordinator spawned
+//!   it* (externally-launched workers have none), and raw byte
+//!   counters. One link carries the traffic of every machine the worker
+//!   hosts; routing is the frame header's job.
 //!
-//! 1. bind a fresh listener (one socket per worker — no multiplexing on
-//!    a shared accept loop),
-//! 2. spawn `soccer-machine --connect <addr> --id <w>`,
-//! 3. accept with a bounded timeout that also notices the child dying
-//!    before it ever connects (no hung coordinator),
-//! 4. handshake: worker sends a hello (magic, protocol version, worker
-//!    index); coordinator ships one batched [`Op::LoadShard`] frame
-//!    (every hosted machine's id, PCG64 raw state, shard matrix) over
-//!    the same length-prefixed codec the data plane uses; worker acks
-//!    with per-machine live-point counts.
+//! [`spawn_fleet`] is now just one *launcher* layered on the same
+//! registration path: bind a local endpoint, spawn one `soccer-machine`
+//! child per spec dialing it, and run the shared accept/registration
+//! loop — with a liveness probe so a child that dies before registering
+//! fails bring-up fast. If any worker fails to come up, the
+//! already-spawned children are torn down explicitly (kill + reap, not
+//! an implicit `Drop`) before the error returns — a mid-spawn failure
+//! leaves no zombie or orphan workers behind.
 //!
-//! [`spawn_fleet`] runs spawn + handshake for every worker
-//! **concurrently** on the in-tree `util::pool`, so bring-up wall-clock
-//! is O(m/w) handshakes, not O(m) sequential ones. If any worker fails
-//! to come up, the already-spawned links are torn down *explicitly*
-//! (kill + reap, not an implicit `Drop`) before the error returns — a
-//! mid-spawn failure leaves no zombie or orphan workers behind.
-//!
-//! After the handshake the link speaks exactly the phase-synchronous
+//! After registration the link speaks exactly the phase-synchronous
 //! request/reply protocol of `transport::protocol`. Teardown sends an
 //! [`Op::Shutdown`] frame, waits briefly for a voluntary exit, then
-//! kills and always reaps the child — dropping a fleet never leaks
-//! zombies. A link whose worker vanishes mid-protocol turns into a
-//! transport error on the next send/recv; the fleet downgrades *every*
-//! machine the worker hosted to dead instead of deadlocking.
+//! kills and always reaps a spawned child — dropping a fleet never
+//! leaks zombies. (An external worker has no child to reap: closing the
+//! link is its shutdown signal — it exits on EOF.) A link whose worker
+//! vanishes mid-protocol turns into a transport error on the next
+//! send/recv; the fleet downgrades *every* machine the worker hosted to
+//! dead instead of deadlocking.
 
+use crate::transport::endpoint::{Endpoint, Stream};
 use crate::transport::protocol::{self, Op};
 use crate::transport::Transport;
 use crate::util::error::{Context, Result};
-use crate::util::pool::par_map_mut;
-use crate::{bail, format_err};
-use std::io::ErrorKind;
-use std::net::{TcpListener, TcpStream};
+use crate::bail;
+use std::net::{TcpStream, ToSocketAddrs};
 #[cfg(unix)]
-use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::{Path, PathBuf};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 pub use crate::transport::protocol::MachineSpec;
 
-/// How long the coordinator waits for a spawned worker to connect
-/// before declaring the spawn failed.
-const ACCEPT_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long `spawn_fleet` waits for every spawned worker to dial in and
+/// claim its index before declaring bring-up failed.
+const SPAWN_REGISTER_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// How long a worker keeps trying to reach the coordinator's socket.
+/// How long a worker keeps retrying the coordinator's TCP address (the
+/// external-launch race: the launcher may start workers before the
+/// coordinator's listener is up).
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Grace period between the Shutdown frame and a SIGKILL at teardown.
 const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
 
-/// Bound on the handshake reads (hello, shard ack): generous enough to
-/// decode a multi-hundred-MB shard batch, finite so a connected-but-
-/// silent worker cannot hang the spawn.
-const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
+/// Bound on the worker's wait for the coordinator's registration ack —
+/// generous because a big fleet's handshakes queue behind a bounded
+/// pool (the ack only arrives once a handshake thread claims us), but
+/// finite so dialing something that never answers is an error, not a
+/// hang.
+const REGISTER_ACK_TIMEOUT: Duration = Duration::from_secs(120);
 
-/// Cap on concurrent spawn+handshake threads during fleet bring-up:
-/// enough to make startup O(m/w)-parallel at any realistic fleet size
-/// without unbounded thread fan-out on a huge one.
-const MAX_SPAWN_CONCURRENCY: usize = 32;
+/// Cap on the claimed size of the registration ack — the worker's first
+/// read from a peer it has not yet validated. A real ack is 8 bytes
+/// plus at most a short refusal reason; a misdialed HTTP server's "400
+/// Bad Request" must not become a gigabyte allocation.
+const REGISTER_ACK_MAX_FRAME: usize = 4096;
 
-/// Distinguishes concurrent fleets in one coordinator process when
-/// naming Unix socket paths.
-static WORKER_NONCE: AtomicU64 = AtomicU64::new(0);
+/// Parse a `SOCCER_PROCESS_TIMEOUT_SECS` value: the bound, plus a
+/// warning when the value is present but not a whole number of seconds
+/// (a typo'd bound must not silently become "block forever").
+pub(crate) fn parse_read_timeout(raw: Option<&str>) -> (Option<Duration>, Option<String>) {
+    let Some(raw) = raw else {
+        return (None, None);
+    };
+    match raw.trim().parse::<u64>() {
+        Ok(0) => (None, None),
+        Ok(secs) => (Some(Duration::from_secs(secs)), None),
+        Err(_) => (
+            None,
+            Some(format!(
+                "SOCCER_PROCESS_TIMEOUT_SECS={raw:?} is not a whole number of seconds; \
+                 falling back to unbounded data-plane reads"
+            )),
+        ),
+    }
+}
 
 /// Coordinator-side read timeout, **disabled by default**: a crashed
 /// worker already surfaces instantly as EOF on its socket, so a data-
@@ -87,48 +107,16 @@ static WORKER_NONCE: AtomicU64 = AtomicU64::new(0);
 /// worker mid-computation and silently downgrade it — at paper scale
 /// (n = 10M shards) that turns slow compute into data loss. Set
 /// `SOCCER_PROCESS_TIMEOUT_SECS` to bound the wait anyway when livelock
-/// protection matters more than big shards (0 keeps it disabled).
-fn read_timeout() -> Option<Duration> {
-    let secs = std::env::var("SOCCER_PROCESS_TIMEOUT_SECS")
-        .ok()
-        .and_then(|v| v.parse::<u64>().ok())
-        .unwrap_or(0);
-    (secs > 0).then_some(Duration::from_secs(secs))
-}
-
-/// One end of a process link: a Unix or TCP stream. Framing is the
-/// shared `transport::{write_frame, read_frame}` pair the loopback TCP
-/// transport also uses — one codec, one place to change it.
-enum Stream {
-    Tcp(TcpStream),
-    #[cfg(unix)]
-    Unix(UnixStream),
-}
-
-impl Stream {
-    fn send_frame(&mut self, payload: &[u8]) -> Result<()> {
-        match self {
-            Stream::Tcp(s) => crate::transport::write_frame(s, payload, "process transport"),
-            #[cfg(unix)]
-            Stream::Unix(s) => crate::transport::write_frame(s, payload, "process transport"),
-        }
+/// protection matters more than big shards (0 keeps it disabled). An
+/// unparseable value warns once on stderr and falls back to unbounded.
+pub(crate) fn read_timeout() -> Option<Duration> {
+    let raw = std::env::var("SOCCER_PROCESS_TIMEOUT_SECS").ok();
+    let (timeout, warning) = parse_read_timeout(raw.as_deref());
+    if let Some(msg) = warning {
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        WARNED.call_once(|| eprintln!("soccer: {msg}"));
     }
-
-    fn recv_frame(&mut self) -> Result<Vec<u8>> {
-        match self {
-            Stream::Tcp(s) => crate::transport::read_frame(s, "process transport"),
-            #[cfg(unix)]
-            Stream::Unix(s) => crate::transport::read_frame(s, "process transport"),
-        }
-    }
-
-    fn set_read_timeout(&self, t: Option<Duration>) -> Result<()> {
-        match self {
-            Stream::Tcp(s) => s.set_read_timeout(t).context("set_read_timeout"),
-            #[cfg(unix)]
-            Stream::Unix(s) => s.set_read_timeout(t).context("set_read_timeout"),
-        }
-    }
+    timeout
 }
 
 // ---- worker side ------------------------------------------------------------
@@ -145,6 +133,42 @@ fn connect_unix(path: &str) -> Result<Stream> {
     bail!("worker: unix socket address {path} on a platform without unix sockets")
 }
 
+/// Dial a TCP coordinator, resolving hostnames and retrying refused
+/// connections until [`CONNECT_TIMEOUT`]: an externally-launched worker
+/// may legitimately start before the coordinator binds its listener. A
+/// malformed address (resolution failure) fails fast — retrying cannot
+/// fix a typo.
+fn connect_tcp(hostport: &str) -> Result<Stream> {
+    let deadline = Instant::now() + CONNECT_TIMEOUT;
+    let addrs: Vec<_> = hostport
+        .to_socket_addrs()
+        .with_context(|| format!("worker: bad tcp address {hostport}"))?
+        .collect();
+    if addrs.is_empty() {
+        bail!("worker: tcp address {hostport} resolved to nothing");
+    }
+    let mut last_err = None;
+    loop {
+        for sock in &addrs {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let attempt = remaining.clamp(Duration::from_millis(50), Duration::from_secs(2));
+            match TcpStream::connect_timeout(sock, attempt) {
+                Ok(s) => {
+                    s.set_nodelay(true).context("set_nodelay")?;
+                    return Ok(Stream::Tcp(s));
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        if Instant::now() >= deadline {
+            let e = last_err.expect("at least one connect attempt");
+            return Err(crate::util::error::Error::from(e)
+                .context(format!("worker: connecting to {hostport}")));
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
 /// The worker process's end of its link, used by the `soccer-machine`
 /// binary. Implements [`Transport`] so `protocol::serve` drives it.
 pub struct WorkerEndpoint {
@@ -154,21 +178,14 @@ pub struct WorkerEndpoint {
 }
 
 impl WorkerEndpoint {
-    /// Connect back to the coordinator. `addr` is the worker's
-    /// `--connect` argument: `unix:<path>` or `tcp:<ip:port>`.
+    /// Dial the coordinator's listening endpoint. `addr` is the
+    /// worker's `--connect` argument: `unix:<path>`, `tcp:<host:port>`,
+    /// or a bare `host:port` (TCP).
     pub fn connect(addr: &str) -> Result<WorkerEndpoint> {
         let stream = if let Some(path) = addr.strip_prefix("unix:") {
             connect_unix(path)?
-        } else if let Some(hostport) = addr.strip_prefix("tcp:") {
-            let sock = hostport
-                .parse()
-                .map_err(|_| format_err!("worker: bad tcp address {hostport}"))?;
-            let s = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT)
-                .with_context(|| format!("worker: connecting to {hostport}"))?;
-            s.set_nodelay(true).context("set_nodelay")?;
-            Stream::Tcp(s)
         } else {
-            bail!("worker: --connect wants unix:<path> or tcp:<ip:port>, got {addr}");
+            connect_tcp(addr.strip_prefix("tcp:").unwrap_or(addr))?
         };
         // the worker blocks indefinitely between requests — the
         // coordinator may legitimately think for a long time
@@ -178,6 +195,23 @@ impl WorkerEndpoint {
             sent: 0,
             received: 0,
         })
+    }
+
+    /// Receive the coordinator's registration ack: the worker's first
+    /// read from a peer it has not yet validated, so it is bounded in
+    /// both time ([`REGISTER_ACK_TIMEOUT`]) and claimed size
+    /// ([`REGISTER_ACK_MAX_FRAME`]) — dialing a wrong address fails
+    /// loudly instead of allocating or hanging. Restores the unbounded
+    /// data-plane read timeout afterwards.
+    pub fn recv_registration_ack(&mut self) -> Result<Vec<u8>> {
+        self.stream.set_read_timeout(Some(REGISTER_ACK_TIMEOUT))?;
+        let payload = self
+            .stream
+            .recv_frame_bounded(REGISTER_ACK_MAX_FRAME)
+            .map_err(|e| e.context("worker: no valid registration ack (is this a coordinator?)"))?;
+        self.received += 4 + payload.len();
+        self.stream.set_read_timeout(None)?;
+        Ok(payload)
     }
 }
 
@@ -210,27 +244,54 @@ impl Transport for WorkerEndpoint {
 // ---- coordinator side -------------------------------------------------------
 
 /// Everything one worker process needs at birth: its index (the `--id`
-/// argument) and the batch of machines it hosts, in slot order.
+/// argument it must claim at registration) and the batch of machines it
+/// hosts, in slot order.
 pub struct WorkerSpec {
     pub index: usize,
     pub machines: Vec<MachineSpec>,
 }
 
-/// The coordinator's handle on one spawned worker process: the socket,
-/// the child process, and the raw byte counters. One link can carry the
-/// traffic of several machines; routing is the frame header's job.
+/// The coordinator's handle on one registered worker process: the
+/// socket, the child process (only when this coordinator spawned it —
+/// externally-launched workers dial in and have no `Child` here), and
+/// the raw byte counters. One link can carry the traffic of several
+/// machines; routing is the frame header's job.
 pub struct WorkerLink {
     /// worker index (NOT a machine id — the link may host several)
     id: usize,
     stream: Option<Stream>,
     child: Option<Child>,
-    sock_path: Option<PathBuf>,
     dead: bool,
     sent: usize,
     received: usize,
 }
 
 impl WorkerLink {
+    /// Build the link for a worker that just completed registration.
+    /// `sent`/`received` seed the raw counters with the handshake bytes
+    /// (handshake traffic is raw-metered, never protocol-metered).
+    pub(crate) fn registered(
+        id: usize,
+        stream: Stream,
+        sent: usize,
+        received: usize,
+    ) -> WorkerLink {
+        WorkerLink {
+            id,
+            stream: Some(stream),
+            child: None,
+            dead: false,
+            sent,
+            received,
+        }
+    }
+
+    /// Attach the child process behind this link (spawned launchers
+    /// only) so teardown can kill + reap it.
+    pub(crate) fn set_child(&mut self, child: Child) {
+        self.child = Some(child);
+    }
+
     pub fn id(&self) -> usize {
         self.id
     }
@@ -239,7 +300,8 @@ impl WorkerLink {
         self.dead
     }
 
-    /// OS pid of the live worker (None once the link is dead).
+    /// OS pid of the live worker (None once the link is dead, and None
+    /// for externally-launched workers — their pids were never ours).
     pub fn pid(&self) -> Option<u32> {
         self.child.as_ref().map(|c| c.id())
     }
@@ -289,7 +351,8 @@ impl WorkerLink {
     /// Terminate the worker immediately (failure injection, or teardown
     /// of a link that already errored). Returns false if already dead.
     /// Every machine the worker hosted dies with it — the caller
-    /// downgrades them all.
+    /// downgrades them all. An external worker has no process to kill
+    /// here: closing its link makes it exit on EOF.
     pub fn kill(&mut self) -> bool {
         if self.dead {
             return false;
@@ -306,7 +369,7 @@ impl WorkerLink {
         self.graceful_shutdown();
     }
 
-    /// Close the link, SIGKILL the child, and reap it.
+    /// Close the link, SIGKILL the child (if ours), and reap it.
     fn fail(&mut self) {
         self.dead = true;
         self.stream = None;
@@ -317,36 +380,34 @@ impl WorkerLink {
     }
 
     /// Clean teardown: Shutdown frame, brief grace for a voluntary
-    /// exit, then SIGKILL. Always reaps; always removes the socket file.
+    /// exit, then SIGKILL. Always reaps a spawned child.
     fn graceful_shutdown(&mut self) {
-        if !self.dead {
-            if let Some(s) = self.stream.as_mut() {
-                let _ = s.send_frame(&protocol::request(Op::Shutdown).finish());
-            }
-            // closing our end makes the worker see EOF even if the
-            // Shutdown frame got lost — either signal ends its loop
-            self.stream = None;
-            if let Some(mut child) = self.child.take() {
-                let deadline = Instant::now() + SHUTDOWN_GRACE;
-                loop {
-                    match child.try_wait() {
-                        Ok(Some(_)) => break,
-                        Ok(None) if Instant::now() < deadline => {
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        _ => {
-                            let _ = child.kill();
-                            let _ = child.wait();
-                            break;
-                        }
+        if self.dead {
+            return;
+        }
+        if let Some(s) = self.stream.as_mut() {
+            let _ = s.send_frame(&protocol::request(Op::Shutdown).finish());
+        }
+        // closing our end makes the worker see EOF even if the
+        // Shutdown frame got lost — either signal ends its loop
+        self.stream = None;
+        if let Some(mut child) = self.child.take() {
+            let deadline = Instant::now() + SHUTDOWN_GRACE;
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
                     }
                 }
             }
-            self.dead = true;
         }
-        if let Some(p) = self.sock_path.take() {
-            let _ = std::fs::remove_file(p);
-        }
+        self.dead = true;
     }
 }
 
@@ -385,202 +446,70 @@ pub fn worker_binary() -> Result<PathBuf> {
     )
 }
 
-/// Spawn one worker process per spec — **concurrently** — handshake,
-/// and ship each its batch of shards. Links return in spec order.
+/// The local launcher: bind one endpoint, spawn one `soccer-machine`
+/// child per spec dialing it, and run the shared accept/registration
+/// loop (see `transport::endpoint`). Registration handshakes run
+/// concurrently, so bring-up wall-clock is O(m/w) handshakes, not O(m)
+/// sequential ones. Links return in spec order, each owning its child.
 ///
-/// On any failure the already-spawned links are torn down explicitly
-/// (Shutdown → SIGKILL → reap) before the first error returns: a
-/// mid-spawn failure never leaks a running worker or a zombie pid.
-pub fn spawn_fleet(mut specs: Vec<WorkerSpec>) -> Result<Vec<WorkerLink>> {
+/// On any failure — a child dying before registering, a refused
+/// registration, a handshake error — every spawned child is torn down
+/// explicitly (kill + reap) before the error returns: a mid-spawn
+/// failure never leaks a running worker or a zombie pid.
+pub fn spawn_fleet(specs: Vec<WorkerSpec>) -> Result<Vec<WorkerLink>> {
     let bin = worker_binary()?;
-    let concurrency = specs.len().min(MAX_SPAWN_CONCURRENCY);
-    let results = par_map_mut(&mut specs, concurrency, |_, spec| spawn_worker(&bin, spec));
-    let mut links = Vec::with_capacity(results.len());
-    let mut first_err = None;
-    for r in results {
-        match r {
-            Ok(link) => links.push(link),
+    let endpoint = Endpoint::bind_local()?;
+    let addr = endpoint.connect_addr().to_string();
+    let mut children: Vec<Child> = Vec::with_capacity(specs.len());
+    let mut spawn_err = None;
+    for spec in &specs {
+        let child = Command::new(&bin)
+            .arg("--connect")
+            .arg(&addr)
+            .arg("--id")
+            .arg(spec.index.to_string())
+            .stdin(Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawning {}", bin.display()));
+        match child {
+            Ok(c) => children.push(c),
             Err(e) => {
-                if first_err.is_none() {
-                    first_err = Some(e);
-                }
+                spawn_err = Some(e);
+                break;
             }
         }
     }
-    if let Some(e) = first_err {
-        for link in &mut links {
-            link.teardown();
-        }
-        return Err(e.context("fleet bring-up failed; already-spawned workers were torn down"));
-    }
-    Ok(links)
-}
-
-enum Listener {
-    Tcp(TcpListener),
-    #[cfg(unix)]
-    Unix(UnixListener),
-}
-
-/// Bind the listening socket for one worker: Unix domain socket by
-/// default where available, loopback TCP otherwise or when
-/// `SOCCER_PROCESS_SOCKET=tcp` asks for it. Returns the listener, the
-/// worker's `--connect` argument, and the socket file to clean up.
-fn bind_listener(index: usize) -> Result<(Listener, String, Option<PathBuf>)> {
-    #[cfg(unix)]
-    {
-        let force_tcp =
-            matches!(std::env::var("SOCCER_PROCESS_SOCKET").as_deref(), Ok("tcp"));
-        if !force_tcp {
-            let nonce = WORKER_NONCE.fetch_add(1, Ordering::Relaxed);
-            let path = std::env::temp_dir().join(format!(
-                "soccer-{}-w{index}-{nonce}.sock",
-                std::process::id()
-            ));
-            let _ = std::fs::remove_file(&path);
-            let listener = UnixListener::bind(&path)
-                .with_context(|| format!("binding unix socket {}", path.display()))?;
-            let addr = format!("unix:{}", path.display());
-            return Ok((Listener::Unix(listener), addr, Some(path)));
-        }
-    }
-    let _ = WORKER_NONCE.fetch_add(1, Ordering::Relaxed); // keep ids moving either way
-    let listener =
-        TcpListener::bind(("127.0.0.1", 0)).context("process transport: bind failed")?;
-    let addr = listener
-        .local_addr()
-        .context("process transport: no local addr")?;
-    Ok((Listener::Tcp(listener), format!("tcp:{addr}"), None))
-}
-
-/// Accept with a deadline, noticing a child that died before
-/// connecting — the hang this transport refuses to have.
-fn accept_worker(listener: &Listener, child: &mut Child, index: usize) -> Result<Stream> {
-    match listener {
-        Listener::Tcp(l) => l.set_nonblocking(true).context("set_nonblocking")?,
-        #[cfg(unix)]
-        Listener::Unix(l) => l.set_nonblocking(true).context("set_nonblocking")?,
-    }
-    let deadline = Instant::now() + ACCEPT_TIMEOUT;
-    loop {
-        let accepted = match listener {
-            Listener::Tcp(l) => l.accept().map(|(s, _)| {
-                s.set_nodelay(true).ok();
-                Stream::Tcp(s)
-            }),
-            #[cfg(unix)]
-            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
-        };
-        match accepted {
-            Ok(stream) => {
-                match &stream {
-                    Stream::Tcp(s) => s.set_nonblocking(false).context("set_nonblocking")?,
-                    #[cfg(unix)]
-                    Stream::Unix(s) => s.set_nonblocking(false).context("set_nonblocking")?,
+    let result = match spawn_err {
+        Some(e) => Err(e),
+        None => endpoint.accept_fleet(specs, SPAWN_REGISTER_TIMEOUT, |claimed| {
+            // the launcher's liveness probe: a child that exited before
+            // claiming its index can never register — fail fast instead
+            // of waiting out the window
+            for (i, child) in children.iter_mut().enumerate() {
+                if !claimed[i] {
+                    if let Ok(Some(status)) = child.try_wait() {
+                        bail!("worker {i}: exited before registering ({status})");
+                    }
                 }
-                return Ok(stream);
             }
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                if let Ok(Some(status)) = child.try_wait() {
-                    bail!("worker {index}: exited before connecting ({status})");
-                }
-                if Instant::now() >= deadline {
-                    bail!(
-                        "worker {index}: did not connect within {ACCEPT_TIMEOUT:?} \
-                         (accept timed out)"
-                    );
-                }
-                std::thread::sleep(Duration::from_millis(2));
+            Ok(())
+        }),
+    };
+    match result {
+        Ok(mut links) => {
+            for (link, child) in links.iter_mut().zip(children) {
+                link.set_child(child);
             }
-            Err(e) => return Err(e).context(format!("worker {index}: accept failed")),
+            Ok(links)
+        }
+        Err(e) => {
+            for child in &mut children {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            Err(e.context("fleet bring-up failed; already-spawned workers were torn down"))
         }
     }
-}
-
-fn spawn_worker(bin: &Path, spec: &WorkerSpec) -> Result<WorkerLink> {
-    if spec.machines.is_empty() {
-        bail!("worker {}: spec hosts zero machines", spec.index);
-    }
-    let (listener, addr, sock_path) = bind_listener(spec.index)?;
-    let mut child = Command::new(bin)
-        .arg("--connect")
-        .arg(addr)
-        .arg("--id")
-        .arg(spec.index.to_string())
-        .stdin(Stdio::null())
-        .spawn()
-        .with_context(|| format!("spawning {}", bin.display()))?;
-    // until the WorkerLink below owns the child, every early return
-    // must kill + reap it itself — a bare `?` here would leak a live
-    // orphan the no-zombie bring-up guarantee forbids
-    let early_cleanup = |child: &mut Child, e: crate::util::error::Error| {
-        let _ = child.kill();
-        let _ = child.wait();
-        if let Some(p) = &sock_path {
-            let _ = std::fs::remove_file(p);
-        }
-        e
-    };
-    let stream = match accept_worker(&listener, &mut child, spec.index) {
-        Ok(s) => s,
-        Err(e) => return Err(early_cleanup(&mut child, e)),
-    };
-    if let Err(e) = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT)) {
-        return Err(early_cleanup(&mut child, e));
-    }
-    let mut link = WorkerLink {
-        id: spec.index,
-        stream: Some(stream),
-        child: Some(child),
-        sock_path,
-        dead: false,
-        sent: 0,
-        received: 0,
-    };
-    // handshake: hello ← , batched LoadShard → , live-count acks ←.
-    // These use the link's raw framing; the fleet's protocol meters
-    // never see them (setup, not the paper's communication).
-    let hello = link
-        .recv()
-        .map_err(|e| e.context(format!("worker {}: no hello", link.id)))?;
-    let got = protocol::decode_hello(&hello)?;
-    if got != link.id as u64 {
-        bail!("worker {}: introduced itself as worker {got}", link.id);
-    }
-    link.send(&protocol::encode_load_shards(&spec.machines)?)?;
-    let ack = link
-        .recv()
-        .map_err(|e| e.context(format!("worker {}: no shard ack", link.id)))?;
-    let loaded = protocol::decode_live_acks(&ack)?;
-    if loaded.len() != spec.machines.len() {
-        bail!(
-            "worker {}: acked {} machines, coordinator shipped {}",
-            link.id,
-            loaded.len(),
-            spec.machines.len()
-        );
-    }
-    for (s, &n) in spec.machines.iter().zip(&loaded) {
-        if n != s.shard.rows() {
-            bail!(
-                "worker {}: machine {} loaded {n} rows, coordinator shipped {}",
-                link.id,
-                s.id,
-                s.shard.rows()
-            );
-        }
-    }
-    // handshake done: the data plane blocks indefinitely by default (a
-    // dead worker is an instant EOF; only SOCCER_PROCESS_TIMEOUT_SECS
-    // opts into bounding slow computation)
-    if let Some(s) = link.stream.as_ref() {
-        s.set_read_timeout(read_timeout())?;
-    }
-    // both ends are connected: the socket file has done its job
-    if let Some(p) = link.sock_path.take() {
-        let _ = std::fs::remove_file(p);
-    }
-    Ok(link)
 }
 
 #[cfg(test)]
@@ -610,7 +539,35 @@ mod tests {
 
     #[test]
     fn worker_endpoint_rejects_bad_addresses() {
+        // malformed addresses fail fast — no retry loop can fix a typo
+        let t0 = Instant::now();
         assert!(WorkerEndpoint::connect("nonsense").is_err());
         assert!(WorkerEndpoint::connect("tcp:not-an-addr").is_err());
+        assert!(t0.elapsed() < Duration::from_secs(5), "bad addresses must not retry");
+    }
+
+    #[test]
+    fn read_timeout_parsing_warns_on_typos_and_falls_back() {
+        // unset / disabled
+        assert_eq!(parse_read_timeout(None), (None, None));
+        assert_eq!(parse_read_timeout(Some("0")), (None, None));
+        // a real bound parses
+        assert_eq!(
+            parse_read_timeout(Some("30")),
+            (Some(Duration::from_secs(30)), None)
+        );
+        assert_eq!(
+            parse_read_timeout(Some(" 5 ")),
+            (Some(Duration::from_secs(5)), None)
+        );
+        // a typo'd bound falls back to unbounded AND says so — it must
+        // not silently become "block forever"
+        for typo in ["30s", "abc", "1.5", "-3", ""] {
+            let (t, warn) = parse_read_timeout(Some(typo));
+            assert_eq!(t, None, "{typo:?}");
+            let warn = warn.unwrap_or_else(|| panic!("{typo:?} should warn"));
+            assert!(warn.contains("SOCCER_PROCESS_TIMEOUT_SECS"), "{warn}");
+            assert!(warn.contains("unbounded"), "{warn}");
+        }
     }
 }

@@ -50,7 +50,62 @@ pub const HELLO_MAGIC: u32 = 0x534F_4343; // "SOCC"
 /// worker speaking a different version instead of decoding garbage.
 /// v2: requests carry the machine-routing u32; LoadShard and its ack
 /// are batched per worker; the hello carries the worker index.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// v3: the hello is a *registration* — the worker dials a listening
+/// coordinator and claims its index; the coordinator answers with an
+/// explicit accept/reject ack (carrying its own version, so both ends
+/// confirm they negotiated the same protocol) before any shard ships.
+pub const PROTOCOL_VERSION: u32 = 3;
+
+/// Registration-ack status codes (coordinator → worker, the frame
+/// answering the hello).
+pub const REGISTER_ACCEPT: u32 = 0;
+pub const REGISTER_REJECT: u32 = 1;
+
+/// Why a coordinator refuses a dialing worker's registration. Typed so
+/// the endpoint's bring-up error (and the reject frame's reason text)
+/// say exactly which handshake invariant broke instead of decoding
+/// garbage or hanging.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RegisterRefusal {
+    /// The hello frame is not even the right size to decode.
+    RuntHello { len: usize },
+    /// The dialer did not lead with `HELLO_MAGIC` — not a soccer-machine.
+    BadMagic { got: u32 },
+    /// The worker speaks a different `PROTOCOL_VERSION`.
+    VersionMismatch { worker: u32, coordinator: u32 },
+    /// The claimed worker index is outside the fleet being assembled.
+    IndexOutOfRange { index: u64, workers: usize },
+    /// Another worker already registered (or is registering) this index.
+    DuplicateIndex { index: u64 },
+}
+
+impl std::fmt::Display for RegisterRefusal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegisterRefusal::RuntHello { len } => {
+                write!(f, "hello frame is {len} bytes, want 16")
+            }
+            RegisterRefusal::BadMagic { got } => {
+                write!(f, "bad magic {got:#010x} (not a soccer-machine?)")
+            }
+            RegisterRefusal::VersionMismatch {
+                worker,
+                coordinator,
+            } => write!(
+                f,
+                "worker speaks protocol v{worker}, coordinator v{coordinator}"
+            ),
+            RegisterRefusal::IndexOutOfRange { index, workers } => {
+                write!(f, "worker claims index {index}, fleet expects 0..{workers}")
+            }
+            RegisterRefusal::DuplicateIndex { index } => {
+                write!(f, "worker index {index} is already registered")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegisterRefusal {}
 
 /// Routing value meaning "every machine this worker hosts" — the
 /// coordinator-model broadcast channel. A worker answering it sends one
@@ -135,21 +190,76 @@ pub fn encode_hello(worker_index: u64) -> Vec<u8> {
     w.finish()
 }
 
-/// Verify a hello frame and return the worker's index.
-pub fn decode_hello(frame: &[u8]) -> Result<u64> {
+/// Verify a hello frame and return the worker's claimed index. The
+/// error side is the typed refusal the registration path sends back to
+/// the dialer (and folds into the bring-up error).
+pub fn decode_hello(frame: &[u8]) -> Result<u64, RegisterRefusal> {
     if frame.len() != 16 {
-        bail!("process handshake: hello frame is {} bytes, want 16", frame.len());
+        return Err(RegisterRefusal::RuntHello { len: frame.len() });
     }
     let mut r = FrameReader::new(frame);
     let magic = r.get_u32();
     if magic != HELLO_MAGIC {
-        bail!("process handshake: bad magic {magic:#010x} (not a soccer-machine?)");
+        return Err(RegisterRefusal::BadMagic { got: magic });
     }
     let version = r.get_u32();
     if version != PROTOCOL_VERSION {
-        bail!("process handshake: worker speaks protocol v{version}, coordinator v{PROTOCOL_VERSION}");
+        return Err(RegisterRefusal::VersionMismatch {
+            worker: version,
+            coordinator: PROTOCOL_VERSION,
+        });
     }
     Ok(r.get_u64())
+}
+
+/// The coordinator's answer to a hello it accepts: status + its own
+/// protocol version, closing the negotiation (the worker checks the
+/// echoed version too, so both ends have seen both numbers).
+pub fn encode_register_accept() -> Vec<u8> {
+    let mut w = FrameWriter::with_capacity(8);
+    w.put_u32(REGISTER_ACCEPT);
+    w.put_u32(PROTOCOL_VERSION);
+    w.finish()
+}
+
+/// The coordinator's answer to a hello it refuses: status, version,
+/// and the refusal rendered as UTF-8 so the worker can die loudly with
+/// the coordinator's exact reason on its stderr.
+pub fn encode_register_reject(refusal: &RegisterRefusal) -> Vec<u8> {
+    let reason = refusal.to_string();
+    let mut w = FrameWriter::with_capacity(8 + reason.len());
+    w.put_u32(REGISTER_REJECT);
+    w.put_u32(PROTOCOL_VERSION);
+    w.put_bytes(reason.as_bytes());
+    w.finish()
+}
+
+/// Worker-side decode of the registration ack. `Ok(())` means the
+/// coordinator accepted this worker and the LoadShard frame is next;
+/// an error carries the coordinator's refusal reason (or explains a
+/// malformed/mismatched ack).
+pub fn decode_register_ack(frame: &[u8]) -> Result<()> {
+    if frame.len() < 8 {
+        bail!("registration ack is {} bytes, want at least 8", frame.len());
+    }
+    let mut r = FrameReader::new(frame);
+    let status = r.get_u32();
+    let version = r.get_u32();
+    match status {
+        REGISTER_ACCEPT => {
+            if version != PROTOCOL_VERSION {
+                bail!(
+                    "coordinator accepted but speaks protocol v{version}, worker v{PROTOCOL_VERSION}"
+                );
+            }
+            Ok(())
+        }
+        REGISTER_REJECT => {
+            let reason = String::from_utf8_lossy(r.rest()).into_owned();
+            bail!("coordinator refused registration: {reason}")
+        }
+        other => bail!("registration ack has unknown status {other}"),
+    }
 }
 
 /// Everything one hosted machine needs at birth: identity, RNG stream,
@@ -441,13 +551,48 @@ mod tests {
     #[test]
     fn hello_roundtrip_and_rejections() {
         assert_eq!(decode_hello(&encode_hello(7)).unwrap(), 7);
-        assert!(decode_hello(&[1, 2, 3]).is_err());
+        assert_eq!(
+            decode_hello(&[1, 2, 3]),
+            Err(RegisterRefusal::RuntHello { len: 3 })
+        );
         let mut bad_magic = encode_hello(7);
         bad_magic[0] ^= 0xff;
-        assert!(decode_hello(&bad_magic).is_err());
+        assert!(matches!(
+            decode_hello(&bad_magic),
+            Err(RegisterRefusal::BadMagic { .. })
+        ));
         let mut bad_version = encode_hello(7);
         bad_version[4] ^= 0xff;
-        assert!(decode_hello(&bad_version).is_err());
+        assert_eq!(
+            decode_hello(&bad_version),
+            Err(RegisterRefusal::VersionMismatch {
+                worker: PROTOCOL_VERSION ^ 0xff,
+                coordinator: PROTOCOL_VERSION,
+            })
+        );
+    }
+
+    #[test]
+    fn register_ack_roundtrip_and_rejections() {
+        // an accept decodes cleanly
+        assert!(decode_register_ack(&encode_register_accept()).is_ok());
+        // a reject surfaces the coordinator's typed reason verbatim
+        let refusal = RegisterRefusal::DuplicateIndex { index: 4 };
+        let err = decode_register_ack(&encode_register_reject(&refusal)).unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("refused"), "{text}");
+        assert!(text.contains(&refusal.to_string()), "{text}");
+        // malformed acks are errors, not panics
+        assert!(decode_register_ack(&[1, 2]).is_err());
+        let mut w = FrameWriter::new();
+        w.put_u32(99);
+        w.put_u32(PROTOCOL_VERSION);
+        assert!(decode_register_ack(&w.finish()).is_err());
+        // an accept from a different protocol version is refused
+        let mut w = FrameWriter::new();
+        w.put_u32(REGISTER_ACCEPT);
+        w.put_u32(PROTOCOL_VERSION + 1);
+        assert!(decode_register_ack(&w.finish()).is_err());
     }
 
     #[test]

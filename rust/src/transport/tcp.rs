@@ -5,43 +5,21 @@
 //! process.
 
 use super::Transport;
-use crate::bail;
 use crate::util::error::{Context, Result};
-use std::io::ErrorKind;
 use std::net::{TcpListener, TcpStream};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Bound on pair setup: an unreachable listener or a peer that never
 /// connects turns into a transport error instead of hanging the
 /// coordinator forever.
 const PAIR_TIMEOUT: Duration = Duration::from_secs(5);
 
-/// Accept on a listener with a deadline. The listener is flipped to
-/// non-blocking; the accepted stream is flipped back.
+/// Accept on a listener with a deadline — the shared deadline-accept
+/// helper of `transport::endpoint`, scoped to this transport's error
+/// context.
 fn accept_with_timeout(listener: &TcpListener, timeout: Duration) -> Result<TcpStream> {
-    listener
-        .set_nonblocking(true)
-        .context("loopback transport: set_nonblocking")?;
-    let deadline = Instant::now() + timeout;
-    loop {
-        match listener.accept() {
-            Ok((s, _)) => {
-                s.set_nonblocking(false)
-                    .context("loopback transport: accepted stream set_nonblocking")?;
-                return Ok(s);
-            }
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                if Instant::now() >= deadline {
-                    bail!(
-                        "loopback transport: accept timed out after {timeout:?} \
-                         (peer never connected)"
-                    );
-                }
-                std::thread::sleep(Duration::from_millis(1));
-            }
-            Err(e) => return Err(e).context("loopback transport: accept failed"),
-        }
-    }
+    crate::transport::endpoint::accept_one_with_deadline(listener, timeout)
+        .map_err(|e| e.context("loopback transport: pair setup"))
 }
 
 pub struct LoopbackTcpTransport {
@@ -114,6 +92,7 @@ impl Transport for LoopbackTcpTransport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Instant;
 
     #[test]
     fn transport_tcp_duplex_roundtrip() {

@@ -143,6 +143,13 @@ impl FrameWriter {
         Ok(())
     }
 
+    /// Raw bytes, no length header — for trailing variable-length
+    /// content (e.g. a registration-reject reason) where the frame
+    /// boundary already delimits it.
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
     pub fn finish(self) -> Vec<u8> {
         self.buf
     }
@@ -217,6 +224,13 @@ impl<'a> FrameReader<'a> {
     /// Bytes not yet consumed (0 when a frame was fully decoded).
     pub fn remaining(&self) -> usize {
         self.buf.len() - self.pos
+    }
+
+    /// Everything not yet consumed, as one slice (twin of
+    /// [`FrameWriter::put_bytes`]: trailing content the frame boundary
+    /// delimits).
+    pub fn rest(&mut self) -> &'a [u8] {
+        self.take(self.buf.len() - self.pos)
     }
 }
 

@@ -1,0 +1,402 @@
+//! The remote-capable fleet, end to end: workers launched EXTERNALLY —
+//! by this test's own `Command` calls, standing in for a shell script
+//! or an orchestrator on another host — dial the coordinator's bound
+//! endpoint over real TCP and register. The coordinator is never told
+//! the workers' pids: everything it knows arrives through the
+//! registration handshake, exactly as it would from a different
+//! machine.
+//!
+//! Pinned here:
+//! - bit-identical clustering output and byte-equal wire meters versus
+//!   `TransportKind::Direct` / `InProc`, under both 1-machine-per-worker
+//!   and packed placements;
+//! - killing one remote worker mid-run downgrades exactly the machines
+//!   it hosted, and the completed run matches the equivalent
+//!   empty-shard fleet;
+//! - registration rejection: a hello with wrong magic, wrong
+//!   `PROTOCOL_VERSION`, or a duplicate worker index is refused cleanly
+//!   (typed refusal in the error, reject frame to the dialer, no
+//!   zombie workers, bring-up fails fast).
+
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::core::Matrix;
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::transport::process::{MachineSpec, WorkerSpec};
+use soccer::transport::wire::{FrameReader, FrameWriter};
+use soccer::transport::{protocol, Endpoint, TransportKind};
+use soccer::util::rng::Pcg64;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// Launch one worker exactly the way an external launcher would: the
+/// binary, the coordinator's address, the index to claim — nothing
+/// else. Uses the bare `host:port` form on purpose (the remote-launch
+/// spelling; the prefixed forms are covered by the spawn-path suites).
+fn launch_worker(addr: &str, id: usize) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_soccer-machine"))
+        .arg("--connect")
+        .arg(addr)
+        .arg("--id")
+        .arg(id.to_string())
+        .stdin(Stdio::null())
+        .spawn()
+        .expect("launch external worker")
+}
+
+/// The bare `host:port` the workers dial (connect_addr is `tcp:...`).
+fn bare_addr(endpoint: &Endpoint) -> String {
+    endpoint
+        .connect_addr()
+        .strip_prefix("tcp:")
+        .expect("tcp endpoint")
+        .to_string()
+}
+
+/// Every externally-launched worker must exit on its own within the
+/// deadline (rejected → error exit; served → EOF/Shutdown exit). The
+/// launcher — this test — reaps them; a worker still running is a
+/// zombie-in-waiting and fails the test.
+fn assert_all_exit(children: &mut [Child], deadline: Duration) {
+    let t0 = Instant::now();
+    for (i, c) in children.iter_mut().enumerate() {
+        loop {
+            match c.try_wait().expect("try_wait") {
+                Some(_) => break,
+                None if t0.elapsed() < deadline => {
+                    std::thread::sleep(Duration::from_millis(10))
+                }
+                None => {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                    panic!("worker {i} did not exit within {deadline:?}");
+                }
+            }
+        }
+    }
+}
+
+fn gaussian(n: usize, k: usize, seed: u64) -> Matrix {
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(n, k);
+    soccer::data::gaussian::generate(&spec, &mut Pcg64::new(seed)).points
+}
+
+/// One worker spec hosting one tiny machine (for the rejection tests,
+/// which never get far enough to use the shard).
+fn tiny_specs(workers: usize) -> Vec<WorkerSpec> {
+    (0..workers)
+        .map(|index| WorkerSpec {
+            index,
+            machines: vec![MachineSpec {
+                id: index,
+                rng: Pcg64::new(index as u64 + 1),
+                shard: Matrix::zeros(2, 3),
+            }],
+        })
+        .collect()
+}
+
+/// Write one length-prefixed frame the way the wire codec does — the
+/// rejection tests impersonate a dialer without linking its code path.
+fn send_raw_frame(stream: &mut TcpStream, payload: &[u8]) {
+    stream
+        .write_all(&(payload.len() as u32).to_le_bytes())
+        .expect("send prefix");
+    stream.write_all(payload).expect("send payload");
+}
+
+/// Read one length-prefixed frame back (the coordinator's reject).
+fn recv_raw_frame(stream: &mut TcpStream) -> Vec<u8> {
+    let mut prefix = [0u8; 4];
+    stream.read_exact(&mut prefix).expect("recv prefix");
+    let mut payload = vec![0u8; u32::from_le_bytes(prefix) as usize];
+    stream.read_exact(&mut payload).expect("recv payload");
+    payload
+}
+
+/// The tentpole claim, 1-machine-per-worker: a fleet whose workers were
+/// launched externally and dialed in over real TCP is a bit-identical
+/// twin of `TransportKind::Direct` on the same seed, with byte meters
+/// equal to the in-process wired fleet's — the frames are the same,
+/// only the launcher changed.
+#[test]
+fn remote_external_workers_match_direct_and_inproc_bitwise() {
+    let pts = gaussian(4_000, 4, 141);
+    let m = 4usize;
+    let params = SoccerParams::new(4, 0.2);
+
+    let endpoint = Endpoint::bind("127.0.0.1:0").expect("bind endpoint");
+    let addr = bare_addr(&endpoint);
+    let mut children: Vec<Child> = (0..m).map(|i| launch_worker(&addr, i)).collect();
+    let mut remote =
+        Fleet::with_endpoint(&pts, m, 142, 1, endpoint).expect("remote fleet registration");
+    assert_eq!(remote.transport_name(), "process");
+    assert_eq!(remote.total_live(), 4_000);
+    // the coordinator was never told these pids — externally-launched
+    // workers have none to report
+    assert_eq!(remote.worker_pids().len(), m);
+    assert!(remote.worker_pids().iter().all(|p| p.is_none()));
+
+    let mut direct = Fleet::new(&pts, m, 142);
+    let mut inproc =
+        Fleet::with_transport(&pts, m, 142, TransportKind::InProc).expect("inproc fleet");
+    let out_d = run_soccer(&mut direct, &NativeEngine, &params, &LloydKMeans::default(), 143);
+    let out_i = run_soccer(&mut inproc, &NativeEngine, &params, &LloydKMeans::default(), 143);
+    let out_r = run_soccer(&mut remote, &NativeEngine, &params, &LloydKMeans::default(), 143);
+
+    // bit-identical outcomes
+    assert_eq!(out_d.c_out, out_r.c_out);
+    assert_eq!(out_d.final_centers, out_r.final_centers);
+    assert_eq!(out_d.rounds, out_r.rounds);
+    assert_eq!(out_d.output_size, out_r.output_size);
+    assert_eq!(out_d.cost.to_bits(), out_r.cost.to_bits());
+    assert_eq!(out_d.cost_c_out.to_bits(), out_r.cost_c_out.to_bits());
+
+    // byte meters: remote ≡ inproc exactly
+    let (ci, cr) = (&out_i.telemetry.comm, &out_r.telemetry.comm);
+    assert_eq!(ci.to_coordinator, cr.to_coordinator);
+    assert_eq!(ci.broadcast, cr.broadcast);
+    assert_eq!(ci.bytes_to_coordinator, cr.bytes_to_coordinator);
+    assert_eq!(ci.bytes_broadcast, cr.bytes_broadcast);
+    assert!(cr.bytes_to_coordinator > 0 && cr.bytes_broadcast > 0);
+
+    // machine seconds were measured in the external workers
+    assert!(out_r.telemetry.rounds.iter().all(|r| r.machine_time_max > 0.0));
+
+    // teardown: dropping the fleet closes the links; the workers exit
+    // on their own and their launcher (us) reaps them
+    drop(remote);
+    assert_all_exit(&mut children, Duration::from_secs(10));
+}
+
+/// The same claim under a packed placement: 8 machines on 3 externally
+/// launched workers ([0,1,2], [3,4,5], [6,7]) — the packing moves
+/// frames onto fewer sockets but changes none of them.
+#[test]
+fn remote_packed_external_workers_match_direct_bitwise() {
+    let pts = gaussian(6_000, 4, 151);
+    let m = 8usize;
+    let mpw = 3usize;
+    let workers = m.div_ceil(mpw);
+    let params = SoccerParams::new(4, 0.2);
+
+    let endpoint = Endpoint::bind("127.0.0.1:0").expect("bind endpoint");
+    let addr = bare_addr(&endpoint);
+    let mut children: Vec<Child> = (0..workers).map(|i| launch_worker(&addr, i)).collect();
+    let mut remote =
+        Fleet::with_endpoint(&pts, m, 152, mpw, endpoint).expect("remote packed fleet");
+    assert_eq!(remote.num_machines(), m);
+    assert_eq!(remote.total_live(), 6_000);
+
+    let mut direct = Fleet::new(&pts, m, 152);
+    let mut inproc =
+        Fleet::with_transport(&pts, m, 152, TransportKind::InProc).expect("inproc fleet");
+    let out_d = run_soccer(&mut direct, &NativeEngine, &params, &LloydKMeans::default(), 153);
+    let out_i = run_soccer(&mut inproc, &NativeEngine, &params, &LloydKMeans::default(), 153);
+    let out_r = run_soccer(&mut remote, &NativeEngine, &params, &LloydKMeans::default(), 153);
+
+    assert_eq!(out_d.c_out, out_r.c_out);
+    assert_eq!(out_d.final_centers, out_r.final_centers);
+    assert_eq!(out_d.rounds, out_r.rounds);
+    assert_eq!(out_d.cost.to_bits(), out_r.cost.to_bits());
+    assert_eq!(out_d.cost_c_out.to_bits(), out_r.cost_c_out.to_bits());
+
+    let (ci, cr) = (&out_i.telemetry.comm, &out_r.telemetry.comm);
+    assert_eq!(ci.bytes_to_coordinator, cr.bytes_to_coordinator);
+    assert_eq!(ci.bytes_broadcast, cr.bytes_broadcast);
+    assert_eq!(ci.to_coordinator, cr.to_coordinator);
+    assert_eq!(ci.broadcast, cr.broadcast);
+
+    drop(remote);
+    assert_all_exit(&mut children, Duration::from_secs(10));
+}
+
+/// Crash a remote worker mid-run — its launcher kills it, the
+/// coordinator only ever sees the dead socket — and exactly the
+/// machines it hosted downgrade (the packed kill-granularity unit);
+/// the completed run is a bit-exact twin of the fleet whose dead
+/// machines never had any data.
+#[test]
+fn remote_worker_kill_downgrades_exactly_its_machines() {
+    let pts = gaussian(3_000, 3, 161);
+    let m = 6usize;
+    let mpw = 2usize; // workers host [0,1], [2,3], [4,5]
+    let workers = m.div_ceil(mpw);
+    let params = SoccerParams::new(3, 0.2);
+
+    let endpoint = Endpoint::bind("127.0.0.1:0").expect("bind endpoint");
+    let addr = bare_addr(&endpoint);
+    let mut children: Vec<Child> = (0..workers).map(|i| launch_worker(&addr, i)).collect();
+    let mut fleet =
+        Fleet::with_endpoint(&pts, m, 162, mpw, endpoint).expect("remote packed fleet");
+    assert_eq!(fleet.total_original(), 3_000);
+
+    // a healthy, RNG-free step first, so the crash lands mid-protocol
+    let centers = Matrix::from_rows(&[&[0.0f32; 15]]);
+    let counts = fleet.counts_full(&centers, &NativeEngine).value;
+    assert_eq!(counts[0] as usize, 3_000);
+
+    // the launcher kills worker 1 (machines 2 and 3) behind the
+    // coordinator's back — a remote crash as the coordinator sees it
+    children[1].kill().expect("kill remote worker");
+    children[1].wait().expect("reap remote worker");
+
+    // the next steps must complete within the watchdog window with
+    // EXACTLY the worker's machines downgraded — never a hang
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let centers = Matrix::from_rows(&[&[0.0f32; 15]]);
+        let counts = fleet.counts_full(&centers, &NativeEngine).value;
+        let dead = fleet.dead_machines();
+        let sizes = fleet.live_sizes();
+        let params = SoccerParams::new(3, 0.2);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 164);
+        drop(fleet); // close the survivors' links before reporting
+        tx.send((counts, dead, sizes, out)).expect("report");
+    });
+    let (counts, dead, sizes, out_r) = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("coordinator deadlocked after remote worker crash");
+    handle.join().expect("watchdog thread");
+    // exactly machines 2 and 3 died with their worker (500 points each)
+    assert_eq!(dead, 2);
+    assert_eq!(counts[0] as usize, 2_000);
+    assert_eq!(sizes[2], 0);
+    assert_eq!(sizes[3], 0);
+    assert!(sizes[0] > 0 && sizes[1] > 0 && sizes[4] > 0 && sizes[5] > 0);
+
+    // the run over the survivors is a bit-exact twin of a fleet whose
+    // machines 2 and 3 simply hold empty shards
+    let d = pts.cols();
+    let mut shards = pts.split_rows(m);
+    shards[2] = Matrix::zeros(0, d);
+    shards[3] = Matrix::zeros(0, d);
+    let mut twin = Fleet::from_shards(shards, 162);
+    let out_t = run_soccer(&mut twin, &NativeEngine, &params, &LloydKMeans::default(), 164);
+    assert_eq!(out_r.c_out, out_t.c_out);
+    assert_eq!(out_r.final_centers, out_t.final_centers);
+    assert_eq!(out_r.rounds, out_t.rounds);
+    assert_eq!(out_r.cost.to_bits(), out_t.cost.to_bits());
+    assert_eq!(out_r.cost_c_out.to_bits(), out_t.cost_c_out.to_bits());
+
+    // the surviving workers exit once their links closed
+    children.remove(1);
+    assert_all_exit(&mut children, Duration::from_secs(10));
+}
+
+/// A dialer that isn't a soccer-machine at all: wrong magic. The
+/// bring-up fails fast with the typed refusal, and the dialer receives
+/// a reject frame carrying the same reason.
+#[test]
+fn remote_registration_rejects_bad_magic() {
+    let endpoint = Endpoint::bind("127.0.0.1:0").expect("bind endpoint");
+    let addr = bare_addr(&endpoint);
+    let dialer = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(&addr).expect("dial");
+        let mut w = FrameWriter::new();
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u32(protocol::PROTOCOL_VERSION);
+        w.put_u64(0);
+        send_raw_frame(&mut stream, &w.finish());
+        recv_raw_frame(&mut stream)
+    });
+    let t0 = Instant::now();
+    let err = endpoint
+        .accept_fleet(tiny_specs(1), Duration::from_secs(30), |_| Ok(()))
+        .err()
+        .expect("bring-up must fail");
+    assert!(t0.elapsed() < Duration::from_secs(10), "refusal was not fast");
+    let text = err.to_string();
+    assert!(text.contains("registration refused"), "{text}");
+    assert!(text.contains("bad magic"), "{text}");
+
+    // the dialer got the reject frame with the same typed reason
+    let reject = dialer.join().expect("dialer thread");
+    let mut r = FrameReader::new(&reject);
+    assert_eq!(r.get_u32(), protocol::REGISTER_REJECT);
+    assert_eq!(r.get_u32(), protocol::PROTOCOL_VERSION);
+    let reason = String::from_utf8(r.rest().to_vec()).expect("utf8 reason");
+    assert!(reason.contains("bad magic"), "{reason}");
+}
+
+/// A worker speaking a different PROTOCOL_VERSION is refused with both
+/// versions named — never decoded as garbage.
+#[test]
+fn remote_registration_rejects_wrong_version() {
+    let endpoint = Endpoint::bind("127.0.0.1:0").expect("bind endpoint");
+    let addr = bare_addr(&endpoint);
+    let dialer = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(&addr).expect("dial");
+        let mut w = FrameWriter::new();
+        w.put_u32(protocol::HELLO_MAGIC);
+        w.put_u32(protocol::PROTOCOL_VERSION + 41);
+        w.put_u64(0);
+        send_raw_frame(&mut stream, &w.finish());
+        recv_raw_frame(&mut stream)
+    });
+    let err = endpoint
+        .accept_fleet(tiny_specs(1), Duration::from_secs(30), |_| Ok(()))
+        .err()
+        .expect("bring-up must fail");
+    let text = err.to_string();
+    assert!(text.contains("registration refused"), "{text}");
+    assert!(
+        text.contains(&format!("v{}", protocol::PROTOCOL_VERSION + 41)),
+        "{text}"
+    );
+    assert!(
+        text.contains(&format!("v{}", protocol::PROTOCOL_VERSION)),
+        "{text}"
+    );
+    let reject = dialer.join().expect("dialer thread");
+    let mut r = FrameReader::new(&reject);
+    assert_eq!(r.get_u32(), protocol::REGISTER_REJECT);
+}
+
+/// Two real workers both claiming index 0: one registers, the
+/// duplicate is refused, bring-up fails fast — and NEITHER worker
+/// lingers (the refused one exits on the reject frame, the registered
+/// one on link close; the launcher reaps both, so no zombies).
+#[test]
+fn remote_registration_rejects_duplicate_index() {
+    let pts = gaussian(400, 2, 171);
+    let endpoint = Endpoint::bind("127.0.0.1:0").expect("bind endpoint");
+    let addr = bare_addr(&endpoint);
+    let mut children = vec![launch_worker(&addr, 0), launch_worker(&addr, 0)];
+    let t0 = Instant::now();
+    let err = Fleet::with_endpoint(&pts, 2, 172, 1, endpoint)
+        .err()
+        .expect("duplicate index must fail bring-up");
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "duplicate refusal should fail bring-up fast, not wait out the window"
+    );
+    let text = err.to_string();
+    assert!(text.contains("registration refused"), "{text}");
+    assert!(text.contains("already registered"), "{text}");
+    assert_all_exit(&mut children, Duration::from_secs(10));
+}
+
+/// An index beyond the fleet is refused the same way (the launcher
+/// asked for 1 worker; a dialer claiming index 7 is not one of ours).
+#[test]
+fn remote_registration_rejects_out_of_range_index() {
+    let endpoint = Endpoint::bind("127.0.0.1:0").expect("bind endpoint");
+    let addr = bare_addr(&endpoint);
+    let dialer = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(&addr).expect("dial");
+        send_raw_frame(&mut stream, &protocol::encode_hello(7));
+        recv_raw_frame(&mut stream)
+    });
+    let err = endpoint
+        .accept_fleet(tiny_specs(1), Duration::from_secs(30), |_| Ok(()))
+        .err()
+        .expect("bring-up must fail");
+    let text = err.to_string();
+    assert!(text.contains("claims index 7"), "{text}");
+    let reject = dialer.join().expect("dialer thread");
+    assert_eq!(FrameReader::new(&reject).get_u32(), protocol::REGISTER_REJECT);
+}
