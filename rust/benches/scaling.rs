@@ -7,12 +7,17 @@
 //!   worker processes — bring-up (concurrent spawn + handshake) and
 //!   run wall-clock vs process count, with outcomes identical across
 //!   packings (skipped when the soccer-machine binary isn't built);
+//! - persistent data plane: wall-clock per pipelined round at fleet
+//!   widths w ∈ {8, 32} with the coordinator's idle-vs-fold clock
+//!   split and the measured protocol bytes, snapshot to
+//!   `BENCH_scaling.json` at the repo root (the committed data point);
 //! - core-pinned machine time (opt-in, `SOCCER_PIN_CORES=1`): each
 //!   worker process pinned to its own disjoint core, the coordinator
 //!   to core 0, so the reported machine seconds are measured under
 //!   REAL core separation — no oversubscription, no steal — and the
 //!   coordinator-vs-machine split of the wall clock is honest.
 
+use soccer::baselines::KmeansParallel;
 use soccer::clustering::LloydKMeans;
 use soccer::coordinator::{run_soccer, SoccerParams};
 use soccer::bench_support::{fmt_val, Table};
@@ -127,6 +132,8 @@ fn main() {
     }
     t3.print();
 
+    data_plane_axis(k, &mut log);
+
     // opt-in: machine time under REAL core separation. Each worker
     // process gets its own core (via `taskset -cp`, Linux), the
     // coordinator gets core 0, so worker self-timing measures genuinely
@@ -141,6 +148,79 @@ fn main() {
     let path =
         soccer::bench_support::harness::write_log("scaling", Json::obj(vec![("rows", Json::Arr(log))]));
     println!("log: {}", path.display());
+}
+
+/// The persistent-data-plane axis: many-round k-means|| on a process
+/// fleet at w ∈ {8, 32} workers, reporting wall-clock per pipelined
+/// round, the coordinator's idle (blocked on workers) vs fold
+/// (consuming replies) seconds, and the measured protocol bytes. The
+/// rows are also written to `BENCH_scaling.json` at the repo root —
+/// the machine-readable data point the repo commits.
+fn data_plane_axis(k: usize, log: &mut Vec<Json>) {
+    let rounds = 8usize;
+    let n = soccer::bench_support::harness::bench_n(40_000);
+    let gm = generate(&GaussianMixtureSpec::paper(n, k), &mut Pcg64::new(21));
+    let mut t5 = Table::new(
+        &format!("persistent data plane (n={n}, k-means||, {rounds} rounds, process fleet)"),
+        &["workers", "wall(s)", "secs/round", "idle(s)", "fold(s)", "up bytes", "down bytes"],
+    );
+    let mut rows = Vec::new();
+    for w in [8usize, 32] {
+        let mut fleet =
+            match Fleet::with_placement(&gm.points, w, 22, TransportKind::Process, 1) {
+                Ok(f) => f,
+                Err(e) => {
+                    println!("skipping the data-plane axis: {e}");
+                    break;
+                }
+            };
+        let algo = KmeansParallel::new(k, rounds);
+        let t0 = Instant::now();
+        let (_, telemetry, _) =
+            algo.run_with_snapshots(&mut fleet, &NativeEngine, &[], &mut Pcg64::new(23));
+        let wall = t0.elapsed().as_secs_f64();
+        let done = telemetry.num_rounds().max(1);
+        let secs_per_round = wall / done as f64;
+        let idle = telemetry.coordinator_idle_time();
+        let fold = telemetry.coordinator_fold_time();
+        let up = telemetry.comm.bytes_to_coordinator;
+        let down = telemetry.comm.bytes_broadcast;
+        t5.row(vec![
+            w.to_string(),
+            format!("{wall:.3}"),
+            format!("{secs_per_round:.4}"),
+            format!("{idle:.4}"),
+            format!("{fold:.4}"),
+            up.to_string(),
+            down.to_string(),
+        ]);
+        let row = Json::obj(vec![
+            ("workers", Json::num(w as f64)),
+            ("rounds", Json::num(done as f64)),
+            ("wall_secs", Json::num(wall)),
+            ("secs_per_round", Json::num(secs_per_round)),
+            ("coordinator_idle_secs", Json::num(idle)),
+            ("coordinator_fold_secs", Json::num(fold)),
+            ("bytes_to_coordinator", Json::num(up as f64)),
+            ("bytes_broadcast", Json::num(down as f64)),
+        ]);
+        log.push(row.clone());
+        rows.push(row);
+    }
+    t5.print();
+    if !rows.is_empty() {
+        let snapshot = Json::obj(vec![
+            ("bench", Json::str("scaling/data_plane")),
+            ("algorithm", Json::str("kmeans_parallel")),
+            ("n", Json::num(n as f64)),
+            ("k", Json::num(k as f64)),
+            ("transport", Json::str("process")),
+            ("rows", Json::Arr(rows)),
+        ]);
+        let path =
+            soccer::bench_support::harness::write_repo_snapshot("BENCH_scaling", snapshot);
+        println!("data-plane snapshot: {}", path.display());
+    }
 }
 
 /// Pin `pid` to one CPU via `taskset`. Returns false when pinning is

@@ -84,6 +84,7 @@ impl Eim11 {
 
         while fleet.total_live() > cap && rounds < self.max_rounds {
             rounds += 1;
+            let io0 = fleet.coord_io_secs();
             let n_live = fleet.total_live();
             let s = self.sample_size(n0).min(n_live);
 
@@ -111,6 +112,7 @@ impl Eim11 {
             // accumulated center set (all points the coordinator kept)
             let broadcast = centers_pre.rows();
             let removal = fleet.broadcast_remove(&centers_pre, thr as f32, engine);
+            let io1 = fleet.coord_io_secs();
 
             telemetry.push_round(RoundLog {
                 round: rounds,
@@ -125,6 +127,8 @@ impl Eim11 {
                     &removal.per_machine_secs,
                 ]),
                 coordinator_time: coord_secs,
+                coordinator_idle_time: io1.0 - io0.0,
+                coordinator_fold_time: io1.1 - io0.1,
             });
             if removal.value == 0 {
                 break; // quantile 0 → no progress possible

@@ -85,6 +85,7 @@ impl KmeansParallel {
         let mut init_secs = init.per_machine_secs;
 
         for round in 1..=self.rounds {
+            let io0 = fleet.coord_io_secs();
             // machines sample with prob l·d²/φ and ship the picks
             let sample = fleet.kmpar_sample(self.l, phi);
             let picked = sample.value;
@@ -94,6 +95,7 @@ impl KmeansParallel {
             let update = fleet.kmpar_update(&picked, engine);
             phi = update.value;
             centers.extend(&picked);
+            let io1 = fleet.coord_io_secs();
 
             telemetry.push_round(RoundLog {
                 round,
@@ -108,6 +110,8 @@ impl KmeansParallel {
                     &update.per_machine_secs,
                 ]),
                 coordinator_time: 0.0,
+                coordinator_idle_time: io1.0 - io0.0,
+                coordinator_fold_time: io1.1 - io0.1,
             });
             init_secs = Vec::new(); // init cost charged to round 1 only
 

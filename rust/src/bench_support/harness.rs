@@ -112,6 +112,19 @@ pub fn write_log(name: &str, payload: Json) -> PathBuf {
     path
 }
 
+/// Write a machine-readable benchmark snapshot at the REPO ROOT (next
+/// to README.md) — for data points that get committed with the repo
+/// (e.g. `BENCH_scaling.json`), unlike the transient `target/` logs.
+/// The crate lives at `<repo>/rust`, so the root is one manifest level
+/// up.
+pub fn write_repo_snapshot(name: &str, payload: Json) -> PathBuf {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join(format!("{name}.json"));
+    std::fs::write(&path, payload.to_string()).expect("write repo snapshot");
+    path
+}
+
 /// Benches honor SOCCER_BENCH_N / SOCCER_BENCH_REPS for quick CI runs.
 pub fn bench_n(default: usize) -> usize {
     std::env::var("SOCCER_BENCH_N")

@@ -86,6 +86,7 @@ pub fn run_soccer_robust(
             break;
         }
         rounds += 1;
+        let io0 = fleet.coord_io_secs();
 
         let sample = fleet.sample_pair_exact(eta.min(n_live), &mut rng);
         let (p1, p2) = sample.value;
@@ -107,6 +108,7 @@ pub fn run_soccer_robust(
 
         let removal = fleet.broadcast_remove(&c_iter, v as f32, engine);
         stall = if removal.value == 0 { stall + 1 } else { 0 };
+        let io1 = fleet.coord_io_secs();
 
         telemetry.push_round(RoundLog {
             round: rounds,
@@ -121,6 +123,8 @@ pub fn run_soccer_robust(
                 &removal.per_machine_secs,
             ]),
             coordinator_time: coord_secs,
+            coordinator_idle_time: io1.0 - io0.0,
+            coordinator_fold_time: io1.1 - io0.1,
         });
         // same control-plane accounting as run_soccer (always exact
         // sampling here): (v, |C_iter|) + two quotas per machine

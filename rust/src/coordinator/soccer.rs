@@ -66,6 +66,7 @@ pub fn run_soccer(
             break;
         }
         rounds += 1;
+        let io0 = fleet.coord_io_secs();
 
         // line 3-5: sample P1, P2 (exact-size variant by default)
         let alpha = (eta as f64 / n_live as f64).min(1.0);
@@ -89,6 +90,9 @@ pub fn run_soccer(
         let removal = fleet.broadcast_remove(&c_iter, v as f32, engine);
         let removed = removal.value;
         stall = if removed == 0 { stall + 1 } else { 0 };
+        // the channel's clocks are monotone; this round's share is the
+        // delta across its exchanges
+        let io1 = fleet.coord_io_secs();
 
         telemetry.push_round(RoundLog {
             round: rounds,
@@ -105,6 +109,8 @@ pub fn run_soccer(
                 &removal.per_machine_secs,
             ]),
             coordinator_time: coord_secs,
+            coordinator_idle_time: io1.0 - io0.0,
+            coordinator_fold_time: io1.1 - io0.1,
         });
         // control-plane scalars: the (v, |C_iter|) broadcast pair, plus
         // per-machine quota messages (two per machine — one per sample)

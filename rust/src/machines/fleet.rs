@@ -28,8 +28,10 @@
 //!   other-process wall time. The placement policy
 //!   ([`Fleet::with_placement`], `machines_per_worker`) packs m logical
 //!   machines onto w = ⌈m / machines_per_worker⌉ processes; requests
-//!   are routed per machine by the frame header, and each worker's
-//!   round I/O runs concurrently so a slow link only delays itself.
+//!   are routed per machine by the frame header, and each link's round
+//!   I/O runs on its own persistent I/O thread so a slow link only
+//!   delays itself — replies fold at the coordinator in machine order
+//!   as each worker drains (pipelined rounds).
 //!
 //! All modes are deterministic twins: the codec round-trips f32/f64
 //! bit-exactly and every mode consumes identical RNG streams, so a run
@@ -487,14 +489,24 @@ impl Fleet {
         }
     }
 
-    /// Run one protocol exchange over the wired channel. In-process
-    /// machines answer through `protocol::dispatch` on threads; worker
-    /// processes answer through the same dispatcher on their own CPU.
-    /// A failed link (crashed worker) yields `None` and downgrades the
-    /// machine to dead — the coordinator-side twin of `Machine::kill` —
-    /// instead of poisoning the run; on an in-process fleet a link
-    /// failure is a bug and panics.
-    fn wired_exchange(&mut self, engine: &dyn Engine, down: Down<'_>) -> Vec<Option<Vec<u8>>> {
+    /// Run one protocol exchange over the wired channel, streaming each
+    /// machine's reply into `fold` **in machine order** — on a process
+    /// fleet a reply folds as soon as its worker drains, while later
+    /// workers are still computing (pipelined rounds; the in-order fold
+    /// is what keeps floating-point reductions bit-identical to a
+    /// barriered exchange). In-process machines answer through
+    /// `protocol::dispatch` on threads; worker processes answer through
+    /// the same dispatcher on their own CPU. A failed link (crashed
+    /// worker) folds `None` and downgrades the machine to dead — the
+    /// coordinator-side twin of `Machine::kill` — instead of poisoning
+    /// the run; on an in-process fleet a link failure is a bug and
+    /// panics.
+    fn wired_exchange_fold(
+        &mut self,
+        engine: &dyn Engine,
+        down: Down<'_>,
+        mut fold: impl FnMut(usize, Option<Vec<u8>>),
+    ) {
         let Fleet {
             machines,
             channel,
@@ -505,14 +517,13 @@ impl Fleet {
             FleetChannel::Wired(w) => w,
             FleetChannel::Direct => unreachable!("wired_exchange on a direct fleet"),
         };
-        let replies = chan.exchange(machines, engine, down, |m, req, e| {
-            protocol::dispatch(m, req, e).expect("machine-side protocol dispatch")
-        });
-        replies
-            .into_iter()
-            .enumerate()
-            .map(|(j, r)| match r {
-                Ok(frame) => Some(frame),
+        chan.exchange_fold(
+            machines,
+            engine,
+            down,
+            |m, req, e| protocol::dispatch(m, req, e).expect("machine-side protocol dispatch"),
+            |j, r| match r {
+                Ok(frame) => fold(j, Some(frame)),
                 Err(e) => match meta {
                     Some(meta) => {
                         // loud on purpose: a silent downgrade would let a
@@ -526,12 +537,24 @@ impl Fleet {
                             );
                             meta[j].downgrade();
                         }
-                        None
+                        fold(j, None)
                     }
                     None => panic!("machine {j}: in-process link failed: {e}"),
                 },
-            })
-            .collect()
+            },
+        );
+    }
+
+    /// Cumulative coordinator-side data-plane clocks `(idle, fold)`
+    /// seconds (see [`crate::transport::channel::WiredChannel::coord_io_secs`]);
+    /// monotone over the fleet's lifetime, `(0.0, 0.0)` on a direct
+    /// fleet. Coordinators snapshot deltas around each round for
+    /// telemetry.
+    pub fn coord_io_secs(&self) -> (f64, f64) {
+        match &self.channel {
+            FleetChannel::Direct => (0.0, 0.0),
+            FleetChannel::Wired(w) => w.coord_io_secs(),
+        }
     }
 
     /// Per-machine quotas summing to exactly `min(total, total_live)`:
@@ -600,8 +623,13 @@ impl Fleet {
                     w.finish()
                 })
                 .collect();
-            let replies = self.wired_exchange(&NativeEngine, Down::PerMachine(&reqs));
-            return Self::reduce_pair(&replies, total, dim);
+            let mut p1 = Matrix::with_capacity(total, dim);
+            let mut p2 = Matrix::with_capacity(total, dim);
+            let mut per = Vec::new();
+            self.wired_exchange_fold(&NativeEngine, Down::PerMachine(&reqs), |_, reply| {
+                Self::fold_pair(&mut p1, &mut p2, &mut per, reply)
+            });
+            return StepOut::from_parts((p1, p2), per);
         }
 
         let workers = self.workers;
@@ -629,8 +657,13 @@ impl Fleet {
             let mut w = protocol::request(Op::SampleBernoulliPair);
             w.put_f64(alpha);
             let req = w.finish();
-            let replies = self.wired_exchange(&NativeEngine, Down::Broadcast(&req));
-            return Self::reduce_pair(&replies, 64, dim);
+            let mut p1 = Matrix::with_capacity(64, dim);
+            let mut p2 = Matrix::with_capacity(64, dim);
+            let mut per = Vec::new();
+            self.wired_exchange_fold(&NativeEngine, Down::Broadcast(&req), |_, reply| {
+                Self::fold_pair(&mut p1, &mut p2, &mut per, reply)
+            });
+            return StepOut::from_parts((p1, p2), per);
         }
 
         let workers = self.workers;
@@ -661,23 +694,24 @@ impl Fleet {
             w.put_f32(v);
             w.put_matrix(centers).expect("centers fit the wire header");
             let req = w.finish();
-            let replies = self.wired_exchange(engine, Down::Broadcast(&req));
             let mut removed = 0usize;
-            let mut per = Vec::with_capacity(replies.len());
-            for (j, reply) in replies.iter().enumerate() {
-                match reply {
-                    Some(frame) => {
-                        let mut r = FrameReader::new(frame);
-                        let rj = r.get_u64() as usize;
-                        removed += rj;
-                        per.push(r.get_f64());
-                        // the removal ack is where the coordinator's
-                        // size metadata comes from (§3 model)
-                        if let Some(meta) = &mut self.meta {
-                            meta[j].n_live = meta[j].n_live.saturating_sub(rj);
-                        }
-                    }
-                    None => per.push(0.0),
+            let mut acks: Vec<(usize, usize)> = Vec::new();
+            let mut per = Vec::new();
+            self.wired_exchange_fold(engine, Down::Broadcast(&req), |j, reply| match reply {
+                Some(frame) => {
+                    let mut r = FrameReader::new(&frame);
+                    let rj = r.get_u64() as usize;
+                    removed += rj;
+                    per.push(r.get_f64());
+                    acks.push((j, rj));
+                }
+                None => per.push(0.0),
+            });
+            // the removal acks are where the coordinator's size
+            // metadata comes from (§3 model)
+            if let Some(meta) = &mut self.meta {
+                for (j, rj) in acks {
+                    meta[j].n_live = meta[j].n_live.saturating_sub(rj);
                 }
             }
             return StepOut::from_parts(removed, per);
@@ -700,12 +734,13 @@ impl Fleet {
 
         if self.is_wired() {
             let req = protocol::request(Op::Drain).finish();
-            let replies = self.wired_exchange(&NativeEngine, Down::Broadcast(&req));
             let mut v = Matrix::with_capacity(total, dim);
-            for reply in replies.iter().flatten() {
-                let mut r = FrameReader::new(reply);
-                v.extend(&r.get_matrix());
-            }
+            self.wired_exchange_fold(&NativeEngine, Down::Broadcast(&req), |_, reply| {
+                if let Some(frame) = reply {
+                    let mut r = FrameReader::new(&frame);
+                    v.extend(&r.get_matrix());
+                }
+            });
             if let Some(meta) = &mut self.meta {
                 for mm in meta.iter_mut() {
                     mm.n_live = 0;
@@ -745,8 +780,12 @@ impl Fleet {
             let mut w = protocol::request(Op::CountsFull);
             w.put_matrix(centers).expect("centers fit the wire header");
             let req = w.finish();
-            let replies = self.wired_exchange(engine, Down::Broadcast(&req));
-            return Self::reduce_counts(k, &replies);
+            let mut total = vec![0.0f64; k];
+            let mut per = Vec::new();
+            self.wired_exchange_fold(engine, Down::Broadcast(&req), |_, reply| {
+                Self::fold_counts(&mut total, &mut per, reply)
+            });
+            return StepOut::from_parts(total, per);
         }
 
         let workers = self.workers;
@@ -764,25 +803,20 @@ impl Fleet {
         StepOut::from_parts(total, per)
     }
 
-    /// Decode per-machine `(counts, secs)` replies and sum the counts.
+    /// Fold one machine's `(counts, secs)` reply into the running sums.
     /// A `None` reply (downgraded machine) contributes nothing.
-    fn reduce_counts(k: usize, replies: &[Option<Vec<u8>>]) -> StepOut<Vec<f64>> {
-        let mut total = vec![0.0f64; k];
-        let mut per = Vec::with_capacity(replies.len());
-        for reply in replies {
-            match reply {
-                Some(frame) => {
-                    let mut r = FrameReader::new(frame);
-                    let counts = r.get_f64s();
-                    for (a, b) in total.iter_mut().zip(&counts) {
-                        *a += b;
-                    }
-                    per.push(r.get_f64());
+    fn fold_counts(total: &mut [f64], per: &mut Vec<f64>, reply: Option<Vec<u8>>) {
+        match reply {
+            Some(frame) => {
+                let mut r = FrameReader::new(&frame);
+                let counts = r.get_f64s();
+                for (a, b) in total.iter_mut().zip(&counts) {
+                    *a += b;
                 }
-                None => per.push(0.0),
+                per.push(r.get_f64());
             }
+            None => per.push(0.0),
         }
-        StepOut::from_parts(total, per)
     }
 
     // ---- k-means|| fleet steps ---------------------------------------------
@@ -817,55 +851,40 @@ impl Fleet {
 
     /// The shared wired shape of every "broadcast a center set, reduce
     /// an f64" step: encode the op + matrix once, exchange, decode
-    /// `(value, secs)` per machine and sum. One frame layout, one
-    /// place to change it.
+    /// `(value, secs)` per machine and sum — summed in machine order as
+    /// the replies stream in, which is the same order a barriered
+    /// reduction used (bit-identical fp accumulation). One frame
+    /// layout, one place to change it.
     fn wired_scalar_step(&mut self, op: Op, centers: &Matrix, engine: &dyn Engine) -> StepOut<f64> {
         let mut w = protocol::request(op);
         w.put_matrix(centers).expect("centers fit the wire header");
         let req = w.finish();
-        let replies = self.wired_exchange(engine, Down::Broadcast(&req));
-        Self::reduce_scalar(&replies)
-    }
-
-    /// Decode per-machine `(matrix, matrix, secs)` replies into two
-    /// concatenated samples (shared by both sampling variants).
-    fn reduce_pair(
-        replies: &[Option<Vec<u8>>],
-        rows_hint: usize,
-        dim: usize,
-    ) -> StepOut<(Matrix, Matrix)> {
-        let mut p1 = Matrix::with_capacity(rows_hint, dim);
-        let mut p2 = Matrix::with_capacity(rows_hint, dim);
-        let mut per = Vec::with_capacity(replies.len());
-        for reply in replies {
-            match reply {
-                Some(frame) => {
-                    let mut r = FrameReader::new(frame);
-                    p1.extend(&r.get_matrix());
-                    p2.extend(&r.get_matrix());
-                    per.push(r.get_f64());
-                }
-                None => per.push(0.0),
-            }
-        }
-        StepOut::from_parts((p1, p2), per)
-    }
-
-    /// Decode per-machine `(f64 value, secs)` replies and sum the values.
-    fn reduce_scalar(replies: &[Option<Vec<u8>>]) -> StepOut<f64> {
         let mut total = 0.0f64;
-        let mut per = Vec::with_capacity(replies.len());
-        for reply in replies {
-            match reply {
-                Some(frame) => {
-                    let mut r = FrameReader::new(frame);
-                    total += r.get_f64();
-                    per.push(r.get_f64());
-                }
-                None => per.push(0.0),
+        let mut per = Vec::new();
+        self.wired_exchange_fold(engine, Down::Broadcast(&req), |_, reply| match reply {
+            Some(frame) => {
+                let mut r = FrameReader::new(&frame);
+                total += r.get_f64();
+                per.push(r.get_f64());
             }
-        }
+            None => per.push(0.0),
+        });
         StepOut::from_parts(total, per)
+    }
+
+    /// Fold one machine's `(matrix, matrix, secs)` reply onto the two
+    /// concatenated samples (shared by both sampling variants). A
+    /// `None` reply (downgraded machine) contributes nothing.
+    fn fold_pair(p1: &mut Matrix, p2: &mut Matrix, per: &mut Vec<f64>, reply: Option<Vec<u8>>) {
+        match reply {
+            Some(frame) => {
+                let mut r = FrameReader::new(&frame);
+                p1.extend(&r.get_matrix());
+                p2.extend(&r.get_matrix());
+                per.push(r.get_f64());
+            }
+            None => per.push(0.0),
+        }
     }
 
     pub fn kmpar_sample(&mut self, l: f64, phi: f64) -> StepOut<Matrix> {
@@ -876,19 +895,18 @@ impl Fleet {
             w.put_f64(l);
             w.put_f64(phi);
             let req = w.finish();
-            let replies = self.wired_exchange(&NativeEngine, Down::Broadcast(&req));
             let mut all = Matrix::with_capacity(16, dim);
-            let mut per = Vec::with_capacity(replies.len());
-            for reply in &replies {
+            let mut per = Vec::new();
+            self.wired_exchange_fold(&NativeEngine, Down::Broadcast(&req), |_, reply| {
                 match reply {
                     Some(frame) => {
-                        let mut r = FrameReader::new(frame);
+                        let mut r = FrameReader::new(&frame);
                         all.extend(&r.get_matrix());
                         per.push(r.get_f64());
                     }
                     None => per.push(0.0),
                 }
-            }
+            });
             return StepOut::from_parts(all, per);
         }
 
@@ -918,8 +936,12 @@ impl Fleet {
             w.put_f32(cutoff);
             w.put_matrix(centers).expect("centers fit the wire header");
             let req = w.finish();
-            let replies = self.wired_exchange(engine, Down::Broadcast(&req));
-            return Self::reduce_counts(k, &replies);
+            let mut total = vec![0.0f64; k];
+            let mut per = Vec::new();
+            self.wired_exchange_fold(engine, Down::Broadcast(&req), |_, reply| {
+                Self::fold_counts(&mut total, &mut per, reply)
+            });
+            return StepOut::from_parts(total, per);
         }
 
         let workers = self.workers;
@@ -985,12 +1007,13 @@ impl Fleet {
             let mut w = protocol::request(Op::PerPointCosts);
             w.put_matrix(centers).expect("centers fit the wire header");
             let req = w.finish();
-            let replies = self.wired_exchange(engine, Down::Broadcast(&req));
             let mut all = Vec::new();
-            for reply in replies.iter().flatten() {
-                let mut r = FrameReader::new(reply);
-                all.extend(r.get_f32s());
-            }
+            self.wired_exchange_fold(engine, Down::Broadcast(&req), |_, reply| {
+                if let Some(frame) = reply {
+                    let mut r = FrameReader::new(&frame);
+                    all.extend(r.get_f32s());
+                }
+            });
             return all;
         }
 

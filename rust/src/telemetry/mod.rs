@@ -81,6 +81,13 @@ pub struct RoundLog {
     pub machine_time_max: f64,
     /// coordinator-side work this round (seconds)
     pub coordinator_time: f64,
+    /// seconds the coordinator spent blocked waiting on worker replies
+    /// this round (the pipelined data plane's idle clock; 0 on direct
+    /// and local-link fleets)
+    pub coordinator_idle_time: f64,
+    /// seconds the coordinator spent folding replies into aggregates as
+    /// they streamed in this round (0 on a direct fleet)
+    pub coordinator_fold_time: f64,
 }
 
 /// Full run telemetry.
@@ -104,6 +111,18 @@ impl RunTelemetry {
     /// The paper's "T (machine)": Σ_rounds max_j time_j.
     pub fn machine_time(&self) -> f64 {
         self.rounds.iter().map(|r| r.machine_time_max).sum()
+    }
+
+    /// Σ_rounds of the coordinator's blocked-on-workers seconds (the
+    /// pipelined data plane's idle clock; 0 unless the fleet runs over
+    /// process links).
+    pub fn coordinator_idle_time(&self) -> f64 {
+        self.rounds.iter().map(|r| r.coordinator_idle_time).sum()
+    }
+
+    /// Σ_rounds of the coordinator's streaming-fold seconds.
+    pub fn coordinator_fold_time(&self) -> f64 {
+        self.rounds.iter().map(|r| r.coordinator_fold_time).sum()
     }
 
     /// Total coordinator-side work: per-round clustering/thresholding
@@ -133,6 +152,8 @@ mod tests {
             threshold: 1.0,
             machine_time_max: mt,
             coordinator_time: 0.5,
+            coordinator_idle_time: 0.05,
+            coordinator_fold_time: 0.01,
         }
     }
 
@@ -146,6 +167,8 @@ mod tests {
         assert_eq!(t.num_rounds(), 2);
         assert!((t.machine_time() - 0.5).abs() < 1e-12);
         assert!((t.coordinator_time() - 1.0).abs() < 1e-12);
+        assert!((t.coordinator_idle_time() - 0.1).abs() < 1e-12);
+        assert!((t.coordinator_fold_time() - 0.02).abs() < 1e-12);
     }
 
     #[test]

@@ -13,13 +13,20 @@
 //!   ends plus a placement table mapping machine j → (worker, slot);
 //!   the handler argument is ignored because the workers run
 //!   `protocol::dispatch` themselves, routed by the machine field in
-//!   every frame header.
+//!   every frame header. Every link's socket I/O runs on a persistent
+//!   per-link thread ([`crate::transport::link_io`]): a round *submits*
+//!   each worker's frames to its link thread and *collects* per-worker
+//!   results in worker order, so replies fold as early workers drain —
+//!   pipelined rounds — while outcomes stay bit-identical (worker
+//!   order is machine order under contiguous placement).
 //!
-//! Either way [`WiredChannel::exchange`] is the one primitive: deliver
-//! a request for every machine, collect one reply per machine — as a
-//! per-machine `Result`, so a crashed worker process is a value the
-//! fleet can downgrade on (every machine the worker hosted errors), not
-//! a panic or a deadlock. All protocol byte metering happens here:
+//! Either way [`WiredChannel::exchange_fold`] is the one primitive
+//! (with [`WiredChannel::exchange`] the vector-materializing wrapper):
+//! deliver a request for every machine, fold one reply per machine in
+//! machine order — as a per-machine `Result`, so a crashed worker
+//! process is a value the fleet can downgrade on (every machine the
+//! worker hosted errors), not a panic or a deadlock. All protocol byte
+//! metering happens here:
 //!
 //! - `down_bytes` — coordinator → machines. A [`Down::Broadcast`] is
 //!   metered **once** regardless of fleet size (the coordinator model's
@@ -39,30 +46,14 @@
 //! simulated crash), while a dead *worker process* has no link left, so
 //! nothing is sent to any machine it hosted or metered for them.
 
+use super::link_io::{RoundFrames, RoundResult, SlotOutcome};
 use super::process::WorkerLink;
 use super::{InProcTransport, LoopbackTcpTransport, Transport, TransportKind};
 use crate::format_err;
 use crate::runtime::{Engine, NativeEngine};
 use crate::util::error::Result;
-use crate::util::pool::par_map_mut;
-
-/// Cap on concurrent per-worker round-I/O threads: one per worker up
-/// to this bound. Worker processes are independent, so the cap cannot
-/// deadlock; and because each round is a send phase then a recv phase,
-/// a fleet larger than the cap still computes fully in parallel — the
-/// chunking only batches the frame I/O itself.
-const MAX_ROUND_IO_CONCURRENCY: usize = 64;
-
-/// What happened to one machine's downlink in a round's send phase.
-enum SlotSend {
-    /// Frame delivered — a reply is owed (drained in the recv phase).
-    Sent,
-    /// Nothing to send for this machine (control rounds only); it
-    /// resolves to an empty `Ok` without any I/O.
-    Skipped,
-    /// Send failed — the error IS the machine's result.
-    Failed(crate::util::error::Error),
-}
+use std::sync::Arc;
+use std::time::Instant;
 
 /// The downlink payload of one exchange.
 pub enum Down<'a> {
@@ -167,11 +158,15 @@ enum LinkSet {
     },
 }
 
-/// The wired fabric: the links plus the protocol byte meters.
+/// The wired fabric: the links, the protocol byte meters, and the
+/// coordinator-side data-plane clocks (seconds blocked waiting on
+/// worker replies vs seconds folding them — the pipelining telemetry).
 pub struct WiredChannel {
     links: LinkSet,
     up_bytes: usize,
     down_bytes: usize,
+    idle_secs: f64,
+    fold_secs: f64,
 }
 
 impl WiredChannel {
@@ -187,6 +182,8 @@ impl WiredChannel {
             },
             up_bytes: 0,
             down_bytes: 0,
+            idle_secs: 0.0,
+            fold_secs: 0.0,
         }
     }
 
@@ -219,6 +216,8 @@ impl WiredChannel {
             },
             up_bytes: 0,
             down_bytes: 0,
+            idle_secs: 0.0,
+            fold_secs: 0.0,
         }
     }
 
@@ -247,6 +246,18 @@ impl WiredChannel {
     pub fn reset_meter(&mut self) {
         self.up_bytes = 0;
         self.down_bytes = 0;
+    }
+
+    /// Cumulative coordinator-side data-plane clocks since the channel
+    /// opened: `(idle, fold)` seconds — idle is time blocked waiting on
+    /// a worker's replies, fold is time inside the caller's fold
+    /// closure consuming them. Monotone (never reset by
+    /// [`WiredChannel::reset_meter`]): per-round numbers are snapshot
+    /// deltas taken by the coordinator loops. On local links only fold
+    /// time accrues — the idle clock measures the pipelined process
+    /// data plane.
+    pub fn coord_io_secs(&self) -> (f64, f64) {
+        (self.idle_secs, self.fold_secs)
     }
 
     /// Raw per-endpoint byte totals since the links were opened:
@@ -342,11 +353,14 @@ impl WiredChannel {
     /// the workers are the machine side. A broadcast crosses each
     /// worker's socket once and fans out inside the worker (one reply
     /// per hosted machine, in slot order); per-machine frames are
-    /// routed to the hosting worker. Each worker's send + recv runs as
-    /// its own `util::pool` task, so a slow or high-latency link (a
-    /// genuinely remote worker) delays only its own replies instead of
-    /// serializing the round; replies are folded back in machine order
-    /// deterministically.
+    /// routed to the hosting worker. Each worker's send + recv runs on
+    /// that link's **persistent I/O thread** (spawned at registration,
+    /// [`crate::transport::link_io`]), so a slow or high-latency link
+    /// (a genuinely remote worker) delays only its own replies instead
+    /// of serializing the round; replies are folded back in machine
+    /// order deterministically. Prefer [`WiredChannel::exchange_fold`]
+    /// to consume replies as workers drain instead of materializing the
+    /// vector.
     pub fn exchange<T: Send>(
         &mut self,
         items: &mut [T],
@@ -355,6 +369,32 @@ impl WiredChannel {
         handler: impl Fn(&mut T, &[u8], &dyn Engine) -> Vec<u8> + Sync,
     ) -> Vec<Result<Vec<u8>>> {
         let n = self.num_machines();
+        let mut out: Vec<Option<Result<Vec<u8>>>> = (0..n).map(|_| None).collect();
+        self.exchange_fold(items, engine, down, handler, |j, r| out[j] = Some(r));
+        out.into_iter()
+            .map(|r| r.expect("every machine folded"))
+            .collect()
+    }
+
+    /// The streaming primitive under [`WiredChannel::exchange`]:
+    /// instead of materializing the reply vector, `fold(j, result)` is
+    /// invoked once per machine, **always in machine order** — and on
+    /// process links it runs as soon as machine j's worker has drained,
+    /// while later workers are still computing or writing replies
+    /// (round pipelining). Machine order is what keeps floating-point
+    /// accumulations bit-identical to a barriered round: contiguous
+    /// placement means worker order IS machine order, so an in-order
+    /// prefix fold never waits on anything it doesn't need. Byte
+    /// metering is identical to the vector form.
+    pub fn exchange_fold<T: Send>(
+        &mut self,
+        items: &mut [T],
+        engine: &dyn Engine,
+        down: Down<'_>,
+        handler: impl Fn(&mut T, &[u8], &dyn Engine) -> Vec<u8> + Sync,
+        mut fold: impl FnMut(usize, Result<Vec<u8>>),
+    ) {
+        let n = self.num_machines();
         if let Down::PerMachine(fs) = &down {
             assert_eq!(fs.len(), n, "per-machine frames vs machines mismatch");
         }
@@ -362,8 +402,10 @@ impl WiredChannel {
             links,
             up_bytes,
             down_bytes,
+            idle_secs,
+            fold_secs,
         } = self;
-        let replies = match links {
+        match links {
             LinkSet::Local {
                 coord_eps,
                 machine_eps,
@@ -379,18 +421,26 @@ impl WiredChannel {
                         }
                     }
                 }
-                Self::exchange_local(coord_eps, machine_eps, items, engine, &down, &handler)
+                let replies =
+                    Self::exchange_local(coord_eps, machine_eps, items, engine, &down, &handler);
+                for (j, r) in replies.into_iter().enumerate() {
+                    if let Ok(r) = &r {
+                        *up_bytes += 4 + r.len();
+                    }
+                    let t = Instant::now();
+                    fold(j, r);
+                    *fold_secs += t.elapsed().as_secs_f64();
+                }
             }
             LinkSet::Process {
-                workers,
-                placement,
-                by_worker,
-            } => Self::exchange_process(workers, placement, by_worker, down_bytes, &down),
-        };
-        for r in replies.iter().flatten() {
-            *up_bytes += 4 + r.len();
+                workers, by_worker, ..
+            } => {
+                Self::exchange_process_fold(
+                    workers, by_worker, &down, up_bytes, down_bytes, idle_secs, fold_secs,
+                    &mut fold,
+                );
+            }
         }
-        replies
     }
 
     fn exchange_local<T: Send>(
@@ -453,148 +503,129 @@ impl WiredChannel {
         replies
     }
 
-    /// One round of **concurrent per-worker I/O**, in two pooled
-    /// phases: first every worker's downlink is written (send phase),
-    /// then every worker's replies are drained (recv phase), each phase
-    /// fanned out on `util::pool`. The phase split matters: no reply is
-    /// awaited until *every* worker holds its requests, so all workers
-    /// compute in parallel even when the fleet exceeds the thread cap
-    /// and chunks share a pool thread — and within each phase a slow or
-    /// high-latency link (a genuinely remote worker) delays only its
-    /// own frames instead of serializing the round. Replies are folded
-    /// back in machine order; per worker they arrive in slot order,
-    /// which is machine order within the worker. Machines on a dead
-    /// worker yield `Err` without any I/O (or metering): the worker
-    /// process is gone, there is nobody to carry their frames.
+    /// One pipelined round over the **persistent per-link I/O threads**
+    /// ([`crate::transport::link_io`]): the coordinator *submits* every
+    /// worker's frames to its link thread's queue (nothing blocks — the
+    /// threads do the socket writes), then *collects* per-worker results
+    /// in worker order. Because contiguous placement makes worker order
+    /// machine order, machine j's replies fold the moment worker
+    /// `placement[j].0` drains — while later workers are still
+    /// computing or writing — and the fold sequence is exactly the
+    /// barriered one, so floating-point accumulations stay
+    /// bit-identical. The only wait that can't pipeline is the prefix
+    /// property itself: collecting worker w blocks only on workers
+    /// ≤ w.
     ///
-    /// Metering is folded between the phases and is byte-identical to
-    /// the serial exchange this replaces: a broadcast is metered once
-    /// iff at least one live worker received it (§3's broadcast
-    /// channel); per-machine frames are metered per successful send.
+    /// Machines on a dead worker yield `Err` without any I/O (or
+    /// metering): the link thread answers the round locally — the
+    /// worker process is gone, there is nobody to carry their frames.
     ///
-    /// Pipelining note: the whole downlink is written before any reply
-    /// is drained, so the per-machine frames queued on one packed
-    /// worker's socket must fit its buffer while the worker is busy
-    /// with an earlier slot. Today's per-machine requests are a few
-    /// dozen bytes (quotas, reseeds), far below any socket buffer; bulk
-    /// payloads travel as broadcasts (one frame per worker) or replies
-    /// (drained concurrently in the recv phase).
-    fn exchange_process(
+    /// Metering is byte-identical to the barriered exchange this
+    /// replaces: a broadcast is metered once iff at least one live
+    /// worker physically received it (§3's broadcast channel);
+    /// per-machine frames are metered per successful send. `sent_bytes`
+    /// in each [`RoundResult`] reports exactly what the link thread put
+    /// on the wire this round, so the policy folds locally per worker.
+    ///
+    /// Buffering note: the whole downlink is queued before any reply is
+    /// awaited, so the per-machine frames queued on one packed worker's
+    /// socket must fit its buffer while the worker is busy with an
+    /// earlier slot. Today's per-machine requests are a few dozen bytes
+    /// (quotas, reseeds), far below any socket buffer; bulk payloads
+    /// travel as broadcasts (one frame per worker) or replies (drained
+    /// by the link threads as they arrive).
+    #[allow(clippy::too_many_arguments)]
+    fn exchange_process_fold(
         workers: &mut [WorkerLink],
-        placement: &[(usize, usize)],
         by_worker: &[Vec<usize>],
-        down_bytes: &mut usize,
         down: &Down<'_>,
-    ) -> Vec<Result<Vec<u8>>> {
-        let m = placement.len();
-        let (bytes_per_worker, replies) = Self::two_phase_round(workers, by_worker, m, |w, js| {
+        up_bytes: &mut usize,
+        down_bytes: &mut usize,
+        idle_secs: &mut f64,
+        fold_secs: &mut f64,
+        fold: &mut dyn FnMut(usize, Result<Vec<u8>>),
+    ) {
+        // ---- submit: queue every worker's downlink on its link thread
+        // before awaiting anybody's replies
+        let broadcast = match down {
+            // one allocation shared by every link thread
+            Down::Broadcast(f) => Some(Arc::new(f.to_vec())),
+            Down::PerMachine(_) => None,
+        };
+        let mut queued: Vec<bool> = Vec::with_capacity(workers.len());
+        for (wi, w) in workers.iter_mut().enumerate() {
+            let js = &by_worker[wi];
             // a worker with no machines cannot exist (bring-up refuses
             // empty specs), but never address one if it somehow does
             if js.is_empty() {
-                return (0, Vec::new());
+                queued.push(false);
+                continue;
             }
-            if w.is_dead() {
-                let msg = format!("worker {}: process is dead", w.id());
-                return (
-                    0,
-                    js.iter()
-                        .map(|&j| SlotSend::Failed(format_err!("machine {j}: {msg}")))
-                        .collect(),
-                );
-            }
-            match down {
-                Down::Broadcast(f) => match w.send(f) {
-                    // the worker fans the one frame out to every
-                    // machine it hosts
-                    Ok(()) => (4 + f.len(), js.iter().map(|_| SlotSend::Sent).collect()),
-                    Err(e) => {
-                        let msg = e.to_string();
-                        (
-                            0,
-                            js.iter()
-                                .map(|&j| SlotSend::Failed(format_err!("machine {j}: {msg}")))
-                                .collect(),
-                        )
-                    }
+            let frames = match down {
+                Down::Broadcast(_) => RoundFrames::Broadcast {
+                    frame: Arc::clone(broadcast.as_ref().expect("built above")),
+                    fan: js.len(),
                 },
-                Down::PerMachine(fs) => {
-                    let mut bytes = 0usize;
-                    let slots = js
+                Down::PerMachine(fs) => RoundFrames::PerSlot {
+                    frames: js.iter().map(|&j| Some(fs[j].clone())).collect(),
+                },
+            };
+            queued.push(w.submit(frames));
+        }
+        // ---- collect in worker order (== machine order), folding each
+        // worker's slots as soon as it drains
+        let mut broadcast_metered = false;
+        for (wi, w) in workers.iter_mut().enumerate() {
+            let js = &by_worker[wi];
+            if js.is_empty() {
+                continue;
+            }
+            let result = if queued[wi] {
+                let t = Instant::now();
+                let r = w.collect(js.len());
+                *idle_secs += t.elapsed().as_secs_f64();
+                r
+            } else {
+                // the link thread's queue is closed (teardown raced the
+                // round); same shape as a death mid-round
+                RoundResult {
+                    sent_bytes: 0,
+                    slots: js
                         .iter()
-                        .map(|&j| match w.send(&fs[j]) {
-                            Ok(()) => {
-                                bytes += 4 + fs[j].len();
-                                SlotSend::Sent
-                            }
-                            Err(e) => SlotSend::Failed(e),
+                        .map(|_| {
+                            SlotOutcome::Failed(format_err!(
+                                "worker {}: I/O thread is gone",
+                                w.id()
+                            ))
                         })
-                        .collect();
-                    (bytes, slots)
+                        .collect(),
                 }
+            };
+            match down {
+                // one §3 broadcast, metered once however many live
+                // workers physically received a copy
+                Down::Broadcast(_) => {
+                    if !broadcast_metered && result.sent_bytes > 0 {
+                        *down_bytes += result.sent_bytes;
+                        broadcast_metered = true;
+                    }
+                }
+                Down::PerMachine(_) => *down_bytes += result.sent_bytes,
             }
-        });
-        match down {
-            // one §3 broadcast, metered once however many live workers
-            // physically received a copy
-            Down::Broadcast(_) => {
-                if let Some(&b) = bytes_per_worker.iter().find(|&&b| b > 0) {
-                    *down_bytes += b;
-                }
-            }
-            Down::PerMachine(_) => *down_bytes += bytes_per_worker.iter().sum::<usize>(),
-        }
-        replies
-    }
-
-    /// The shared two-phase round machinery: fan the per-worker `send`
-    /// closure out on the pool (phase 1 — every worker's downlink lands
-    /// before any reply is awaited, so all workers compute in parallel
-    /// whatever the thread cap), scatter per-slot send outcomes into
-    /// machine order, then drain one reply per successfully-addressed
-    /// machine concurrently (phase 2), slot order per worker. Returns
-    /// the per-worker down-byte counts (for the caller's metering
-    /// policy) and the per-machine replies.
-    fn two_phase_round(
-        workers: &mut [WorkerLink],
-        by_worker: &[Vec<usize>],
-        m: usize,
-        send: impl Fn(&mut WorkerLink, &[usize]) -> (usize, Vec<SlotSend>) + Sync,
-    ) -> (Vec<usize>, Vec<Result<Vec<u8>>>) {
-        let concurrency = workers.len().min(MAX_ROUND_IO_CONCURRENCY);
-        let sends: Vec<(usize, Vec<SlotSend>)> =
-            par_map_mut(workers, concurrency, |wi, w| send(w, &by_worker[wi]));
-        let mut out: Vec<Option<Result<Vec<u8>>>> = (0..m).map(|_| None).collect();
-        let mut bytes_per_worker = Vec::with_capacity(sends.len());
-        for (wi, (bytes, slots)) in sends.into_iter().enumerate() {
-            bytes_per_worker.push(bytes);
-            for (&j, s) in by_worker[wi].iter().zip(slots) {
-                match s {
-                    SlotSend::Sent => {} // reply drained below
-                    SlotSend::Skipped => out[j] = Some(Ok(Vec::new())),
-                    SlotSend::Failed(e) => out[j] = Some(Err(e)),
-                }
+            for (&j, slot) in js.iter().zip(result.slots) {
+                let r = match slot {
+                    SlotOutcome::Reply(frame) => {
+                        *up_bytes += 4 + frame.len();
+                        Ok(frame)
+                    }
+                    SlotOutcome::Skipped => Ok(Vec::new()),
+                    SlotOutcome::Failed(e) => Err(format_err!("machine {j}: {e}")),
+                };
+                let t = Instant::now();
+                fold(j, r);
+                *fold_secs += t.elapsed().as_secs_f64();
             }
         }
-        // recv phase (a link that died after a partial send errors
-        // here instead, downgrading the rest of its machines)
-        let need: Vec<Vec<usize>> = by_worker
-            .iter()
-            .map(|js| js.iter().copied().filter(|&j| out[j].is_none()).collect())
-            .collect();
-        let need = &need;
-        let recvs: Vec<Vec<Result<Vec<u8>>>> = par_map_mut(workers, concurrency, |wi, w| {
-            need[wi].iter().map(|_| w.recv()).collect()
-        });
-        for (wi, replies) in recvs.into_iter().enumerate() {
-            for (&j, r) in need[wi].iter().zip(replies) {
-                out[j] = Some(r);
-            }
-        }
-        let replies = out
-            .into_iter()
-            .map(|r| r.expect("every machine answered, errored, or was skipped"))
-            .collect();
-        (bytes_per_worker, replies)
     }
 
     /// One request/reply on a single machine's link — for steps that
@@ -618,6 +649,7 @@ impl WiredChannel {
             links,
             up_bytes,
             down_bytes,
+            ..
         } = self;
         let got = match links {
             LinkSet::Local {
@@ -637,9 +669,27 @@ impl WiredChannel {
                 workers, placement, ..
             } => {
                 let w = &mut workers[placement[j].0];
-                w.send(frame)?;
-                *down_bytes += 4 + frame.len();
-                w.recv()?
+                let frames = RoundFrames::PerSlot {
+                    frames: vec![Some(frame.to_vec())],
+                };
+                if !w.submit(frames) {
+                    return Err(format_err!("worker {}: I/O thread is gone", w.id()));
+                }
+                let mut result = w.collect(1);
+                // `sent_bytes` is exactly the successfully-sent downlink
+                // — the same "meter only what left" rule as Local, even
+                // when the recv half then failed
+                *down_bytes += result.sent_bytes;
+                match result.slots.pop() {
+                    Some(SlotOutcome::Reply(frame)) => frame,
+                    Some(SlotOutcome::Failed(e)) => return Err(e),
+                    Some(SlotOutcome::Skipped) | None => {
+                        return Err(format_err!(
+                            "worker {}: malformed round result",
+                            w.id()
+                        ))
+                    }
+                }
             }
         };
         *up_bytes += 4 + got.len();
@@ -649,10 +699,12 @@ impl WiredChannel {
     /// Lifecycle traffic on process links (`Reset` / `Reseed` frames):
     /// one optional frame per machine, **unmetered** — these replace
     /// the direct machine mutations an in-process fleet performs, which
-    /// cost nothing on its meters either. `None` skips the machine;
-    /// machines on dead workers answer `Err`. Like the data plane, the
-    /// per-worker send + recv runs concurrently on `util::pool`, so one
-    /// slow link doesn't serialize a fleet-wide reset.
+    /// cost nothing on its meters either. `None` skips the machine
+    /// (answers `Ok(vec![])` without touching the wire); machines on
+    /// dead workers answer `Err`. Rides the same submit/collect seam as
+    /// the data plane, so one slow link doesn't serialize a fleet-wide
+    /// reset — but nothing it moves reaches the meters or the
+    /// data-plane clocks.
     pub fn control(&mut self, frames: &[Option<Vec<u8>>]) -> Vec<Result<Vec<u8>>> {
         match &mut self.links {
             LinkSet::Local { .. } => {
@@ -668,25 +720,46 @@ impl WiredChannel {
                     placement.len(),
                     "control frames vs machines mismatch"
                 );
-                // shared (not &mut) view for the Sync closure below
-                let by_worker = &*by_worker;
-                // same two-phase machinery as the data plane (bytes are
-                // unused: lifecycle traffic is deliberately unmetered)
-                let (_bytes, replies) =
-                    Self::two_phase_round(workers, by_worker, frames.len(), |w, js| {
-                        let slots = js
-                            .iter()
-                            .map(|&j| match frames[j].as_ref() {
-                                None => SlotSend::Skipped,
-                                Some(f) => match w.send(f) {
-                                    Ok(()) => SlotSend::Sent,
-                                    Err(e) => SlotSend::Failed(e),
-                                },
-                            })
-                            .collect();
-                        (0, slots)
-                    });
-                replies
+                let mut queued: Vec<bool> = Vec::with_capacity(workers.len());
+                for (wi, w) in workers.iter_mut().enumerate() {
+                    let js = &by_worker[wi];
+                    if js.iter().all(|&j| frames[j].is_none()) {
+                        queued.push(false);
+                        continue;
+                    }
+                    queued.push(w.submit(RoundFrames::PerSlot {
+                        frames: js.iter().map(|&j| frames[j].clone()).collect(),
+                    }));
+                }
+                let mut out: Vec<Option<Result<Vec<u8>>>> =
+                    (0..frames.len()).map(|_| None).collect();
+                for (wi, w) in workers.iter_mut().enumerate() {
+                    let js = &by_worker[wi];
+                    if !queued[wi] {
+                        // nothing addressed this worker, or its link
+                        // thread is gone — either way only the machines
+                        // the round actually addressed may error
+                        for &j in js {
+                            out[j] = Some(if frames[j].is_none() {
+                                Ok(Vec::new())
+                            } else {
+                                Err(format_err!("worker {}: I/O thread is gone", w.id()))
+                            });
+                        }
+                        continue;
+                    }
+                    let result = w.collect(js.len());
+                    for (&j, slot) in js.iter().zip(result.slots) {
+                        out[j] = Some(match slot {
+                            SlotOutcome::Reply(frame) => Ok(frame),
+                            SlotOutcome::Skipped => Ok(Vec::new()),
+                            SlotOutcome::Failed(e) => Err(e),
+                        });
+                    }
+                }
+                out.into_iter()
+                    .map(|r| r.expect("every machine answered, errored, or was skipped"))
+                    .collect()
             }
         }
     }

@@ -134,6 +134,41 @@ impl Stream {
             Stream::Unix(s) => s.set_write_timeout(t).context("set_write_timeout"),
         }
     }
+
+    /// A second handle onto the same socket (`try_clone`), kept by the
+    /// thread that OWNS teardown while another thread blocks in
+    /// [`Stream::recv_frame`]/[`Stream::send_frame`]. `None` when the
+    /// clone fails — teardown then falls back to detaching.
+    pub(crate) fn breaker(&self) -> Option<StreamBreaker> {
+        match self {
+            Stream::Tcp(s) => s.try_clone().ok().map(StreamBreaker::Tcp),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.try_clone().ok().map(StreamBreaker::Unix),
+        }
+    }
+}
+
+/// The unblocking half of a [`Stream`]: shutting the socket down from
+/// here turns a blocked read/write on the owning thread into an
+/// immediate error. This is what makes I/O-thread teardown *bounded* —
+/// a wedged peer (or a SIGKILLed worker whose socket lingers) cannot
+/// hold a blocking `recv` hostage past the shutdown grace window.
+pub(crate) enum StreamBreaker {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl StreamBreaker {
+    /// Shut both directions down, best-effort: an already-closed socket
+    /// is fine — the goal is only that no blocking call survives this.
+    pub(crate) fn shutdown(&self) {
+        let _ = match self {
+            StreamBreaker::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            #[cfg(unix)]
+            StreamBreaker::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
 }
 
 enum Listener {

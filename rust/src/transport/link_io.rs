@@ -1,0 +1,400 @@
+//! The persistent per-link I/O thread behind one process worker link
+//! ("soccer-io-N"): spawned the moment the worker completes
+//! registration, alive until the link is dropped or killed — round
+//! traffic never spawns threads.
+//!
+//! The coordinator drives it through a submit/collect pair:
+//! [`LinkIo::submit`] queues one round's downlink frames and returns
+//! immediately; [`LinkIo::collect`] blocks for that round's replies, in
+//! slot order. Per link the wire stays strictly phase-synchronous (one
+//! round in flight, send-then-drain), but ACROSS links every submit
+//! lands before the first collect — which is what lets the channel
+//! layer fold early workers' replies while late workers are still
+//! draining, and overlap the next round's serialization with the
+//! previous drain.
+//!
+//! Failure model: the first I/O error marks the link dead (a shared
+//! flag the coordinator reads without blocking), drops the stream, and
+//! fails the remaining owed slots; later rounds are answered with
+//! errors without touching the socket, and `sent_bytes` reports 0 — a
+//! dead worker moves no metered bytes. Teardown is bounded: a Quit is
+//! given [`SHUTDOWN_GRACE`], then the socket is shut down *under* the
+//! thread (see [`StreamBreaker`]), turning a wedged blocking read into
+//! an instant error; a thread that still won't exit (no breaker
+//! available) is detached rather than waited on forever.
+
+use crate::format_err;
+use crate::transport::endpoint::{Stream, StreamBreaker};
+use crate::transport::protocol::{self, Op};
+use crate::util::error::Error;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Grace window for teardown: how long a Quit gets before the socket is
+/// broken under the I/O thread, and how long a worker process gets to
+/// exit voluntarily after its Shutdown frame before being killed.
+pub(crate) const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
+
+/// Liveness flag and raw byte counters shared between the coordinator
+/// handle and the I/O thread. The raw counters see every byte on the
+/// socket (handshake seed included) and back `raw_bytes`; the
+/// protocol-level §3 meters stay in `WiredChannel`.
+struct LinkShared {
+    dead: AtomicBool,
+    sent: AtomicUsize,
+    received: AtomicUsize,
+}
+
+/// One round's downlink for one worker, as queued by submit.
+pub(crate) enum RoundFrames {
+    /// One frame on the socket; the worker fans it out to every machine
+    /// it hosts and owes `fan` replies, in slot order.
+    Broadcast { frame: Arc<Vec<u8>>, fan: usize },
+    /// One optional frame per addressed slot; every `Some` owes a
+    /// reply, a `None` resolves to [`SlotOutcome::Skipped`] with no I/O.
+    PerSlot { frames: Vec<Option<Vec<u8>>> },
+}
+
+impl RoundFrames {
+    /// Slots this round resolves (replies owed plus skips).
+    pub(crate) fn slots(&self) -> usize {
+        match self {
+            RoundFrames::Broadcast { fan, .. } => *fan,
+            RoundFrames::PerSlot { frames } => frames.len(),
+        }
+    }
+}
+
+/// Per-slot outcome of one collected round.
+pub(crate) enum SlotOutcome {
+    Reply(Vec<u8>),
+    /// The slot's frame was `None`: nothing sent, no reply owed.
+    Skipped,
+    Failed(Error),
+}
+
+/// What collect returns: the bytes that actually left on the socket
+/// this round (4-byte length prefixes included) and one outcome per
+/// slot, in slot order.
+pub(crate) struct RoundResult {
+    pub(crate) sent_bytes: usize,
+    pub(crate) slots: Vec<SlotOutcome>,
+}
+
+enum LinkCmd {
+    Round(RoundFrames),
+    Quit,
+}
+
+/// Coordinator-side handle on one link's persistent I/O thread.
+pub(crate) struct LinkIo {
+    worker: usize,
+    shared: Arc<LinkShared>,
+    cmd_tx: Option<Sender<LinkCmd>>,
+    res_rx: Receiver<RoundResult>,
+    breaker: Option<StreamBreaker>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl LinkIo {
+    /// Spawn the link's I/O thread, handing it ownership of the
+    /// registered stream. `sent`/`received` seed the raw byte counters
+    /// with the handshake traffic that already crossed.
+    pub(crate) fn spawn(worker: usize, stream: Stream, sent: usize, received: usize) -> LinkIo {
+        let shared = Arc::new(LinkShared {
+            dead: AtomicBool::new(false),
+            sent: AtomicUsize::new(sent),
+            received: AtomicUsize::new(received),
+        });
+        let breaker = stream.breaker();
+        let (cmd_tx, cmd_rx) = channel();
+        let (res_tx, res_rx) = channel();
+        let thread_shared = Arc::clone(&shared);
+        let thread = std::thread::Builder::new()
+            .name(format!("soccer-io-{worker}"))
+            .spawn(move || io_loop(worker, stream, &thread_shared, &cmd_rx, &res_tx))
+            .expect("spawn link I/O thread");
+        LinkIo {
+            worker,
+            shared,
+            cmd_tx: Some(cmd_tx),
+            res_rx,
+            breaker,
+            thread: Some(thread),
+        }
+    }
+
+    pub(crate) fn is_dead(&self) -> bool {
+        self.shared.dead.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn bytes_sent(&self) -> usize {
+        self.shared.sent.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn bytes_received(&self) -> usize {
+        self.shared.received.load(Ordering::Relaxed)
+    }
+
+    /// Queue one round's downlink; never blocks on I/O. `false` means
+    /// the I/O thread is already gone (link torn down) and nothing was
+    /// queued — the caller synthesizes the slot errors itself and must
+    /// NOT collect.
+    pub(crate) fn submit(&mut self, frames: RoundFrames) -> bool {
+        match &self.cmd_tx {
+            Some(tx) => tx.send(LinkCmd::Round(frames)).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Block for the result of the round queued by the matching
+    /// [`LinkIo::submit`]. `owed` sizes the synthesized result should
+    /// the thread have vanished underneath us.
+    pub(crate) fn collect(&mut self, owed: usize) -> RoundResult {
+        match self.res_rx.recv() {
+            Ok(r) => r,
+            Err(_) => RoundResult {
+                sent_bytes: 0,
+                slots: (0..owed)
+                    .map(|_| {
+                        SlotOutcome::Failed(format_err!(
+                            "worker {}: I/O thread is gone",
+                            self.worker
+                        ))
+                    })
+                    .collect(),
+            },
+        }
+    }
+
+    /// Declare the link dead NOW (failure injection, crashed child):
+    /// the flag flips immediately and the socket is shut down under the
+    /// I/O thread, so even a round blocked mid-recv errors out instead
+    /// of waiting on a peer that will never answer. The worker process
+    /// (if any) sees EOF and exits; killing/reaping it is the owner's
+    /// job — this type only owns the thread.
+    pub(crate) fn kill(&mut self) {
+        self.shared.dead.store(true, Ordering::Release);
+        if let Some(b) = &self.breaker {
+            b.shutdown();
+        }
+    }
+
+    /// Bounded thread teardown, idempotent: queue a Quit (which sends
+    /// the protocol Shutdown frame if the link is still healthy), give
+    /// the thread [`SHUTDOWN_GRACE`], then break the socket under it
+    /// and wait one more grace. A thread that STILL runs — wedged I/O
+    /// and no breaker — is detached: teardown never hangs.
+    pub(crate) fn teardown(&mut self) {
+        let Some(handle) = self.thread.take() else {
+            return;
+        };
+        if let Some(tx) = self.cmd_tx.take() {
+            if !self.is_dead() {
+                let _ = tx.send(LinkCmd::Quit);
+            }
+            // dropping the sender is the fallback exit signal: a thread
+            // not blocked in I/O sees the closed queue and exits
+        }
+        let deadline = Instant::now() + SHUTDOWN_GRACE;
+        while !handle.is_finished() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        if !handle.is_finished() {
+            self.shared.dead.store(true, Ordering::Release);
+            if let Some(b) = &self.breaker {
+                b.shutdown();
+            }
+            let deadline = Instant::now() + SHUTDOWN_GRACE;
+            while !handle.is_finished() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        if handle.is_finished() {
+            let _ = handle.join();
+        }
+        // else: detached — it exits when the process does; joining an
+        // unbreakable blocked read would trade a leak for a hang
+    }
+}
+
+impl Drop for LinkIo {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+fn io_loop(
+    worker: usize,
+    stream: Stream,
+    shared: &LinkShared,
+    cmd_rx: &Receiver<LinkCmd>,
+    res_tx: &Sender<RoundResult>,
+) {
+    let mut stream = Some(stream);
+    loop {
+        let cmd = match cmd_rx.recv() {
+            Ok(c) => c,
+            Err(_) => break, // handle dropped without a Quit: plain exit
+        };
+        match cmd {
+            LinkCmd::Round(frames) => {
+                let result = run_round(worker, &mut stream, shared, frames);
+                if res_tx.send(result).is_err() {
+                    break; // collector is gone: nothing left to serve
+                }
+            }
+            LinkCmd::Quit => {
+                if let Some(s) = stream.as_mut() {
+                    // best-effort goodbye; the close below is the
+                    // authoritative signal (EOF ends the worker's loop)
+                    let _ = s.send_frame(&protocol::request(Op::Shutdown).finish());
+                }
+                break;
+            }
+        }
+    }
+    // dropping the stream closes our end of the socket
+}
+
+/// Serve one round on the socket: write every frame, then drain the
+/// owed replies in slot order. The first I/O error kills the link —
+/// dead flag up, stream dropped, this and every later slot failed.
+fn run_round(
+    worker: usize,
+    stream: &mut Option<Stream>,
+    shared: &LinkShared,
+    frames: RoundFrames,
+) -> RoundResult {
+    // a kill() may have raced ahead of this round: honor it before
+    // touching the socket, so a killed link does no I/O (and the
+    // channel meters nothing for it)
+    if shared.dead.load(Ordering::Acquire) {
+        *stream = None;
+    }
+    let owed = frames.slots();
+    let Some(s) = stream.as_mut() else {
+        // no socket, no I/O — but a `None` slot never owed a reply in
+        // the first place, so it still resolves Skipped (a dead worker
+        // must not fail machines the round never addressed)
+        let dead = || SlotOutcome::Failed(format_err!("worker {worker}: process is dead"));
+        let slots = match &frames {
+            RoundFrames::Broadcast { fan, .. } => (0..*fan).map(|_| dead()).collect(),
+            RoundFrames::PerSlot { frames } => frames
+                .iter()
+                .map(|f| match f {
+                    Some(_) => dead(),
+                    None => SlotOutcome::Skipped,
+                })
+                .collect(),
+        };
+        return RoundResult {
+            sent_bytes: 0,
+            slots,
+        };
+    };
+
+    let dead_slot = || SlotOutcome::Failed(format_err!("worker {worker}: process is dead"));
+    let io_fail = |e: Error, what: &str| {
+        SlotOutcome::Failed(e.context(format!("worker {worker}: link failed on {what}")))
+    };
+
+    let mut sent_bytes = 0usize;
+    let mut slots: Vec<SlotOutcome> = Vec::with_capacity(owed);
+    // flips on the first I/O error; later slots fail as "dead"
+    let mut died = false;
+
+    match &frames {
+        RoundFrames::Broadcast { frame, fan } => match s.send_frame(frame) {
+            Ok(()) => {
+                sent_bytes += 4 + frame.len();
+                shared.sent.fetch_add(4 + frame.len(), Ordering::Relaxed);
+                for _ in 0..*fan {
+                    if died {
+                        slots.push(dead_slot());
+                        continue;
+                    }
+                    match s.recv_frame() {
+                        Ok(reply) => {
+                            shared.received.fetch_add(4 + reply.len(), Ordering::Relaxed);
+                            slots.push(SlotOutcome::Reply(reply));
+                        }
+                        Err(e) => {
+                            slots.push(io_fail(e, "recv"));
+                            died = true;
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                slots.push(io_fail(e, "send"));
+                died = true;
+                for _ in 1..*fan {
+                    slots.push(dead_slot());
+                }
+            }
+        },
+        RoundFrames::PerSlot { frames } => {
+            // send phase: every deliverable frame leaves before any
+            // reply is awaited (the worker answers in request order)
+            let mut sent: Vec<bool> = Vec::with_capacity(frames.len());
+            let mut send_err: Option<SlotOutcome> = None;
+            for f in frames {
+                let f = match f {
+                    Some(f) if !died => f,
+                    _ => {
+                        sent.push(false);
+                        continue;
+                    }
+                };
+                match s.send_frame(f) {
+                    Ok(()) => {
+                        sent_bytes += 4 + f.len();
+                        shared.sent.fetch_add(4 + f.len(), Ordering::Relaxed);
+                        sent.push(true);
+                    }
+                    Err(e) => {
+                        send_err = Some(io_fail(e, "send"));
+                        died = true;
+                        sent.push(false);
+                    }
+                }
+            }
+            // drain phase, outcomes in slot order. A send failure at
+            // slot k leaves: slots < k sent (but undrainable — the link
+            // is dead), slot k carrying the real error, slots > k never
+            // sent. The first unsent `Some` slot is exactly k, so
+            // `send_err.take()` lands the error where it happened.
+            for (i, f) in frames.iter().enumerate() {
+                if f.is_none() {
+                    slots.push(SlotOutcome::Skipped);
+                } else if sent[i] && !died {
+                    match s.recv_frame() {
+                        Ok(reply) => {
+                            shared.received.fetch_add(4 + reply.len(), Ordering::Relaxed);
+                            slots.push(SlotOutcome::Reply(reply));
+                        }
+                        Err(e) => {
+                            slots.push(io_fail(e, "recv"));
+                            died = true;
+                        }
+                    }
+                } else if !sent[i] && send_err.is_some() {
+                    slots.push(send_err.take().expect("checked above"));
+                } else {
+                    slots.push(dead_slot());
+                }
+            }
+        }
+    }
+
+    if died {
+        shared.dead.store(true, Ordering::Release);
+        *stream = None;
+    }
+    debug_assert_eq!(slots.len(), owed, "one outcome per slot");
+    RoundResult { sent_bytes, slots }
+}

@@ -51,6 +51,7 @@
 pub mod channel;
 pub mod endpoint;
 pub mod inproc;
+pub(crate) mod link_io;
 pub mod process;
 pub mod protocol;
 pub mod tcp;

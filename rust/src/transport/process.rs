@@ -43,7 +43,7 @@
 //! dead instead of deadlocking.
 
 use crate::transport::endpoint::{Endpoint, Stream};
-use crate::transport::protocol::{self, Op};
+use crate::transport::link_io::{LinkIo, RoundFrames, RoundResult, SHUTDOWN_GRACE};
 use crate::transport::Transport;
 use crate::util::error::{Context, Result};
 use crate::bail;
@@ -64,9 +64,6 @@ const SPAWN_REGISTER_TIMEOUT: Duration = Duration::from_secs(10);
 /// external-launch race: the launcher may start workers before the
 /// coordinator's listener is up).
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
-
-/// Grace period between the Shutdown frame and a SIGKILL at teardown.
-const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
 
 /// Bound on the worker's wait for the coordinator's registration ack —
 /// generous because a big fleet's handshakes queue behind a bounded
@@ -252,24 +249,31 @@ pub struct WorkerSpec {
 }
 
 /// The coordinator's handle on one registered worker process: the
-/// socket, the child process (only when this coordinator spawned it —
-/// externally-launched workers dial in and have no `Child` here), and
-/// the raw byte counters. One link can carry the traffic of several
-/// machines; routing is the frame header's job.
+/// link's persistent I/O thread (which owns the socket — see
+/// [`crate::transport::link_io`]), the child process (only when this
+/// coordinator spawned it — externally-launched workers dial in and
+/// have no `Child` here), and the raw byte counters. One link can carry
+/// the traffic of several machines; routing is the frame header's job.
+///
+/// Round traffic goes through [`WorkerLink::submit`] /
+/// [`WorkerLink::collect`]: submit queues a round's downlink on the I/O
+/// thread without blocking, collect waits for its replies. Per link the
+/// wire stays phase-synchronous; across links the channel layer submits
+/// everywhere before collecting anywhere — that is the pipelining seam.
 pub struct WorkerLink {
     /// worker index (NOT a machine id — the link may host several)
     id: usize,
-    stream: Option<Stream>,
+    io: LinkIo,
     child: Option<Child>,
-    dead: bool,
-    sent: usize,
-    received: usize,
 }
 
 impl WorkerLink {
-    /// Build the link for a worker that just completed registration.
-    /// `sent`/`received` seed the raw counters with the handshake bytes
-    /// (handshake traffic is raw-metered, never protocol-metered).
+    /// Build the link for a worker that just completed registration,
+    /// spawning its I/O thread. `sent`/`received` seed the raw counters
+    /// with the handshake bytes (handshake traffic is raw-metered,
+    /// never protocol-metered). This is the single construction point
+    /// for every link — spawned and externally-launched alike — so
+    /// every link gets its thread here.
     pub(crate) fn registered(
         id: usize,
         stream: Stream,
@@ -278,11 +282,8 @@ impl WorkerLink {
     ) -> WorkerLink {
         WorkerLink {
             id,
-            stream: Some(stream),
+            io: LinkIo::spawn(id, stream, sent, received),
             child: None,
-            dead: false,
-            sent,
-            received,
         }
     }
 
@@ -297,100 +298,82 @@ impl WorkerLink {
     }
 
     pub fn is_dead(&self) -> bool {
-        self.dead
+        self.io.is_dead()
     }
 
     /// OS pid of the live worker (None once the link is dead, and None
     /// for externally-launched workers — their pids were never ours).
     pub fn pid(&self) -> Option<u32> {
+        if self.io.is_dead() {
+            return None;
+        }
         self.child.as_ref().map(|c| c.id())
     }
 
     pub fn bytes_sent(&self) -> usize {
-        self.sent
+        self.io.bytes_sent()
     }
 
     pub fn bytes_received(&self) -> usize {
-        self.received
+        self.io.bytes_received()
     }
 
-    pub fn send(&mut self, payload: &[u8]) -> Result<()> {
-        let stream = match self.stream.as_mut() {
-            Some(s) => s,
-            None => bail!("worker {}: process is dead", self.id),
-        };
-        match stream.send_frame(payload) {
-            Ok(()) => {
-                self.sent += 4 + payload.len();
-                Ok(())
-            }
-            Err(e) => {
-                self.fail();
-                Err(e.context(format!("worker {}: link failed on send", self.id)))
-            }
-        }
+    /// Queue one round's downlink on the I/O thread; never blocks on
+    /// socket I/O. `false` means nothing was queued (thread gone) and
+    /// the caller must not collect.
+    pub(crate) fn submit(&mut self, frames: RoundFrames) -> bool {
+        self.io.submit(frames)
     }
 
-    pub fn recv(&mut self) -> Result<Vec<u8>> {
-        let stream = match self.stream.as_mut() {
-            Some(s) => s,
-            None => bail!("worker {}: process is dead", self.id),
-        };
-        match stream.recv_frame() {
-            Ok(payload) => {
-                self.received += 4 + payload.len();
-                Ok(payload)
-            }
-            Err(e) => {
-                self.fail();
-                Err(e.context(format!("worker {}: link failed on recv", self.id)))
-            }
+    /// Block for the replies of the round queued by the matching
+    /// [`WorkerLink::submit`]. Also the failure-detection point: a
+    /// child whose link died mid-round is reaped here, not left a
+    /// zombie until fleet drop.
+    pub(crate) fn collect(&mut self, owed: usize) -> RoundResult {
+        let result = self.io.collect(owed);
+        if self.io.is_dead() {
+            self.reap_child();
         }
+        result
     }
 
     /// Terminate the worker immediately (failure injection, or teardown
     /// of a link that already errored). Returns false if already dead.
     /// Every machine the worker hosted dies with it — the caller
     /// downgrades them all. An external worker has no process to kill
-    /// here: closing its link makes it exit on EOF.
+    /// here: breaking its link makes it exit on EOF.
     pub fn kill(&mut self) -> bool {
-        if self.dead {
+        if self.io.is_dead() {
+            self.reap_child();
             return false;
         }
-        self.fail();
+        self.io.kill();
+        self.reap_child();
         true
     }
 
     /// Explicit clean teardown — what `Drop` also does, callable
-    /// directly so the mid-spawn failure path reaps deterministically
-    /// (and tests can assert the reap happened before the error
-    /// surfaces, rather than depending on drop order).
+    /// directly so failure paths reap deterministically (and tests can
+    /// assert the reap happened before the error surfaces, rather than
+    /// depending on drop order).
     pub fn teardown(&mut self) {
         self.graceful_shutdown();
     }
 
-    /// Close the link, SIGKILL the child (if ours), and reap it.
-    fn fail(&mut self) {
-        self.dead = true;
-        self.stream = None;
+    /// SIGKILL + reap the child (if ours). Idempotent.
+    fn reap_child(&mut self) {
         if let Some(mut child) = self.child.take() {
             let _ = child.kill();
             let _ = child.wait();
         }
     }
 
-    /// Clean teardown: Shutdown frame, brief grace for a voluntary
-    /// exit, then SIGKILL. Always reaps a spawned child.
+    /// Clean teardown: the I/O thread sends the Shutdown frame and
+    /// closes the socket (bounded — a wedged link is broken under it),
+    /// then the child gets a brief grace for a voluntary exit before a
+    /// SIGKILL. Always reaps a spawned child.
     fn graceful_shutdown(&mut self) {
-        if self.dead {
-            return;
-        }
-        if let Some(s) = self.stream.as_mut() {
-            let _ = s.send_frame(&protocol::request(Op::Shutdown).finish());
-        }
-        // closing our end makes the worker see EOF even if the
-        // Shutdown frame got lost — either signal ends its loop
-        self.stream = None;
+        self.io.teardown();
         if let Some(mut child) = self.child.take() {
             let deadline = Instant::now() + SHUTDOWN_GRACE;
             loop {
@@ -407,7 +390,6 @@ impl WorkerLink {
                 }
             }
         }
-        self.dead = true;
     }
 }
 

@@ -1,53 +1,274 @@
-//! Scoped parallel-for over a mutable slice (offline substrate for
-//! `rayon`/`tokio`). The machine fleet is round-synchronous, so all we
-//! need is "run f on every machine, in parallel, wait for all".
+//! Persistent worker-thread pool (offline substrate for `rayon`'s
+//! global pool / `tokio`'s blocking pool). The fleet is
+//! round-synchronous, so the two primitives are:
+//!
+//! - [`Pool::submit`] / [`Ticket::collect`] — queue one job on a
+//!   long-lived named worker thread ("soccer-pool-N"), block for its
+//!   result later; a panicking job re-raises its payload at collect.
+//! - [`par_map_mut`] — "run f on every item, in parallel, wait for
+//!   all", kept as a thin compatibility shim over the global pool so
+//!   the fleet call sites are oblivious to where the threads live.
+//!
+//! The pool threads are spawned once and survive across rounds: the
+//! per-round cost of a parallel step is queue traffic, not thread
+//! creation. Dropping a [`Pool`] is graceful — already-queued jobs
+//! still run, then every thread is joined.
 
-/// Run `f(index, item)` for every item, using up to `workers` OS threads.
-/// Results are collected in input order. Panics propagate.
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// An erased unit of work queued on the pool.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// True on pool worker threads. A nested map from inside a pool job
+    /// must run inline instead of resubmitting: submitting and then
+    /// blocking on the pool we are part of can deadlock it (every
+    /// worker waiting on jobs only a worker could run).
+    static IN_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// The collect half of one submitted job: blocks until the job ran and
+/// yields its result. A panicking job re-raises its payload on the
+/// collecting thread.
+pub struct Ticket<R> {
+    shared: Arc<TicketShared<R>>,
+}
+
+struct TicketShared<R> {
+    result: Mutex<Option<std::thread::Result<R>>>,
+    done: Condvar,
+}
+
+impl<R> TicketShared<R> {
+    fn fill(&self, r: std::thread::Result<R>) {
+        *self.result.lock().expect("ticket slot") = Some(r);
+        self.done.notify_all();
+    }
+}
+
+impl<R> Ticket<R> {
+    fn new() -> (Ticket<R>, Arc<TicketShared<R>>) {
+        let shared = Arc::new(TicketShared {
+            result: Mutex::new(None),
+            done: Condvar::new(),
+        });
+        (
+            Ticket {
+                shared: Arc::clone(&shared),
+            },
+            shared,
+        )
+    }
+
+    /// Block until the job finishes; panics from the job resume here.
+    pub fn collect(self) -> R {
+        match self.wait() {
+            Ok(r) => r,
+            Err(payload) => resume_unwind(payload),
+        }
+    }
+
+    /// Block until the job finishes, returning a panic as a value. The
+    /// map shim needs this: it must wait on EVERY chunk before it may
+    /// unwind, or a still-running job would outlive the borrows it
+    /// captured.
+    fn wait(self) -> std::thread::Result<R> {
+        let mut slot = self.shared.result.lock().expect("ticket slot");
+        while slot.is_none() {
+            slot = self.shared.done.wait(slot).expect("ticket wait");
+        }
+        slot.take().expect("checked above")
+    }
+}
+
+struct PoolState {
+    queue: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_ready: Condvar,
+}
+
+/// A fixed-size pool of long-lived worker threads. Jobs queue in FIFO
+/// order; drop drains the queue, then joins every thread.
+pub struct Pool {
+    shared: Arc<PoolShared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Pool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                shutdown: false,
+            }),
+            work_ready: Condvar::new(),
+        });
+        let threads = (0..threads.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("soccer-pool-{i}"))
+                    .spawn(move || {
+                        IN_POOL_WORKER.with(|g| g.set(true));
+                        worker_loop(&shared);
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool { shared, threads }
+    }
+
+    /// The shared process-wide pool: sized to the machine, created on
+    /// first use, never torn down.
+    pub fn global() -> &'static Pool {
+        static GLOBAL: OnceLock<Pool> = OnceLock::new();
+        GLOBAL.get_or_init(|| Pool::new(default_workers()))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Queue one job; the matching [`Ticket::collect`] yields its
+    /// result (and re-raises its panic). The worker thread survives a
+    /// panicking job — the payload travels to the collector instead.
+    pub fn submit<R: Send + 'static>(
+        &self,
+        job: impl FnOnce() -> R + Send + 'static,
+    ) -> Ticket<R> {
+        let (ticket, slot) = Ticket::new();
+        self.push(Box::new(move || {
+            slot.fill(catch_unwind(AssertUnwindSafe(job)));
+        }));
+        ticket
+    }
+
+    fn push(&self, job: Job) {
+        self.shared
+            .state
+            .lock()
+            .expect("pool state")
+            .queue
+            .push_back(job);
+        self.shared.work_ready.notify_one();
+    }
+
+    /// Scoped parallel map over mutable chunks of `items` — the engine
+    /// under [`par_map_mut`]. Splits into up to `tasks` chunks of
+    /// ceil(n/tasks), queues them, and blocks until every chunk
+    /// completed — even when one panics, because unwinding while a
+    /// sibling chunk still runs would free borrowed data under it. The
+    /// first panic (in submission order) then resumes on this thread.
+    pub fn map_mut<T: Send, R: Send>(
+        &self,
+        items: &mut [T],
+        tasks: usize,
+        f: impl Fn(usize, &mut T) -> R + Sync,
+    ) -> Vec<R> {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let tasks = tasks.max(1).min(n);
+        if tasks == 1 || IN_POOL_WORKER.with(|g| g.get()) {
+            return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let chunk = n.div_ceil(tasks);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        {
+            let f = &f;
+            let mut tickets = Vec::new();
+            // split both items and out into matching chunks
+            let mut items_rest = &mut items[..];
+            let mut out_rest = &mut out[..];
+            let mut base = 0usize;
+            while !items_rest.is_empty() {
+                let take = chunk.min(items_rest.len());
+                let (items_chunk, ir) = items_rest.split_at_mut(take);
+                let (out_chunk, or) = out_rest.split_at_mut(take);
+                items_rest = ir;
+                out_rest = or;
+                let b = base;
+                let (ticket, slot) = Ticket::new();
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    slot.fill(catch_unwind(AssertUnwindSafe(|| {
+                        for (off, (t, out_slot)) in
+                            items_chunk.iter_mut().zip(out_chunk.iter_mut()).enumerate()
+                        {
+                            *out_slot = Some(f(b + off, t));
+                        }
+                    })));
+                });
+                // SAFETY: the job borrows `items`, `out` and `f`, which
+                // all outlive this call — and the wait loop below blocks
+                // on every ticket (panic or not) before the function can
+                // return or unwind, so no queued job outlives the
+                // borrows it captured.
+                self.push(unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+                });
+                tickets.push(ticket);
+                base += take;
+            }
+            let mut first_panic = None;
+            for ticket in tickets {
+                if let Err(payload) = ticket.wait() {
+                    first_panic.get_or_insert(payload);
+                }
+            }
+            if let Some(payload) = first_panic {
+                resume_unwind(payload);
+            }
+        }
+        out.into_iter().map(|r| r.expect("missing result")).collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.state.lock().expect("pool state").shutdown = true;
+        self.shared.work_ready.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut state = shared.state.lock().expect("pool state");
+            loop {
+                if let Some(job) = state.queue.pop_front() {
+                    break job;
+                }
+                if state.shutdown {
+                    return;
+                }
+                state = shared.work_ready.wait(state).expect("pool wait");
+            }
+        };
+        job();
+    }
+}
+
+/// Run `f(index, item)` for every item, using up to `workers` chunks on
+/// the global pool. Results are collected in input order. Panics
+/// propagate. `workers == 1` (and nested calls from inside a pool job)
+/// run inline on the calling thread.
 pub fn par_map_mut<T: Send, R: Send>(
     items: &mut [T],
     workers: usize,
     f: impl Fn(usize, &mut T) -> R + Sync,
 ) -> Vec<R> {
-    let n = items.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers = workers.max(1).min(n);
-    if workers == 1 {
-        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
-    }
-    // Deal items to workers round-robin by splitting into chunks of
-    // ceil(n/workers); reassemble results in order.
-    let chunk = n.div_ceil(workers);
-    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut handles = Vec::new();
-        // split both items and out into matching chunks
-        let mut items_rest = &mut items[..];
-        let mut out_rest = &mut out[..];
-        let mut base = 0usize;
-        while !items_rest.is_empty() {
-            let take = chunk.min(items_rest.len());
-            let (items_chunk, ir) = items_rest.split_at_mut(take);
-            let (out_chunk, or) = out_rest.split_at_mut(take);
-            items_rest = ir;
-            out_rest = or;
-            let b = base;
-            handles.push(s.spawn(move || {
-                for (off, (t, slot)) in items_chunk.iter_mut().zip(out_chunk.iter_mut()).enumerate()
-                {
-                    *slot = Some(f(b + off, t));
-                }
-            }));
-            base += take;
-        }
-        for h in handles {
-            h.join().expect("worker panicked");
-        }
-    });
-    out.into_iter().map(|r| r.expect("missing result")).collect()
+    Pool::global().map_mut(items, workers, f)
 }
 
 /// Number of worker threads to use by default.
@@ -58,6 +279,7 @@ pub fn default_workers() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn maps_in_order() {
@@ -89,12 +311,14 @@ mod tests {
 
     #[test]
     fn actually_parallel() {
-        // All workers must be in-flight at once for this not to deadlock:
-        // each task waits until every task has started.
-        use std::sync::atomic::{AtomicUsize, Ordering};
+        // All four tasks must be in flight at once for this not to time
+        // out: each task waits until every task has started. Runs on a
+        // dedicated 4-thread pool — the global pool may be smaller on a
+        // small CI machine.
+        let pool = Pool::new(4);
         let started = AtomicUsize::new(0);
         let mut v = vec![0u8; 4];
-        par_map_mut(&mut v, 4, |_, _| {
+        pool.map_mut(&mut v, 4, |_, _| {
             started.fetch_add(1, Ordering::SeqCst);
             let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
             while started.load(Ordering::SeqCst) < 4 {
@@ -102,5 +326,91 @@ mod tests {
                 std::hint::spin_loop();
             }
         });
+    }
+
+    #[test]
+    fn submit_collect_roundtrip() {
+        let pool = Pool::new(2);
+        let tickets: Vec<_> = (0..16u64).map(|i| pool.submit(move || i * 3)).collect();
+        let got: Vec<u64> = tickets.into_iter().map(|t| t.collect()).collect();
+        assert_eq!(got, (0..16).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn submitted_panic_resumes_at_collect_and_worker_survives() {
+        let pool = Pool::new(1);
+        let healthy = pool.submit(|| 7u32);
+        let doomed = pool.submit(|| panic!("boom-{}", 6 * 7));
+        assert_eq!(healthy.collect(), 7);
+        let payload = catch_unwind(AssertUnwindSafe(|| doomed.collect()))
+            .expect_err("panic must propagate to collect");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("boom-42"), "unexpected payload: {msg}");
+        // the worker thread survived the panic and still serves jobs
+        assert_eq!(pool.submit(|| 11u32).collect(), 11);
+    }
+
+    #[test]
+    fn map_panic_propagates_after_all_chunks_finish() {
+        let pool = Pool::new(2);
+        let finished = AtomicUsize::new(0);
+        let mut v = vec![0u8; 2];
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.map_mut(&mut v, 2, |i, _| {
+                if i == 0 {
+                    panic!("chunk 0 dies");
+                }
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                finished.fetch_add(1, Ordering::SeqCst);
+            })
+        }));
+        assert!(r.is_err());
+        // the surviving chunk ran to completion before the panic
+        // resumed — the completion barrier held
+        assert_eq!(finished.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn pool_threads_are_named() {
+        let pool = Pool::new(1);
+        let name = pool
+            .submit(|| std::thread::current().name().map(str::to_string))
+            .collect()
+            .unwrap_or_default();
+        assert!(name.starts_with("soccer-pool-"), "thread name: {name}");
+    }
+
+    #[test]
+    fn drop_runs_queued_jobs_then_joins() {
+        let ran = Arc::new(AtomicUsize::new(0));
+        let pool = Pool::new(1);
+        for _ in 0..8 {
+            let ran = Arc::clone(&ran);
+            // tickets dropped immediately: collect is optional
+            let _ = pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(ran.load(Ordering::SeqCst), 8, "drop must drain the queue");
+    }
+
+    #[test]
+    fn nested_map_runs_inline_without_deadlock() {
+        // a map from inside a pool job must not resubmit to a pool it
+        // could be blocking — on a 1-thread pool that would deadlock;
+        // the in-worker guard routes nested maps inline
+        let pool = Pool::new(1);
+        let mut outer = vec![0usize; 3];
+        pool.map_mut(&mut outer, 3, |i, x| {
+            let mut inner = vec![1usize; 4];
+            let r = par_map_mut(&mut inner, 4, |j, y| *y + j);
+            *x = i + r.iter().sum::<usize>();
+        });
+        assert_eq!(outer, vec![10, 11, 12]);
     }
 }

@@ -1,0 +1,278 @@
+//! The pipelined data plane, pinned end to end (the CI `pipeline_`
+//! release gate): with one persistent I/O thread per worker link and
+//! the coordinator folding replies in slot order as each worker drains,
+//! every observable — SOCCER outcomes, byte meters, crash semantics —
+//! must be exactly what the barriered plane produced. The InProc fleet
+//! runs the Local arm (whose meters are pinned byte-for-byte by the
+//! channel's unit tests), so InProc ≡ Process here is the regression
+//! chain back to the pre-pipelining meters.
+
+#![cfg(unix)]
+
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::machines::Fleet;
+use soccer::prop_assert;
+use soccer::runtime::NativeEngine;
+use soccer::transport::TransportKind;
+use soccer::util::proptest::forall;
+use soccer::util::rng::Pcg64;
+use soccer::Matrix;
+
+/// Point the fleet at the worker binary cargo built for this test run
+/// (same pattern as tests/end_to_end.rs; `Once` because tests run on
+/// parallel threads and concurrent setenv is UB on glibc).
+fn use_test_worker_binary() {
+    static SET: std::sync::Once = std::sync::Once::new();
+    SET.call_once(|| std::env::set_var("SOCCER_MACHINE_BIN", env!("CARGO_BIN_EXE_soccer-machine")));
+}
+
+fn blob_points(n: usize, k: usize, rng: &mut Pcg64) -> Matrix {
+    let mut pts = Matrix::zeros(n, 4);
+    for i in 0..n {
+        let c = rng.below(k);
+        for v in pts.row_mut(i) {
+            *v = (c as f64 * 20.0 + rng.normal()) as f32;
+        }
+    }
+    pts
+}
+
+/// Randomized (n, m, machines_per_worker, seed) parity: a Direct, an
+/// InProc and a packed Process fleet — the latter running pipelined
+/// rounds over persistent links — produce bit-identical SOCCER
+/// outcomes, and the wired meters agree to the byte. Pipelining folds
+/// worker replies in slot order, which is machine order under the
+/// contiguous packing, so FP accumulation order (and thus every bit)
+/// is preserved.
+#[test]
+fn pipeline_randomized_transport_parity() {
+    use_test_worker_binary();
+    forall(
+        "pipelined-transport-parity",
+        3,
+        31,
+        |g| {
+            let n = g.int(600, 2_000);
+            let m = g.int(2, 6);
+            let mpw = g.int(1, 4);
+            let k = g.int(2, 4);
+            let seed = g.rng.below(1 << 20) as u64;
+            (n, m, mpw, k, seed)
+        },
+        |&(n, m, mpw, k, seed)| {
+            let pts = blob_points(n, k, &mut Pcg64::new(seed));
+            let params = SoccerParams::new(k, 0.2);
+            let mut direct = Fleet::new(&pts, m, seed + 1);
+            let mut inproc = Fleet::with_transport(&pts, m, seed + 1, TransportKind::InProc)
+                .map_err(|e| e.to_string())?;
+            let mut packed = Fleet::with_placement(&pts, m, seed + 1, TransportKind::Process, mpw)
+                .map_err(|e| format!("packed fleet spawn: {e}"))?;
+
+            let out_d = run_soccer(&mut direct, &NativeEngine, &params, &LloydKMeans::default(), seed + 2);
+            let out_i = run_soccer(&mut inproc, &NativeEngine, &params, &LloydKMeans::default(), seed + 2);
+            let out_p = run_soccer(&mut packed, &NativeEngine, &params, &LloydKMeans::default(), seed + 2);
+
+            prop_assert!(out_d.c_out == out_p.c_out, "C_out drifted direct vs process");
+            prop_assert!(
+                out_d.final_centers == out_p.final_centers,
+                "final centers drifted direct vs process"
+            );
+            prop_assert!(out_d.rounds == out_p.rounds, "round count drifted");
+            prop_assert!(
+                out_d.cost.to_bits() == out_p.cost.to_bits(),
+                "cost bits drifted direct vs process"
+            );
+            prop_assert!(
+                out_i.cost.to_bits() == out_p.cost.to_bits(),
+                "cost bits drifted inproc vs process"
+            );
+            let (ci, cp) = (&out_i.telemetry.comm, &out_p.telemetry.comm);
+            prop_assert!(
+                ci.bytes_to_coordinator == cp.bytes_to_coordinator,
+                "uplink meters diverged: inproc {} vs pipelined process {}",
+                ci.bytes_to_coordinator,
+                cp.bytes_to_coordinator
+            );
+            prop_assert!(
+                ci.bytes_broadcast == cp.bytes_broadcast,
+                "downlink meters diverged: inproc {} vs pipelined process {}",
+                ci.bytes_broadcast,
+                cp.bytes_broadcast
+            );
+            prop_assert!(cp.bytes_to_coordinator > 0, "process fleet measured nothing");
+            // the pipelined plane's round clocks: never negative, and a
+            // local/direct fleet never accrues them
+            for r in &out_p.telemetry.rounds {
+                prop_assert!(
+                    r.coordinator_idle_time >= 0.0 && r.coordinator_fold_time >= 0.0,
+                    "negative coordinator clock in round {}",
+                    r.round
+                );
+            }
+            prop_assert!(
+                out_d.telemetry.rounds.iter().all(|r| r.coordinator_idle_time == 0.0),
+                "direct fleet accrued idle time"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// The meters are a property of the protocol, not the placement: the
+/// same data under every packing (one worker per machine, pairs, one
+/// worker hosting everything) moves byte-for-byte the same traffic as
+/// the InProc fleet — broadcasts metered once per exchange, uplinks per
+/// reply — and lands on bit-identical outcomes.
+#[test]
+fn pipeline_meters_byte_equal_across_packings() {
+    use_test_worker_binary();
+    let m = 6usize;
+    let k = 3usize;
+    let pts = blob_points(1_200, k, &mut Pcg64::new(61));
+    let params = SoccerParams::new(k, 0.2);
+
+    let mut inproc =
+        Fleet::with_transport(&pts, m, 62, TransportKind::InProc).expect("inproc fleet");
+    let out_i = run_soccer(&mut inproc, &NativeEngine, &params, &LloydKMeans::default(), 63);
+    let ci = &out_i.telemetry.comm;
+    assert!(ci.bytes_to_coordinator > 0 && ci.bytes_broadcast > 0);
+
+    for mpw in [1usize, 2, 3, m] {
+        let mut packed = Fleet::with_placement(&pts, m, 62, TransportKind::Process, mpw)
+            .unwrap_or_else(|e| panic!("process fleet (mpw={mpw}): {e}"));
+        let out_p = run_soccer(&mut packed, &NativeEngine, &params, &LloydKMeans::default(), 63);
+        let cp = &out_p.telemetry.comm;
+        assert_eq!(
+            ci.bytes_to_coordinator, cp.bytes_to_coordinator,
+            "uplink bytes drifted at mpw={mpw}"
+        );
+        assert_eq!(
+            ci.bytes_broadcast, cp.bytes_broadcast,
+            "downlink bytes drifted at mpw={mpw}"
+        );
+        assert_eq!(out_i.c_out, out_p.c_out, "C_out drifted at mpw={mpw}");
+        assert_eq!(
+            out_i.cost.to_bits(),
+            out_p.cost.to_bits(),
+            "cost bits drifted at mpw={mpw}"
+        );
+        assert_eq!(out_i.rounds, out_p.rounds, "round count drifted at mpw={mpw}");
+    }
+}
+
+/// The idle/fold clocks behind the new telemetry: a Direct fleet never
+/// accrues them; a Process fleet accrues idle time monotonically across
+/// exchanges (the coordinator really does block on worker replies), the
+/// per-round shares logged by the coordinator sum to no more than the
+/// channel totals, and `reset_wire_meter` — which zeroes the byte
+/// meters between runs — leaves the clocks alone.
+#[test]
+fn pipeline_idle_clock_monotone_and_never_reset_by_meter() {
+    use_test_worker_binary();
+    let k = 3usize;
+    let pts = blob_points(900, k, &mut Pcg64::new(71));
+    let params = SoccerParams::new(k, 0.2);
+
+    let mut direct = Fleet::new(&pts, 4, 72);
+    let out_d = run_soccer(&mut direct, &NativeEngine, &params, &LloydKMeans::default(), 73);
+    assert_eq!(direct.coord_io_secs(), (0.0, 0.0), "direct fleets have no I/O plane");
+    assert_eq!(out_d.telemetry.coordinator_idle_time(), 0.0);
+    assert_eq!(out_d.telemetry.coordinator_fold_time(), 0.0);
+
+    let mut fleet =
+        Fleet::with_placement(&pts, 4, 72, TransportKind::Process, 2).expect("process fleet");
+    assert_eq!(fleet.coord_io_secs(), (0.0, 0.0), "clocks start at zero");
+    let out_p = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 73);
+    let (idle, fold) = fleet.coord_io_secs();
+    assert!(idle > 0.0, "a process fleet must accrue idle time, got {idle}");
+    assert!(fold >= 0.0);
+    // the coordinator attributes per-round deltas; their sum can't
+    // exceed the channel totals (evaluation traffic after the last
+    // round accrues on the channel but belongs to no round)
+    let logged_idle = out_p.telemetry.coordinator_idle_time();
+    let logged_fold = out_p.telemetry.coordinator_fold_time();
+    assert!(logged_idle >= 0.0 && logged_idle <= idle + 1e-9, "{logged_idle} vs {idle}");
+    assert!(logged_fold >= 0.0 && logged_fold <= fold + 1e-9, "{logged_fold} vs {fold}");
+
+    fleet.reset_wire_meter();
+    assert_eq!(fleet.wire_bytes(), (0, 0), "meters reset");
+    let after = fleet.coord_io_secs();
+    assert!(
+        after.0 == idle && after.1 == fold,
+        "reset_wire_meter must not touch the monotone clocks"
+    );
+}
+
+/// Chaos under pipelining: SIGKILL a packed worker (out-of-band, as a
+/// real crash would be) after it has participated in one pipelined
+/// exchange. The next rounds must not wedge the coordinator's collect
+/// loop: every machine the worker hosted downgrades to dead, and the
+/// completed run is a bit-exact twin of a fleet whose dead machines
+/// simply hold empty shards — a crashed process loses exactly its
+/// shards, nothing else.
+#[test]
+fn pipeline_chaos_sigkill_mid_run_downgrades_and_matches_twin() {
+    use_test_worker_binary();
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(3_000, 3);
+    let gm = soccer::data::gaussian::generate(&spec, &mut Pcg64::new(81));
+    let m = 6usize;
+    // 3 machines per worker: workers host [0,1,2] and [3,4,5]
+    let mut fleet = Fleet::with_placement(&gm.points, m, 82, TransportKind::Process, 3)
+        .expect("packed process fleet");
+
+    // a healthy, RNG-free pipelined exchange first, so the crash lands
+    // mid-protocol with the victim having already participated
+    let d = gm.points.cols();
+    let centers = Matrix::from_rows(&[&vec![0.0f32; d][..]]);
+    let counts = fleet.counts_full(&centers, &NativeEngine).value;
+    assert_eq!(counts[0] as usize, 3_000);
+
+    // SIGKILL the worker hosting machines 3..6, behind the
+    // coordinator's back
+    let pids = fleet.worker_pids();
+    assert_eq!(pids[3], pids[5], "machines 3..6 share a worker");
+    let victim = pids[4].expect("worker alive");
+    let status = std::process::Command::new("kill")
+        .args(["-9", &victim.to_string()])
+        .status()
+        .expect("spawn kill");
+    assert!(status.success(), "kill -9 failed");
+
+    // the pipelined collect loop must observe the dead link and move
+    // on within the watchdog window, never hang the coordinator
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let centers = Matrix::from_rows(&[&vec![0.0f32; d][..]]);
+        let counts = fleet.counts_full(&centers, &NativeEngine).value;
+        let dead = fleet.dead_machines();
+        let survivors = fleet.total_original();
+        let params = SoccerParams::new(3, 0.2);
+        let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 84);
+        tx.send((counts, dead, survivors, out)).expect("report");
+    });
+    let (counts, dead, survivors, out_p) = rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("coordinator deadlocked after worker crash");
+    handle.join().expect("watchdog thread");
+    // ALL three hosted machines died with the process (500 points each)
+    assert_eq!(dead, 3);
+    assert_eq!(survivors, 1_500);
+    assert_eq!(counts[0] as usize, 1_500);
+
+    // bit-exact twin: same machine count and RNG stream assignment,
+    // machines 3..6 holding empty shards from the start
+    let mut shards = gm.points.split_rows(m);
+    for shard in shards.iter_mut().skip(3) {
+        *shard = Matrix::zeros(0, d);
+    }
+    let mut twin = Fleet::from_shards(shards, 82);
+    let params = SoccerParams::new(3, 0.2);
+    let out_t = run_soccer(&mut twin, &NativeEngine, &params, &LloydKMeans::default(), 84);
+    assert_eq!(out_p.c_out, out_t.c_out);
+    assert_eq!(out_p.final_centers, out_t.final_centers);
+    assert_eq!(out_p.rounds, out_t.rounds);
+    assert_eq!(out_p.cost.to_bits(), out_t.cost.to_bits());
+    assert_eq!(out_p.cost_c_out.to_bits(), out_t.cost_c_out.to_bits());
+}

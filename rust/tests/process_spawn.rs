@@ -50,6 +50,18 @@ fn points(n: usize) -> Matrix {
     Matrix::from_vec((0..n * 3).map(|_| rng.normal() as f32).collect(), n, 3)
 }
 
+/// Count this process's live "soccer-io-*" threads (the persistent
+/// per-worker-link I/O threads) via /proc. Thread names are truncated
+/// to 15 bytes in `comm`, which still covers the "soccer-io" prefix.
+#[cfg(target_os = "linux")]
+fn io_thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task")
+        .expect("read /proc/self/task")
+        .filter_map(|e| std::fs::read_to_string(e.ok()?.path().join("comm")).ok())
+        .filter(|name| name.trim_end().starts_with("soccer-io"))
+        .count()
+}
+
 /// The acceptance claim for parallel bring-up, as a wall-clock bound:
 /// every worker sleeps 1s before connecting, so a sequential
 /// spawn→handshake loop over 4 workers would take ≥ 4s while the
@@ -92,7 +104,29 @@ fn process_parallel_bringup_spawns_workers_concurrently() {
     pids.dedup();
     assert_eq!(pids.len(), 4, "expected 4 distinct worker processes");
 
+    // the data plane is persistent: exactly one I/O thread per worker
+    // link, spawned at bring-up — not per exchange
+    #[cfg(target_os = "linux")]
+    assert_eq!(
+        io_thread_count(),
+        4,
+        "expected one persistent I/O thread per worker link"
+    );
+
     drop(fleet);
+
+    // teardown joins the I/O threads (bounded: a wedged link is broken
+    // and detached, but these links are healthy). Allow a brief settle
+    // for the OS to retire the task entries from /proc.
+    #[cfg(target_os = "linux")]
+    {
+        let t0 = Instant::now();
+        while io_thread_count() > 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(io_thread_count(), 0, "fleet teardown leaked I/O threads");
+    }
+
     std::env::remove_var("SOCCER_MACHINE_BIN");
     let _ = std::fs::remove_dir_all(&dir);
 }
