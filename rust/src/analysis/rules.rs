@@ -1,0 +1,261 @@
+//! The five invariant rules `soccer-lint` enforces. Each rule is a
+//! plain function over a [`FileView`] plus a path predicate — the
+//! scoping (which rule watches which directory) encodes the repo's
+//! correctness contracts:
+//!
+//! - `unsafe-safety` — every `unsafe` carries a `// SAFETY:` comment.
+//! - `lossy-cast` — no `as u16` / `as u32` narrowing in the wire paths
+//!   (`transport/`, `core/`): sizes must go through the checked
+//!   `wire::u32_header` conversion. `transport/wire.rs` itself is the
+//!   sanctioned home of the conversion and is exempt.
+//! - `no-panic` — the data-plane modules (`link_io`, `channel`,
+//!   `process`) may not `.unwrap()` / `.expect(`: a poisoned worker
+//!   must surface as a per-machine `Err`, not tear down the fleet.
+//! - `named-thread` — no bare `thread::spawn`: long-lived threads are
+//!   built via `Builder::new().name(…)` so panics and debugger output
+//!   identify their owner. Scoped `s.spawn` is exempt: those threads
+//!   are bounded by their scope and die with the call.
+//! - `ranked-lock` — no raw `Mutex`/`Condvar`/`RwLock` construction
+//!   outside `util/sync.rs`: all locks go through [`RankedMutex`]
+//!   (crate::util::sync::RankedMutex) so lock-order inversions are
+//!   caught in checked builds.
+//!
+//! A violation can be waived in place with
+//! `// lint: allow(<rule>) <reason>` on the same or previous line —
+//! the reason is mandatory by convention and reviewed like any other
+//! comment.
+
+use super::scanner::FileView;
+use super::Violation;
+
+pub struct Rule {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub check: fn(&Rule, &str, &FileView) -> Vec<Violation>,
+}
+
+/// All rules, in reporting order.
+pub fn all() -> &'static [Rule] {
+    &RULES
+}
+
+static RULES: [Rule; 5] = [
+    Rule {
+        name: "unsafe-safety",
+        description: "every `unsafe` needs an adjacent `// SAFETY:` comment",
+        check: check_unsafe_safety,
+    },
+    Rule {
+        name: "lossy-cast",
+        description:
+            "no `as u16`/`as u32` in transport/ or core/ — use wire::u32_header",
+        check: check_lossy_cast,
+    },
+    Rule {
+        name: "no-panic",
+        description:
+            "no .unwrap()/.expect( in data-plane modules (link_io, channel, process)",
+        check: check_no_panic,
+    },
+    Rule {
+        name: "named-thread",
+        description:
+            "no bare thread::spawn — name threads via Builder (scoped s.spawn exempt)",
+        check: check_named_thread,
+    },
+    Rule {
+        name: "ranked-lock",
+        description:
+            "no raw Mutex/Condvar/RwLock construction outside util/sync.rs",
+        check: check_ranked_lock,
+    },
+];
+
+/// Byte offsets of `token` in `line` where the characters on both
+/// sides are not identifier characters (so `unsafe` does not match
+/// `unsafe_cell`, `as u32` does not match `as u32x4`).
+fn token_offsets(line: &str, token: &str) -> Vec<usize> {
+    let bytes = line.as_bytes();
+    let is_ident =
+        |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(token) {
+        let at = from + pos;
+        let pre_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let end = at + token.len();
+        let post_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if pre_ok && post_ok {
+            out.push(at);
+        }
+        from = at + token.len().max(1);
+    }
+    out
+}
+
+/// Offsets of `token` where only the *preceding* character matters
+/// (used for `Mutex::new(` so `RankedMutex::new(` does not match —
+/// the trailing `(` already ends the token).
+fn prefixed_offsets(line: &str, token: &str) -> Vec<usize> {
+    let bytes = line.as_bytes();
+    let is_ident =
+        |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(token) {
+        let at = from + pos;
+        if at == 0 || !is_ident(bytes[at - 1]) {
+            out.push(at);
+        }
+        from = at + token.len();
+    }
+    out
+}
+
+fn violation(rule: &Rule, path: &str, line: usize, message: String) -> Violation {
+    Violation {
+        path: path.to_owned(),
+        line,
+        rule: rule.name,
+        message,
+    }
+}
+
+/// `unsafe-safety`: applies everywhere. A `// SAFETY:` comment must
+/// appear on the same raw line or within the run of comment /
+/// attribute / blank lines directly above (window of 8 lines, which
+/// covers every multi-line safety argument in the tree).
+fn check_unsafe_safety(rule: &Rule, path: &str, view: &FileView) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (line, code) in view.code_lines() {
+        if token_offsets(code, "unsafe").is_empty() || view.waived(line, rule.name) {
+            continue;
+        }
+        let has_safety = |l: usize| {
+            view.raw_line(l)
+                .is_some_and(|text| text.contains("SAFETY:"))
+        };
+        let mut covered = has_safety(line);
+        let mut above = line;
+        for _ in 0..8 {
+            if covered || above <= 1 {
+                break;
+            }
+            above -= 1;
+            let raw = view.raw_line(above).unwrap_or("").trim_start();
+            let is_adjacent =
+                raw.is_empty() || raw.starts_with("//") || raw.starts_with("#[") || raw.starts_with("#!");
+            if !is_adjacent {
+                break;
+            }
+            covered = has_safety(above);
+        }
+        if !covered {
+            out.push(violation(
+                rule,
+                path,
+                line,
+                "`unsafe` without an adjacent `// SAFETY:` comment".to_owned(),
+            ));
+        }
+    }
+    out
+}
+
+/// `lossy-cast`: transport/ and core/ wire paths only; wire.rs (the
+/// home of the checked conversion) is exempt.
+fn check_lossy_cast(rule: &Rule, path: &str, view: &FileView) -> Vec<Violation> {
+    let in_scope = (path.starts_with("transport/") || path.starts_with("core/"))
+        && path != "transport/wire.rs";
+    if !in_scope {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (line, code) in view.code_lines() {
+        for cast in ["as u16", "as u32"] {
+            if !token_offsets(code, cast).is_empty() && !view.waived(line, rule.name) {
+                out.push(violation(
+                    rule,
+                    path,
+                    line,
+                    format!("lossy `{cast}` on a wire path — use wire::u32_header"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// `no-panic`: the three data-plane modules where a panic would take
+/// down an I/O thread (and with it the whole fleet) instead of
+/// degrading one machine to `Err`.
+const NO_PANIC_FILES: [&str; 3] = [
+    "transport/link_io.rs",
+    "transport/channel.rs",
+    "transport/process.rs",
+];
+
+fn check_no_panic(rule: &Rule, path: &str, view: &FileView) -> Vec<Violation> {
+    if !NO_PANIC_FILES.contains(&path) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (line, code) in view.code_lines() {
+        for pat in [".unwrap()", ".expect("] {
+            // plain substring: the leading `.` and trailing `(`/`)`
+            // already exclude unwrap_or_else / expect_err
+            if code.contains(pat) && !view.waived(line, rule.name) {
+                out.push(violation(
+                    rule,
+                    path,
+                    line,
+                    format!("`{pat}…` in a data-plane module — return Err instead"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// `named-thread`: applies everywhere; matches free `thread::spawn`
+/// (std::thread::spawn included), not scoped `s.spawn` or a named
+/// `Builder::new().name(..).spawn(..)`.
+fn check_named_thread(rule: &Rule, path: &str, view: &FileView) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (line, code) in view.code_lines() {
+        if !prefixed_offsets(code, "thread::spawn").is_empty()
+            && !view.waived(line, rule.name)
+        {
+            out.push(violation(
+                rule,
+                path,
+                line,
+                "bare `thread::spawn` — use Builder::new().name(…).spawn(…)".to_owned(),
+            ));
+        }
+    }
+    out
+}
+
+/// `ranked-lock`: applies everywhere except util/sync.rs (the one
+/// module allowed to touch the raw primitives, because it wraps them).
+fn check_ranked_lock(rule: &Rule, path: &str, view: &FileView) -> Vec<Violation> {
+    if path == "util/sync.rs" {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (line, code) in view.code_lines() {
+        for ctor in ["Mutex::new(", "Condvar::new(", "RwLock::new("] {
+            if !prefixed_offsets(code, ctor).is_empty() && !view.waived(line, rule.name)
+            {
+                out.push(violation(
+                    rule,
+                    path,
+                    line,
+                    format!("raw `{ctor}…)` outside util/sync.rs — use the ranked wrappers"),
+                ));
+            }
+        }
+    }
+    out
+}

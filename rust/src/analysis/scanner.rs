@@ -1,0 +1,344 @@
+//! Source pre-processing for the lint pass: a line/token-level view of
+//! a Rust file with comments, string/char literals and `#[cfg(test)]`
+//! modules blanked out, so the rules in [`super::rules`] can match
+//! plain substrings without a real parser dragging in a dependency.
+//!
+//! The stripper is a character state machine, not a grammar. It
+//! understands exactly the constructs that would otherwise cause false
+//! positives: line comments, nested block comments, string literals
+//! (escaped, raw `r#"…"#`, byte `b"…"`), char literals (with a
+//! lifetime-vs-char heuristic for `'`), and `#[cfg(test)] mod` bodies.
+//! Everything blanked keeps its line structure so reported line numbers
+//! stay exact.
+
+/// A lint-ready view of one source file: the raw lines (for waiver and
+/// `// SAFETY:` detection, which live in comments) plus the stripped
+/// "code" lines the rules match against.
+pub struct FileView {
+    raw: Vec<String>,
+    code: Vec<String>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Normal,
+    LineComment,
+    /// Nested depth; Rust block comments nest.
+    BlockComment(u32),
+    /// Ordinary (escaped) string literal, including byte strings.
+    Str,
+    /// Raw string literal terminated by `"` followed by this many `#`s.
+    RawStr(usize),
+    CharLit,
+}
+
+impl FileView {
+    pub fn new(source: &str) -> FileView {
+        let stripped = strip(source);
+        let raw: Vec<String> = source.lines().map(str::to_owned).collect();
+        let mut code: Vec<String> = stripped.lines().map(str::to_owned).collect();
+        blank_test_mods(&mut code);
+        FileView { raw, code }
+    }
+
+    /// Stripped lines with their 1-based line numbers.
+    pub fn code_lines(&self) -> impl Iterator<Item = (usize, &str)> {
+        self.code.iter().enumerate().map(|(i, l)| (i + 1, l.as_str()))
+    }
+
+    /// The raw (unstripped) text of a 1-based line, if it exists.
+    pub fn raw_line(&self, line: usize) -> Option<&str> {
+        self.raw.get(line.checked_sub(1)?).map(String::as_str)
+    }
+
+    /// Is a violation of `rule` on 1-based `line` waived? A waiver is a
+    /// `lint: allow(<rule>) <reason>` pragma on the same raw line or
+    /// the raw line directly above (where a comment-only waiver lives).
+    pub fn waived(&self, line: usize, rule: &str) -> bool {
+        let needle = format!("lint: allow({rule})");
+        let at = |l: usize| {
+            self.raw_line(l)
+                .is_some_and(|text| text.contains(&needle))
+        };
+        at(line) || (line > 1 && at(line - 1))
+    }
+}
+
+/// Replace comments and literal contents with spaces, preserving
+/// newlines (and therefore line numbers and brace structure).
+fn strip(source: &str) -> String {
+    let chars: Vec<char> = source.chars().collect();
+    let mut out = String::with_capacity(source.len());
+    let mut state = State::Normal;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            // newlines survive every state so lines stay aligned; a
+            // line comment also ends here
+            if state == State::LineComment {
+                state = State::Normal;
+            }
+            out.push('\n');
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                let next = chars.get(i + 1).copied();
+                let prev_ident = i > 0 && is_ident(chars[i - 1]);
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if !prev_ident && (c == 'r' || c == 'b') {
+                    // possible raw/byte string prefix: r"…", r#"…"#,
+                    // b"…", br#"…"# — scan `b? r? #* "`
+                    let mut j = i;
+                    if chars.get(j) == Some(&'b') {
+                        j += 1;
+                    }
+                    let rawish = chars.get(j) == Some(&'r');
+                    if rawish {
+                        j += 1;
+                    }
+                    let mut hashes = 0;
+                    while rawish && chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') && (rawish || j == i + 1) {
+                        state = if rawish { State::RawStr(hashes) } else { State::Str };
+                        for _ in i..=j {
+                            out.push(' ');
+                        }
+                        i = j + 1;
+                    } else if c == 'b' && next == Some('\'') {
+                        // byte char literal b'x' / b'\n'
+                        state = State::CharLit;
+                        out.push_str("  ");
+                        i += 2;
+                    } else {
+                        out.push(c);
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    state = State::Str;
+                    out.push(' ');
+                    i += 1;
+                } else if c == '\'' {
+                    // lifetime vs char literal: '\…' and 'x' (closing
+                    // quote two ahead) are chars; anything else ('a as
+                    // in fn f<'a>) is a lifetime and stays
+                    let is_char = next == Some('\\')
+                        || (next.is_some() && chars.get(i + 2) == Some(&'\''));
+                    if is_char {
+                        state = State::CharLit;
+                        out.push(' ');
+                    } else {
+                        out.push('\'');
+                    }
+                    i += 1;
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                out.push(' ');
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth == 1 {
+                        State::Normal
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    out.push(' ');
+                    if let Some(e) = chars.get(i + 1) {
+                        out.push(if *e == '\n' { '\n' } else { ' ' });
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    if c == '"' {
+                        state = State::Normal;
+                    }
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                let closes = c == '"'
+                    && (1..=hashes).all(|h| chars.get(i + h) == Some(&'#'));
+                if closes {
+                    for _ in 0..=hashes {
+                        out.push(' ');
+                    }
+                    i += 1 + hashes;
+                    state = State::Normal;
+                } else {
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    out.push(' ');
+                    if chars.get(i + 1).is_some() {
+                        out.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    if c == '\'' {
+                        state = State::Normal;
+                    }
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Blank every `#[cfg(test)] mod …` body in the stripped lines: tests
+/// are allowed to unwrap, cast and spawn anonymous threads freely.
+/// Operates on stripped text so braces inside strings don't confuse
+/// the matcher.
+fn blank_test_mods(code: &mut [String]) {
+    let mut i = 0;
+    while i < code.len() {
+        if !code[i].contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // walk forward over further attributes / blank lines to the
+        // item the cfg applies to; only a `mod` gets blanked
+        let mut j = i + 1;
+        while j < code.len() {
+            let t = code[j].trim();
+            if t.is_empty() || t.starts_with("#[") {
+                j += 1;
+            } else {
+                break;
+            }
+        }
+        let is_mod = code
+            .get(j)
+            .map(|l| {
+                let t = l.trim_start();
+                t.starts_with("mod ") || t.starts_with("pub mod ")
+            })
+            .unwrap_or(false);
+        if !is_mod {
+            i += 1;
+            continue;
+        }
+        // brace-match from the mod line to the region end
+        let mut depth: i64 = 0;
+        let mut started = false;
+        let mut end = j;
+        'scan: for (k, line) in code.iter().enumerate().skip(j) {
+            for c in line.chars() {
+                if c == '{' {
+                    depth += 1;
+                    started = true;
+                } else if c == '}' {
+                    depth -= 1;
+                    if started && depth == 0 {
+                        end = k;
+                        break 'scan;
+                    }
+                }
+            }
+            end = k;
+        }
+        for line in code.iter_mut().take(end + 1).skip(i) {
+            line.clear();
+        }
+        i = end + 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let v = FileView::new("let x = \"as u32\"; // as u32\nlet y = 1;\n");
+        let lines: Vec<_> = v.code_lines().map(|(_, l)| l.to_owned()).collect();
+        assert!(!lines[0].contains("as u32"), "{:?}", lines[0]);
+        assert!(lines[1].contains("let y = 1;"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let v = FileView::new("/* a /* b */ still */ let z = 2;\n");
+        let line = v.code_lines().next().unwrap().1.to_owned();
+        assert!(line.contains("let z = 2;"), "{line:?}");
+        assert!(!line.contains("still"));
+    }
+
+    #[test]
+    fn lifetimes_survive_char_literals_do_not() {
+        let v = FileView::new("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }\n");
+        let line = v.code_lines().next().unwrap().1.to_owned();
+        assert!(line.contains("<'a>"), "{line:?}");
+        assert!(!line.contains('x') || !line.contains("'x'"), "{line:?}");
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let v = FileView::new("let s = r#\"thread::spawn\"#; let t = 3;\n");
+        let line = v.code_lines().next().unwrap().1.to_owned();
+        assert!(!line.contains("thread::spawn"), "{line:?}");
+        assert!(line.contains("let t = 3;"));
+    }
+
+    #[test]
+    fn cfg_test_mod_is_blanked() {
+        let src = "fn real() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let v = FileView::new(src);
+        let lines: Vec<_> = v.code_lines().map(|(_, l)| l.to_owned()).collect();
+        assert!(lines[3].is_empty(), "{:?}", lines[3]);
+        assert!(lines[5].contains("fn after"));
+    }
+
+    #[test]
+    fn waiver_matches_same_and_previous_line() {
+        let src = "let a = 1; // lint: allow(lossy-cast) reason\n// lint: allow(no-panic) reason\nlet b = 2;\n";
+        let v = FileView::new(src);
+        assert!(v.waived(1, "lossy-cast"));
+        assert!(!v.waived(1, "no-panic"));
+        assert!(v.waived(3, "no-panic"));
+        assert!(!v.waived(3, "lossy-cast"));
+    }
+}

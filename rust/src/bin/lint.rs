@@ -1,0 +1,59 @@
+//! `soccer-lint` — run the in-tree invariant lint pass over `src/`
+//! (or over the directories given as arguments) and fail with exit
+//! code 1 on any violation. CI runs this next to the test suite; see
+//! `soccer::analysis` for the rules and the waiver pragma.
+
+use soccer::analysis::{lint_tree, rules};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!("usage: soccer-lint [DIR ...]   (default: the crate's src/)");
+        println!("rules:");
+        for rule in rules::all() {
+            println!("  {:<14} {}", rule.name, rule.description);
+        }
+        println!("waive in place with: // lint: allow(<rule>) <reason>");
+        return ExitCode::SUCCESS;
+    }
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        vec![Path::new(env!("CARGO_MANIFEST_DIR")).join("src")]
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+    let mut total = 0usize;
+    for root in &roots {
+        match lint_tree(root) {
+            Ok(violations) => {
+                for v in &violations {
+                    // prefix with the root so terminal hyperlinks work
+                    // when linting somewhere other than the cwd
+                    println!("{}/{v}", root.display());
+                }
+                total += violations.len();
+            }
+            Err(e) => {
+                eprintln!("soccer-lint: cannot read {}: {e}", root.display());
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    if total == 0 {
+        println!(
+            "soccer-lint: clean ({} rule{} over {})",
+            rules::all().len(),
+            if rules::all().len() == 1 { "" } else { "s" },
+            roots
+                .iter()
+                .map(|r| r.display().to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("soccer-lint: {total} violation{}", if total == 1 { "" } else { "s" });
+        ExitCode::FAILURE
+    }
+}

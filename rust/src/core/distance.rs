@@ -8,6 +8,16 @@
 
 use super::matrix::Matrix;
 
+/// Checked narrowing for the u32 index buffers of the Engine contract:
+/// a center index is bounded by `centers.rows()`, far below 2^32 — not
+/// wire-size data, so a debug assertion (instead of the wire layer's
+/// fallible `u32_header`) keeps the hot loop branch-free in release.
+#[inline(always)]
+fn center_idx(j: usize) -> u32 {
+    debug_assert!(u32::try_from(j).is_ok(), "center index {j} overflows u32");
+    j as u32 // lint: allow(lossy-cast) center index bounded by centers.rows(); debug-asserted above
+}
+
 /// Squared Euclidean distance between two points.
 #[inline]
 pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
@@ -90,19 +100,19 @@ pub fn nearest_center_into(
             }
             if a0 < best {
                 best = a0;
-                best_j = j as u32;
+                best_j = center_idx(j);
             }
             if a1 < best {
                 best = a1;
-                best_j = (j + 1) as u32;
+                best_j = center_idx(j + 1);
             }
             if a2 < best {
                 best = a2;
-                best_j = (j + 2) as u32;
+                best_j = center_idx(j + 2);
             }
             if a3 < best {
                 best = a3;
-                best_j = (j + 3) as u32;
+                best_j = center_idx(j + 3);
             }
             j += 4;
         }
@@ -110,7 +120,7 @@ pub fn nearest_center_into(
             let dsq = sq_dist(p, centers.row(j));
             if dsq < best {
                 best = dsq;
-                best_j = j as u32;
+                best_j = center_idx(j);
             }
             j += 1;
         }
@@ -165,7 +175,7 @@ pub fn update_nearest(
                     let d = sq_dist(p, new_centers.row(j));
                     if d < dist[i] {
                         dist[i] = d;
-                        idx[i] = idx_base + j as u32;
+                        idx[i] = idx_base + center_idx(j);
                     }
                 }
             }

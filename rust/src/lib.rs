@@ -20,11 +20,15 @@
 //!   artifacts (`artifacts/*.hlo.txt`) on the hot paths,
 //! - [`data`] — dataset substrates (the paper's Gaussian mixtures plus
 //!   surrogates for its four real datasets),
-//! - [`bench_support`] — the harness regenerating every paper table.
+//! - [`bench_support`] — the harness regenerating every paper table,
+//! - [`analysis`] — the `soccer-lint` invariant pass that mechanically
+//!   enforces the transport's correctness rules (checked wire casts,
+//!   panic-free data plane, ranked locks; see [`util::sync`]).
 //!
 //! Python/JAX runs only at build time (`make artifacts`); the binary and
 //! all examples are self-contained afterwards.
 
+pub mod analysis;
 pub mod baselines;
 pub mod bench_support;
 pub mod clustering;

@@ -52,6 +52,7 @@ use super::{InProcTransport, LoopbackTcpTransport, Transport, TransportKind};
 use crate::format_err;
 use crate::runtime::{Engine, NativeEngine};
 use crate::util::error::Result;
+use crate::util::sync;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -372,7 +373,12 @@ impl WiredChannel {
         let mut out: Vec<Option<Result<Vec<u8>>>> = (0..n).map(|_| None).collect();
         self.exchange_fold(items, engine, down, handler, |j, r| out[j] = Some(r));
         out.into_iter()
-            .map(|r| r.expect("every machine folded"))
+            .enumerate()
+            .map(|(j, r)| {
+                // exchange_fold folds every machine exactly once; a hole
+                // would be a placement bug — surface it, don't panic
+                r.unwrap_or_else(|| Err(format_err!("machine {j}: reply never folded")))
+            })
             .collect()
     }
 
@@ -398,6 +404,9 @@ impl WiredChannel {
         if let Down::PerMachine(fs) = &down {
             assert_eq!(fs.len(), n, "per-machine frames vs machines mismatch");
         }
+        // a round blocks on worker replies: entering it with a ranked
+        // lock held would pin that lock for a full network round-trip
+        sync::assert_no_locks_held("a wired exchange round");
         let WiredChannel {
             links,
             up_bytes,
@@ -495,7 +504,13 @@ impl WiredChannel {
                         let reply = handler(item, &req, engine);
                         let _ = mep.send(&reply);
                     }
-                    h.join().expect("coordinator I/O thread")
+                    match h.join() {
+                        Ok(r) => r,
+                        // the helper only does transport I/O, which
+                        // returns errors; a panic there is a bug worth
+                        // re-raising on the driving thread
+                        Err(payload) => std::panic::resume_unwind(payload),
+                    }
                 });
                 replies.push(reply);
             }
@@ -561,12 +576,18 @@ impl WiredChannel {
                 queued.push(false);
                 continue;
             }
-            let frames = match down {
-                Down::Broadcast(_) => RoundFrames::Broadcast {
-                    frame: Arc::clone(broadcast.as_ref().expect("built above")),
+            let frames = match (down, &broadcast) {
+                (Down::Broadcast(_), Some(b)) => RoundFrames::Broadcast {
+                    frame: Arc::clone(b),
                     fan: js.len(),
                 },
-                Down::PerMachine(fs) => RoundFrames::PerSlot {
+                // unreachable by construction (the Arc is built from the
+                // same `down` above), but total: allocate a fresh copy
+                (Down::Broadcast(f), None) => RoundFrames::Broadcast {
+                    frame: Arc::new(f.to_vec()),
+                    fan: js.len(),
+                },
+                (Down::PerMachine(fs), _) => RoundFrames::PerSlot {
                     frames: js.iter().map(|&j| Some(fs[j].clone())).collect(),
                 },
             };
@@ -645,6 +666,7 @@ impl WiredChannel {
         frame: &[u8],
         handler: impl FnOnce(&mut T, &[u8]) -> Vec<u8>,
     ) -> Result<Vec<u8>> {
+        sync::assert_no_locks_held("a single-machine exchange");
         let WiredChannel {
             links,
             up_bytes,
@@ -706,6 +728,7 @@ impl WiredChannel {
     /// reset — but nothing it moves reaches the meters or the
     /// data-plane clocks.
     pub fn control(&mut self, frames: &[Option<Vec<u8>>]) -> Vec<Result<Vec<u8>>> {
+        sync::assert_no_locks_held("a control round");
         match &mut self.links {
             LinkSet::Local { .. } => {
                 unreachable!("control frames are a process-link lifecycle; local fleets mutate their machines directly")
@@ -758,7 +781,14 @@ impl WiredChannel {
                     }
                 }
                 out.into_iter()
-                    .map(|r| r.expect("every machine answered, errored, or was skipped"))
+                    .enumerate()
+                    .map(|(j, r)| {
+                        // every machine answered, errored, or was skipped
+                        // above; a hole would be a placement bug
+                        r.unwrap_or_else(|| {
+                            Err(format_err!("machine {j}: no control outcome"))
+                        })
+                    })
                     .collect()
             }
         }

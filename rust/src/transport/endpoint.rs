@@ -34,6 +34,10 @@
 use crate::transport::process::{read_timeout, WorkerLink, WorkerSpec};
 use crate::transport::protocol::{self, RegisterRefusal};
 use crate::util::error::{Context, Error, Result};
+use crate::util::sync::{
+    self, RankedMutex, REGISTRATION_ERROR, REGISTRATION_LINKS, REGISTRATION_QUEUE,
+    REGISTRATION_SPEC,
+};
 use crate::{bail, format_err};
 use std::io::ErrorKind;
 use std::net::{TcpListener, TcpStream};
@@ -41,7 +45,7 @@ use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 /// Bound on the first read of a new connection (the hello). A real
@@ -89,6 +93,7 @@ pub(crate) enum Stream {
 
 impl Stream {
     pub(crate) fn send_frame(&mut self, payload: &[u8]) -> Result<()> {
+        sync::assert_no_locks_held("a process-transport socket write");
         match self {
             Stream::Tcp(s) => crate::transport::write_frame(s, payload, "process transport"),
             #[cfg(unix)]
@@ -97,6 +102,7 @@ impl Stream {
     }
 
     pub(crate) fn recv_frame(&mut self) -> Result<Vec<u8>> {
+        sync::assert_no_locks_held("a process-transport socket read");
         match self {
             Stream::Tcp(s) => crate::transport::read_frame(s, "process transport"),
             #[cfg(unix)]
@@ -108,6 +114,7 @@ impl Stream {
     /// (the registration hello): an adversarial length prefix is
     /// refused before any allocation.
     pub(crate) fn recv_frame_bounded(&mut self, max_len: usize) -> Result<Vec<u8>> {
+        sync::assert_no_locks_held("a process-transport socket read");
         match self {
             Stream::Tcp(s) => {
                 crate::transport::read_frame_bounded(s, max_len, "process transport")
@@ -372,27 +379,30 @@ impl Endpoint {
         self.listener.set_nonblocking(true)?;
 
         // a handshake thread claims spec i by take()-ing its slot; a
-        // second dialer claiming i finds it empty -> DuplicateIndex
-        let slots: Vec<Mutex<Option<WorkerSpec>>> =
-            specs.into_iter().map(|s| Mutex::new(Some(s))).collect();
+        // second dialer claiming i finds it empty -> DuplicateIndex.
+        // The per-index slots share one rank: no thread ever holds two.
+        let slots: Vec<RankedMutex<Option<WorkerSpec>>> = specs
+            .into_iter()
+            .map(|s| RankedMutex::new(REGISTRATION_SPEC, Some(s)))
+            .collect();
         let claimed: Vec<AtomicBool> = (0..expected).map(|_| AtomicBool::new(false)).collect();
-        let links: Mutex<Vec<Option<WorkerLink>>> =
-            Mutex::new((0..expected).map(|_| None).collect());
+        let links: RankedMutex<Vec<Option<WorkerLink>>> =
+            RankedMutex::new(REGISTRATION_LINKS, (0..expected).map(|_| None).collect());
         let done = AtomicUsize::new(0);
         let inflight = AtomicUsize::new(0);
-        let first_err: Mutex<Option<Error>> = Mutex::new(None);
+        let first_err: RankedMutex<Option<Error>> = RankedMutex::new(REGISTRATION_ERROR, None);
         let closing = AtomicBool::new(false);
         let (tx, rx) = mpsc::channel::<Stream>();
-        let rx = Mutex::new(rx);
+        let rx = RankedMutex::new(REGISTRATION_QUEUE, rx);
 
         let outcome: Result<()> = std::thread::scope(|s| {
             let pool = (expected + SPARE_REGISTRATION_THREADS).min(MAX_REGISTRATION_CONCURRENCY);
-            for _ in 0..pool {
-                s.spawn(|| loop {
+            for i in 0..pool {
+                let worker = || loop {
                     // dequeue under the lock, handshake outside it:
                     // registrations run concurrently across the pool
                     let stream = {
-                        let guard = rx.lock().expect("registration queue");
+                        let guard = rx.lock();
                         match guard.recv() {
                             Ok(stream) => stream,
                             Err(_) => return, // window closed
@@ -409,7 +419,7 @@ impl Endpoint {
                     inflight.fetch_sub(1, Ordering::AcqRel);
                     match outcome {
                         Ok(Registration::Registered(index, link)) => {
-                            links.lock().expect("links")[index] = Some(link);
+                            links.lock()[index] = Some(link);
                             done.fetch_add(1, Ordering::Release);
                         }
                         Ok(Registration::Noise(e)) => {
@@ -419,19 +429,23 @@ impl Endpoint {
                             );
                         }
                         Err(e) => {
-                            let mut g = first_err.lock().expect("first_err");
+                            let mut g = first_err.lock();
                             if g.is_none() {
                                 *g = Some(e);
                             }
                         }
                     }
-                });
+                };
+                std::thread::Builder::new()
+                    .name(format!("soccer-register-{i}"))
+                    .spawn_scoped(s, worker)
+                    .expect("spawn registration thread");
             }
 
             let mut deadline = Instant::now() + register_timeout;
             let mut last_progress = 0usize;
             let result = loop {
-                if let Some(e) = first_err.lock().expect("first_err").take() {
+                if let Some(e) = first_err.lock().take() {
                     break Err(e);
                 }
                 if done.load(Ordering::Acquire) == expected {
@@ -500,7 +514,6 @@ impl Endpoint {
         outcome?;
         let links = links
             .into_inner()
-            .expect("links")
             .into_iter()
             .enumerate()
             .map(|(i, l)| l.ok_or_else(|| format_err!("worker {i}: registration incomplete")))
@@ -541,7 +554,7 @@ enum Registration {
 /// the hello is [`Registration::Noise`].
 fn register_one(
     mut stream: Stream,
-    slots: &[Mutex<Option<WorkerSpec>>],
+    slots: &[RankedMutex<Option<WorkerSpec>>],
     claimed: &[AtomicBool],
 ) -> Result<Registration> {
     // a real worker speaks immediately: bound the hello tightly (in
@@ -577,7 +590,7 @@ fn register_one(
         ));
     }
     let index = index as usize;
-    let taken = slots[index].lock().expect("spec slot").take();
+    let taken = slots[index].lock().take();
     let Some(spec) = taken else {
         return Err(refuse(
             &mut stream,
@@ -626,10 +639,9 @@ fn register_one(
     // opts into bounding slow computation)
     stream.set_read_timeout(read_timeout())?;
     stream.set_write_timeout(None)?;
-    Ok(Registration::Registered(
-        index,
-        WorkerLink::registered(index, stream, sent, received),
-    ))
+    let link = WorkerLink::registered(index, stream, sent, received)
+        .map_err(|e| e.context(format!("worker {index}: spawning link I/O thread")))?;
+    Ok(Registration::Registered(index, link))
 }
 
 #[cfg(test)]

@@ -5,6 +5,7 @@
 
 use super::Transport;
 use crate::format_err;
+use crate::transport::wire::u32_header;
 use crate::util::error::Result;
 use std::sync::mpsc::{channel, Receiver, Sender};
 
@@ -39,14 +40,13 @@ impl InProcTransport {
 
 impl Transport for InProcTransport {
     fn send(&mut self, payload: &[u8]) -> Result<()> {
-        assert!(
-            payload.len() <= u32::MAX as usize,
-            "frame exceeds the u32 length prefix; shard the payload"
-        );
+        // checked conversion: a frame beyond the u32 length prefix is a
+        // WireError, the same refusal the socket transports give it
+        let len = u32_header(payload.len(), "inproc frame length")?;
         // the length prefix physically travels with the frame so the
         // channel and socket transports count the same bytes
         let mut frame = Vec::with_capacity(4 + payload.len());
-        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&len.to_le_bytes());
         frame.extend_from_slice(payload);
         self.sent += frame.len();
         self.tx

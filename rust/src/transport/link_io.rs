@@ -26,7 +26,8 @@
 use crate::format_err;
 use crate::transport::endpoint::{Stream, StreamBreaker};
 use crate::transport::protocol::{self, Op};
-use crate::util::error::Error;
+use crate::util::error::{Context, Error, Result};
+use crate::util::sync;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -102,8 +103,14 @@ pub(crate) struct LinkIo {
 impl LinkIo {
     /// Spawn the link's I/O thread, handing it ownership of the
     /// registered stream. `sent`/`received` seed the raw byte counters
-    /// with the handshake traffic that already crossed.
-    pub(crate) fn spawn(worker: usize, stream: Stream, sent: usize, received: usize) -> LinkIo {
+    /// with the handshake traffic that already crossed. Fails only if
+    /// the OS refuses the thread — the link is unusable without it.
+    pub(crate) fn spawn(
+        worker: usize,
+        stream: Stream,
+        sent: usize,
+        received: usize,
+    ) -> Result<LinkIo> {
         let shared = Arc::new(LinkShared {
             dead: AtomicBool::new(false),
             sent: AtomicUsize::new(sent),
@@ -116,15 +123,15 @@ impl LinkIo {
         let thread = std::thread::Builder::new()
             .name(format!("soccer-io-{worker}"))
             .spawn(move || io_loop(worker, stream, &thread_shared, &cmd_rx, &res_tx))
-            .expect("spawn link I/O thread");
-        LinkIo {
+            .with_context(|| format!("worker {worker}: spawning link I/O thread"))?;
+        Ok(LinkIo {
             worker,
             shared,
             cmd_tx: Some(cmd_tx),
             res_rx,
             breaker,
             thread: Some(thread),
-        }
+        })
     }
 
     pub(crate) fn is_dead(&self) -> bool {
@@ -154,6 +161,7 @@ impl LinkIo {
     /// [`LinkIo::submit`]. `owed` sizes the synthesized result should
     /// the thread have vanished underneath us.
     pub(crate) fn collect(&mut self, owed: usize) -> RoundResult {
+        sync::assert_no_locks_held("a link-round collect");
         match self.res_rx.recv() {
             Ok(r) => r,
             Err(_) => RoundResult {
@@ -382,8 +390,11 @@ fn run_round(
                             died = true;
                         }
                     }
-                } else if !sent[i] && send_err.is_some() {
-                    slots.push(send_err.take().expect("checked above"));
+                } else if !sent[i] {
+                    // the first unsent `Some` slot carries the real send
+                    // error; later unsent slots (and sent-but-undrainable
+                    // ones) fail as plain dead
+                    slots.push(send_err.take().unwrap_or_else(&dead_slot));
                 } else {
                     slots.push(dead_slot());
                 }

@@ -158,9 +158,15 @@ fn connect_tcp(hostport: &str) -> Result<Stream> {
             }
         }
         if Instant::now() >= deadline {
-            let e = last_err.expect("at least one connect attempt");
-            return Err(crate::util::error::Error::from(e)
-                .context(format!("worker: connecting to {hostport}")));
+            // addrs is non-empty (checked above), so at least one
+            // attempt ran and recorded its error
+            return Err(match last_err {
+                Some(e) => crate::util::error::Error::from(e)
+                    .context(format!("worker: connecting to {hostport}")),
+                None => crate::util::error::Error::msg(format!(
+                    "worker: connecting to {hostport}: no connect attempt completed"
+                )),
+            });
         }
         std::thread::sleep(Duration::from_millis(50));
     }
@@ -273,18 +279,19 @@ impl WorkerLink {
     /// with the handshake bytes (handshake traffic is raw-metered,
     /// never protocol-metered). This is the single construction point
     /// for every link — spawned and externally-launched alike — so
-    /// every link gets its thread here.
+    /// every link gets its thread here. Fails only if the OS refuses to
+    /// spawn the I/O thread.
     pub(crate) fn registered(
         id: usize,
         stream: Stream,
         sent: usize,
         received: usize,
-    ) -> WorkerLink {
-        WorkerLink {
+    ) -> Result<WorkerLink> {
+        Ok(WorkerLink {
             id,
-            io: LinkIo::spawn(id, stream, sent, received),
+            io: LinkIo::spawn(id, stream, sent, received)?,
             child: None,
-        }
+        })
     }
 
     /// Attach the child process behind this link (spawned launchers

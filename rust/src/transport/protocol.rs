@@ -143,6 +143,14 @@ pub enum Op {
 }
 
 impl Op {
+    /// The opcode's wire value. This is the one sanctioned `as u32` in
+    /// the protocol: a `repr(u32)` discriminant read, in range by
+    /// construction — not length/size data, which must go through the
+    /// checked `wire::u32_header` conversion instead.
+    pub fn code(self) -> u32 {
+        self as u32 // lint: allow(lossy-cast) repr(u32) discriminant, not wire-size data
+    }
+
     pub fn from_u32(v: u32) -> Option<Op> {
         Some(match v {
             1 => Op::LoadShard,
@@ -176,7 +184,7 @@ pub fn request(op: Op) -> FrameWriter {
 /// machine's id in the routing field, ready for the op's arguments.
 pub fn request_to(op: Op, machine: u32) -> FrameWriter {
     let mut w = FrameWriter::new();
-    w.put_u32(op as u32);
+    w.put_u32(op.code());
     w.put_u32(machine);
     w
 }
@@ -279,7 +287,7 @@ pub fn encode_load_shards(machines: &[MachineSpec]) -> Result<Vec<u8>> {
         bail!("load-shard batch: a worker must host at least one machine");
     }
     let mut w = FrameWriter::new();
-    w.put_u32(Op::LoadShard as u32);
+    w.put_u32(Op::LoadShard.code());
     w.put_u32(u32_header(machines.len(), "load-shard batch size")?);
     for s in machines {
         w.put_u64(s.id as u64);
@@ -475,7 +483,7 @@ pub fn serve(link: &mut dyn Transport, machines: &mut [Machine], engine: &dyn En
         }
         let mut r = FrameReader::new(&req);
         let op = r.get_u32();
-        if op == Op::Shutdown as u32 {
+        if op == Op::Shutdown.code() {
             return Ok(());
         }
         let route = r.get_u32();

@@ -10,4 +10,5 @@ pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod timer;

@@ -14,9 +14,10 @@
 //! creation. Dropping a [`Pool`] is graceful — already-queued jobs
 //! still run, then every thread is joined.
 
+use crate::util::sync::{RankedCondvar, RankedMutex, POOL_QUEUE, POOL_TICKET};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 
 /// An erased unit of work queued on the pool.
@@ -38,13 +39,13 @@ pub struct Ticket<R> {
 }
 
 struct TicketShared<R> {
-    result: Mutex<Option<std::thread::Result<R>>>,
-    done: Condvar,
+    result: RankedMutex<Option<std::thread::Result<R>>>,
+    done: RankedCondvar,
 }
 
 impl<R> TicketShared<R> {
     fn fill(&self, r: std::thread::Result<R>) {
-        *self.result.lock().expect("ticket slot") = Some(r);
+        *self.result.lock() = Some(r);
         self.done.notify_all();
     }
 }
@@ -52,8 +53,8 @@ impl<R> TicketShared<R> {
 impl<R> Ticket<R> {
     fn new() -> (Ticket<R>, Arc<TicketShared<R>>) {
         let shared = Arc::new(TicketShared {
-            result: Mutex::new(None),
-            done: Condvar::new(),
+            result: RankedMutex::new(POOL_TICKET, None),
+            done: RankedCondvar::new(),
         });
         (
             Ticket {
@@ -76,9 +77,9 @@ impl<R> Ticket<R> {
     /// unwind, or a still-running job would outlive the borrows it
     /// captured.
     fn wait(self) -> std::thread::Result<R> {
-        let mut slot = self.shared.result.lock().expect("ticket slot");
+        let mut slot = self.shared.result.lock();
         while slot.is_none() {
-            slot = self.shared.done.wait(slot).expect("ticket wait");
+            slot = self.shared.done.wait(slot);
         }
         slot.take().expect("checked above")
     }
@@ -90,8 +91,8 @@ struct PoolState {
 }
 
 struct PoolShared {
-    state: Mutex<PoolState>,
-    work_ready: Condvar,
+    state: RankedMutex<PoolState>,
+    work_ready: RankedCondvar,
 }
 
 /// A fixed-size pool of long-lived worker threads. Jobs queue in FIFO
@@ -104,11 +105,14 @@ pub struct Pool {
 impl Pool {
     pub fn new(threads: usize) -> Pool {
         let shared = Arc::new(PoolShared {
-            state: Mutex::new(PoolState {
-                queue: VecDeque::new(),
-                shutdown: false,
-            }),
-            work_ready: Condvar::new(),
+            state: RankedMutex::new(
+                POOL_QUEUE,
+                PoolState {
+                    queue: VecDeque::new(),
+                    shutdown: false,
+                },
+            ),
+            work_ready: RankedCondvar::new(),
         });
         let threads = (0..threads.max(1))
             .map(|i| {
@@ -151,12 +155,7 @@ impl Pool {
     }
 
     fn push(&self, job: Job) {
-        self.shared
-            .state
-            .lock()
-            .expect("pool state")
-            .queue
-            .push_back(job);
+        self.shared.state.lock().queue.push_back(job);
         self.shared.work_ready.notify_one();
     }
 
@@ -233,7 +232,7 @@ impl Pool {
 
 impl Drop for Pool {
     fn drop(&mut self) {
-        self.shared.state.lock().expect("pool state").shutdown = true;
+        self.shared.state.lock().shutdown = true;
         self.shared.work_ready.notify_all();
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -244,7 +243,7 @@ impl Drop for Pool {
 fn worker_loop(shared: &PoolShared) {
     loop {
         let job = {
-            let mut state = shared.state.lock().expect("pool state");
+            let mut state = shared.state.lock();
             loop {
                 if let Some(job) = state.queue.pop_front() {
                     break job;
@@ -252,7 +251,7 @@ fn worker_loop(shared: &PoolShared) {
                 if state.shutdown {
                     return;
                 }
-                state = shared.work_ready.wait(state).expect("pool wait");
+                state = shared.work_ready.wait(state);
             }
         };
         job();

@@ -1,0 +1,435 @@
+//! Ranked synchronization primitives — the only place in the crate
+//! allowed to construct a raw `Mutex`/`Condvar` (enforced by
+//! `soccer-lint`'s ranked-lock rule).
+//!
+//! Every lock in the tree carries a [`Rank`]: a small level from the
+//! table below plus a human-readable name. Checked builds (debug, or
+//! the `dbg-sync` feature) maintain a per-thread stack of held ranks
+//! and panic the moment a thread:
+//!
+//! - acquires a lock whose level is not **strictly greater** than every
+//!   level it already holds (lock-order inversion — the cycle that
+//!   becomes a deadlock under the right interleaving),
+//! - enters a blocking region ([`assert_no_locks_held`] — a socket
+//!   read/write, a link collect) while holding any ranked lock, or
+//! - blocks on a [`RankedCondvar`] while holding any ranked lock other
+//!   than the one the wait releases.
+//!
+//! Release builds without `dbg-sync` compile all bookkeeping away:
+//! [`RankedMutex<T>`] is layout- and cost-identical to `Mutex<T>`
+//! (pinned by the `lint_sync_release_is_plain_mutex` test).
+//!
+//! # Lock-rank table
+//!
+//! | rank | name               | protects                                  |
+//! |-----:|--------------------|-------------------------------------------|
+//! |   10 | registration-queue | endpoint accept-queue receiver             |
+//! |   20 | registration-spec  | endpoint per-worker spec slot              |
+//! |   30 | registration-links | endpoint assembled `WorkerLink` table      |
+//! |   40 | registration-error | endpoint first bring-up error              |
+//! |   50 | pool-queue         | `util::pool` job queue                     |
+//! |   60 | pool-ticket        | `util::pool` per-job result slot           |
+//!
+//! Levels are spaced by 10 so later PRs can slot new locks between
+//! existing ones without renumbering. Two locks may share a level only
+//! if no thread ever holds both at once (the per-index registration
+//! spec slots do this; the strict-increase rule then forbids holding
+//! two simultaneously, which is exactly the discipline we want).
+//!
+//! Poisoning: a panic while holding a ranked lock poisons it, and the
+//! next `lock()` panics with the lock's name instead of returning
+//! corrupt state — same behavior the call sites previously spelled as
+//! `.lock().expect(...)`, centralized here.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// A lock's place in the global acquisition order, plus its name for
+/// diagnostics. See the module-level table.
+#[derive(Clone, Copy, Debug)]
+pub struct Rank {
+    pub level: u16,
+    pub name: &'static str,
+}
+
+/// Endpoint accept-queue receiver (`transport::endpoint`).
+pub const REGISTRATION_QUEUE: Rank = Rank { level: 10, name: "registration-queue" };
+/// Endpoint per-worker spec slot (`transport::endpoint`).
+pub const REGISTRATION_SPEC: Rank = Rank { level: 20, name: "registration-spec" };
+/// Endpoint assembled worker-link table (`transport::endpoint`).
+pub const REGISTRATION_LINKS: Rank = Rank { level: 30, name: "registration-links" };
+/// Endpoint first bring-up error slot (`transport::endpoint`).
+pub const REGISTRATION_ERROR: Rank = Rank { level: 40, name: "registration-error" };
+/// Pool job queue (`util::pool`).
+pub const POOL_QUEUE: Rank = Rank { level: 50, name: "pool-queue" };
+/// Pool per-job result slot (`util::pool`).
+pub const POOL_TICKET: Rank = Rank { level: 60, name: "pool-ticket" };
+
+#[cfg(any(debug_assertions, feature = "dbg-sync"))]
+mod held {
+    //! The per-thread stack of ranks this thread currently holds.
+    //! Compiled only into checked builds.
+
+    use super::Rank;
+    use std::cell::RefCell;
+
+    thread_local! {
+        static HELD: RefCell<Vec<Rank>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// RAII record of one held rank: pushed on acquire, popped on drop.
+    /// Guards may drop out of order, so drop removes the *last* entry
+    /// with this level rather than assuming it is on top.
+    pub(super) struct HeldToken {
+        rank: Rank,
+    }
+
+    impl HeldToken {
+        /// Validate strict rank increase against everything already
+        /// held, then push. Panics on inversion.
+        pub(super) fn acquire(rank: Rank) -> HeldToken {
+            HELD.with(|held| {
+                let mut held = held.borrow_mut();
+                if let Some(blocker) = held.iter().find(|h| h.level >= rank.level) {
+                    panic!(
+                        "lock-order inversion: acquiring '{}' (rank {}) while holding \
+                         '{}' (rank {}); locks must be taken in strictly increasing \
+                         rank order (see util::sync lock-rank table)",
+                        rank.name, rank.level, blocker.name, blocker.level
+                    );
+                }
+                held.push(rank);
+            });
+            HeldToken { rank }
+        }
+
+        pub(super) fn rank(&self) -> Rank {
+            self.rank
+        }
+
+        /// Panic if this thread holds any ranked lock besides this one
+        /// (refuses condvar waits that keep unrelated locks pinned
+        /// across the block).
+        pub(super) fn assert_sole_holder(&self, what: &str) {
+            HELD.with(|held| {
+                let held = held.borrow();
+                if let Some(other) = held.iter().find(|h| h.level != self.rank.level) {
+                    panic!(
+                        "blocking on {what} while also holding '{}' (rank {}); a condvar \
+                         wait releases only its own lock, so every other ranked lock \
+                         would stay pinned across the block",
+                        other.name, other.level
+                    );
+                }
+            });
+        }
+    }
+
+    impl Drop for HeldToken {
+        fn drop(&mut self) {
+            HELD.with(|held| {
+                let mut held = held.borrow_mut();
+                if let Some(pos) = held.iter().rposition(|h| h.level == self.rank.level) {
+                    held.remove(pos);
+                }
+            });
+        }
+    }
+
+    /// Panic if the current thread holds any ranked lock at all.
+    pub(super) fn assert_empty(what: &str) {
+        HELD.with(|held| {
+            let held = held.borrow();
+            if let Some(h) = held.first() {
+                panic!(
+                    "entering blocking region ({what}) while holding ranked lock \
+                     '{}' (rank {}); finish the critical section before blocking",
+                    h.name, h.level
+                );
+            }
+        });
+    }
+}
+
+/// Assert the calling thread holds no ranked lock before it blocks
+/// indefinitely (socket read/write, link collect, child reap). Checked
+/// builds panic naming the offending lock; release builds compile to
+/// nothing.
+#[inline]
+pub fn assert_no_locks_held(what: &str) {
+    #[cfg(any(debug_assertions, feature = "dbg-sync"))]
+    held::assert_empty(what);
+    #[cfg(not(any(debug_assertions, feature = "dbg-sync")))]
+    let _ = what;
+}
+
+/// A `Mutex<T>` that participates in the global lock-rank order.
+/// `lock()` cannot return an error: poisoning panics with the lock's
+/// name, and rank violations panic in checked builds.
+pub struct RankedMutex<T> {
+    inner: Mutex<T>,
+    rank: RankHolder,
+}
+
+/// The rank metadata a lock keeps at runtime: the full [`Rank`] in
+/// checked builds, nothing in release builds (zero-overhead passthrough).
+struct RankHolder {
+    #[cfg(any(debug_assertions, feature = "dbg-sync"))]
+    rank: Rank,
+}
+
+impl RankHolder {
+    #[cfg_attr(
+        not(any(debug_assertions, feature = "dbg-sync")),
+        allow(unused_variables)
+    )]
+    const fn new(rank: Rank) -> RankHolder {
+        RankHolder {
+            #[cfg(any(debug_assertions, feature = "dbg-sync"))]
+            rank,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        #[cfg(any(debug_assertions, feature = "dbg-sync"))]
+        {
+            self.rank.name
+        }
+        #[cfg(not(any(debug_assertions, feature = "dbg-sync")))]
+        {
+            "ranked lock"
+        }
+    }
+}
+
+impl<T> RankedMutex<T> {
+    pub const fn new(rank: Rank, value: T) -> RankedMutex<T> {
+        RankedMutex {
+            inner: Mutex::new(value),
+            rank: RankHolder::new(rank),
+        }
+    }
+
+    /// Acquire the lock. Panics on lock-order inversion (checked
+    /// builds) and on poisoning (a previous holder panicked) — there is
+    /// no recoverable error path, matching how every call site treated
+    /// `Mutex::lock` before this layer existed.
+    pub fn lock(&self) -> RankedGuard<'_, T> {
+        #[cfg(any(debug_assertions, feature = "dbg-sync"))]
+        let token = held::HeldToken::acquire(self.rank.rank);
+        let guard = match self.inner.lock() {
+            Ok(g) => g,
+            Err(_) => panic!("lock '{}' poisoned: a holder panicked", self.rank.name()),
+        };
+        RankedGuard {
+            guard,
+            #[cfg(any(debug_assertions, feature = "dbg-sync"))]
+            token,
+        }
+    }
+
+    /// Consume the lock, returning the protected value. Panics if a
+    /// holder panicked (poisoning).
+    pub fn into_inner(self) -> T {
+        match self.inner.into_inner() {
+            Ok(v) => v,
+            Err(_) => panic!("lock '{}' poisoned: a holder panicked", self.rank.name()),
+        }
+    }
+}
+
+/// RAII guard for a [`RankedMutex`]; releases the lock and pops the
+/// thread's rank stack on drop.
+pub struct RankedGuard<'a, T> {
+    guard: MutexGuard<'a, T>,
+    #[cfg(any(debug_assertions, feature = "dbg-sync"))]
+    token: held::HeldToken,
+}
+
+impl<T> std::ops::Deref for RankedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> std::ops::DerefMut for RankedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+/// A `Condvar` paired with [`RankedMutex`] guards. Waiting pops the
+/// guard's rank for the duration of the block (the wait releases the
+/// lock) and re-pushes it on wake; checked builds refuse to wait while
+/// any *other* ranked lock is held.
+pub struct RankedCondvar {
+    inner: Condvar,
+}
+
+impl RankedCondvar {
+    pub const fn new() -> RankedCondvar {
+        RankedCondvar {
+            inner: Condvar::new(),
+        }
+    }
+
+    /// Block until notified, releasing (and on wake re-acquiring) the
+    /// guard's lock. Panics in checked builds if the thread holds any
+    /// ranked lock besides the guard's, and on poisoning.
+    #[cfg(any(debug_assertions, feature = "dbg-sync"))]
+    pub fn wait<'a, T>(&self, guard: RankedGuard<'a, T>) -> RankedGuard<'a, T> {
+        guard.token.assert_sole_holder("a condvar wait");
+        // Pop this thread's rank record while blocked: the wait
+        // releases the lock, so the thread holds nothing.
+        let RankedGuard { guard, token } = guard;
+        let rank = token.rank();
+        drop(token);
+        let inner = match self.inner.wait(guard) {
+            Ok(g) => g,
+            Err(_) => panic!("condvar wait: lock poisoned (a holder panicked)"),
+        };
+        RankedGuard {
+            guard: inner,
+            token: held::HeldToken::acquire(rank),
+        }
+    }
+
+    /// Block until notified, releasing (and on wake re-acquiring) the
+    /// guard's lock. Panics on poisoning.
+    #[cfg(not(any(debug_assertions, feature = "dbg-sync")))]
+    pub fn wait<'a, T>(&self, guard: RankedGuard<'a, T>) -> RankedGuard<'a, T> {
+        let RankedGuard { guard } = guard;
+        let inner = match self.inner.wait(guard) {
+            Ok(g) => g,
+            Err(_) => panic!("condvar wait: lock poisoned (a holder panicked)"),
+        };
+        RankedGuard { guard: inner }
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+impl Default for RankedCondvar {
+    fn default() -> RankedCondvar {
+        RankedCondvar::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The checked-build tests live here (and run under plain
+    // `cargo test -q`, which compiles with debug_assertions); the
+    // release zero-overhead test and the fixture-style integration
+    // tests live in `tests/lint.rs` so the `lint_` CI gate picks them
+    // up in release mode.
+
+    #[test]
+    fn ordered_acquisition_and_reuse() {
+        let low = RankedMutex::new(POOL_QUEUE, 1u32);
+        let high = RankedMutex::new(POOL_TICKET, 2u32);
+        {
+            let a = low.lock();
+            let b = high.lock();
+            assert_eq!(*a + *b, 3);
+        }
+        // released in full: both locks are re-acquirable in any order
+        *high.lock() += 1;
+        *low.lock() += 1;
+        assert_eq!(*low.lock(), 2);
+        assert_eq!(*high.lock(), 3);
+    }
+
+    #[cfg(any(debug_assertions, feature = "dbg-sync"))]
+    #[test]
+    fn inversion_panics_in_checked_builds() {
+        let t = std::thread::Builder::new()
+            .name("sync-inversion".into())
+            .spawn(|| {
+                let low = RankedMutex::new(POOL_QUEUE, ());
+                let high = RankedMutex::new(POOL_TICKET, ());
+                let _g = high.lock();
+                let _bad = low.lock(); // POOL_QUEUE < POOL_TICKET: inversion
+            })
+            .expect("spawn test thread");
+        let err = t.join().expect_err("inversion must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("lock-order inversion"), "payload: {msg}");
+        assert!(msg.contains("pool-queue") && msg.contains("pool-ticket"));
+    }
+
+    #[cfg(any(debug_assertions, feature = "dbg-sync"))]
+    #[test]
+    fn blocking_region_with_lock_held_panics() {
+        let t = std::thread::Builder::new()
+            .name("sync-blocking".into())
+            .spawn(|| {
+                let m = RankedMutex::new(REGISTRATION_LINKS, ());
+                let _g = m.lock();
+                assert_no_locks_held("a test socket read");
+            })
+            .expect("spawn test thread");
+        let err = t.join().expect_err("blocking with a lock held must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("blocking region"), "payload: {msg}");
+        assert!(msg.contains("registration-links"), "payload: {msg}");
+    }
+
+    #[test]
+    fn blocking_region_clean_after_release() {
+        let m = RankedMutex::new(REGISTRATION_SPEC, 7u8);
+        {
+            let g = m.lock();
+            assert_eq!(*g, 7);
+        }
+        // guard dropped: the rank stack is empty again
+        assert_no_locks_held("post-release check");
+    }
+
+    #[test]
+    fn condvar_wait_roundtrip() {
+        use std::sync::Arc;
+        let state = Arc::new((RankedMutex::new(POOL_TICKET, false), RankedCondvar::new()));
+        let waiter = {
+            let state = Arc::clone(&state);
+            std::thread::Builder::new()
+                .name("sync-waiter".into())
+                .spawn(move || {
+                    let (lock, cv) = &*state;
+                    let mut ready = lock.lock();
+                    while !*ready {
+                        ready = cv.wait(ready);
+                    }
+                    // after the wait the lock is held again and the rank
+                    // stack is coherent: a higher acquire still works
+                    assert_no_locks_held_after(ready);
+                })
+                .expect("spawn waiter")
+        };
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        {
+            let (lock, cv) = &*state;
+            *lock.lock() = true;
+            cv.notify_all();
+        }
+        waiter.join().expect("waiter clean exit");
+    }
+
+    fn assert_no_locks_held_after<T>(guard: RankedGuard<'_, T>) {
+        drop(guard);
+        assert_no_locks_held("post-wait check");
+    }
+}

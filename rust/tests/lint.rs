@@ -1,0 +1,251 @@
+//! The `soccer-lint` gate: the real tree must be clean, and each rule
+//! must fire on a fixture that violates it and stay quiet on the
+//! compliant twin. `cargo test --release lint_` is a CI gate next to
+//! `cargo run --bin soccer-lint`.
+
+use soccer::analysis::{lint_source, lint_tree, rules};
+use std::path::Path;
+
+fn rules_hit(path: &str, src: &str) -> Vec<&'static str> {
+    lint_source(path, src).into_iter().map(|v| v.rule).collect()
+}
+
+// ---- the real tree ----------------------------------------------------------
+
+#[test]
+fn lint_real_tree_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let violations = lint_tree(&src).expect("walk src/");
+    assert!(
+        violations.is_empty(),
+        "soccer-lint found violations in the tree:\n{}",
+        violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn lint_has_all_five_rules() {
+    let names: Vec<_> = rules::all().iter().map(|r| r.name).collect();
+    assert_eq!(
+        names,
+        [
+            "unsafe-safety",
+            "lossy-cast",
+            "no-panic",
+            "named-thread",
+            "ranked-lock"
+        ]
+    );
+}
+
+// ---- unsafe-safety ----------------------------------------------------------
+
+#[test]
+fn lint_unsafe_without_safety_fires() {
+    let src = "fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+    assert_eq!(rules_hit("core/matrix.rs", src), ["unsafe-safety"]);
+}
+
+#[test]
+fn lint_unsafe_with_safety_comment_passes() {
+    let above = "// SAFETY: caller guarantees p is valid\nfn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+    assert!(rules_hit("core/matrix.rs", above).is_empty());
+    let same_line = "fn f(p: *const u8) -> u8 { unsafe { *p } } // SAFETY: p valid\n";
+    assert!(rules_hit("core/matrix.rs", same_line).is_empty());
+    // a multi-line safety argument with attributes in between
+    let windowed = "// SAFETY: the borrow outlives the queue because the\n// wait loop below joins every ticket.\n#[allow(clippy::transmute_ptr_to_ptr)]\nfn g() { unsafe { work() } }\n";
+    assert!(rules_hit("util/pool.rs", windowed).is_empty());
+}
+
+#[test]
+fn lint_unsafe_beyond_code_does_not_fire() {
+    // the word in a comment or string is not an unsafe block
+    let src = "// unsafe is discussed here\nfn f() { let s = \"unsafe\"; }\n";
+    assert!(rules_hit("core/matrix.rs", src).is_empty());
+}
+
+// ---- lossy-cast -------------------------------------------------------------
+
+#[test]
+fn lint_lossy_cast_fires_in_transport_and_core() {
+    let src = "fn f(n: usize) -> u32 { n as u32 }\n";
+    assert_eq!(rules_hit("transport/frame.rs", src), ["lossy-cast"]);
+    assert_eq!(rules_hit("core/matrix.rs", src), ["lossy-cast"]);
+    let short = "fn f(n: usize) -> u16 { n as u16 }\n";
+    assert_eq!(rules_hit("transport/frame.rs", short), ["lossy-cast"]);
+}
+
+#[test]
+fn lint_lossy_cast_exemptions() {
+    let src = "fn f(n: usize) -> u32 { n as u32 }\n";
+    // wire.rs is the sanctioned home of the checked conversion
+    assert!(rules_hit("transport/wire.rs", src).is_empty());
+    // modules outside the wire paths are out of scope
+    assert!(rules_hit("util/rng.rs", src).is_empty());
+    // widening `as usize` on decode paths is fine
+    let widen = "fn f(n: u32) -> usize { n as usize }\n";
+    assert!(rules_hit("transport/frame.rs", widen).is_empty());
+    // `as u32` inside a #[cfg(test)] mod is test code
+    let test_mod = "#[cfg(test)]\nmod tests {\n    fn f(n: usize) -> u32 { n as u32 }\n}\n";
+    assert!(rules_hit("transport/frame.rs", test_mod).is_empty());
+}
+
+// ---- no-panic ---------------------------------------------------------------
+
+#[test]
+fn lint_no_panic_fires_in_data_plane() {
+    let src = "fn f(r: Result<u8, ()>) -> u8 { r.unwrap() }\n";
+    for path in [
+        "transport/link_io.rs",
+        "transport/channel.rs",
+        "transport/process.rs",
+    ] {
+        assert_eq!(rules_hit(path, src), ["no-panic"], "{path}");
+    }
+    let expect = "fn f(r: Result<u8, ()>) -> u8 { r.expect(\"boom\") }\n";
+    assert_eq!(rules_hit("transport/channel.rs", expect), ["no-panic"]);
+}
+
+#[test]
+fn lint_no_panic_exemptions() {
+    // the non-panicking combinators stay legal
+    let src = "fn f(r: Option<u8>) -> u8 { r.unwrap_or_else(|| 0) }\nfn g(r: Result<u8, u8>) -> u8 { r.unwrap_or_default() }\n";
+    assert!(rules_hit("transport/channel.rs", src).is_empty());
+    // other modules may unwrap (their panics stay on caller threads)
+    let unwrap = "fn f(r: Result<u8, ()>) -> u8 { r.unwrap() }\n";
+    assert!(rules_hit("transport/endpoint.rs", unwrap).is_empty());
+    assert!(rules_hit("util/pool.rs", unwrap).is_empty());
+}
+
+// ---- named-thread -----------------------------------------------------------
+
+#[test]
+fn lint_named_thread_fires_on_bare_spawn() {
+    let src = "fn f() { std::thread::spawn(|| {}); }\n";
+    assert_eq!(rules_hit("machines/fleet.rs", src), ["named-thread"]);
+    let imported = "fn f() { thread::spawn(|| {}); }\n";
+    assert_eq!(rules_hit("machines/fleet.rs", imported), ["named-thread"]);
+}
+
+#[test]
+fn lint_named_thread_exemptions() {
+    // Builder-spawned (named) and scope-bounded threads are fine
+    let src = "fn f() {\n    std::thread::Builder::new().name(\"x\".into()).spawn(|| {}).unwrap();\n    std::thread::scope(|s| { s.spawn(|| {}); });\n}\n";
+    assert!(rules_hit("machines/fleet.rs", src).is_empty());
+}
+
+// ---- ranked-lock ------------------------------------------------------------
+
+#[test]
+fn lint_ranked_lock_fires_on_raw_primitives() {
+    assert_eq!(
+        rules_hit("util/pool.rs", "fn f() { let m = std::sync::Mutex::new(0); }\n"),
+        ["ranked-lock"]
+    );
+    assert_eq!(
+        rules_hit("util/pool.rs", "fn f() { let c = Condvar::new(); }\n"),
+        ["ranked-lock"]
+    );
+    assert_eq!(
+        rules_hit("machines/fleet.rs", "fn f() { let l = RwLock::new(0); }\n"),
+        ["ranked-lock"]
+    );
+}
+
+#[test]
+fn lint_ranked_lock_exemptions() {
+    // the ranked wrappers themselves do not trip the token match
+    let src = "fn f() { let m = RankedMutex::new(POOL_QUEUE, 0); let c = RankedCondvar::new(); }\n";
+    assert!(rules_hit("util/pool.rs", src).is_empty());
+    // util/sync.rs is the one module allowed the raw primitives
+    let raw = "fn f() { let m = Mutex::new(0); let c = Condvar::new(); }\n";
+    assert!(rules_hit("util/sync.rs", raw).is_empty());
+}
+
+// ---- waivers & stripping ----------------------------------------------------
+
+#[test]
+fn lint_waiver_suppresses_same_and_previous_line() {
+    let same = "fn f(n: usize) -> u32 { n as u32 } // lint: allow(lossy-cast) bounded by k\n";
+    assert!(rules_hit("core/matrix.rs", same).is_empty());
+    let above = "// lint: allow(lossy-cast) bounded by k\nfn f(n: usize) -> u32 { n as u32 }\n";
+    assert!(rules_hit("core/matrix.rs", above).is_empty());
+    // a waiver for one rule does not silence another
+    let wrong = "fn f(n: usize) -> u32 { n as u32 } // lint: allow(no-panic) nope\n";
+    assert_eq!(rules_hit("core/matrix.rs", wrong), ["lossy-cast"]);
+}
+
+#[test]
+fn lint_strings_and_comments_do_not_trip_rules() {
+    let src = "fn f() {\n    let a = \"n as u32\";\n    // thread::spawn is banned\n    let b = \"Mutex::new(\";\n    /* .unwrap() in a block comment */\n}\n";
+    assert!(rules_hit("transport/channel.rs", src).is_empty());
+}
+
+// ---- sync layer: release builds are plain Mutex -----------------------------
+
+#[cfg(not(any(debug_assertions, feature = "dbg-sync")))]
+#[test]
+fn lint_sync_release_is_plain_mutex() {
+    use soccer::util::sync::{RankedCondvar, RankedMutex};
+    use std::sync::{Condvar, Mutex};
+    // the rank holder is zero-sized in release: the wrapper is
+    // layout-identical to the raw primitive it replaces
+    assert_eq!(
+        std::mem::size_of::<RankedMutex<u64>>(),
+        std::mem::size_of::<Mutex<u64>>()
+    );
+    assert_eq!(
+        std::mem::size_of::<RankedCondvar>(),
+        std::mem::size_of::<Condvar>()
+    );
+}
+
+// ---- sync layer: checked builds catch discipline violations -----------------
+
+#[cfg(any(debug_assertions, feature = "dbg-sync"))]
+mod checked_sync {
+    use soccer::util::sync::{RankedMutex, POOL_QUEUE, POOL_TICKET};
+
+    fn panic_message(f: impl FnOnce() + Send + 'static) -> String {
+        let r = std::thread::Builder::new()
+            .name("lint-sync-probe".into())
+            .spawn(f)
+            .expect("spawn probe thread")
+            .join();
+        match r {
+            Ok(()) => panic!("expected the probe to panic"),
+            Err(payload) => payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| (*s).to_owned()))
+                .unwrap_or_default(),
+        }
+    }
+
+    #[test]
+    fn lint_sync_inversion_is_caught_in_checked_builds() {
+        let msg = panic_message(|| {
+            let low = RankedMutex::new(POOL_QUEUE, ());
+            let high = RankedMutex::new(POOL_TICKET, ());
+            let _hi = high.lock();
+            let _lo = low.lock(); // wrong order: 60 held while taking 50
+        });
+        assert!(msg.contains("lock-order inversion"), "{msg}");
+        assert!(msg.contains("pool-queue") && msg.contains("pool-ticket"), "{msg}");
+    }
+
+    #[test]
+    fn lint_sync_blocking_region_with_lock_is_caught() {
+        let msg = panic_message(|| {
+            let m = RankedMutex::new(POOL_QUEUE, ());
+            let _g = m.lock();
+            soccer::util::sync::assert_no_locks_held("a lint-test socket read");
+        });
+        assert!(msg.contains("blocking region"), "{msg}");
+        assert!(msg.contains("pool-queue"), "{msg}");
+    }
+}
