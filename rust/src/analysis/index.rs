@@ -1,0 +1,313 @@
+//! A lightweight per-file item index over the lexer's token stream:
+//! function items (with signature and body token ranges), impl blocks,
+//! plus the two structural helpers the deep passes share — match-arm
+//! splitting and call-site extraction. Token-range based, so a pass
+//! can always map "this site" back to "the function it lives in".
+//!
+//! Deliberately an *index*, not an AST: it finds item boundaries by
+//! brace matching over stripped tokens, which is exact for the shapes
+//! this crate contains (no braces inside const generics or where
+//! clauses) and degrades to "no item recorded" rather than a wrong
+//! range elsewhere.
+
+use super::lexer::{TokKind, Token};
+use std::ops::Range;
+
+/// One `fn` item: its name, the 1-based line of the `fn` keyword, the
+/// signature token range (`fn` through the token before the body) and
+/// the body token range (between, not including, the outer braces).
+/// Trait-method declarations without a body get an empty body range.
+#[derive(Clone, Debug)]
+pub struct FnItem {
+    pub name: String,
+    pub line: usize,
+    pub sig: Range<usize>,
+    pub body: Range<usize>,
+}
+
+/// One `impl` block: the implemented type's name (best effort) and the
+/// body token range.
+#[derive(Clone, Debug)]
+pub struct ImplItem {
+    pub name: String,
+    pub line: usize,
+    pub body: Range<usize>,
+}
+
+/// The indexed items of one file.
+#[derive(Clone, Debug, Default)]
+pub struct FileIndex {
+    pub fns: Vec<FnItem>,
+    pub impls: Vec<ImplItem>,
+}
+
+impl FileIndex {
+    pub fn build(tokens: &[Token]) -> FileIndex {
+        let mut fns = Vec::new();
+        let mut impls = Vec::new();
+        for i in 0..tokens.len() {
+            if tokens[i].is_ident("fn") {
+                // `fn name …`; a bare `fn(…)` is a pointer type, skip
+                let Some(name_tok) = tokens.get(i + 1) else { continue };
+                if name_tok.kind != TokKind::Ident {
+                    continue;
+                }
+                let (sig_end, body) = item_body(tokens, i + 2);
+                fns.push(FnItem {
+                    name: name_tok.text.clone(),
+                    line: tokens[i].line,
+                    sig: i..sig_end,
+                    body,
+                });
+            } else if tokens[i].is_ident("impl") {
+                let (open, body) = item_body(tokens, i + 1);
+                if body.is_empty() && open == tokens.len() {
+                    continue;
+                }
+                impls.push(ImplItem {
+                    name: impl_name(tokens, open),
+                    line: tokens[i].line,
+                    body,
+                });
+            }
+        }
+        FileIndex { fns, impls }
+    }
+
+    /// The innermost fn item whose body contains token `idx` (nested
+    /// fns shadow their enclosing item; closures belong to the fn that
+    /// contains them).
+    pub fn enclosing_fn(&self, idx: usize) -> Option<&FnItem> {
+        self.fns
+            .iter()
+            .filter(|f| f.body.contains(&idx))
+            .min_by_key(|f| f.body.end - f.body.start)
+    }
+
+    /// All fn items with the given name (impl methods on different
+    /// types may share one).
+    pub fn fns_named<'a>(&'a self, name: &'a str) -> impl Iterator<Item = &'a FnItem> {
+        self.fns.iter().filter(move |f| f.name == name)
+    }
+}
+
+/// From `start`, find the item's body: scan to the first `{` or `;` at
+/// paren/bracket depth 0, then brace-match. Returns (index of the body
+/// open brace or the `;`, inner body token range).
+fn item_body(tokens: &[Token], start: usize) -> (usize, Range<usize>) {
+    let mut depth = 0i64;
+    let mut j = start;
+    while j < tokens.len() {
+        let t = &tokens[j];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => {
+                    let close = matching_brace(tokens, j);
+                    return (j, j + 1..close);
+                }
+                ";" if depth == 0 => return (j, j..j),
+                _ => {}
+            }
+        }
+        j += 1;
+    }
+    (j, j..j)
+}
+
+/// Index of the `}` matching the `{` at `open` (or the end of the
+/// stream if unbalanced, which stripped valid Rust never is).
+pub fn matching_brace(tokens: &[Token], open: usize) -> usize {
+    let mut depth = 0i64;
+    for (j, t) in tokens.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return j;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    tokens.len()
+}
+
+/// Best-effort implemented-type name: the identifier just before the
+/// body brace, skipping one trailing generic-argument group.
+fn impl_name(tokens: &[Token], open: usize) -> String {
+    let mut j = open;
+    while j > 0 {
+        j -= 1;
+        match tokens[j].kind {
+            TokKind::Punct if tokens[j].text == ">" => {
+                // skip back over `<…>`
+                let mut angle = 1i64;
+                while j > 0 && angle > 0 {
+                    j -= 1;
+                    match tokens[j].text.as_str() {
+                        ">" => angle += 1,
+                        "<" => angle -= 1,
+                        _ => {}
+                    }
+                }
+            }
+            TokKind::Ident if tokens[j].text != "where" => return tokens[j].text.clone(),
+            _ => {}
+        }
+    }
+    String::new()
+}
+
+/// One arm of a `match`: pattern tokens and body tokens (inner range;
+/// for a block body the braces are excluded).
+#[derive(Clone, Debug)]
+pub struct MatchArm {
+    pub pattern: Range<usize>,
+    pub body: Range<usize>,
+}
+
+/// Split the arms of the `match` whose keyword is at `match_idx`.
+/// Returns an empty vec if no body brace is found.
+pub fn match_arms(tokens: &[Token], match_idx: usize) -> Vec<MatchArm> {
+    // scrutinee runs to the first `{` at paren/bracket depth 0
+    let (open, body) = item_body(tokens, match_idx + 1);
+    if body.is_empty() {
+        return Vec::new();
+    }
+    let close = matching_brace(tokens, open);
+    let mut arms = Vec::new();
+    let mut j = open + 1;
+    while j < close {
+        // pattern: up to `=>` at depth 0 relative to the match body
+        let pat_start = j;
+        let mut depth = 0i64;
+        while j < close {
+            let t = &tokens[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" => depth -= 1,
+                    "=>" if depth == 0 => break,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        if j >= close {
+            break;
+        }
+        let pat = pat_start..j;
+        j += 1; // past `=>`
+        let body_range;
+        if tokens.get(j).is_some_and(|t| t.is_punct("{")) {
+            let end = matching_brace(tokens, j);
+            body_range = j + 1..end.min(close);
+            j = end + 1;
+        } else {
+            // expression arm: to `,` at depth 0 or the match close
+            let start = j;
+            let mut depth = 0i64;
+            while j < close {
+                let t = &tokens[j];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "(" | "[" | "{" => depth += 1,
+                        ")" | "]" | "}" => depth -= 1,
+                        "," if depth == 0 => break,
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            body_range = start..j;
+        }
+        // skip a trailing comma between arms
+        if tokens.get(j).is_some_and(|t| t.is_punct(",")) {
+            j += 1;
+        }
+        arms.push(MatchArm {
+            pattern: pat,
+            body: body_range,
+        });
+    }
+    arms
+}
+
+const KEYWORDS: [&str; 8] = ["if", "while", "for", "match", "return", "loop", "fn", "in"];
+
+/// Call sites within a token range: every `name(`-shaped pair (free
+/// calls, `path::name(…)` and `.name(…)` method calls alike), with the
+/// index of the name token. Macro invocations (`name!(…)`) and
+/// definitions (`fn name(`) are excluded.
+pub fn call_sites(tokens: &[Token], range: Range<usize>) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for j in range.start..range.end.min(tokens.len()).saturating_sub(1) {
+        let t = &tokens[j];
+        if t.kind != TokKind::Ident || KEYWORDS.contains(&t.text.as_str()) {
+            continue;
+        }
+        if !tokens[j + 1].is_punct("(") {
+            continue;
+        }
+        if j > 0 && tokens[j - 1].is_ident("fn") {
+            continue;
+        }
+        out.push((j, t.text.clone()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    #[test]
+    fn indexes_fns_and_bodies() {
+        let toks = lex("fn a(x: u32) -> u32 { x + 1 }\nfn b() { a(2); }\n");
+        let idx = FileIndex::build(&toks);
+        assert_eq!(idx.fns.len(), 2);
+        assert_eq!(idx.fns[0].name, "a");
+        assert_eq!(idx.fns[1].name, "b");
+        assert_eq!(idx.fns[1].line, 2);
+        let calls = call_sites(&toks, idx.fns[1].body.clone());
+        assert_eq!(calls.len(), 1);
+        assert_eq!(calls[0].1, "a");
+    }
+
+    #[test]
+    fn enclosing_fn_is_innermost() {
+        let toks = lex("fn outer() { fn inner() { g(); } inner(); }");
+        let idx = FileIndex::build(&toks);
+        let (g_idx, _) = call_sites(&toks, 0..toks.len())
+            .into_iter()
+            .find(|(_, n)| n == "g")
+            .unwrap();
+        assert_eq!(idx.enclosing_fn(g_idx).unwrap().name, "inner");
+    }
+
+    #[test]
+    fn match_arms_split_block_and_expr() {
+        let toks = lex("fn f(x: Op) { match x { Op::A => { g(); } Op::B | Op::C => h(), _ => (), } }");
+        let m = toks.iter().position(|t| t.is_ident("match")).unwrap();
+        let arms = match_arms(&toks, m);
+        assert_eq!(arms.len(), 3);
+        let pat0: Vec<&str> = toks[arms[0].pattern.clone()].iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(pat0, ["Op", "::", "A"]);
+        let body1: Vec<&str> = toks[arms[1].body.clone()].iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(body1, ["h", "(", ")"]);
+    }
+
+    #[test]
+    fn fn_pointer_types_are_not_items() {
+        let toks = lex("type F = fn(u32) -> u32;\nfn real() {}\n");
+        let idx = FileIndex::build(&toks);
+        assert_eq!(idx.fns.len(), 1);
+        assert_eq!(idx.fns[0].name, "real");
+    }
+}

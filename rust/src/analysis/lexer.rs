@@ -1,0 +1,189 @@
+//! A spanned token stream over *stripped* source text (the
+//! [`super::scanner`] pre-pass has already blanked comments, string
+//! and char literals, and `#[cfg(test)]` modules). That division of
+//! labor keeps the lexer tiny: by the time text reaches it, every
+//! remaining `'` is a lifetime and every remaining character is code.
+//!
+//! Tokens carry their byte span into the stripped text plus a 1-based
+//! line number, so pass diagnostics line up exactly with the raw file
+//! (the stripper preserves newlines). The span round-trip invariant —
+//! `&stripped[tok.start..tok.end] == tok.text` — is pinned by the
+//! `lint_lexer_*` tests over every file in the tree.
+
+/// Token classes the passes care about. Anything that is not an
+/// identifier, number or lifetime is a punct; the only multi-character
+/// puncts are the three the passes match structurally (`::`, `->`,
+/// `=>`) — every other operator is delivered one character at a time,
+/// which is all the pattern matching needs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Number,
+    Lifetime,
+    Punct,
+}
+
+/// One token of stripped source: kind, text, byte span and line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    /// Byte offset of the first byte in the stripped text.
+    pub start: usize,
+    /// Byte offset one past the last byte.
+    pub end: usize,
+    /// 1-based line number (newline count before `start`, plus one).
+    pub line: usize,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Tokenize stripped text. Whitespace separates tokens and is not
+/// represented. The stripped input is ASCII-safe where it matters
+/// (anything non-ASCII was inside a comment or literal and is already
+/// blanked), but stray multi-byte characters are still consumed
+/// soundly as single punct tokens.
+pub fn lex(stripped: &str) -> Vec<Token> {
+    let bytes = stripped.as_bytes();
+    let mut out = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let b = bytes[i];
+        if b == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if b.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        if is_ident_start(b) {
+            i += 1;
+            while i < bytes.len() && is_ident_cont(bytes[i]) {
+                i += 1;
+            }
+            out.push(token(stripped, TokKind::Ident, start, i, line));
+        } else if b.is_ascii_digit() {
+            // number: digits plus alphanumeric continuation (covers
+            // 0x1f, 1_000, 1e9, type-suffixed 7u32); a `.` joins only
+            // when followed by a digit so `1..n` stays three tokens
+            i += 1;
+            while i < bytes.len() {
+                let c = bytes[i];
+                if is_ident_cont(c) {
+                    i += 1;
+                } else if c == b'.'
+                    && bytes.get(i + 1).is_some_and(u8::is_ascii_digit)
+                {
+                    i += 2;
+                } else {
+                    break;
+                }
+            }
+            out.push(token(stripped, TokKind::Number, start, i, line));
+        } else if b == b'\'' {
+            // the stripper blanked every char literal, so a surviving
+            // quote introduces a lifetime: `'a`, `'static`, `'_`
+            i += 1;
+            while i < bytes.len() && is_ident_cont(bytes[i]) {
+                i += 1;
+            }
+            out.push(token(stripped, TokKind::Lifetime, start, i, line));
+        } else {
+            // punct; join the three structural two-char operators
+            let two = bytes.get(i + 1).map(|n| [b, *n]);
+            let joined = matches!(two, Some([b':', b':'] | [b'-', b'>'] | [b'=', b'>']));
+            i += if joined { 2 } else { utf8_len(b) };
+            out.push(token(stripped, TokKind::Punct, start, i.min(bytes.len()), line));
+        }
+    }
+    out
+}
+
+fn token(text: &str, kind: TokKind, start: usize, end: usize, line: usize) -> Token {
+    Token {
+        kind,
+        text: text[start..end].to_owned(),
+        start,
+        end,
+        line,
+    }
+}
+
+fn utf8_len(b: u8) -> usize {
+    match b {
+        _ if b < 0x80 => 1,
+        _ if b >= 0xF0 => 4,
+        _ if b >= 0xE0 => 3,
+        _ => 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_numbers_and_puncts() {
+        let toks = kinds("let x = foo::bar(1_000) -> Baz => 0x1f;");
+        let texts: Vec<&str> = toks.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(
+            texts,
+            ["let", "x", "=", "foo", "::", "bar", "(", "1_000", ")", "->", "Baz", "=>", "0x1f", ";"]
+        );
+        assert_eq!(toks[0].0, TokKind::Ident);
+        assert_eq!(toks[4].0, TokKind::Punct);
+        assert_eq!(toks[7].0, TokKind::Number);
+    }
+
+    #[test]
+    fn lifetimes_are_single_tokens() {
+        let toks = kinds("fn f<'a>(x: &'a str, y: &'static str) {}");
+        assert!(toks.contains(&(TokKind::Lifetime, "'a".into())));
+        assert!(toks.contains(&(TokKind::Lifetime, "'static".into())));
+    }
+
+    #[test]
+    fn ranges_do_not_eat_numbers() {
+        let texts: Vec<String> = kinds("for i in 0..n { a[i] = 1.5; }")
+            .into_iter()
+            .map(|(_, t)| t)
+            .collect();
+        assert!(texts.contains(&"0".to_string()));
+        assert!(texts.contains(&"1.5".to_string()));
+        assert!(!texts.contains(&"0..".to_string()));
+    }
+
+    #[test]
+    fn spans_round_trip_and_lines_count() {
+        let src = "fn f() {\n    g(1);\n}\n";
+        for t in lex(src) {
+            assert_eq!(&src[t.start..t.end], t.text, "span mismatch for {t:?}");
+        }
+        let g = lex(src).into_iter().find(|t| t.is_ident("g")).unwrap();
+        assert_eq!(g.line, 2);
+    }
+}

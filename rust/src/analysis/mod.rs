@@ -1,22 +1,41 @@
-//! `soccer-lint`: the in-tree invariant lint pass.
+//! `soccer-lint`: the in-tree invariant analysis engine.
 //!
-//! A zero-dependency, line/token-level static check that mechanically
-//! enforces the transport's correctness rules — the ones that were
-//! previously prose in README/ROADMAP and are now executable:
-//! checked wire-size conversions, panic-free data-plane modules,
-//! `SAFETY:`-documented unsafe, named threads, and ranked locks (see
-//! [`crate::util::sync`]). Run it via the `soccer-lint` binary or the
-//! `lint_` test suite; CI gates on both.
+//! A zero-dependency static checker that mechanically enforces the
+//! transport's correctness rules — the ones that were previously prose
+//! in README/ROADMAP and are now executable. v1 was a line/token
+//! scanner with five per-file rules; v2 layers a real (stripped-text)
+//! lexer, a per-file item index, and three *tree-level* passes on top:
 //!
-//! Deliberately not a parser: the [`scanner`] strips comments,
-//! string/char literals and `#[cfg(test)]` modules so the [`rules`]
-//! can match plain tokens, which keeps the whole pass ~500 lines and
-//! dependency-free. The cost is precision at the margins, which is
-//! what the `// lint: allow(<rule>) <reason>` waiver pragma is for.
+//! - the five per-file [`rules`] (checked wire casts, panic-free
+//!   data-plane, `SAFETY:`-documented unsafe, named threads, ranked
+//!   locks), unchanged;
+//! - [`passes`]: `lock-graph` (static rank-order checking over every
+//!   `RankedMutex` acquisition, with a one-level call summary),
+//!   `wire-symmetry` (opcode table / `from_u32` / dispatch-arm
+//!   consistency and request put↔get pairing), and `meter-pairing`
+//!   (every data-plane `send_frame`/`submit` site pairs with byte
+//!   accounting or is an explicit lifecycle path).
+//!
+//! The pipeline per file: [`scanner::FileView`] strips comments,
+//! string/char literals and `#[cfg(test)]` modules; [`lexer`]
+//! tokenizes the stripped text into spanned tokens; [`index`] finds
+//! fn/impl items, match arms and call sites. Rules see the stripped
+//! lines; passes see the whole tree's [`AnalysisUnit`]s. Still
+//! deliberately not a full parser — the cost is precision at the
+//! margins, which is what the `// lint: allow(<rule>) <reason>` waiver
+//! pragma is for (it works for pass names exactly as for rule names).
+//!
+//! Run via the `soccer-lint` binary (`--json` for the machine-readable
+//! report CI annotates from) or the `lint_` test suite; CI gates on
+//! both.
 
+pub mod index;
+pub mod lexer;
+pub mod passes;
 pub mod rules;
 pub mod scanner;
 
+use crate::util::json::Json;
 use scanner::FileView;
 use std::fmt;
 use std::path::{Path, PathBuf};
@@ -28,7 +47,7 @@ pub struct Violation {
     pub path: String,
     /// 1-based line number.
     pub line: usize,
-    /// Name of the violated rule.
+    /// Name of the violated rule or pass.
     pub rule: &'static str,
     pub message: String,
 }
@@ -43,8 +62,48 @@ impl fmt::Display for Violation {
     }
 }
 
+/// Everything the passes know about one file: the stripped view (for
+/// waivers and raw-line context), the stripped text, its token stream
+/// and item index. Built once per file, shared by every pass.
+pub struct AnalysisUnit {
+    /// Root-relative `/`-separated path; drives rule and pass scoping.
+    pub path: String,
+    pub view: FileView,
+    /// The stripped source ([`FileView::code_text`]) the tokens span.
+    pub stripped: String,
+    pub tokens: Vec<lexer::Token>,
+    pub index: index::FileIndex,
+}
+
+impl AnalysisUnit {
+    pub fn new(path: &str, source: &str) -> AnalysisUnit {
+        let view = FileView::new(source);
+        let stripped = view.code_text();
+        let tokens = lexer::lex(&stripped);
+        let index = index::FileIndex::build(&tokens);
+        AnalysisUnit {
+            path: path.to_owned(),
+            view,
+            stripped,
+            tokens,
+            index,
+        }
+    }
+}
+
+/// The names of every rule and pass, in reporting order — the set a
+/// `--pass` selection is validated against.
+pub fn all_names() -> Vec<&'static str> {
+    rules::all()
+        .iter()
+        .map(|r| r.name)
+        .chain(passes::all().iter().map(|p| p.name))
+        .collect()
+}
+
 /// Lint one file's source under its root-relative path (`/`-separated,
-/// e.g. `transport/channel.rs`). The path drives rule scoping.
+/// e.g. `transport/channel.rs`) with the five per-file rules. The
+/// tree-level passes need the whole unit set — use [`lint_sources`].
 pub fn lint_source(rel_path: &str, source: &str) -> Vec<Violation> {
     let view = FileView::new(source);
     let mut out = Vec::new();
@@ -55,25 +114,76 @@ pub fn lint_source(rel_path: &str, source: &str) -> Vec<Violation> {
     out
 }
 
+/// Run the full engine — per-file rules plus the tree-level passes —
+/// over a set of (path, source) files. This is what [`lint_tree`] and
+/// the fixture tests share.
+pub fn lint_sources(files: &[(&str, &str)]) -> Vec<Violation> {
+    let units: Vec<AnalysisUnit> = files
+        .iter()
+        .map(|(path, source)| AnalysisUnit::new(path, source))
+        .collect();
+    let mut out = Vec::new();
+    for unit in &units {
+        for rule in rules::all() {
+            out.extend((rule.check)(rule, &unit.path, &unit.view));
+        }
+    }
+    for pass in passes::all() {
+        out.extend((pass.check)(pass, &units));
+    }
+    out.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    out
+}
+
 /// Lint every `*.rs` file under `root` (typically `src/`), in sorted
 /// path order so output and exit status are deterministic.
 pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Violation>> {
     let mut files = Vec::new();
     collect_rs_files(root, &mut files)?;
     files.sort();
-    let mut out = Vec::new();
-    for file in files {
+    let mut sources = Vec::new();
+    for file in &files {
         let rel = file
             .strip_prefix(root)
-            .unwrap_or(&file)
+            .unwrap_or(file)
             .components()
             .map(|c| c.as_os_str().to_string_lossy())
             .collect::<Vec<_>>()
             .join("/");
-        let source = std::fs::read_to_string(&file)?;
-        out.extend(lint_source(&rel, &source));
+        sources.push((rel, std::fs::read_to_string(file)?));
     }
-    Ok(out)
+    let borrowed: Vec<(&str, &str)> = sources
+        .iter()
+        .map(|(p, s)| (p.as_str(), s.as_str()))
+        .collect();
+    Ok(lint_sources(&borrowed))
+}
+
+/// The machine-readable report `soccer-lint --json` emits and CI
+/// consumes: `{"version":1,"passes":[…],"violations":[{"path","line",
+/// "rule","message"}…],"count":N}`.
+pub fn report_json(violations: &[Violation]) -> String {
+    let passes = Json::Arr(all_names().into_iter().map(Json::str).collect());
+    let items = Json::Arr(
+        violations
+            .iter()
+            .map(|v| {
+                Json::obj(vec![
+                    ("path", Json::str(v.path.clone())),
+                    ("line", Json::num(v.line as f64)),
+                    ("rule", Json::str(v.rule)),
+                    ("message", Json::str(v.message.clone())),
+                ])
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("passes", passes),
+        ("violations", items),
+        ("count", Json::num(violations.len() as f64)),
+    ])
+    .to_string()
 }
 
 fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
@@ -110,5 +220,18 @@ mod tests {
     fn out_of_scope_path_is_clean() {
         let src = "fn f() { let x = n as u32; }\n";
         assert!(lint_source("util/rng.rs", src).is_empty());
+    }
+
+    #[test]
+    fn report_json_is_valid_and_complete() {
+        let v = lint_source("transport/frame.rs", "fn f() { let x = n as u32; }\n");
+        let parsed = Json::parse(&report_json(&v)).expect("valid json");
+        assert_eq!(parsed.get("version").and_then(Json::as_usize), Some(1));
+        assert_eq!(parsed.get("count").and_then(Json::as_usize), Some(1));
+        let passes = parsed.get("passes").and_then(Json::as_arr).unwrap();
+        assert_eq!(passes.len(), all_names().len());
+        let items = parsed.get("violations").and_then(Json::as_arr).unwrap();
+        assert_eq!(items[0].get("rule").and_then(Json::as_str), Some("lossy-cast"));
+        assert_eq!(items[0].get("line").and_then(Json::as_usize), Some(1));
     }
 }

@@ -1,0 +1,450 @@
+//! `lock-graph`: static checking of the ranked-lock discipline that
+//! `util::sync` enforces at runtime in checked builds only. The pass
+//! proves, over the stripped token streams of the whole tree, that no
+//! statically reachable acquisition order can invert the rank table:
+//!
+//! 1. Parse the rank table from `util/sync.rs` (the `pub const NAME:
+//!    Rank = Rank { level: N, … }` declarations are the machine-checkable
+//!    source of truth, and `RANK_TABLE` must list every one of them).
+//! 2. Map lock bindings to ranks from every `RankedMutex::new(RANK, …)`
+//!    site — `let` bindings and struct-field initializers alike. A
+//!    constructor whose rank is not a table const is itself a violation.
+//! 3. Walk each function body with a scope tracker: `let`-bound guards
+//!    are held to the end of their block (or an explicit `drop(guard)`),
+//!    temporary guards to the end of their statement. Acquiring a rank
+//!    ≤ any held rank is a violation — the same strict-increase rule
+//!    the runtime enforces.
+//! 4. One-level call summary: each function's *directly* acquired ranks
+//!    are known, so calling `f` while holding rank r when `f` acquires
+//!    a rank ≤ r is also flagged, one call level deep.
+//!
+//! Approximations are conservative where they must be (closures and
+//! `if let` temporaries count as held through their block, matching
+//! the 2021-edition temporary scopes this crate compiles under) and
+//! permissive where tracking is impossible (a `.lock()` on a receiver
+//! the binding map cannot name is ignored rather than guessed).
+
+use super::super::{AnalysisUnit, Violation};
+use super::{violation, Pass};
+use crate::analysis::lexer::{TokKind, Token};
+use std::collections::BTreeMap;
+
+const SYNC_PATH: &str = "util/sync.rs";
+
+/// Names that look like calls but are control flow or handled
+/// specially by the tracker.
+const CALL_SKIP: [&str; 10] = [
+    "if", "while", "for", "match", "return", "loop", "fn", "in", "drop", "lock",
+];
+
+struct RankDef {
+    level: u64,
+    line: usize,
+}
+
+#[derive(Clone)]
+struct HeldLock {
+    level: u64,
+    rank_name: String,
+    /// `let`-bound guard variable, if any (enables `drop(g)` release).
+    guard: Option<String>,
+    /// Brace depth at acquisition; the lock dies when the enclosing
+    /// block closes (and, for temporaries, at the statement `;`).
+    depth: i64,
+    temp: bool,
+}
+
+pub(super) fn check(pass: &Pass, units: &[AnalysisUnit]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let Some(sync) = units.iter().find(|u| u.path == SYNC_PATH) else {
+        return out;
+    };
+    let table = rank_table(sync);
+    if table.is_empty() {
+        return out;
+    }
+    check_rank_table_const(pass, sync, &table, &mut out);
+
+    // ---- bindings: lock name -> rank, tree-wide -------------------------
+    let mut bindings: BTreeMap<String, Option<(u64, String)>> = BTreeMap::new();
+    for unit in units.iter().filter(|u| u.path != SYNC_PATH) {
+        for (j, rank_ident, line) in ctor_sites(&unit.tokens) {
+            let Some(def) = rank_ident.as_deref().and_then(|r| table.get(r)) else {
+                let shown = rank_ident.as_deref().unwrap_or("<expression>");
+                out.extend(violation(
+                    pass,
+                    unit,
+                    line,
+                    format!(
+                        "`RankedMutex::new` rank `{shown}` is not a const from the \
+                         util::sync rank table"
+                    ),
+                ));
+                continue;
+            };
+            let rank_name = rank_ident.unwrap_or_default();
+            if let Some(name) = binding_name(&unit.tokens, j) {
+                let entry = (def.level, rank_name);
+                match bindings.get(&name) {
+                    None => {
+                        bindings.insert(name, Some(entry));
+                    }
+                    Some(Some(prev)) if prev.0 != entry.0 => {
+                        // same variable name bound to two ranks across the
+                        // tree: ambiguous, stop tracking it
+                        bindings.insert(name, None);
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    let rank_of = |name: &str| -> Option<(u64, String)> {
+        bindings.get(name).cloned().flatten()
+    };
+
+    // ---- one-level call summary: fn name -> directly acquired ranks -----
+    let mut summary: BTreeMap<String, Vec<(u64, String)>> = BTreeMap::new();
+    for unit in units.iter().filter(|u| u.path != SYNC_PATH) {
+        for f in &unit.index.fns {
+            for j in f.body.clone() {
+                if !is_lock_call(&unit.tokens, j) {
+                    continue;
+                }
+                if let Some((level, name)) = lock_base(&unit.tokens, j).and_then(|b| rank_of(&b)) {
+                    let ranks = summary.entry(f.name.clone()).or_default();
+                    if !ranks.iter().any(|(l, _)| *l == level) {
+                        ranks.push((level, name));
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- per-function scope-tracked scan --------------------------------
+    for unit in units.iter().filter(|u| u.path != SYNC_PATH) {
+        for f in &unit.index.fns {
+            scan_fn(pass, unit, f, &rank_of, &summary, &mut out);
+        }
+    }
+    out
+}
+
+/// The ranks declared in `util/sync.rs` as
+/// `const NAME: Rank = Rank { level: N, … }`.
+fn rank_table(sync: &AnalysisUnit) -> BTreeMap<String, RankDef> {
+    let t = &sync.tokens;
+    let mut out = BTreeMap::new();
+    for j in 0..t.len().saturating_sub(9) {
+        if t[j].is_ident("const")
+            && t[j + 1].kind == TokKind::Ident
+            && t[j + 2].is_punct(":")
+            && t[j + 3].is_ident("Rank")
+            && t[j + 4].is_punct("=")
+            && t[j + 5].is_ident("Rank")
+            && t[j + 6].is_punct("{")
+            && t[j + 7].is_ident("level")
+            && t[j + 8].is_punct(":")
+            && t[j + 9].kind == TokKind::Number
+        {
+            if let Some(level) = parse_level(&t[j + 9].text) {
+                out.insert(
+                    t[j + 1].text.clone(),
+                    RankDef {
+                        level,
+                        line: t[j].line,
+                    },
+                );
+            }
+        }
+    }
+    out
+}
+
+fn parse_level(text: &str) -> Option<u64> {
+    let digits: String = text.chars().take_while(char::is_ascii_digit).collect();
+    digits.parse().ok()
+}
+
+/// If `RANK_TABLE` exists in sync.rs, every declared rank const must be
+/// listed in it — the table is the machine-checkable source of truth.
+fn check_rank_table_const(
+    pass: &Pass,
+    sync: &AnalysisUnit,
+    table: &BTreeMap<String, RankDef>,
+    out: &mut Vec<Violation>,
+) {
+    let t = &sync.tokens;
+    let Some(at) = (0..t.len().saturating_sub(1))
+        .find(|&j| t[j].is_ident("const") && t[j + 1].is_ident("RANK_TABLE"))
+    else {
+        return;
+    };
+    let mut listed = Vec::new();
+    for tok in t.iter().skip(at) {
+        if tok.is_punct(";") {
+            break;
+        }
+        if tok.kind == TokKind::Ident && table.contains_key(&tok.text) {
+            listed.push(tok.text.clone());
+        }
+    }
+    for (name, def) in table {
+        if !listed.iter().any(|l| l == name) {
+            out.extend(violation(
+                pass,
+                sync,
+                def.line,
+                format!("rank const `{name}` missing from sync::RANK_TABLE"),
+            ));
+        }
+    }
+}
+
+/// Every `RankedMutex::new(…` site: (index of the `RankedMutex` token,
+/// the rank argument's const name if it is a path/ident, line).
+fn ctor_sites(t: &[Token]) -> Vec<(usize, Option<String>, usize)> {
+    let mut out = Vec::new();
+    for j in 0..t.len().saturating_sub(3) {
+        if !(t[j].is_ident("RankedMutex")
+            && t[j + 1].is_punct("::")
+            && t[j + 2].is_ident("new")
+            && t[j + 3].is_punct("("))
+        {
+            continue;
+        }
+        // rank argument: the last segment of a `path::to::CONST`; an
+        // inline `Rank { … }` literal or non-ident reports as None
+        let mut k = j + 4;
+        while t.get(k).is_some_and(|x| x.kind == TokKind::Ident)
+            && t.get(k + 1).is_some_and(|x| x.is_punct("::"))
+        {
+            k += 2;
+        }
+        let arg = t.get(k).and_then(|x| {
+            (x.kind == TokKind::Ident
+                && x.text != "Rank"
+                && t.get(k + 1).is_some_and(|n| n.is_punct(",") || n.is_punct(")")))
+            .then(|| x.text.clone())
+        });
+        out.push((j, arg, t[j].line));
+    }
+    out
+}
+
+/// The variable or struct field a `RankedMutex::new` at token `j`
+/// initializes: `field: RankedMutex::new(…)` or, scanning back within
+/// the statement, `let [mut] name = …`.
+fn binding_name(t: &[Token], j: usize) -> Option<String> {
+    if j >= 2 && t[j - 1].is_punct(":") && t[j - 2].kind == TokKind::Ident {
+        return Some(t[j - 2].text.clone());
+    }
+    let mut k = j;
+    while k > 0 {
+        k -= 1;
+        let tok = &t[k];
+        if tok.is_punct(";") {
+            return None;
+        }
+        if tok.is_ident("let") {
+            let mut n = k + 1;
+            if t.get(n).is_some_and(|x| x.is_ident("mut")) {
+                n += 1;
+            }
+            let name = t.get(n)?;
+            return (name.kind == TokKind::Ident
+                && t.get(n + 1).is_some_and(|x| x.is_punct("=") || x.is_punct(":")))
+            .then(|| name.text.clone());
+        }
+        if j - k > 40 {
+            return None;
+        }
+    }
+    None
+}
+
+/// Is token `j` the `lock` of a `.lock(` method call?
+fn is_lock_call(t: &[Token], j: usize) -> bool {
+    t[j].is_ident("lock")
+        && j >= 1
+        && t[j - 1].is_punct(".")
+        && t.get(j + 1).is_some_and(|x| x.is_punct("("))
+}
+
+/// The receiver name of a `.lock()` call: the identifier before the
+/// dot, skipping one trailing index group (`slots[i].lock()`).
+fn lock_base(t: &[Token], j: usize) -> Option<String> {
+    let mut k = j.checked_sub(2)?;
+    if t[k].is_punct("]") {
+        let mut depth = 1i64;
+        while depth > 0 {
+            k = k.checked_sub(1)?;
+            match t[k].text.as_str() {
+                "]" => depth += 1,
+                "[" => depth -= 1,
+                _ => {}
+            }
+        }
+        k = k.checked_sub(1)?;
+    }
+    (t[k].kind == TokKind::Ident).then(|| t[k].text.clone())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn scan_fn(
+    pass: &Pass,
+    unit: &AnalysisUnit,
+    f: &crate::analysis::index::FnItem,
+    rank_of: &dyn Fn(&str) -> Option<(u64, String)>,
+    summary: &BTreeMap<String, Vec<(u64, String)>>,
+    out: &mut Vec<Violation>,
+) {
+    let t = &unit.tokens;
+    // nested fn items get their own scan; skip their ranges here
+    let nested: Vec<std::ops::Range<usize>> = unit
+        .index
+        .fns
+        .iter()
+        .filter(|g| g.body.start > f.body.start && g.body.end < f.body.end)
+        .map(|g| g.sig.start..g.body.end + 1)
+        .collect();
+
+    let mut held: Vec<HeldLock> = Vec::new();
+    let mut depth = 0i64;
+    let mut j = f.body.start;
+    while j < f.body.end {
+        if let Some(r) = nested.iter().find(|r| r.contains(&j)) {
+            j = r.end;
+            continue;
+        }
+        let tok = &t[j];
+        if tok.kind == TokKind::Punct {
+            match tok.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    held.retain(|h| h.depth <= depth);
+                }
+                ";" => held.retain(|h| !(h.temp && h.depth >= depth)),
+                _ => {}
+            }
+            j += 1;
+            continue;
+        }
+        // drop(guard): explicit early release
+        if tok.is_ident("drop")
+            && t.get(j + 1).is_some_and(|x| x.is_punct("("))
+            && t.get(j + 2).is_some_and(|x| x.kind == TokKind::Ident)
+            && t.get(j + 3).is_some_and(|x| x.is_punct(")"))
+        {
+            let name = &t[j + 2].text;
+            held.retain(|h| h.guard.as_deref() != Some(name));
+            j += 4;
+            continue;
+        }
+        // condvar-shaped wait: `.wait(guard)` with at least one argument
+        if tok.is_ident("wait")
+            && j >= 1
+            && t[j - 1].is_punct(".")
+            && t.get(j + 1).is_some_and(|x| x.is_punct("("))
+            && t.get(j + 2).is_some_and(|x| !x.is_punct(")"))
+            && held.len() >= 2
+        {
+            let other = &held[0];
+            out.extend(violation(
+                pass,
+                unit,
+                tok.line,
+                format!(
+                    "condvar wait while also holding '{}' (rank {}) — a wait releases \
+                     only its own lock",
+                    other.rank_name, other.level
+                ),
+            ));
+        }
+        // acquisition: `.lock()` on a rank-bound receiver
+        if is_lock_call(t, j) {
+            if let Some((level, rank_name)) = lock_base(t, j).and_then(|b| rank_of(&b)) {
+                for h in &held {
+                    if h.level >= level {
+                        out.extend(violation(
+                            pass,
+                            unit,
+                            tok.line,
+                            format!(
+                                "acquiring '{}' (rank {}) while holding '{}' (rank {}) — \
+                                 lock ranks must strictly increase",
+                                rank_name, level, h.rank_name, h.level
+                            ),
+                        ));
+                        break;
+                    }
+                }
+                let guard = binding_name_for_lock(t, f.body.start, j);
+                held.push(HeldLock {
+                    level,
+                    rank_name,
+                    temp: guard.is_none(),
+                    guard,
+                    depth,
+                });
+            }
+            j += 1;
+            continue;
+        }
+        // one-level call summary: calling a fn that directly acquires a
+        // rank ≤ something we hold
+        if !held.is_empty()
+            && tok.kind == TokKind::Ident
+            && t.get(j + 1).is_some_and(|x| x.is_punct("("))
+            && !CALL_SKIP.contains(&tok.text.as_str())
+            && tok.text != f.name
+        {
+            if let Some(ranks) = summary.get(&tok.text) {
+                'check: for (level, rank_name) in ranks {
+                    for h in &held {
+                        if h.level >= *level {
+                            out.extend(violation(
+                                pass,
+                                unit,
+                                tok.line,
+                                format!(
+                                    "call to `{}` (directly acquires '{}', rank {}) while \
+                                     holding '{}' (rank {})",
+                                    tok.text, rank_name, level, h.rank_name, h.level
+                                ),
+                            ));
+                            break 'check;
+                        }
+                    }
+                }
+            }
+        }
+        j += 1;
+    }
+}
+
+/// Guard binding for a `.lock()` at token `j`: scan back to the start
+/// of the statement for `let [mut] name =`. `None` means the guard is
+/// a temporary (held to the end of its statement).
+fn binding_name_for_lock(t: &[Token], body_start: usize, j: usize) -> Option<String> {
+    let mut k = j;
+    while k > body_start {
+        k -= 1;
+        let tok = &t[k];
+        if tok.kind == TokKind::Punct && matches!(tok.text.as_str(), ";" | "{" | "}") {
+            return None;
+        }
+        if tok.is_ident("let") {
+            let mut n = k + 1;
+            if t.get(n).is_some_and(|x| x.is_ident("mut")) {
+                n += 1;
+            }
+            let name = t.get(n)?;
+            return (name.kind == TokKind::Ident
+                && t.get(n + 1).is_some_and(|x| x.is_punct("=")))
+            .then(|| name.text.clone());
+        }
+    }
+    None
+}

@@ -1,0 +1,116 @@
+//! `meter-pairing`: every data-plane frame emission must be metered.
+//! The transport's byte accounting (`up_bytes`/`down_bytes` on the
+//! channel, `sent_bytes` on round results) is how round-size claims in
+//! the paper reproduction are audited, so a `send_frame`/`submit` site
+//! that skips accounting silently under-reports wire traffic.
+//!
+//! A site passes if its enclosing function visibly accounts bytes
+//! (touches a counter field or a `+=`-updated `sent`/`received`
+//! tally), or is an explicit lifecycle/handshake path — `LoadShard`,
+//! `Reset`, `Reseed`, `Shutdown` frames and the registration
+//! handshake are deliberately unmetered, they are not round traffic
+//! (see `WiredChannel::control`). Everything else fires and needs
+//! either accounting or a reviewed `// lint: allow(meter-pairing)`
+//! waiver.
+
+use super::super::{AnalysisUnit, Violation};
+use super::{violation, Pass};
+use crate::analysis::lexer::TokKind;
+
+/// Counter fields and calls that count as byte accounting.
+const ACCOUNTING_IDENTS: [&str; 6] = [
+    "up_bytes",
+    "down_bytes",
+    "sent_bytes",
+    "bytes_sent",
+    "fetch_add",
+    "CommStats",
+];
+
+/// `sent += …` / `received += …` style tallies.
+const TALLY_IDENTS: [&str; 2] = ["sent", "received"];
+
+/// Ops whose frames are lifecycle control traffic, not round data.
+const LIFECYCLE_OPS: [&str; 4] = ["LoadShard", "Reset", "Reseed", "Shutdown"];
+
+/// Handshake encoders: a function building these frames is part of
+/// registration, which happens once per worker, outside any round.
+const HANDSHAKE_ENCODERS: [&str; 3] = ["encode_hello", "encode_load_shards", "encode_live_ack"];
+
+/// Functions that are the lifecycle seam itself: `control` is the
+/// deliberately unmetered one-op round (see transport/channel.rs).
+const UNMETERED_LIFECYCLE_FNS: [&str; 1] = ["control"];
+
+pub(super) fn check(pass: &Pass, units: &[AnalysisUnit]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for unit in units {
+        let t = &unit.tokens;
+        for j in 1..t.len() {
+            let is_site = t[j - 1].is_punct(".")
+                && t.get(j + 1).is_some_and(|x| x.is_punct("("))
+                && (t[j].is_ident("send_frame")
+                    || (t[j].is_ident("submit") && unit.path.starts_with("transport/")));
+            if !is_site {
+                continue;
+            }
+            let Some(f) = unit.index.enclosing_fn(j) else {
+                continue;
+            };
+            // the primitives themselves, and pure pass-throughs named
+            // after them (`WorkerLink::submit` → `LinkIo::submit`), are
+            // metered at their call sites, not inside
+            if f.name == "send_frame" || f.name == "submit" {
+                continue;
+            }
+            if fn_is_metered_or_lifecycle(unit, f) {
+                continue;
+            }
+            out.extend(violation(
+                pass,
+                unit,
+                t[j].line,
+                format!(
+                    "`{}` in fn `{}` has no byte accounting and is not a \
+                     lifecycle/handshake path",
+                    t[j].text, f.name
+                ),
+            ));
+        }
+    }
+    out
+}
+
+fn fn_is_metered_or_lifecycle(unit: &AnalysisUnit, f: &crate::analysis::index::FnItem) -> bool {
+    if UNMETERED_LIFECYCLE_FNS.contains(&f.name.as_str()) {
+        return true;
+    }
+    let t = &unit.tokens;
+    for j in f.body.clone() {
+        if t[j].kind != TokKind::Ident {
+            continue;
+        }
+        let text = t[j].text.as_str();
+        if ACCOUNTING_IDENTS.contains(&text) {
+            return true;
+        }
+        // `sent += …`: the endpoint's own tallies (`+=` lexes as two puncts)
+        if TALLY_IDENTS.contains(&text)
+            && t.get(j + 1).is_some_and(|x| x.is_punct("+"))
+            && t.get(j + 2).is_some_and(|x| x.is_punct("="))
+        {
+            return true;
+        }
+        // lifecycle op literal anywhere in the fn marks it a control path
+        if text == "Op"
+            && t.get(j + 1).is_some_and(|x| x.is_punct("::"))
+            && t.get(j + 2)
+                .is_some_and(|x| LIFECYCLE_OPS.contains(&x.text.as_str()))
+        {
+            return true;
+        }
+        if text.starts_with("encode_register") || HANDSHAKE_ENCODERS.contains(&text) {
+            return true;
+        }
+    }
+    false
+}

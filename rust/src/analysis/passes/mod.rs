@@ -1,0 +1,67 @@
+//! The tree-level analysis passes: unlike the per-file [`super::rules`],
+//! a pass sees every [`AnalysisUnit`] at once, because its invariants
+//! span files — the lock-rank table lives in `util/sync.rs` while the
+//! acquisitions live in `transport/` and `util/pool.rs`; the wire
+//! protocol's request builders live in `machines/fleet.rs` while the
+//! decoder lives in `transport/protocol.rs`.
+//!
+//! Each pass reports under its own name, and the
+//! `// lint: allow(<pass>) <reason>` waiver pragma silences a pass
+//! finding exactly like a rule finding.
+
+pub mod lock_graph;
+pub mod meter_pairing;
+pub mod wire_symmetry;
+
+use super::{AnalysisUnit, Violation};
+
+pub struct Pass {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub check: fn(&Pass, &[AnalysisUnit]) -> Vec<Violation>,
+}
+
+/// All passes, in reporting order.
+pub fn all() -> &'static [Pass] {
+    &PASSES
+}
+
+static PASSES: [Pass; 3] = [
+    Pass {
+        name: "lock-graph",
+        description:
+            "static rank order over RankedMutex acquisitions (scope tracking + one-level call summary)",
+        check: lock_graph::check,
+    },
+    Pass {
+        name: "wire-symmetry",
+        description:
+            "Op table/from_u32/dispatch consistency and request-builder put↔get pairing",
+        check: wire_symmetry::check,
+    },
+    Pass {
+        name: "meter-pairing",
+        description:
+            "every data-plane send_frame/submit pairs with byte accounting or a lifecycle path",
+        check: meter_pairing::check,
+    },
+];
+
+/// Build a pass violation unless the site is waived with
+/// `// lint: allow(<pass>) <reason>`.
+pub(crate) fn violation(
+    pass: &Pass,
+    unit: &AnalysisUnit,
+    line: usize,
+    message: String,
+) -> Option<Violation> {
+    if unit.view.waived(line, pass.name) {
+        return None;
+    }
+    Some(Violation {
+        path: unit.path.clone(),
+        line,
+        rule: pass.name,
+        message,
+    })
+}

@@ -1,0 +1,430 @@
+//! `wire-symmetry`: the wire protocol's three-way consistency check.
+//! The `protocol::Op` table, its `from_u32` decoder, the worker-side
+//! `dispatch` arms and every coordinator-side request builder must
+//! agree — a missed arm or a put/get type mismatch is a protocol hang
+//! or a garbled frame at runtime, and both are statically visible:
+//!
+//! - opcode table: variant discriminants are unique, and `from_u32`
+//!   produces every variant from exactly its own discriminant;
+//! - dispatch coverage: every variant has a dispatch arm (the
+//!   lifecycle bail arm counts — what matters is that the op is
+//!   *handled*, not silently wildcarded);
+//! - request pairing: at each `request(Op::X…)`/`request_to(Op::X…)`
+//!   site, the builder's `put_*` type sequence must match the dispatch
+//!   arm's `get_*` sequence (collapsed over loops: adjacent repeats of
+//!   one type count once, so N puts in a loop pair with M reads);
+//! - reply pairing: the `get_*` types read after the site (including
+//!   one call level into same-file fold helpers) must match the types
+//!   the arm writes back (including helpers like `encode_live_ack`).
+//!
+//! Builders that take `op: Op` as a parameter are resolved through
+//! their callers (one level), so a shared scalar-step builder checks
+//! against every op its callers pass.
+
+use super::super::{AnalysisUnit, Violation};
+use super::{violation, Pass};
+use crate::analysis::index::{call_sites, match_arms, matching_brace, FnItem};
+use crate::analysis::lexer::{TokKind, Token};
+use std::collections::{BTreeMap, BTreeSet};
+use std::ops::Range;
+
+struct Variant {
+    name: String,
+    disc: u64,
+    line: usize,
+}
+
+pub(super) fn check(pass: &Pass, units: &[AnalysisUnit]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let Some((proto_idx, enum_body)) = find_op_enum(units) else {
+        return out;
+    };
+    let proto = &units[proto_idx];
+    let variants = parse_variants(&proto.tokens, enum_body);
+    if variants.is_empty() {
+        return out;
+    }
+
+    // ---- opcode uniqueness ---------------------------------------------
+    let mut by_disc: BTreeMap<u64, &Variant> = BTreeMap::new();
+    for v in &variants {
+        if let Some(prev) = by_disc.get(&v.disc) {
+            out.extend(violation(
+                pass,
+                proto,
+                v.line,
+                format!(
+                    "duplicate opcode {}: Op::{} collides with Op::{}",
+                    v.disc, v.name, prev.name
+                ),
+            ));
+        } else {
+            by_disc.insert(v.disc, v);
+        }
+    }
+
+    // ---- from_u32 round-trip -------------------------------------------
+    if let Some(f) = fn_with_body(proto, "from_u32") {
+        check_from_u32(pass, proto, f, &variants, &mut out);
+    }
+
+    // ---- dispatch arms --------------------------------------------------
+    let Some(dispatch) = fn_with_body(proto, "dispatch") else {
+        return out;
+    };
+    let arms = op_arms(&proto.tokens, &dispatch.body);
+    for v in &variants {
+        if !arms.contains_key(&v.name) {
+            out.extend(violation(
+                pass,
+                proto,
+                v.line,
+                format!("Op::{} (= {}) has no dispatch arm", v.name, v.disc),
+            ));
+        }
+    }
+
+    // per-variant expected wire shapes, read from the dispatch arm
+    let mut arm_gets: BTreeMap<&str, Vec<String>> = BTreeMap::new();
+    let mut arm_puts: BTreeMap<&str, BTreeSet<String>> = BTreeMap::new();
+    for v in &variants {
+        if let Some(body) = arms.get(&v.name) {
+            arm_gets.insert(
+                &v.name,
+                collapse(io_seq_deep(proto, body.clone(), "get_")),
+            );
+            arm_puts.insert(
+                &v.name,
+                io_seq_deep(proto, body.clone(), "put_").into_iter().collect(),
+            );
+        }
+    }
+
+    // ---- request / reply pairing at every builder site ------------------
+    for unit in units {
+        for (site, name) in call_sites(&unit.tokens, 0..unit.tokens.len()) {
+            if name != "request" && name != "request_to" {
+                continue;
+            }
+            let Some(f) = unit.index.enclosing_fn(site) else {
+                continue;
+            };
+            if f.name == "request" || f.name == "request_to" {
+                continue; // the builders themselves, not call sites
+            }
+            let site_variants = site_ops(units, unit, f, site);
+            if site_variants.is_empty() {
+                continue; // op not statically resolvable
+            }
+            let line = unit.tokens[site].line;
+            let puts = collapse(site_puts(unit, f, site));
+            let gets: BTreeSet<String> =
+                io_seq_deep(unit, site..f.body.end, "get_").into_iter().collect();
+            for vname in &site_variants {
+                let Some(expect) = arm_gets.get(vname.as_str()) else {
+                    continue; // missing arm already reported above
+                };
+                if &puts != expect {
+                    out.extend(violation(
+                        pass,
+                        unit,
+                        line,
+                        format!(
+                            "request for Op::{} puts [{}] but its dispatch arm reads [{}]",
+                            vname,
+                            puts.join(", "),
+                            expect.join(", ")
+                        ),
+                    ));
+                }
+                // reply direction: only when this site visibly reads one
+                let reply = &arm_puts[vname.as_str()];
+                if !gets.is_empty() && &gets != reply {
+                    out.extend(violation(
+                        pass,
+                        unit,
+                        line,
+                        format!(
+                            "reply for Op::{} reads {{{}}} but its dispatch arm writes {{{}}}",
+                            vname,
+                            join_set(&gets),
+                            join_set(reply)
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The unit holding `enum Op` and the token range of the enum body.
+fn find_op_enum(units: &[AnalysisUnit]) -> Option<(usize, Range<usize>)> {
+    for (u, unit) in units.iter().enumerate() {
+        let t = &unit.tokens;
+        for j in 0..t.len().saturating_sub(1) {
+            if t[j].is_ident("enum") && t[j + 1].is_ident("Op") {
+                let open = (j + 2..t.len()).find(|&k| t[k].is_punct("{"))?;
+                let close = matching_brace(t, open);
+                return Some((u, open + 1..close));
+            }
+        }
+    }
+    None
+}
+
+/// Enum variants with resolved discriminants (explicit `= N` or the
+/// previous discriminant plus one, from zero — Rust's own rule).
+fn parse_variants(t: &[Token], body: Range<usize>) -> Vec<Variant> {
+    let mut out = Vec::new();
+    let mut next = 0u64;
+    let mut j = body.start;
+    while j < body.end {
+        if t[j].kind != TokKind::Ident {
+            j += 1;
+            continue;
+        }
+        let name = t[j].text.clone();
+        let line = t[j].line;
+        let disc = if t.get(j + 1).is_some_and(|x| x.is_punct("="))
+            && t.get(j + 2).is_some_and(|x| x.kind == TokKind::Number)
+        {
+            t[j + 2].text.parse().unwrap_or(next)
+        } else {
+            next
+        };
+        next = disc + 1;
+        out.push(Variant { name, disc, line });
+        // to the `,` separating variants (skipping any payload group)
+        let mut depth = 0i64;
+        while j < body.end {
+            match t[j].text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                "," if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        j += 1;
+    }
+    out
+}
+
+/// The fn item of this name that actually has a body.
+fn fn_with_body<'a>(unit: &'a AnalysisUnit, name: &str) -> Option<&'a FnItem> {
+    unit.index
+        .fns_named(name)
+        .filter(|f| !f.body.is_empty())
+        .max_by_key(|f| f.body.end - f.body.start)
+}
+
+fn check_from_u32(
+    pass: &Pass,
+    proto: &AnalysisUnit,
+    f: &FnItem,
+    variants: &[Variant],
+    out: &mut Vec<Violation>,
+) {
+    let t = &proto.tokens;
+    let Some(m) = (f.body.clone()).find(|&j| t[j].is_ident("match")) else {
+        return;
+    };
+    let mut produced: BTreeSet<String> = BTreeSet::new();
+    for arm in match_arms(t, m) {
+        // `N => … Op::V …`; non-number patterns (the wildcard) don't map
+        let Some(num) = t[arm.pattern.clone()]
+            .iter()
+            .find(|x| x.kind == TokKind::Number)
+            .and_then(|x| x.text.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        let Some(vname) = op_path_idents(t, arm.body.clone()).into_iter().next() else {
+            continue;
+        };
+        produced.insert(vname.clone());
+        if let Some(v) = variants.iter().find(|v| v.name == vname) {
+            if v.disc != num {
+                out.extend(violation(
+                    pass,
+                    proto,
+                    t[arm.pattern.start].line,
+                    format!(
+                        "from_u32 maps {} to Op::{} but Op::{} = {}",
+                        num, vname, vname, v.disc
+                    ),
+                ));
+            }
+        }
+    }
+    for v in variants {
+        if !produced.contains(&v.name) {
+            out.extend(violation(
+                pass,
+                proto,
+                v.line,
+                format!("Op::{} (= {}) is never produced by from_u32", v.name, v.disc),
+            ));
+        }
+    }
+}
+
+/// Dispatch arms keyed by variant name: every `match` inside the body
+/// whose arm patterns name `Op::V` maps each such variant to the arm's
+/// body range (an or-pattern maps all its variants to the one body).
+fn op_arms(t: &[Token], body: &Range<usize>) -> BTreeMap<String, Range<usize>> {
+    let mut out: BTreeMap<String, Range<usize>> = BTreeMap::new();
+    for j in body.clone() {
+        if !t[j].is_ident("match") {
+            continue;
+        }
+        for arm in match_arms(t, j) {
+            for vname in op_path_idents(t, arm.pattern.clone()) {
+                let keep = match out.get(&vname) {
+                    Some(prev) => arm.body.len() > prev.len(),
+                    None => true,
+                };
+                if keep {
+                    out.insert(vname, arm.body.clone());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Every `Op::Name` path in a token range, in order.
+fn op_path_idents(t: &[Token], range: Range<usize>) -> Vec<String> {
+    let mut out = Vec::new();
+    for j in range.start..range.end.min(t.len()).saturating_sub(2) {
+        if t[j].is_ident("Op")
+            && t[j + 1].is_punct("::")
+            && t[j + 2].kind == TokKind::Ident
+        {
+            out.push(t[j + 2].text.clone());
+        }
+    }
+    out
+}
+
+/// The op variants a `request`/`request_to` call at `site` sends: a
+/// literal `Op::X` first argument, or — when the builder's enclosing fn
+/// takes `op: Op` — every `Op::X` its own callers pass (one level).
+fn site_ops(
+    units: &[AnalysisUnit],
+    unit: &AnalysisUnit,
+    f: &FnItem,
+    site: usize,
+) -> Vec<String> {
+    let t = &unit.tokens;
+    let args = call_args_range(t, site);
+    let direct = op_path_idents(t, args.clone());
+    if !direct.is_empty() {
+        return vec![direct[0].clone()];
+    }
+    // variable op: require an `op: Op`-shaped parameter in the signature
+    let sig = &t[f.sig.clone()];
+    let takes_op = sig.windows(3).any(|w| {
+        w[0].kind == TokKind::Ident && w[1].is_punct(":") && w[2].is_ident("Op")
+    });
+    if !takes_op {
+        return Vec::new();
+    }
+    let mut out = BTreeSet::new();
+    for u in units {
+        for (j, name) in call_sites(&u.tokens, 0..u.tokens.len()) {
+            if name != f.name {
+                continue;
+            }
+            if u.index.enclosing_fn(j).is_some_and(|g| g.name == f.name) {
+                continue; // recursion, not a resolving caller
+            }
+            out.extend(op_path_idents(&u.tokens, call_args_range(&u.tokens, j)));
+        }
+    }
+    out.into_iter().collect()
+}
+
+/// The token range of a call's argument list (inside the parens).
+fn call_args_range(t: &[Token], name_idx: usize) -> Range<usize> {
+    let open = name_idx + 1;
+    let mut depth = 0i64;
+    for j in open..t.len() {
+        match t[j].text.as_str() {
+            "(" | "[" | "{" => depth += 1,
+            ")" | "]" | "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return open + 1..j;
+                }
+            }
+            _ => {}
+        }
+    }
+    open + 1..t.len()
+}
+
+/// The `put_*` type sequence a request site writes: from the call to
+/// the builder's `finish` (chained or via a bound writer), within the
+/// enclosing fn.
+fn site_puts(unit: &AnalysisUnit, f: &FnItem, site: usize) -> Vec<String> {
+    let t = &unit.tokens;
+    let end = (site..f.body.end)
+        .find(|&j| t[j].is_ident("finish"))
+        .unwrap_or(f.body.end);
+    io_seq(t, site..end, "put_")
+}
+
+/// `get_*`/`put_*` call suffixes in order within a range (lexical).
+fn io_seq(t: &[Token], range: Range<usize>, prefix: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for j in range.start..range.end.min(t.len()) {
+        if t[j].kind == TokKind::Ident
+            && t[j].text.starts_with(prefix)
+            && t.get(j + 1).is_some_and(|x| x.is_punct("("))
+        {
+            out.push(t[j].text[prefix.len()..].to_owned());
+        }
+    }
+    out
+}
+
+/// Like [`io_seq`], expanded one call level into helpers defined in the
+/// same unit (`encode_live_ack`, the fleet's fold helpers), in call
+/// position so sequences stay ordered.
+fn io_seq_deep(unit: &AnalysisUnit, range: Range<usize>, prefix: &str) -> Vec<String> {
+    let t = &unit.tokens;
+    let mut out = Vec::new();
+    for j in range.start..range.end.min(t.len()) {
+        if t[j].kind != TokKind::Ident || !t.get(j + 1).is_some_and(|x| x.is_punct("(")) {
+            continue;
+        }
+        if t[j].text.starts_with(prefix) {
+            out.push(t[j].text[prefix.len()..].to_owned());
+        } else if j == 0 || !t[j - 1].is_ident("fn") {
+            if let Some(callee) = fn_with_body(unit, &t[j].text) {
+                if !range.contains(&callee.body.start) {
+                    out.extend(io_seq(t, callee.body.clone(), prefix));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Collapse adjacent repeats of one type, so a `put_u64` loop pairs
+/// with four explicit `get_u64` reads and vice versa.
+fn collapse(seq: Vec<String>) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for s in seq {
+        if out.last() != Some(&s) {
+            out.push(s);
+        }
+    }
+    out
+}
+
+fn join_set(s: &BTreeSet<String>) -> String {
+    s.iter().cloned().collect::<Vec<_>>().join(", ")
+}

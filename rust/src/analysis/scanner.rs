@@ -51,6 +51,13 @@ impl FileView {
         self.raw.get(line.checked_sub(1)?).map(String::as_str)
     }
 
+    /// The whole stripped file as one string (lines joined by `\n`),
+    /// the input the lexer tokenizes. Line numbers recovered from byte
+    /// offsets into this text agree with [`FileView::code_lines`].
+    pub fn code_text(&self) -> String {
+        self.code.join("\n")
+    }
+
     /// Is a violation of `rule` on 1-based `line` waived? A waiver is a
     /// `lint: allow(<rule>) <reason>` pragma on the same raw line or
     /// the raw line directly above (where a comment-only waiver lives).

@@ -1,38 +1,61 @@
-//! `soccer-lint` — run the in-tree invariant lint pass over `src/`
-//! (or over the directories given as arguments) and fail with exit
-//! code 1 on any violation. CI runs this next to the test suite; see
-//! `soccer::analysis` for the rules and the waiver pragma.
+//! `soccer-lint` — run the in-tree invariant analysis engine over
+//! `src/` (or over the directories given as arguments) and fail with
+//! exit code 1 on any violation. CI runs this next to the test suite;
+//! see `soccer::analysis` for the rules, the tree-level passes and the
+//! waiver pragma.
+//!
+//! Flags:
+//! - `--json`: emit the machine-readable report (`report_json` schema,
+//!   version 1) on stdout instead of human lines; exit status still
+//!   reflects violations, so CI can both annotate and gate on it.
+//! - `--pass NAME` (repeatable): restrict reporting to the named rules
+//!   or passes. Unknown names are an error listing the valid set.
 
-use soccer::analysis::{lint_tree, rules};
+use soccer::analysis::{all_names, lint_tree, passes, report_json, rules, Violation};
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 fn main() -> ExitCode {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    if args.iter().any(|a| a == "--help" || a == "-h") {
-        println!("usage: soccer-lint [DIR ...]   (default: the crate's src/)");
-        println!("rules:");
-        for rule in rules::all() {
-            println!("  {:<14} {}", rule.name, rule.description);
+    let mut json = false;
+    let mut selected: Vec<String> = Vec::new();
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--help" | "-h" => {
+                print_help();
+                return ExitCode::SUCCESS;
+            }
+            "--json" => json = true,
+            "--pass" => match args.next() {
+                Some(name) => selected.push(name),
+                None => {
+                    eprintln!("soccer-lint: --pass needs a rule or pass name");
+                    return ExitCode::FAILURE;
+                }
+            },
+            _ => roots.push(PathBuf::from(arg)),
         }
-        println!("waive in place with: // lint: allow(<rule>) <reason>");
-        return ExitCode::SUCCESS;
     }
-    let roots: Vec<PathBuf> = if args.is_empty() {
-        vec![Path::new(env!("CARGO_MANIFEST_DIR")).join("src")]
-    } else {
-        args.iter().map(PathBuf::from).collect()
-    };
-    let mut total = 0usize;
+    let names = all_names();
+    for name in &selected {
+        if !names.contains(&name.as_str()) {
+            eprintln!(
+                "soccer-lint: unknown pass `{name}` (valid: {})",
+                names.join(", ")
+            );
+            return ExitCode::FAILURE;
+        }
+    }
+    if roots.is_empty() {
+        roots.push(Path::new(env!("CARGO_MANIFEST_DIR")).join("src"));
+    }
+
+    let mut all: Vec<(PathBuf, Violation)> = Vec::new();
     for root in &roots {
         match lint_tree(root) {
             Ok(violations) => {
-                for v in &violations {
-                    // prefix with the root so terminal hyperlinks work
-                    // when linting somewhere other than the cwd
-                    println!("{}/{v}", root.display());
-                }
-                total += violations.len();
+                all.extend(violations.into_iter().map(|v| (root.clone(), v)));
             }
             Err(e) => {
                 eprintln!("soccer-lint: cannot read {}: {e}", root.display());
@@ -40,11 +63,33 @@ fn main() -> ExitCode {
             }
         }
     }
-    if total == 0 {
+    if !selected.is_empty() {
+        all.retain(|(_, v)| selected.iter().any(|s| s == v.rule));
+    }
+
+    if json {
+        let violations: Vec<Violation> = all.iter().map(|(_, v)| v.clone()).collect();
+        println!("{}", report_json(&violations));
+        return if violations.is_empty() {
+            ExitCode::SUCCESS
+        } else {
+            ExitCode::FAILURE
+        };
+    }
+
+    for (root, v) in &all {
+        // prefix with the root so terminal hyperlinks work when
+        // linting somewhere other than the cwd
+        println!("{}/{v}", root.display());
+    }
+    if all.is_empty() {
         println!(
-            "soccer-lint: clean ({} rule{} over {})",
-            rules::all().len(),
-            if rules::all().len() == 1 { "" } else { "s" },
+            "soccer-lint: clean ({} checks over {})",
+            if selected.is_empty() {
+                names.len()
+            } else {
+                selected.len()
+            },
             roots
                 .iter()
                 .map(|r| r.display().to_string())
@@ -53,7 +98,22 @@ fn main() -> ExitCode {
         );
         ExitCode::SUCCESS
     } else {
-        eprintln!("soccer-lint: {total} violation{}", if total == 1 { "" } else { "s" });
+        let n = all.len();
+        eprintln!("soccer-lint: {n} violation{}", if n == 1 { "" } else { "s" });
         ExitCode::FAILURE
     }
+}
+
+fn print_help() {
+    println!("usage: soccer-lint [--json] [--pass NAME ...] [DIR ...]");
+    println!("       (default root: the crate's src/)");
+    println!("per-file rules:");
+    for rule in rules::all() {
+        println!("  {:<14} {}", rule.name, rule.description);
+    }
+    println!("tree-level passes:");
+    for pass in passes::all() {
+        println!("  {:<14} {}", pass.name, pass.description);
+    }
+    println!("waive in place with: // lint: allow(<rule-or-pass>) <reason>");
 }

@@ -30,6 +30,11 @@
 //! |   50 | pool-queue         | `util::pool` job queue                     |
 //! |   60 | pool-ticket        | `util::pool` per-job result slot           |
 //!
+//! The table above is prose; [`RANK_TABLE`] is the machine-checkable
+//! twin that `soccer-lint`'s `lock-graph` pass validates against the
+//! const declarations, so the doc, the consts and the static checker
+//! cannot drift apart silently.
+//!
 //! Levels are spaced by 10 so later PRs can slot new locks between
 //! existing ones without renumbering. Two locks may share a level only
 //! if no thread ever holds both at once (the per-index registration
@@ -63,6 +68,21 @@ pub const REGISTRATION_ERROR: Rank = Rank { level: 40, name: "registration-error
 pub const POOL_QUEUE: Rank = Rank { level: 50, name: "pool-queue" };
 /// Pool per-job result slot (`util::pool`).
 pub const POOL_TICKET: Rank = Rank { level: 60, name: "pool-ticket" };
+
+/// The machine-checkable source of truth for the lock-rank table: every
+/// rank const above, in ascending level order. `soccer-lint`'s
+/// `lock-graph` pass reads the const declarations and fails the build
+/// if one is missing from this table; the unit test below pins the
+/// ordering/uniqueness invariants the doc table promises. Adding a lock
+/// rank means adding it here, or the lint gate goes red.
+pub const RANK_TABLE: &[Rank] = &[
+    REGISTRATION_QUEUE,
+    REGISTRATION_SPEC,
+    REGISTRATION_LINKS,
+    REGISTRATION_ERROR,
+    POOL_QUEUE,
+    POOL_TICKET,
+];
 
 #[cfg(any(debug_assertions, feature = "dbg-sync"))]
 mod held {
@@ -330,6 +350,26 @@ mod tests {
     // release zero-overhead test and the fixture-style integration
     // tests live in `tests/lint.rs` so the `lint_` CI gate picks them
     // up in release mode.
+
+    #[test]
+    fn rank_table_is_strictly_increasing_and_uniquely_named() {
+        assert!(!RANK_TABLE.is_empty());
+        for pair in RANK_TABLE.windows(2) {
+            assert!(
+                pair[0].level < pair[1].level,
+                "RANK_TABLE must ascend strictly: '{}' ({}) before '{}' ({})",
+                pair[0].name,
+                pair[0].level,
+                pair[1].name,
+                pair[1].level
+            );
+        }
+        for (i, a) in RANK_TABLE.iter().enumerate() {
+            for b in &RANK_TABLE[i + 1..] {
+                assert_ne!(a.name, b.name, "duplicate rank name '{}'", a.name);
+            }
+        }
+    }
 
     #[test]
     fn ordered_acquisition_and_reuse() {

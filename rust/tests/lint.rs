@@ -28,7 +28,7 @@ fn lint_real_tree_is_clean() {
 }
 
 #[test]
-fn lint_has_all_five_rules() {
+fn lint_has_all_rules_and_passes() {
     let names: Vec<_> = rules::all().iter().map(|r| r.name).collect();
     assert_eq!(
         names,
@@ -38,6 +38,21 @@ fn lint_has_all_five_rules() {
             "no-panic",
             "named-thread",
             "ranked-lock"
+        ]
+    );
+    // the full engine: the five per-file rules plus the tree passes,
+    // in reporting order — what `--pass` selections validate against
+    assert_eq!(
+        soccer::analysis::all_names(),
+        [
+            "unsafe-safety",
+            "lossy-cast",
+            "no-panic",
+            "named-thread",
+            "ranked-lock",
+            "lock-graph",
+            "wire-symmetry",
+            "meter-pairing"
         ]
     );
 }

@@ -1,0 +1,495 @@
+//! Fixture gate for the tree-level analysis passes: each pass must
+//! fire on a seeded violation and stay quiet on the fixed twin, the
+//! lexer's spans must round-trip over every real file, and the scanner
+//! pre-pass must agree with the lexer on the lifetime/char-literal
+//! edge cases. All `lint_`-prefixed so the release CI gate picks the
+//! whole file up.
+
+use soccer::analysis::{lint_sources, report_json, AnalysisUnit};
+use soccer::util::json::Json;
+use std::path::Path;
+
+/// Violations of one pass over a fixture file set, rendered.
+fn pass_hits(files: &[(&str, &str)], pass: &str) -> Vec<String> {
+    lint_sources(files)
+        .into_iter()
+        .filter(|v| v.rule == pass)
+        .map(|v| v.to_string())
+        .collect()
+}
+
+fn assert_all_quiet(files: &[(&str, &str)]) {
+    let v = lint_sources(files);
+    assert!(
+        v.is_empty(),
+        "expected a clean fixture set, got:\n{}",
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+// A miniature util/sync.rs: two ranks and the machine-checkable table.
+const SYNC_FIXTURE: &str = r#"
+pub struct Rank { pub level: u16, pub name: &'static str }
+pub const LOW: Rank = Rank { level: 10, name: "low" };
+pub const HIGH: Rank = Rank { level: 20, name: "high" };
+pub const RANK_TABLE: &[Rank] = &[LOW, HIGH];
+"#;
+
+// ---- lock-graph -------------------------------------------------------------
+
+const LOCKS_INVERTED: &str = r#"
+use crate::util::sync::{RankedMutex, HIGH, LOW};
+struct S { a: RankedMutex<u32>, b: RankedMutex<u32> }
+impl S {
+    fn new() -> S { S { a: RankedMutex::new(LOW, 0), b: RankedMutex::new(HIGH, 0) } }
+    fn bad(&self) {
+        let g = self.b.lock();
+        let h = self.a.lock();
+        drop(h);
+        drop(g);
+    }
+}
+"#;
+
+const LOCKS_ORDERED: &str = r#"
+use crate::util::sync::{RankedMutex, HIGH, LOW};
+struct S { a: RankedMutex<u32>, b: RankedMutex<u32> }
+impl S {
+    fn new() -> S { S { a: RankedMutex::new(LOW, 0), b: RankedMutex::new(HIGH, 0) } }
+    fn good(&self) {
+        let g = self.a.lock();
+        let h = self.b.lock();
+        drop(h);
+        drop(g);
+    }
+}
+"#;
+
+#[test]
+fn lint_lock_graph_fires_on_direct_inversion() {
+    let hits = pass_hits(
+        &[("util/sync.rs", SYNC_FIXTURE), ("transport/foo.rs", LOCKS_INVERTED)],
+        "lock-graph",
+    );
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(hits[0].contains("'LOW' (rank 10) while holding 'HIGH' (rank 20)"), "{hits:?}");
+}
+
+#[test]
+fn lint_lock_graph_quiet_on_ordered_twin() {
+    assert_all_quiet(&[("util/sync.rs", SYNC_FIXTURE), ("transport/foo.rs", LOCKS_ORDERED)]);
+}
+
+#[test]
+fn lint_lock_graph_fires_through_one_call_level() {
+    let src = r#"
+use crate::util::sync::{RankedMutex, HIGH, LOW};
+struct S { a: RankedMutex<u32>, b: RankedMutex<u32> }
+impl S {
+    fn new() -> S { S { a: RankedMutex::new(LOW, 0), b: RankedMutex::new(HIGH, 0) } }
+    fn helper(&self) -> u32 { *self.a.lock() }
+    fn caller(&self) -> u32 {
+        let g = self.b.lock();
+        *g + self.helper()
+    }
+}
+"#;
+    let hits = pass_hits(
+        &[("util/sync.rs", SYNC_FIXTURE), ("transport/foo.rs", src)],
+        "lock-graph",
+    );
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(hits[0].contains("call to `helper`"), "{hits:?}");
+}
+
+#[test]
+fn lint_lock_graph_fires_on_unknown_rank() {
+    let src = r#"
+use crate::util::sync::RankedMutex;
+fn mystery() {
+    let m = RankedMutex::new(MYSTERY, 0u32);
+    let _g = m.lock();
+}
+"#;
+    let hits = pass_hits(
+        &[("util/sync.rs", SYNC_FIXTURE), ("transport/foo.rs", src)],
+        "lock-graph",
+    );
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(hits[0].contains("MYSTERY"), "{hits:?}");
+}
+
+#[test]
+fn lint_lock_graph_fires_on_incomplete_rank_table() {
+    let sync = r#"
+pub struct Rank { pub level: u16, pub name: &'static str }
+pub const LOW: Rank = Rank { level: 10, name: "low" };
+pub const HIGH: Rank = Rank { level: 20, name: "high" };
+pub const RANK_TABLE: &[Rank] = &[LOW];
+"#;
+    let hits = pass_hits(&[("util/sync.rs", sync)], "lock-graph");
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(hits[0].contains("`HIGH` missing from sync::RANK_TABLE"), "{hits:?}");
+}
+
+#[test]
+fn lint_lock_graph_fires_on_wait_holding_second_lock() {
+    let src = r#"
+use crate::util::sync::{RankedCondvar, RankedMutex, HIGH, LOW};
+struct S { a: RankedMutex<u32>, b: RankedMutex<u32>, cv: RankedCondvar }
+impl S {
+    fn new() -> S {
+        S { a: RankedMutex::new(LOW, 0), b: RankedMutex::new(HIGH, 0), cv: RankedCondvar::new() }
+    }
+    fn waits(&self) {
+        let g = self.a.lock();
+        let h = self.b.lock();
+        let h = self.cv.wait(h);
+        drop(h);
+        drop(g);
+    }
+}
+"#;
+    let hits = pass_hits(
+        &[("util/sync.rs", SYNC_FIXTURE), ("transport/foo.rs", src)],
+        "lock-graph",
+    );
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(hits[0].contains("condvar wait"), "{hits:?}");
+}
+
+#[test]
+fn lint_lock_graph_waiver_silences_a_site() {
+    let src = r#"
+use crate::util::sync::{RankedMutex, HIGH, LOW};
+struct S { a: RankedMutex<u32>, b: RankedMutex<u32> }
+impl S {
+    fn new() -> S { S { a: RankedMutex::new(LOW, 0), b: RankedMutex::new(HIGH, 0) } }
+    fn bad(&self) {
+        let g = self.b.lock();
+        // lint: allow(lock-graph) fixture proves waivers cover passes
+        let h = self.a.lock();
+        drop(h);
+        drop(g);
+    }
+}
+"#;
+    assert_all_quiet(&[("util/sync.rs", SYNC_FIXTURE), ("transport/foo.rs", src)]);
+}
+
+// ---- wire-symmetry ----------------------------------------------------------
+
+const WIRE_OK: &str = r#"
+pub enum Op { Alpha = 1, Beta = 2 }
+impl Op {
+    pub fn from_u32(v: u32) -> Option<Op> {
+        match v { 1 => Some(Op::Alpha), 2 => Some(Op::Beta), _ => None }
+    }
+}
+pub fn dispatch(op: Op, r: &mut Reader, w: &mut Writer) {
+    match op {
+        Op::Alpha => { let n = r.get_u64(); w.put_u64(n); }
+        Op::Beta => { let x = r.get_f64(); w.put_matrix(&x); }
+    }
+}
+pub fn send_alpha(link: &mut Link) -> u64 {
+    let mut w = link.request(Op::Alpha);
+    w.put_u64(7);
+    let frames = w.finish();
+    let mut r = link.reply(frames);
+    r.get_u64()
+}
+"#;
+
+#[test]
+fn lint_wire_symmetry_quiet_on_consistent_protocol() {
+    assert_all_quiet(&[("transport/wire.rs", WIRE_OK)]);
+}
+
+#[test]
+fn lint_wire_symmetry_fires_on_missing_dispatch_arm() {
+    let src = r#"
+pub enum Op { Alpha = 1, Beta = 2 }
+impl Op {
+    pub fn from_u32(v: u32) -> Option<Op> {
+        match v { 1 => Some(Op::Alpha), 2 => Some(Op::Beta), _ => None }
+    }
+}
+pub fn dispatch(op: Op, r: &mut Reader, w: &mut Writer) {
+    match op {
+        Op::Alpha => { let n = r.get_u64(); w.put_u64(n); }
+        _ => {}
+    }
+}
+"#;
+    let hits = pass_hits(&[("transport/wire.rs", src)], "wire-symmetry");
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(hits[0].contains("Op::Beta (= 2) has no dispatch arm"), "{hits:?}");
+}
+
+#[test]
+fn lint_wire_symmetry_fires_on_put_get_mismatch() {
+    let src = r#"
+pub enum Op { Alpha = 1 }
+impl Op {
+    pub fn from_u32(v: u32) -> Option<Op> {
+        match v { 1 => Some(Op::Alpha), _ => None }
+    }
+}
+pub fn dispatch(op: Op, r: &mut Reader, w: &mut Writer) {
+    match op {
+        Op::Alpha => { let n = r.get_u64(); w.put_u64(n); }
+    }
+}
+pub fn send_alpha(link: &mut Link) -> u64 {
+    let mut w = link.request(Op::Alpha);
+    w.put_f64(7.0);
+    let frames = w.finish();
+    let mut r = link.reply(frames);
+    r.get_u64()
+}
+"#;
+    let hits = pass_hits(&[("transport/wire.rs", src)], "wire-symmetry");
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(
+        hits[0].contains("puts [f64] but its dispatch arm reads [u64]"),
+        "{hits:?}"
+    );
+}
+
+#[test]
+fn lint_wire_symmetry_fires_on_duplicate_opcode() {
+    let src = r#"
+pub enum Op { Alpha = 1, Beta = 1 }
+impl Op {
+    pub fn from_u32(v: u32) -> Option<Op> {
+        match v { 1 => Some(Op::Alpha), _ => None }
+    }
+}
+pub fn dispatch(op: Op, r: &mut Reader, w: &mut Writer) {
+    match op { Op::Alpha => {}, Op::Beta => {} }
+}
+"#;
+    let hits = pass_hits(&[("transport/wire.rs", src)], "wire-symmetry");
+    assert!(
+        hits.iter().any(|h| h.contains("duplicate opcode 1")),
+        "{hits:?}"
+    );
+}
+
+#[test]
+fn lint_wire_symmetry_fires_on_from_u32_gap() {
+    let src = r#"
+pub enum Op { Alpha = 1, Beta = 2 }
+impl Op {
+    pub fn from_u32(v: u32) -> Option<Op> {
+        match v { 1 => Some(Op::Alpha), _ => None }
+    }
+}
+pub fn dispatch(op: Op, r: &mut Reader, w: &mut Writer) {
+    match op { Op::Alpha => {}, Op::Beta => {} }
+}
+"#;
+    let hits = pass_hits(&[("transport/wire.rs", src)], "wire-symmetry");
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(
+        hits[0].contains("Op::Beta (= 2) is never produced by from_u32"),
+        "{hits:?}"
+    );
+}
+
+#[test]
+fn lint_wire_symmetry_resolves_parameterized_builders() {
+    // a shared builder taking `op: Op` is checked against every op its
+    // callers pass — Beta's matrix arm mismatches the u64 the builder puts
+    let src = r#"
+pub enum Op { Alpha = 1, Beta = 2 }
+impl Op {
+    pub fn from_u32(v: u32) -> Option<Op> {
+        match v { 1 => Some(Op::Alpha), 2 => Some(Op::Beta), _ => None }
+    }
+}
+pub fn dispatch(op: Op, r: &mut Reader, w: &mut Writer) {
+    match op {
+        Op::Alpha => { let n = r.get_u64(); w.put_u64(n); }
+        Op::Beta => { let m = r.get_matrix(); w.put_u64(1); }
+    }
+}
+pub fn scalar_step(link: &mut Link, op: Op) -> u64 {
+    let mut w = link.request(op);
+    w.put_u64(7);
+    let frames = w.finish();
+    let mut r = link.reply(frames);
+    r.get_u64()
+}
+pub fn send_alpha(link: &mut Link) -> u64 { scalar_step(link, Op::Alpha) }
+pub fn send_beta(link: &mut Link) -> u64 { scalar_step(link, Op::Beta) }
+"#;
+    let hits = pass_hits(&[("transport/wire.rs", src)], "wire-symmetry");
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(
+        hits[0].contains("Op::Beta puts [u64] but its dispatch arm reads [matrix]"),
+        "{hits:?}"
+    );
+}
+
+// ---- meter-pairing ----------------------------------------------------------
+
+#[test]
+fn lint_meter_pairing_fires_on_unmetered_data_plane_send() {
+    let src = r#"
+impl Chan {
+    fn push(&mut self, f: &[u8]) -> io::Result<()> {
+        self.stream.send_frame(f)
+    }
+}
+"#;
+    let hits = pass_hits(&[("transport/wirechan.rs", src)], "meter-pairing");
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(hits[0].contains("`send_frame` in fn `push`"), "{hits:?}");
+}
+
+#[test]
+fn lint_meter_pairing_quiet_with_accounting_or_lifecycle() {
+    let metered = r#"
+impl Chan {
+    fn push(&mut self, f: &[u8]) -> io::Result<()> {
+        self.down_bytes += 4 + f.len();
+        self.stream.send_frame(f)
+    }
+    fn shutdown(&mut self) -> io::Result<()> {
+        let f = frame(Op::Shutdown);
+        self.stream.send_frame(&f)
+    }
+    fn submit(&mut self, frames: Frames) -> io::Result<()> {
+        self.io.submit(frames)
+    }
+}
+"#;
+    assert_all_quiet(&[("transport/wirechan.rs", metered)]);
+}
+
+#[test]
+fn lint_meter_pairing_fires_on_unmetered_submit_in_transport() {
+    let src = r#"
+impl Link {
+    fn relay(&mut self, frames: Frames) -> io::Result<()> {
+        self.io.submit(frames)
+    }
+}
+"#;
+    let hits = pass_hits(&[("transport/link.rs", src)], "meter-pairing");
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(hits[0].contains("`submit` in fn `relay`"), "{hits:?}");
+}
+
+#[test]
+fn lint_meter_pairing_ignores_submit_outside_transport() {
+    let src = r#"
+impl Pool {
+    fn relay(&mut self, job: Job) {
+        self.inner.submit(job);
+    }
+}
+"#;
+    assert_all_quiet(&[("util/jobs.rs", src)]);
+}
+
+#[test]
+fn lint_meter_pairing_waiver_silences_a_site() {
+    let src = r#"
+impl Chan {
+    fn push(&mut self, f: &[u8]) -> io::Result<()> {
+        // lint: allow(meter-pairing) fixture: accounted by the caller
+        self.stream.send_frame(f)
+    }
+}
+"#;
+    assert_all_quiet(&[("transport/wirechan.rs", src)]);
+}
+
+// ---- JSON report over pass violations ---------------------------------------
+
+#[test]
+fn lint_json_report_carries_pass_violations() {
+    let violations = lint_sources(&[
+        ("util/sync.rs", SYNC_FIXTURE),
+        ("transport/foo.rs", LOCKS_INVERTED),
+    ]);
+    let parsed = Json::parse(&report_json(&violations)).expect("valid json");
+    assert_eq!(
+        parsed.get("count").and_then(Json::as_usize),
+        Some(violations.len())
+    );
+    let items = parsed.get("violations").and_then(Json::as_arr).unwrap();
+    assert!(items
+        .iter()
+        .any(|i| i.get("rule").and_then(Json::as_str) == Some("lock-graph")));
+    let passes = parsed.get("passes").and_then(Json::as_arr).unwrap();
+    assert_eq!(passes.len(), 8);
+}
+
+// ---- lexer / scanner agreement over the real tree ---------------------------
+
+#[test]
+fn lint_lexer_spans_round_trip_over_tree() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut stack = vec![root];
+    let mut checked = 0usize;
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir).expect("walk src/") {
+            let path = entry.expect("dir entry").path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let src = std::fs::read_to_string(&path).expect("read source");
+                let unit = AnalysisUnit::new(&path.display().to_string(), &src);
+                // span round-trip: every token's text is exactly its slice
+                for t in &unit.tokens {
+                    assert_eq!(
+                        &unit.stripped[t.start..t.end],
+                        t.text,
+                        "span drift in {} at line {}",
+                        path.display(),
+                        t.line
+                    );
+                }
+                // the stripper preserves line structure, so token lines
+                // must stay within the raw file's line count
+                let lines = src.lines().count();
+                for t in &unit.tokens {
+                    assert!(t.line <= lines.max(1), "line overflow in {}", path.display());
+                }
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 10, "walked only {checked} files");
+}
+
+#[test]
+fn lint_scanner_lexer_agree_on_lifetime_edge_cases() {
+    // every historical stripper edge case in one fixture: labeled
+    // loops/breaks, escaped and quote-bearing char literals, byte
+    // chars, the placeholder lifetime and a generics-adjacent 'static
+    let src = "fn f<'a>(x: &'a str) {\n    let q = '\\'';\n    let d = '\"';\n    let b = b'x';\n    let u = '_';\n    'l: loop { break 'l; }\n    let s: &'static str = x;\n    let v: Vec<&'static str> = vec![s];\n}\n";
+    let unit = AnalysisUnit::new("transport/edge.rs", src);
+    for t in &unit.tokens {
+        assert_eq!(&unit.stripped[t.start..t.end], t.text);
+    }
+    let lifetimes: Vec<&str> = unit
+        .tokens
+        .iter()
+        .filter(|t| t.kind == soccer::analysis::lexer::TokKind::Lifetime)
+        .map(|t| t.text.as_str())
+        .collect();
+    // the char literals were blanked by the pre-pass; only the real
+    // lifetimes and the loop label survive to the lexer
+    assert!(lifetimes.contains(&"'a"), "{lifetimes:?}");
+    assert!(lifetimes.iter().filter(|l| **l == "'static").count() >= 2, "{lifetimes:?}");
+    assert!(lifetimes.contains(&"'l"), "{lifetimes:?}");
+    assert!(
+        !unit.stripped.contains("b'x'") && !unit.stripped.contains("'\\''"),
+        "char literals must be blanked before lexing"
+    );
+}
