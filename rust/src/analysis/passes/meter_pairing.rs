@@ -7,8 +7,9 @@
 //! A site passes if its enclosing function visibly accounts bytes
 //! (touches a counter field or a `+=`-updated `sent`/`received`
 //! tally), or is an explicit lifecycle/handshake path — `LoadShard`,
-//! `Reset`, `Reseed`, `Shutdown` frames and the registration
-//! handshake are deliberately unmetered, they are not round traffic
+//! `Reset`, `Reseed`, `Shutdown`, `Heartbeat`, `ExportState` and
+//! `AttachShards` frames and the registration handshake (bring-up or
+//! rejoin) are deliberately unmetered, they are not round traffic
 //! (see `WiredChannel::control`). Everything else fires and needs
 //! either accounting or a reviewed `// lint: allow(meter-pairing)`
 //! waiver.
@@ -31,11 +32,31 @@ const ACCOUNTING_IDENTS: [&str; 6] = [
 const TALLY_IDENTS: [&str; 2] = ["sent", "received"];
 
 /// Ops whose frames are lifecycle control traffic, not round data.
-const LIFECYCLE_OPS: [&str; 4] = ["LoadShard", "Reset", "Reseed", "Shutdown"];
+/// The elastic set (v4) — `Heartbeat` probes, `ExportState` migration
+/// reads, `AttachShards` adoption — is lifecycle too: recovery traffic
+/// is measured off the links' raw counters (`Fleet::reship_bytes`),
+/// never the protocol meters.
+const LIFECYCLE_OPS: [&str; 7] = [
+    "LoadShard",
+    "Reset",
+    "Reseed",
+    "Shutdown",
+    "Heartbeat",
+    "ExportState",
+    "AttachShards",
+];
 
 /// Handshake encoders: a function building these frames is part of
-/// registration, which happens once per worker, outside any round.
-const HANDSHAKE_ENCODERS: [&str; 3] = ["encode_hello", "encode_load_shards", "encode_live_ack"];
+/// registration (bring-up or rejoin) or of the elastic lifecycle,
+/// which happens outside any round.
+const HANDSHAKE_ENCODERS: [&str; 6] = [
+    "encode_hello",
+    "encode_load_shards",
+    "encode_live_ack",
+    "encode_live_acks",
+    "encode_heartbeat",
+    "encode_attach_shards",
+];
 
 /// Functions that are the lifecycle seam itself: `control` is the
 /// deliberately unmetered one-op round (see transport/channel.rs).

@@ -16,8 +16,14 @@
 //! phase-synchronous requests — routed per machine by the u32 machine
 //! field in every request header; broadcasts fan out to every hosted
 //! machine in slot order — until a `Shutdown` frame or peer disconnect.
-//! All machine-side seconds reported back to the coordinator are
-//! measured here, in this process.
+//! Lifecycle frames are handled in the same loop: `Heartbeat` probes
+//! answer with fresh live counts, and an `AttachShards` batch (a
+//! draining peer's machines, re-homed here by the coordinator) is
+//! adopted by appending the rebuilt machines after the existing slots.
+//! A worker that crashed can be relaunched with the *same* arguments:
+//! registration is open for the fleet's lifetime, and the coordinator
+//! re-ships the shards on rejoin. All machine-side seconds reported
+//! back to the coordinator are measured here, in this process.
 
 use soccer::runtime::NativeEngine;
 use soccer::transport::process::WorkerEndpoint;

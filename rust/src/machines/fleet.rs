@@ -53,27 +53,33 @@
 //! worker hosted (the crash-failure unit is the process, not the
 //! shard): all of them downgrade to dead, their links are gone, later
 //! steps skip them. A worker that crashes *uninvited* (the process dies
-//! mid-round) is detected by the transport error on its link and every
-//! hosted machine is downgraded the same way instead of deadlocking
-//! the run.
+//! mid-round) is detected by the transport error on its link — or
+//! between rounds by a [`Fleet::heartbeat`] probe — and every hosted
+//! machine is downgraded the same way instead of deadlocking the run.
+//!
+//! Process fleets are *elastic* (v4): the registration endpoint stays
+//! open for the fleet's lifetime and the coordinator retains a copy of
+//! every original shard. A crashed worker downgrades as above, but is
+//! then recoverable — relaunch it ([`Fleet::relaunch_worker`], or
+//! launch one externally against [`Fleet::rejoin_addr`]) and
+//! [`Fleet::admit_rejoins`] re-registers the dead index and re-ships
+//! its original shards with fresh deterministic RNG streams. A planned
+//! departure is [`Fleet::drain_worker`]: the machines' exact mid-run
+//! state migrates to an adopting worker, bit-preserving the run.
+//! Recovery traffic is measured into [`Fleet::reship_bytes`], separate
+//! from the data-plane protocol meters.
 
 use super::machine::Machine;
 use crate::core::Matrix;
 use crate::format_err;
 use crate::runtime::{Engine, NativeEngine};
-use crate::transport::process::{MachineSpec, WorkerSpec};
-use crate::transport::protocol::{self, Op};
+use crate::transport::process::{self, MachineSpec, WorkerSpec};
+use crate::transport::protocol::{self, MachineState, Op};
 use crate::transport::wire::FrameReader;
-use crate::transport::{Down, FleetChannel, TransportKind};
+use crate::transport::{Down, Endpoint, FleetChannel, TransportKind};
 use crate::util::pool::par_map_mut;
 use crate::util::rng::Pcg64;
 use std::time::Duration;
-
-/// How long [`Fleet::with_endpoint`] waits for every externally
-/// launched worker to dial in and register. Generous: a human, a CI
-/// runner, or an orchestrator on another host is slower than
-/// `spawn_fleet`'s children dialing loopback.
-const REMOTE_REGISTER_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Coordinator-side mirror of one remote machine's size metadata
 /// (process fleets only; in-process fleets read their machines).
@@ -88,8 +94,50 @@ impl MachineMeta {
     fn downgrade(&mut self) {
         self.dead = true;
         self.n_live = 0;
-        self.n_original = 0;
+        // n_original is deliberately retained: a crash loses the
+        // machine's *points*, not the record of how many it was built
+        // with — `total_original` keeps reporting the fleet's true n
+        // (so post-crash measurements are honestly labeled), and a
+        // rejoin needs the figure to size its re-shipped shard against.
     }
+}
+
+/// What the coordinator keeps around, beyond the live links, to make a
+/// process fleet *elastic*: the still-open registration endpoint, the
+/// RNG seed, and a copy of every original shard so a crashed worker's
+/// replacement (or a drained worker's heir) can be re-shipped its data.
+///
+/// The shard copies cost ~n×d×4 bytes of coordinator memory — the same
+/// order as the dataset the coordinator sharded in the first place.
+/// That is the price of crash recovery without replication between
+/// workers; callers who cannot pay it simply never see a crashed
+/// worker come back (the PR-8 behavior).
+struct Retained {
+    endpoint: Endpoint,
+    seed: u64,
+    /// original shard per machine, in machine order
+    shards: Vec<Matrix>,
+    /// per-machine rejoin generation: 0 until the machine's worker
+    /// first crashes and rejoins, then bumped once per successful
+    /// rejoin. Tags the fresh RNG stream (`rejoin_rng`) so a
+    /// crash/relaunch schedule replays deterministically.
+    generation: Vec<u64>,
+    /// per-worker: true once `drain_worker` migrated its machines away
+    /// — a drained worker is retired on purpose and never probed,
+    /// relaunched, or adopted into again.
+    drained: Vec<bool>,
+}
+
+/// The RNG stream a machine restarts with on its `generation`-th
+/// rejoin. Derived from the same root as the original streams but
+/// tagged twice (machine id, then generation ≥ 1), so it collides with
+/// neither the original `root.split(id)` streams nor any other
+/// machine's rejoin streams — and a replay of the same crash schedule
+/// deals out the same streams.
+fn rejoin_rng(seed: u64, id: u64, generation: u64) -> Pcg64 {
+    let mut root = Pcg64::new(seed);
+    let mut base = root.split(id);
+    base.split(generation)
 }
 
 pub struct Fleet {
@@ -100,6 +148,16 @@ pub struct Fleet {
     dim: usize,
     pub workers: usize,
     channel: FleetChannel,
+    /// `Some` ⟺ this is a process fleet built through a path that
+    /// keeps the endpoint open — which is all of them, as of v4.
+    retained: Option<Retained>,
+    /// Raw bytes spent re-shipping shards (crash rejoins: the whole
+    /// rejoin handshake; drains: export replies + the adoption frame).
+    /// Measured off the links' raw counters, NOT folded into the
+    /// protocol meters: recovery traffic is real and reportable, but
+    /// the paper-table byte reconciliation (`points × 4·d`) and the
+    /// process≡inproc twin guarantee are stated over data-plane bytes.
+    reship_bytes: usize,
 }
 
 /// Aggregated result of a fleet-wide step.
@@ -170,6 +228,8 @@ impl Fleet {
             dim,
             workers: crate::util::pool::default_workers(),
             channel: FleetChannel::Direct,
+            retained: None,
+            reship_bytes: 0,
         }
     }
 
@@ -281,15 +341,28 @@ impl Fleet {
         seed: u64,
         machines_per_worker: usize,
     ) -> crate::util::error::Result<Fleet> {
+        // clone before the specs consume the shards: the retained
+        // copies are what a crash rejoin / drain re-ships later
+        let retained_shards = shards.clone();
         let (meta, placement, worker_specs, dim) =
             Self::process_specs(shards, seed, machines_per_worker);
-        let workers = crate::transport::process::spawn_fleet(worker_specs)?;
+        let m = meta.len();
+        let n_workers = worker_specs.len();
+        let (endpoint, workers) = process::spawn_fleet(worker_specs)?;
         Ok(Fleet {
             machines: Vec::new(),
             meta: Some(meta),
             dim,
             workers: crate::util::pool::default_workers(),
             channel: FleetChannel::process(workers, placement),
+            retained: Some(Retained {
+                endpoint,
+                seed,
+                shards: retained_shards,
+                generation: vec![0; m],
+                drained: vec![false; n_workers],
+            }),
+            reship_bytes: 0,
         })
     }
 
@@ -299,11 +372,15 @@ impl Fleet {
     /// is known), hands `endpoint.connect_addr()` to whatever starts
     /// the `soccer-machine` workers — a shell loop, an orchestrator, a
     /// host far away — and then calls this, which runs the bounded
-    /// accept/registration loop, ships each registering worker its
-    /// shard batch, and returns the assembled fleet. The coordinator
-    /// never learns (or needs) the workers' pids; killing the *process*
-    /// behind a link out-of-band downgrades exactly the machines it
-    /// hosted, like any worker crash.
+    /// accept/registration loop (window tunable via
+    /// `SOCCER_REGISTER_TIMEOUT_SECS`, default 60s), ships each
+    /// registering worker its shard batch, and returns the assembled
+    /// fleet. The endpoint is retained, still listening, for the
+    /// fleet's lifetime: a worker that crashes can be relaunched and
+    /// [`Fleet::admit_rejoins`] will re-ship it its shard. The
+    /// coordinator never learns (or needs) the workers' pids; killing
+    /// the *process* behind a link out-of-band downgrades exactly the
+    /// machines it hosted, like any worker crash.
     ///
     /// Deterministic twin guarantee: the same `(points, m, seed,
     /// machines_per_worker)` produces bit-identical outcomes and
@@ -317,16 +394,27 @@ impl Fleet {
         endpoint: crate::transport::Endpoint,
     ) -> crate::util::error::Result<Fleet> {
         assert!(m >= 1);
+        let shards = points.split_rows(m);
+        let retained_shards = shards.clone();
         let (meta, placement, worker_specs, dim) =
-            Self::process_specs(points.split_rows(m), seed, machines_per_worker);
+            Self::process_specs(shards, seed, machines_per_worker);
+        let n_workers = worker_specs.len();
         let workers =
-            endpoint.accept_fleet(worker_specs, REMOTE_REGISTER_TIMEOUT, |_| Ok(()))?;
+            endpoint.accept_fleet(worker_specs, process::register_timeout(), |_| Ok(()))?;
         Ok(Fleet {
             machines: Vec::new(),
             meta: Some(meta),
             dim,
             workers: crate::util::pool::default_workers(),
             channel: FleetChannel::process(workers, placement),
+            retained: Some(Retained {
+                endpoint,
+                seed,
+                shards: retained_shards,
+                generation: vec![0; m],
+                drained: vec![false; n_workers],
+            }),
+            reship_bytes: 0,
         })
     }
 
@@ -351,6 +439,25 @@ impl Fleet {
         if let FleetChannel::Wired(w) = &mut self.channel {
             w.reset_meter();
         }
+    }
+
+    /// Raw bytes spent re-shipping shards over the fleet's lifetime —
+    /// crash-rejoin handshakes plus drain migrations. Deliberately a
+    /// separate meter from [`Fleet::wire_bytes`]: recovery cost is a
+    /// first-class measured result (recovery is where a shared-nothing
+    /// design pays the communication lower bounds back), but it is not
+    /// data-plane traffic and keeping it out of the protocol meters
+    /// preserves the byte-reconciliation identities and the
+    /// process≡inproc twin guarantee.
+    pub fn reship_bytes(&self) -> usize {
+        self.reship_bytes
+    }
+
+    /// The address a late-launched `soccer-machine --connect` worker
+    /// should dial to rejoin this fleet (`None` unless the fleet
+    /// retains an open endpoint — i.e. on non-process fleets).
+    pub fn rejoin_addr(&self) -> Option<&str> {
+        self.retained.as_ref().map(|r| r.endpoint.connect_addr())
     }
 
     /// OS pids of the live worker processes behind a process fleet,
@@ -1000,6 +1107,325 @@ impl Fleet {
         0
     }
 
+    // ---- elastic-fleet lifecycle (process fleets) --------------------------
+
+    /// Probe every worker with a heartbeat frame and fold the live-count
+    /// acks into the metadata mirror. Returns how many workers were
+    /// *newly* detected dead — a crashed worker that nothing exchanged
+    /// with since it died shows up here, downgraded like any link
+    /// failure, instead of surprising the next data-plane round.
+    /// Heartbeats are lifecycle traffic: they ride the control path and
+    /// never touch the byte meters. A no-op (returning 0) on fleets
+    /// without worker processes; drained and already-dead workers are
+    /// not probed.
+    pub fn heartbeat(&mut self) -> usize {
+        let Fleet { meta, channel, .. } = self;
+        let Some(meta) = meta.as_mut() else {
+            return 0;
+        };
+        let chan = channel.wired_mut().expect("process fleet is wired");
+        let n_workers = chan.num_workers();
+        let mut frames: Vec<Option<Vec<u8>>> = vec![None; meta.len()];
+        // one probe per worker, carried by its first hosted machine —
+        // the ack refreshes every machine the worker hosts
+        let mut probed: Vec<Option<Vec<usize>>> = vec![None; n_workers];
+        for w in 0..n_workers {
+            let js = chan.machines_of(w);
+            if js.is_empty() || js.iter().all(|&j| meta[j].dead) {
+                continue; // drained, or already known dead
+            }
+            frames[js[0]] = Some(protocol::encode_heartbeat());
+            probed[w] = Some(js);
+        }
+        let replies = chan.control(&frames);
+        let mut newly_dead = 0;
+        for js in probed.into_iter().flatten() {
+            match &replies[js[0]] {
+                Ok(ack) => match protocol::decode_live_acks(ack) {
+                    Ok(lives) if lives.len() == js.len() => {
+                        for (&j, &n) in js.iter().zip(&lives) {
+                            meta[j].n_live = n;
+                        }
+                    }
+                    _ => {
+                        eprintln!(
+                            "soccer: heartbeat ack from machine {}'s worker is malformed; \
+                             downgrading the worker",
+                            js[0]
+                        );
+                        newly_dead += 1;
+                        for &j in &js {
+                            meta[j].downgrade();
+                        }
+                    }
+                },
+                Err(e) => {
+                    eprintln!(
+                        "soccer: heartbeat found machine {}'s worker dead: {e}",
+                        js[0]
+                    );
+                    newly_dead += 1;
+                    for &j in &js {
+                        meta[j].downgrade();
+                    }
+                }
+            }
+        }
+        newly_dead
+    }
+
+    /// Re-open the registration window for `window` and admit workers
+    /// claiming the currently-dead indices: relaunched crashed workers
+    /// and brand-new late joiners alike (both just dial the retained
+    /// endpoint and claim an orphaned index). Each admitted worker is
+    /// re-shipped its machines' **original** shards from the
+    /// coordinator's retained copies — the crash lost the live set —
+    /// with fresh deterministic RNG streams ([`rejoin_rng`], generation
+    /// bumped per rejoin), so a rejoined machine restarts its shard
+    /// cleanly and a later [`Fleet::reset_with_seed`] puts the whole
+    /// fleet back on the canonical streams (bit parity with a fleet
+    /// that never crashed). Returns how many workers rejoined — fewer
+    /// than the dead count (including zero) is not an error. Errors
+    /// only on fleets that retain no endpoint or on listener failure.
+    pub fn admit_rejoins(&mut self, window: Duration) -> crate::util::error::Result<usize> {
+        let Fleet {
+            meta,
+            channel,
+            retained,
+            reship_bytes,
+            ..
+        } = self;
+        let (Some(meta), Some(ret)) = (meta.as_mut(), retained.as_mut()) else {
+            return Err(format_err!(
+                "rejoin needs a process fleet with a retained endpoint"
+            ));
+        };
+        let chan = channel.wired_mut().expect("process fleet is wired");
+        let n_workers = chan.num_workers();
+        let mut specs: Vec<WorkerSpec> = Vec::new();
+        for w in 0..n_workers {
+            if ret.drained[w] {
+                continue;
+            }
+            let js = chan.machines_of(w);
+            if js.is_empty() {
+                continue;
+            }
+            // meta catches kill_machine immediately; worker_is_dead
+            // catches links whose I/O thread saw the crash first
+            if !(js.iter().all(|&j| meta[j].dead) || chan.worker_is_dead(w)) {
+                continue;
+            }
+            let machines = js
+                .iter()
+                .map(|&j| MachineSpec {
+                    id: meta[j].id,
+                    rng: rejoin_rng(ret.seed, meta[j].id as u64, ret.generation[j] + 1),
+                    shard: ret.shards[j].clone(),
+                })
+                .collect();
+            specs.push(WorkerSpec {
+                index: w,
+                machines,
+            });
+        }
+        if specs.is_empty() {
+            return Ok(0);
+        }
+        let admitted = ret.endpoint.accept_rejoins(specs, n_workers, window)?;
+        let mut rejoined = 0;
+        for (w, link) in admitted {
+            chan.replace_link(w, link);
+            // a fresh link's sent counter is exactly the rejoin
+            // handshake: accept-ack + the re-shipped shard batch
+            *reship_bytes += chan.worker_bytes_sent(w);
+            for &j in &chan.machines_of(w) {
+                meta[j].dead = false;
+                meta[j].n_live = ret.shards[j].rows();
+                meta[j].n_original = ret.shards[j].rows();
+                ret.generation[j] += 1;
+            }
+            rejoined += 1;
+        }
+        Ok(rejoined)
+    }
+
+    /// Relaunch a crashed worker's process (same `soccer-machine`
+    /// binary, dialing the retained endpoint with the dead index) and
+    /// run [`Fleet::admit_rejoins`] until it re-registers. The rejoin
+    /// protocol is identical to an externally relaunched worker — this
+    /// is just the convenience wrapper that owns the child. Errors if
+    /// the worker is alive, drained, or fails to register within the
+    /// registration window.
+    pub fn relaunch_worker(&mut self, w: usize) -> crate::util::error::Result<()> {
+        let Some(ret) = self.retained.as_ref() else {
+            return Err(format_err!(
+                "relaunch needs a process fleet with a retained endpoint"
+            ));
+        };
+        let meta = self.meta.as_ref().expect("process fleets carry meta");
+        let chan = self.channel.wired_mut().expect("process fleet is wired");
+        if w >= chan.num_workers() {
+            return Err(format_err!(
+                "worker {w} out of range (fleet has {})",
+                chan.num_workers()
+            ));
+        }
+        if ret.drained[w] {
+            return Err(format_err!("worker {w} was drained; nothing to relaunch"));
+        }
+        let js = chan.machines_of(w);
+        if !(js.iter().all(|&j| meta[j].dead) || chan.worker_is_dead(w)) {
+            return Err(format_err!(
+                "worker {w} is alive; relaunch is for crashed workers"
+            ));
+        }
+        let addr = ret.endpoint.connect_addr().to_string();
+        let mut child = process::spawn_worker_child(&addr, w)?;
+        self.admit_rejoins(process::register_timeout())?;
+        let meta = self.meta.as_ref().expect("process fleets carry meta");
+        let chan = self.channel.wired_mut().expect("process fleet is wired");
+        let recovered = chan.machines_of(w).iter().all(|&j| !meta[j].dead);
+        if !recovered {
+            let _ = child.kill();
+            let _ = child.wait();
+            return Err(format_err!(
+                "worker {w}: relaunched child failed to re-register"
+            ));
+        }
+        chan.set_worker_child(w, child);
+        Ok(())
+    }
+
+    /// Controlled departure: migrate every machine worker `from` hosts
+    /// onto worker `to`, then retire `from` (graceful shutdown). The
+    /// machines' exact mid-run state moves — both RNG streams and the
+    /// live set cross over ([`Op::ExportState`]), the original shard is
+    /// re-shipped from the coordinator's retained copy
+    /// ([`Op::AttachShards`]) — so the fleet's outcome is bit-identical
+    /// to one that never drained; only the placement (and therefore
+    /// pipelining) changes. Both workers must be alive and `from` must
+    /// actually host machines. Drain traffic is lifecycle: measured
+    /// into [`Fleet::reship_bytes`], never the protocol meters.
+    pub fn drain_worker(&mut self, from: usize, to: usize) -> crate::util::error::Result<()> {
+        let Fleet {
+            meta,
+            channel,
+            retained,
+            reship_bytes,
+            ..
+        } = self;
+        let (Some(meta), Some(ret)) = (meta.as_mut(), retained.as_mut()) else {
+            return Err(format_err!(
+                "drain needs a process fleet with a retained endpoint"
+            ));
+        };
+        let chan = channel.wired_mut().expect("process fleet is wired");
+        let n_workers = chan.num_workers();
+        if from >= n_workers || to >= n_workers {
+            return Err(format_err!(
+                "drain {from}->{to}: fleet has {n_workers} workers"
+            ));
+        }
+        if from == to {
+            return Err(format_err!("drain {from}->{to}: a worker cannot adopt itself"));
+        }
+        let js = chan.machines_of(from);
+        let to_js = chan.machines_of(to);
+        if js.is_empty() {
+            return Err(format_err!("worker {from} hosts nothing (already drained?)"));
+        }
+        if to_js.is_empty() || ret.drained[to] {
+            return Err(format_err!("worker {to} is drained; it cannot adopt"));
+        }
+        if js.iter().any(|&j| meta[j].dead) || chan.worker_is_dead(from) {
+            return Err(format_err!(
+                "worker {from} is dead; drain moves live state — relaunch it instead"
+            ));
+        }
+        if to_js.iter().any(|&j| meta[j].dead) || chan.worker_is_dead(to) {
+            return Err(format_err!("worker {to} is dead; it cannot adopt"));
+        }
+
+        // 1) read the full migratable state out of the departing worker
+        let mut frames: Vec<Option<Vec<u8>>> = vec![None; meta.len()];
+        for &j in &js {
+            frames[j] = Some(protocol::request_to(Op::ExportState, meta[j].id as u32).finish());
+        }
+        let replies = chan.control(&frames);
+        let mut batch: Vec<MachineState> = Vec::with_capacity(js.len());
+        let mut exported_bytes = 0usize;
+        for &j in &js {
+            let frame = match &replies[j] {
+                Ok(frame) => frame,
+                Err(e) => {
+                    // the departing worker died mid-drain: that is a
+                    // crash, not a drain — downgrade it (rejoin can
+                    // still recover it) and report the failure
+                    for &g in &js {
+                        meta[g].downgrade();
+                    }
+                    return Err(format_err!(
+                        "worker {from} died while exporting machine {j}: {e}"
+                    ));
+                }
+            };
+            exported_bytes += 4 + frame.len();
+            let mut r = FrameReader::new(frame);
+            let rng = Pcg64::from_raw([r.get_u64(), r.get_u64(), r.get_u64(), r.get_u64()]);
+            let rng_init =
+                Pcg64::from_raw([r.get_u64(), r.get_u64(), r.get_u64(), r.get_u64()]);
+            let live = r.get_matrix();
+            batch.push(MachineState {
+                id: meta[j].id,
+                rng,
+                rng_init,
+                // the original shard is NOT echoed over the export —
+                // the coordinator re-ships its retained copy, halving
+                // the wire cost of a migration
+                original: ret.shards[j].clone(),
+                live,
+            });
+        }
+        let migrated_live: Vec<usize> = batch.iter().map(|s| s.live.rows()).collect();
+
+        // 2) ship the batch to the adopting worker (serve appends the
+        // rebuilt machines after its own slots, the order
+        // migrate_machines mirrors coordinator-side)
+        let attach = protocol::encode_attach_shards(&batch)?;
+        let attach_bytes = 4 + attach.len();
+        let mut frames: Vec<Option<Vec<u8>>> = vec![None; meta.len()];
+        frames[to_js[0]] = Some(attach);
+        let replies = chan.control(&frames);
+        let ack = match &replies[to_js[0]] {
+            Ok(ack) => ack,
+            Err(e) => {
+                return Err(format_err!(
+                    "worker {to} died while adopting worker {from}'s machines: {e}"
+                ))
+            }
+        };
+        let acks = protocol::decode_live_acks(ack)?;
+        if acks != migrated_live {
+            return Err(format_err!(
+                "worker {to} acked live counts {acks:?} for adopted machines, expected \
+                 {migrated_live:?}"
+            ));
+        }
+
+        // 3) retire the departing worker and re-home the routing table
+        // — strictly after both control rounds, which used the old
+        // placement
+        chan.teardown_worker(from);
+        chan.migrate_machines(from, to);
+        ret.drained[from] = true;
+        for (&j, &n) in js.iter().zip(&migrated_live) {
+            meta[j].n_live = n;
+        }
+        *reship_bytes += exported_bytes + attach_bytes;
+        Ok(())
+    }
+
     /// Per-point costs of `centers` over the ORIGINAL shards of all
     /// surviving machines, concatenated (for trimmed-cost evaluation).
     pub fn per_point_costs_full(&mut self, centers: &Matrix, engine: &dyn Engine) -> Vec<f32> {
@@ -1220,7 +1646,9 @@ mod tests {
         // dim() still answers from the (retained) original shard shape
         assert_eq!(f.dim(), 3);
         assert_eq!(f.total_live(), 0);
-        assert_eq!(f.total_original(), 0);
+        // a crash loses points, not the record of how many there were:
+        // total_original keeps reporting the fleet's true n
+        assert_eq!(f.total_original(), 120);
         // aggregate steps degrade to zeros rather than panicking
         let centers = Matrix::from_rows(&[&[0.0, 0.0, 0.0]]);
         assert_eq!(f.counts_full(&centers, &NativeEngine).value, vec![0.0]);
@@ -1388,9 +1816,48 @@ mod tests {
         assert_eq!(out.value.0.rows(), 80);
         let centers = Matrix::from_rows(&[&[0.0, 0.0, 0.0]]);
         let counts = f.counts_full(&centers, &NativeEngine).value;
-        assert_eq!(counts[0] as usize, f.total_original());
+        // full-data aggregates cover the SURVIVORS' original shards
+        // (150 of 200 points) while total_original still reports the
+        // fleet's true n — the honest-labeling split
+        assert_eq!(counts[0] as usize, 150);
+        assert_eq!(f.total_original(), 200);
         // sampling does not consume points; drain ships every survivor
         let live = f.total_live();
         assert_eq!(f.drain().rows(), live);
+    }
+
+    #[test]
+    fn crashed_fleet_reports_original_n_in_every_local_mode() {
+        // pinning test for the downgrade bug: a crashed-then-queried
+        // fleet must report the same original point count as an intact
+        // one, in every transport mode (the process-mode twin of this
+        // assertion lives in tests/elastic.rs, which has the worker
+        // binary available)
+        for wired in [false, true] {
+            let mut f = if wired {
+                wired_fleet(200, 4, TransportKind::InProc)
+            } else {
+                fleet(200, 4)
+            };
+            assert_eq!(f.total_original(), 200);
+            assert!(f.kill_machine(1) > 0);
+            assert_eq!(f.total_original(), 200, "wired={wired}");
+            assert_eq!(f.dead_machines(), 1);
+            assert_eq!(f.total_live(), 150);
+        }
+    }
+
+    #[test]
+    fn elastic_api_degrades_cleanly_off_process_fleets() {
+        // the elastic lifecycle is a process-fleet feature; everywhere
+        // else it answers without panicking: heartbeat is a no-op and
+        // the recovery verbs refuse with a typed error
+        let mut f = wired_fleet(60, 3, TransportKind::InProc);
+        assert_eq!(f.heartbeat(), 0);
+        assert_eq!(f.reship_bytes(), 0);
+        assert!(f.rejoin_addr().is_none());
+        assert!(f.admit_rejoins(Duration::from_millis(10)).is_err());
+        assert!(f.relaunch_worker(0).is_err());
+        assert!(f.drain_worker(0, 1).is_err());
     }
 }

@@ -56,6 +56,43 @@ impl Machine {
         }
     }
 
+    /// Rebuild a machine from migrated state (`Op::AttachShards`): the
+    /// retained original shard, the exported live points and both RNG
+    /// streams, so the adopted machine continues its sequence
+    /// bit-exactly and `reset()` replays what the never-migrated twin
+    /// would. k-means|| per-point distances are NOT migrated — they are
+    /// round-scoped state a `kmpar_init` rebuilds; migration happens
+    /// between rounds.
+    pub fn from_parts(
+        id: usize,
+        original: Matrix,
+        live: Matrix,
+        rng: Pcg64,
+        rng_init: Pcg64,
+    ) -> Machine {
+        Machine {
+            id,
+            dead: false,
+            original,
+            live,
+            rng,
+            rng_init,
+            kmpar_dist: Vec::new(),
+            keep_buf: Vec::new(),
+        }
+    }
+
+    /// The current RNG stream's raw words (migration export).
+    pub fn rng_raw(&self) -> [u64; 4] {
+        self.rng.to_raw()
+    }
+
+    /// The pristine RNG stream's raw words (migration export — keeps
+    /// `reset()` semantics across an adoption).
+    pub fn rng_init_raw(&self) -> [u64; 4] {
+        self.rng_init.to_raw()
+    }
+
     pub fn n_live(&self) -> usize {
         if self.dead {
             0
@@ -80,12 +117,14 @@ impl Machine {
         lost
     }
 
+    /// Size of the original shard. Deliberately survives [`kill`]: the
+    /// original count is the denominator the fleet was built with (and
+    /// exactly what a rejoin re-ship restores), so crash accounting
+    /// reports it unchanged — only *live* contributions are zeroed.
+    ///
+    /// [`kill`]: Machine::kill
     pub fn n_original(&self) -> usize {
-        if self.dead {
-            0
-        } else {
-            self.original.rows()
-        }
+        self.original.rows()
     }
 
     pub fn live(&self) -> &Matrix {
@@ -444,6 +483,22 @@ mod tests {
         m.reset();
         let phi2 = m.kmpar_init(&c0, &eng).value;
         assert!((phi2 - phi).abs() < 1e-9 * phi.max(1.0));
+    }
+
+    #[test]
+    fn kill_zeroes_live_but_not_original() {
+        // regression: kill() zeroed n_original via the dead flag, so a
+        // crashed-then-queried fleet under-reported the n it was built
+        // with (and rejoin re-ship lost its sizing)
+        let mut m = mk(10, 80);
+        assert_eq!(m.kill(), 80);
+        assert_eq!(m.n_live(), 0);
+        assert_eq!(m.n_original(), 80);
+        // dead machines still contribute nothing to cost/counts
+        let centers = Matrix::from_rows(&[&[0.0, 0.0]]);
+        assert_eq!(m.cost_original(&centers, &NativeEngine).value, 0.0);
+        let counts = m.counts_original(&centers, &NativeEngine).value;
+        assert_eq!(counts.iter().sum::<f64>(), 0.0);
     }
 
     #[test]

@@ -327,6 +327,124 @@ impl WiredChannel {
         }
     }
 
+    /// Number of worker links. On local links every machine is its own
+    /// "worker", mirroring [`WiredChannel::colocated`].
+    pub fn num_workers(&self) -> usize {
+        match &self.links {
+            LinkSet::Local { coord_eps, .. } => coord_eps.len(),
+            LinkSet::Process { workers, .. } => workers.len(),
+        }
+    }
+
+    /// The worker index hosting machine `j` (machine j itself on local
+    /// links).
+    pub fn worker_of(&self, j: usize) -> usize {
+        match &self.links {
+            LinkSet::Local { .. } => j,
+            LinkSet::Process { placement, .. } => placement[j].0,
+        }
+    }
+
+    /// Machine indices hosted by worker `w`, in slot order. Empty once
+    /// a worker has been drained (its machines migrated elsewhere).
+    pub fn machines_of(&self, w: usize) -> Vec<usize> {
+        match &self.links {
+            LinkSet::Local { .. } => vec![w],
+            LinkSet::Process { by_worker, .. } => by_worker[w].clone(),
+        }
+    }
+
+    /// Whether worker `w`'s link is dead (its I/O thread observed a
+    /// transport error or was killed). Always false on local links.
+    pub fn worker_is_dead(&self, w: usize) -> bool {
+        match &self.links {
+            LinkSet::Local { .. } => false,
+            LinkSet::Process { workers, .. } => workers[w].is_dead(),
+        }
+    }
+
+    /// Raw bytes the coordinator has sent on worker `w`'s link — for a
+    /// freshly replaced link this is exactly the rejoin handshake
+    /// (ack + re-shipped shards), which is how the fleet measures
+    /// re-ship cost without touching the protocol meters.
+    pub(crate) fn worker_bytes_sent(&self, w: usize) -> usize {
+        match &self.links {
+            LinkSet::Local { .. } => 0,
+            LinkSet::Process { workers, .. } => workers[w].bytes_sent(),
+        }
+    }
+
+    /// Swap a dead worker's link slot for a freshly registered one
+    /// (crash rejoin). The old link is torn down explicitly — it is
+    /// already dead, so this only reaps a leftover child.
+    pub(crate) fn replace_link(&mut self, w: usize, link: WorkerLink) {
+        match &mut self.links {
+            LinkSet::Local { .. } => {
+                unreachable!("local links have no worker processes to replace")
+            }
+            LinkSet::Process { workers, .. } => {
+                let mut old = std::mem::replace(&mut workers[w], link);
+                old.teardown();
+            }
+        }
+    }
+
+    /// Attach the child process behind worker `w`'s (replaced) link so
+    /// teardown can kill + reap it — the rejoin counterpart of what
+    /// `spawn_fleet` does at bring-up.
+    pub(crate) fn set_worker_child(&mut self, w: usize, child: std::process::Child) {
+        match &mut self.links {
+            LinkSet::Local { .. } => {
+                unreachable!("local links have no worker processes")
+            }
+            LinkSet::Process { workers, .. } => workers[w].set_child(child),
+        }
+    }
+
+    /// Gracefully shut worker `w` down (Shutdown frame, grace, reap) —
+    /// the tail end of a drain, after its machines have migrated.
+    pub(crate) fn teardown_worker(&mut self, w: usize) {
+        match &mut self.links {
+            LinkSet::Local { .. } => {
+                unreachable!("local links have no worker processes")
+            }
+            LinkSet::Process { workers, .. } => workers[w].teardown(),
+        }
+    }
+
+    /// Re-home every machine of worker `from` onto worker `to`
+    /// (drain migration), appending them after `to`'s existing slots —
+    /// the same order [`protocol::serve`]'s AttachShards handler
+    /// appends them worker-side, so routing and reply pairing stay
+    /// aligned. `from` is left hosting nothing: rounds skip it.
+    ///
+    /// After a migration the concatenation of workers' machines is no
+    /// longer globally in machine order; `exchange_fold` detects that
+    /// and buffers replies so folds still run in machine order (the
+    /// bit-parity discipline), trading away pipelining only on fleets
+    /// that actually migrated.
+    ///
+    /// [`protocol::serve`]: crate::transport::protocol::serve
+    pub(crate) fn migrate_machines(&mut self, from: usize, to: usize) {
+        match &mut self.links {
+            LinkSet::Local { .. } => {
+                unreachable!("local links have no worker processes to drain")
+            }
+            LinkSet::Process {
+                placement,
+                by_worker,
+                ..
+            } => {
+                assert_ne!(from, to, "cannot migrate a worker onto itself");
+                let moved = std::mem::take(&mut by_worker[from]);
+                for &j in &moved {
+                    placement[j] = (to, by_worker[to].len());
+                    by_worker[to].push(j);
+                }
+            }
+        }
+    }
+
     /// One synchronous protocol step: deliver `down` to every machine,
     /// collect one reply per machine, in machine order. A machine whose
     /// worker is gone yields an `Err` entry — never a hang — and stays
@@ -444,9 +562,18 @@ impl WiredChannel {
             LinkSet::Process {
                 workers, by_worker, ..
             } => {
+                // worker order == machine order only until a drain
+                // migration re-homes machines; afterwards folds must be
+                // buffered back into machine order (bit-parity)
+                let mut last: Option<usize> = None;
+                let ordered = by_worker.iter().flatten().all(|&j| {
+                    let ok = last.map_or(true, |l| l < j);
+                    last = Some(j);
+                    ok
+                });
                 Self::exchange_process_fold(
-                    workers, by_worker, &down, up_bytes, down_bytes, idle_secs, fold_secs,
-                    &mut fold,
+                    workers, by_worker, &down, ordered, up_bytes, down_bytes, idle_secs,
+                    fold_secs, &mut fold,
                 );
             }
         }
@@ -549,11 +676,18 @@ impl WiredChannel {
     /// (quotas, reseeds), far below any socket buffer; bulk payloads
     /// travel as broadcasts (one frame per worker) or replies (drained
     /// by the link threads as they arrive).
+    /// `ordered` says whether concatenating workers' machines in worker
+    /// order yields global machine order (true until a drain migration
+    /// re-homes machines). When it is false, replies are buffered and
+    /// folded in machine order after every worker drains — the fold
+    /// sequence the bit-parity discipline requires — at the cost of the
+    /// pipelined early folds, on migrated fleets only.
     #[allow(clippy::too_many_arguments)]
     fn exchange_process_fold(
         workers: &mut [WorkerLink],
         by_worker: &[Vec<usize>],
         down: &Down<'_>,
+        ordered: bool,
         up_bytes: &mut usize,
         down_bytes: &mut usize,
         idle_secs: &mut f64,
@@ -570,8 +704,8 @@ impl WiredChannel {
         let mut queued: Vec<bool> = Vec::with_capacity(workers.len());
         for (wi, w) in workers.iter_mut().enumerate() {
             let js = &by_worker[wi];
-            // a worker with no machines cannot exist (bring-up refuses
-            // empty specs), but never address one if it somehow does
+            // a drained worker hosts nothing (its machines migrated
+            // away) — never address it
             if js.is_empty() {
                 queued.push(false);
                 continue;
@@ -593,8 +727,10 @@ impl WiredChannel {
             };
             queued.push(w.submit(frames));
         }
-        // ---- collect in worker order (== machine order), folding each
-        // worker's slots as soon as it drains
+        // ---- collect in worker order (== machine order while
+        // `ordered`), folding each worker's slots as soon as it drains;
+        // on a migrated fleet buffer instead and fold in machine order
+        let mut deferred: Vec<(usize, Result<Vec<u8>>)> = Vec::new();
         let mut broadcast_metered = false;
         for (wi, w) in workers.iter_mut().enumerate() {
             let js = &by_worker[wi];
@@ -642,6 +778,18 @@ impl WiredChannel {
                     SlotOutcome::Skipped => Ok(Vec::new()),
                     SlotOutcome::Failed(e) => Err(format_err!("machine {j}: {e}")),
                 };
+                if ordered {
+                    let t = Instant::now();
+                    fold(j, r);
+                    *fold_secs += t.elapsed().as_secs_f64();
+                } else {
+                    deferred.push((j, r));
+                }
+            }
+        }
+        if !ordered {
+            deferred.sort_by_key(|&(j, _)| j);
+            for (j, r) in deferred {
                 let t = Instant::now();
                 fold(j, r);
                 *fold_secs += t.elapsed().as_secs_f64();

@@ -24,12 +24,17 @@
 //!
 //! Handshakes run **concurrently** on a bounded pool while the accept
 //! loop keeps accepting, so bring-up wall-clock stays O(m/w) whatever
-//! launches the workers. The listener is consumed by
-//! [`Endpoint::accept_fleet`]: once the fleet is assembled the
-//! registration window is closed and late dialers get connection
-//! refused. All registration traffic is handshake, not the paper's
-//! communication — it lands in the links' raw byte counters but never
-//! in the fleet's protocol meters.
+//! launches the workers. The listener is **not** consumed by
+//! [`Endpoint::accept_fleet`] (protocol v4): it stays bound for the
+//! fleet's lifetime, and [`Endpoint::accept_rejoins`] re-opens the
+//! registration path after bring-up so a relaunched (or late-joining)
+//! worker can claim a *dead* worker's index and have its shards
+//! re-shipped from the coordinator's retained copy. Post-bring-up
+//! refusals are logged and dropped instead of failing anything — a
+//! stray dialer must not kill a running fleet. All registration
+//! traffic is handshake, not the paper's communication — it lands in
+//! the links' raw byte counters but never in the fleet's protocol
+//! meters.
 
 use crate::transport::process::{read_timeout, WorkerLink, WorkerSpec};
 use crate::transport::protocol::{self, RegisterRefusal};
@@ -249,7 +254,10 @@ pub(crate) fn accept_one_with_deadline(
 
 /// The coordinator's bound listener plus the address workers dial. Bind
 /// first (so the port is known and can be handed to whatever launches
-/// the workers), then consume it with [`Endpoint::accept_fleet`].
+/// the workers), bring the fleet up with [`Endpoint::accept_fleet`],
+/// and keep it for the fleet's lifetime: the same endpoint later
+/// admits crash-rejoins and late joiners via
+/// [`Endpoint::accept_rejoins`].
 pub struct Endpoint {
     listener: Listener,
     connect_addr: String,
@@ -356,7 +364,7 @@ impl Endpoint {
     /// keeps accepting. The caller owns teardown of whatever it
     /// launched.
     pub fn accept_fleet(
-        self,
+        &self,
         specs: Vec<WorkerSpec>,
         register_timeout: Duration,
         mut doomed: impl FnMut(&[bool]) -> Result<()>,
@@ -519,6 +527,88 @@ impl Endpoint {
             .map(|(i, l)| l.ok_or_else(|| format_err!("worker {i}: registration incomplete")))
             .collect::<Result<Vec<WorkerLink>>>()?;
         Ok(links)
+    }
+
+    /// Re-open the registration path after bring-up: admit dialers
+    /// claiming the **dead** worker indices in `rejoin_specs` (each
+    /// spec carries the retained shards and a fresh RNG stream to
+    /// re-ship), for up to `window`. Returns the links that actually
+    /// registered, tagged with their worker index — fewer than asked
+    /// is not an error; the caller decides whether to keep waiting.
+    ///
+    /// The handshake is byte-for-byte the bring-up one
+    /// ([`register_one`]): hello → validate/claim → accept-ack →
+    /// LoadShard → live acks — a relaunched crashed worker and a
+    /// brand-new late joiner are mechanically identical, both just
+    /// dial and claim an orphaned index. Unlike bring-up, a *refused*
+    /// registration (live index → `DuplicateIndex`, out-of-range,
+    /// version mismatch…) is logged and dropped, never an error: a
+    /// stray dialer must not kill a running fleet. Handshakes run
+    /// inline — rejoin churn is rare and per-step time-bounded, so a
+    /// pool buys nothing here.
+    pub(crate) fn accept_rejoins(
+        &self,
+        rejoin_specs: Vec<WorkerSpec>,
+        workers_total: usize,
+        window: Duration,
+    ) -> Result<Vec<(usize, WorkerLink)>> {
+        let expected = rejoin_specs.len();
+        if expected == 0 {
+            return Ok(Vec::new());
+        }
+        // full-fleet-width slot vector, occupied only at the dead
+        // indices: a dialer claiming a live index finds its slot empty
+        // and is refused as DuplicateIndex, exactly like bring-up
+        let slots: Vec<RankedMutex<Option<WorkerSpec>>> = (0..workers_total)
+            .map(|_| RankedMutex::new(REGISTRATION_SPEC, None))
+            .collect();
+        for spec in rejoin_specs {
+            let index = spec.index;
+            if index >= workers_total {
+                bail!(
+                    "endpoint: rejoin spec claims worker {index}, fleet has {workers_total}"
+                );
+            }
+            if spec.machines.is_empty() {
+                bail!("endpoint: rejoin spec for worker {index} hosts zero machines");
+            }
+            let mut slot = slots[index].lock();
+            if slot.is_some() {
+                bail!("endpoint: two rejoin specs claim worker {index}");
+            }
+            *slot = Some(spec);
+        }
+        let claimed: Vec<AtomicBool> =
+            (0..workers_total).map(|_| AtomicBool::new(false)).collect();
+        self.listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + window;
+        let mut admitted: Vec<(usize, WorkerLink)> = Vec::new();
+        while admitted.len() < expected {
+            let stream = match self.listener.try_accept() {
+                Ok(Some(stream)) => stream,
+                Ok(None) => {
+                    if Instant::now() >= deadline {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            match register_one(stream, &slots, &claimed) {
+                Ok(Registration::Registered(index, link)) => admitted.push((index, link)),
+                Ok(Registration::Noise(e)) => {
+                    eprintln!(
+                        "soccer: endpoint ignored a connection that closed before \
+                         registering: {e}"
+                    );
+                }
+                Err(e) => {
+                    eprintln!("soccer: endpoint refused a post-bring-up dialer: {e}");
+                }
+            }
+        }
+        Ok(admitted)
     }
 }
 

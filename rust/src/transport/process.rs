@@ -98,6 +98,49 @@ pub(crate) fn parse_read_timeout(raw: Option<&str>) -> (Option<Duration>, Option
     }
 }
 
+/// Default for how long [`crate::machines::Fleet::with_endpoint`]
+/// waits for every externally launched worker to register (see
+/// [`register_timeout`]).
+const DEFAULT_REGISTER_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Parse a `SOCCER_REGISTER_TIMEOUT_SECS` value: the remote-
+/// registration deadline, plus a warning when the value is present but
+/// not a positive whole number of seconds (a typo'd deadline must not
+/// silently become the default). Same warn-once-on-typo shape as
+/// [`parse_read_timeout`]; `0` is a typo here, not "disabled" — a
+/// registration window must end.
+pub(crate) fn parse_register_timeout(raw: Option<&str>) -> (Duration, Option<String>) {
+    let Some(raw) = raw else {
+        return (DEFAULT_REGISTER_TIMEOUT, None);
+    };
+    match raw.trim().parse::<u64>() {
+        Ok(secs) if secs > 0 => (Duration::from_secs(secs), None),
+        _ => (
+            DEFAULT_REGISTER_TIMEOUT,
+            Some(format!(
+                "SOCCER_REGISTER_TIMEOUT_SECS={raw:?} is not a positive whole number of \
+                 seconds; falling back to the default {}s registration window",
+                DEFAULT_REGISTER_TIMEOUT.as_secs()
+            )),
+        ),
+    }
+}
+
+/// How long a fleet accepting *externally* launched workers waits for
+/// registration progress: 60 s by default — generous for cross-host
+/// launches — and tunable via `SOCCER_REGISTER_TIMEOUT_SECS` for slow
+/// CI runners or long-haul links. An unparseable value warns once on
+/// stderr and falls back to the default.
+pub(crate) fn register_timeout() -> Duration {
+    let raw = std::env::var("SOCCER_REGISTER_TIMEOUT_SECS").ok();
+    let (timeout, warning) = parse_register_timeout(raw.as_deref());
+    if let Some(msg) = warning {
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        WARNED.call_once(|| eprintln!("soccer: {msg}"));
+    }
+    timeout
+}
+
 /// Coordinator-side read timeout, **disabled by default**: a crashed
 /// worker already surfaces instantly as EOF on its socket, so a data-
 /// plane timeout's only effect would be to kill a healthy-but-slow
@@ -435,32 +478,41 @@ pub fn worker_binary() -> Result<PathBuf> {
     )
 }
 
+/// Spawn one `soccer-machine` child dialing `addr` and claiming
+/// `index` — the single launch point `spawn_fleet` uses at bring-up
+/// and the fleet's `relaunch_worker` uses to replace a crashed worker.
+pub(crate) fn spawn_worker_child(addr: &str, index: usize) -> Result<Child> {
+    let bin = worker_binary()?;
+    Command::new(&bin)
+        .arg("--connect")
+        .arg(addr)
+        .arg("--id")
+        .arg(index.to_string())
+        .stdin(Stdio::null())
+        .spawn()
+        .with_context(|| format!("spawning {}", bin.display()))
+}
+
 /// The local launcher: bind one endpoint, spawn one `soccer-machine`
 /// child per spec dialing it, and run the shared accept/registration
 /// loop (see `transport::endpoint`). Registration handshakes run
 /// concurrently, so bring-up wall-clock is O(m/w) handshakes, not O(m)
 /// sequential ones. Links return in spec order, each owning its child.
+/// The bound endpoint returns alongside them: it stays open for the
+/// fleet's lifetime so crashed workers can be relaunched and re-admitted
+/// (`Endpoint::accept_rejoins`).
 ///
 /// On any failure — a child dying before registering, a refused
 /// registration, a handshake error — every spawned child is torn down
 /// explicitly (kill + reap) before the error returns: a mid-spawn
 /// failure never leaks a running worker or a zombie pid.
-pub fn spawn_fleet(specs: Vec<WorkerSpec>) -> Result<Vec<WorkerLink>> {
-    let bin = worker_binary()?;
+pub fn spawn_fleet(specs: Vec<WorkerSpec>) -> Result<(Endpoint, Vec<WorkerLink>)> {
     let endpoint = Endpoint::bind_local()?;
     let addr = endpoint.connect_addr().to_string();
     let mut children: Vec<Child> = Vec::with_capacity(specs.len());
     let mut spawn_err = None;
     for spec in &specs {
-        let child = Command::new(&bin)
-            .arg("--connect")
-            .arg(&addr)
-            .arg("--id")
-            .arg(spec.index.to_string())
-            .stdin(Stdio::null())
-            .spawn()
-            .with_context(|| format!("spawning {}", bin.display()));
-        match child {
+        match spawn_worker_child(&addr, spec.index) {
             Ok(c) => children.push(c),
             Err(e) => {
                 spawn_err = Some(e);
@@ -489,7 +541,7 @@ pub fn spawn_fleet(specs: Vec<WorkerSpec>) -> Result<Vec<WorkerLink>> {
             for (link, child) in links.iter_mut().zip(children) {
                 link.set_child(child);
             }
-            Ok(links)
+            Ok((endpoint, links))
         }
         Err(e) => {
             for child in &mut children {
@@ -557,6 +609,34 @@ mod tests {
             let warn = warn.unwrap_or_else(|| panic!("{typo:?} should warn"));
             assert!(warn.contains("SOCCER_PROCESS_TIMEOUT_SECS"), "{warn}");
             assert!(warn.contains("unbounded"), "{warn}");
+        }
+    }
+
+    #[test]
+    fn register_timeout_parsing_warns_on_typos_and_falls_back() {
+        // unset -> the 60 s default, silently
+        assert_eq!(
+            parse_register_timeout(None),
+            (Duration::from_secs(60), None)
+        );
+        // a real deadline parses (with whitespace slack)
+        assert_eq!(
+            parse_register_timeout(Some("300")),
+            (Duration::from_secs(300), None)
+        );
+        assert_eq!(
+            parse_register_timeout(Some(" 5 ")),
+            (Duration::from_secs(5), None)
+        );
+        // a typo'd deadline falls back to the default AND says so —
+        // unlike the read timeout there is no "disabled" here: a
+        // registration window must end, so 0 is a typo too
+        for typo in ["30s", "abc", "1.5", "-3", "", "0"] {
+            let (t, warn) = parse_register_timeout(Some(typo));
+            assert_eq!(t, Duration::from_secs(60), "{typo:?}");
+            let warn = warn.unwrap_or_else(|| panic!("{typo:?} should warn"));
+            assert!(warn.contains("SOCCER_REGISTER_TIMEOUT_SECS"), "{warn}");
+            assert!(warn.contains("default"), "{warn}");
         }
     }
 }

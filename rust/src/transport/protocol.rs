@@ -54,7 +54,12 @@ pub const HELLO_MAGIC: u32 = 0x534F_4343; // "SOCC"
 /// coordinator and claims its index; the coordinator answers with an
 /// explicit accept/reject ack (carrying its own version, so both ends
 /// confirm they negotiated the same protocol) before any shard ships.
-pub const PROTOCOL_VERSION: u32 = 3;
+/// v4: the endpoint stays open for the fleet's lifetime — a dead
+/// worker's index may be re-claimed post-bring-up (rejoin re-ships the
+/// retained shard); `Heartbeat` liveness probes, `ExportState`
+/// migration reads and `AttachShards` adoption frames join the
+/// lifecycle set.
+pub const PROTOCOL_VERSION: u32 = 4;
 
 /// Registration-ack status codes (coordinator → worker, the frame
 /// answering the hello).
@@ -127,6 +132,15 @@ pub enum Op {
     Reseed = 3,
     /// drain the link and exit cleanly (replaces the thread join)
     Shutdown = 4,
+    /// liveness probe; the worker answers with its per-machine live
+    /// counts (a free metadata refresh riding the liveness check)
+    Heartbeat = 5,
+    /// read one machine's migratable state (RNG streams + live points)
+    /// so a `drain` can move it to another worker
+    ExportState = 6,
+    /// coordinator → worker post-bring-up: adopt a batch of migrated
+    /// machines (ids, RNG streams, original + live shards)
+    AttachShards = 7,
     // ---- data plane (all wired transports; metered) --------------------
     SampleExactPair = 16,
     SampleBernoulliPair = 17,
@@ -157,6 +171,9 @@ impl Op {
             2 => Op::Reset,
             3 => Op::Reseed,
             4 => Op::Shutdown,
+            5 => Op::Heartbeat,
+            6 => Op::ExportState,
+            7 => Op::AttachShards,
             16 => Op::SampleExactPair,
             17 => Op::SampleBernoulliPair,
             18 => Op::Remove,
@@ -363,6 +380,84 @@ pub fn decode_live_acks(frame: &[u8]) -> Result<Vec<usize>> {
     Ok((0..count).map(|_| r.get_u64() as usize).collect())
 }
 
+/// A liveness probe frame. Broadcast-shaped (op + routing) so the
+/// worker's runt check passes, but [`serve`] intercepts it before
+/// routing: one probe frame draws one live-acks reply for the whole
+/// worker, whatever it hosts. Heartbeats are lifecycle traffic and are
+/// never metered.
+pub fn encode_heartbeat() -> Vec<u8> {
+    request(Op::Heartbeat).finish()
+}
+
+/// One machine's full migratable state: what [`Op::ExportState`]
+/// reads out of a draining worker and [`Op::AttachShards`] installs
+/// into the adopting one. Carries *both* RNG streams — the current
+/// one (so the migrated machine continues its sequence bit-exactly)
+/// and the pristine one (so a later `reset()` replays the same run the
+/// never-migrated twin would).
+pub struct MachineState {
+    pub id: usize,
+    pub rng: Pcg64,
+    pub rng_init: Pcg64,
+    pub original: Matrix,
+    pub live: Matrix,
+}
+
+/// The adoption frame a `drain` sends to the worker inheriting the
+/// drained machines. Like [`encode_load_shards`], the routing field
+/// carries the batch size; [`serve`] intercepts the frame before
+/// routing and appends the rebuilt machines after its own slots.
+pub fn encode_attach_shards(machines: &[MachineState]) -> Result<Vec<u8>> {
+    if machines.is_empty() {
+        bail!("attach-shards batch: nothing to adopt");
+    }
+    let mut w = FrameWriter::new();
+    w.put_u32(Op::AttachShards.code());
+    w.put_u32(u32_header(machines.len(), "attach-shards batch size")?);
+    for s in machines {
+        w.put_u64(s.id as u64);
+        for word in s.rng.to_raw() {
+            w.put_u64(word);
+        }
+        for word in s.rng_init.to_raw() {
+            w.put_u64(word);
+        }
+        w.put_matrix(&s.original)?;
+        w.put_matrix(&s.live)?;
+    }
+    Ok(w.finish())
+}
+
+/// Decode [`encode_attach_shards`] into ready [`Machine`]s, in the
+/// slot order the coordinator will route by after the migration.
+pub fn decode_attach_shards(frame: &[u8]) -> Result<Vec<Machine>> {
+    let mut r = FrameReader::new(frame);
+    let op = r.get_u32();
+    if Op::from_u32(op) != Some(Op::AttachShards) {
+        bail!("worker expected an AttachShards frame, got op {op}");
+    }
+    let count = r.get_u32() as usize;
+    if count == 0 {
+        bail!("attach-shards batch carries zero machines");
+    }
+    let mut machines: Vec<Machine> = Vec::with_capacity(count);
+    for _ in 0..count {
+        let id = r.get_u64() as usize;
+        if machines.iter().any(|m| m.id == id) {
+            bail!("attach-shards batch repeats machine {id}");
+        }
+        let rng = Pcg64::from_raw([r.get_u64(), r.get_u64(), r.get_u64(), r.get_u64()]);
+        let rng_init = Pcg64::from_raw([r.get_u64(), r.get_u64(), r.get_u64(), r.get_u64()]);
+        let original = r.get_matrix();
+        let live = r.get_matrix();
+        machines.push(Machine::from_parts(id, original, live, rng, rng_init));
+    }
+    if r.remaining() != 0 {
+        bail!("attach-shards frame has {} trailing bytes", r.remaining());
+    }
+    Ok(machines)
+}
+
 /// Execute one data-plane or lifecycle request on a machine and encode
 /// the reply. The routing field was already consumed by whoever picked
 /// `m` (the worker's [`serve`] loop, or the channel on local links), so
@@ -458,7 +553,20 @@ pub fn dispatch(m: &mut Machine, req: &[u8], engine: &dyn Engine) -> Result<Vec<
             m.reseed(Pcg64::from_raw(raw));
             return Ok(encode_live_ack(m.n_live()));
         }
-        Op::LoadShard | Op::Shutdown => {
+        Op::ExportState => {
+            // migration read: both RNG streams, then the live points.
+            // The original shard is NOT echoed back — the coordinator
+            // re-ships machines from its retained copy, halving the
+            // drain's wire cost.
+            for word in m.rng_raw() {
+                w.put_u64(word);
+            }
+            for word in m.rng_init_raw() {
+                w.put_u64(word);
+            }
+            w.put_matrix(m.live())?;
+        }
+        Op::LoadShard | Op::Shutdown | Op::Heartbeat | Op::AttachShards => {
             bail!("op {op:?} is a link-lifecycle frame, not a dispatchable step");
         }
     }
@@ -471,7 +579,17 @@ pub fn dispatch(m: &mut Machine, req: &[u8], engine: &dyn Engine) -> Result<Vec<
 /// [`Op::Shutdown`] frame arrives (clean exit) or the peer disconnects
 /// (also a clean exit — the coordinator dropping the link IS the
 /// shutdown signal when it tears down without the courtesy frame).
-pub fn serve(link: &mut dyn Transport, machines: &mut [Machine], engine: &dyn Engine) -> Result<()> {
+///
+/// Worker-scoped lifecycle frames are intercepted before routing:
+/// [`Op::Heartbeat`] answers with one live-acks batch per probe, and
+/// [`Op::AttachShards`] (the drain-migration adoption frame) appends
+/// the rebuilt machines after this worker's own slots — which is why
+/// the hosted set is a `Vec`, not a fixed slice.
+pub fn serve(
+    link: &mut dyn Transport,
+    machines: &mut Vec<Machine>,
+    engine: &dyn Engine,
+) -> Result<()> {
     loop {
         let req = match link.recv() {
             Ok(req) => req,
@@ -485,6 +603,23 @@ pub fn serve(link: &mut dyn Transport, machines: &mut [Machine], engine: &dyn En
         let op = r.get_u32();
         if op == Op::Shutdown.code() {
             return Ok(());
+        }
+        if op == Op::Heartbeat.code() {
+            let live: Vec<usize> = machines.iter().map(|m| m.n_live()).collect();
+            link.send(&encode_live_acks(&live)?)?;
+            continue;
+        }
+        if op == Op::AttachShards.code() {
+            let adopted = decode_attach_shards(&req)?;
+            for a in &adopted {
+                if machines.iter().any(|m| m.id == a.id) {
+                    bail!("attach-shards frame re-adds machine {}, already hosted", a.id);
+                }
+            }
+            let live: Vec<usize> = adopted.iter().map(|m| m.n_live()).collect();
+            machines.extend(adopted);
+            link.send(&encode_live_acks(&live)?)?;
+            continue;
         }
         let route = r.get_u32();
         if route == ALL_MACHINES {
@@ -525,6 +660,9 @@ mod tests {
             Op::Reset,
             Op::Reseed,
             Op::Shutdown,
+            Op::Heartbeat,
+            Op::ExportState,
+            Op::AttachShards,
             Op::SampleExactPair,
             Op::SampleBernoulliPair,
             Op::Remove,
@@ -755,8 +893,123 @@ mod tests {
 
     fn protocol_serve_entry(
         link: &mut InProcTransport,
-        machines: &mut [Machine],
+        machines: &mut Vec<Machine>,
     ) -> Result<()> {
         serve(link, machines, &NativeEngine)
+    }
+
+    #[test]
+    fn attach_shards_rebuilds_the_exact_machines() {
+        // a machine mid-run: some points removed, RNG stream advanced
+        let mut src = machine(5, 40);
+        let _ = src.sample_exact(3);
+        src.remove_within(&Matrix::from_rows(&[&[0.0, 0.0]]), 0.8, &NativeEngine);
+        let state = MachineState {
+            id: 5,
+            rng: Pcg64::from_raw(src.rng_raw()),
+            rng_init: Pcg64::from_raw(src.rng_init_raw()),
+            original: src.original().clone(),
+            live: src.live().clone(),
+        };
+        let frame = encode_attach_shards(&[state]).unwrap();
+        let mut rebuilt = decode_attach_shards(&frame).unwrap();
+        assert_eq!(rebuilt.len(), 1);
+        let m = &mut rebuilt[0];
+        assert_eq!(m.id, 5);
+        assert_eq!(m.original(), src.original());
+        assert_eq!(m.live(), src.live());
+        // the current stream continues bit-exactly…
+        assert_eq!(m.sample_exact(2).value, src.sample_exact(2).value);
+        // …and reset() replays exactly what the source would replay
+        m.reset();
+        src.reset();
+        assert_eq!(m.live(), src.live());
+        assert_eq!(m.sample_exact(2).value, src.sample_exact(2).value);
+    }
+
+    #[test]
+    fn attach_shards_rejections() {
+        assert!(encode_attach_shards(&[]).is_err());
+        let state = |id: usize| MachineState {
+            id,
+            rng: Pcg64::new(1),
+            rng_init: Pcg64::new(1),
+            original: Matrix::zeros(2, 2),
+            live: Matrix::zeros(2, 2),
+        };
+        // a repeated machine id is refused
+        let frame = encode_attach_shards(&[state(3), state(3)]).unwrap();
+        assert!(decode_attach_shards(&frame).is_err());
+        // a non-AttachShards frame is refused
+        assert!(decode_attach_shards(&request(Op::Drain).finish()).is_err());
+    }
+
+    #[test]
+    fn dispatch_export_state_is_a_faithful_migration_read() {
+        let eng = NativeEngine;
+        let mut src = machine(7, 60);
+        let _ = src.sample_exact(4);
+        let reply = dispatch(&mut src, &request_to(Op::ExportState, 7).finish(), &eng).unwrap();
+        let mut r = FrameReader::new(&reply);
+        let rng = Pcg64::from_raw([r.get_u64(), r.get_u64(), r.get_u64(), r.get_u64()]);
+        let rng_init = Pcg64::from_raw([r.get_u64(), r.get_u64(), r.get_u64(), r.get_u64()]);
+        let live = r.get_matrix();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(&live, src.live());
+        // rebuilt from the export (+ the coordinator-retained original),
+        // the twin continues and replays identically
+        let mut twin = Machine::from_parts(7, src.original().clone(), live, rng, rng_init);
+        assert_eq!(twin.sample_exact(2).value, src.sample_exact(2).value);
+        twin.reset();
+        src.reset();
+        assert_eq!(twin.sample_exact(2).value, src.sample_exact(2).value);
+    }
+
+    #[test]
+    fn serve_answers_heartbeats_and_adopts_attached_shards() {
+        let (mut coord, mut worker_ep) = InProcTransport::pair();
+        let server = std::thread::spawn(move || {
+            let mut machines = vec![machine(4, 30), machine(9, 50)];
+            protocol_serve_entry(&mut worker_ep, &mut machines)
+        });
+        // a heartbeat draws one live-acks batch for the whole worker
+        coord.send(&encode_heartbeat()).unwrap();
+        let acks = decode_live_acks(&coord.recv().unwrap()).unwrap();
+        assert_eq!(acks, vec![30, 50]);
+        // adoption: machine 2 joins after the worker's own slots
+        let adopted = machine(2, 20);
+        let state = MachineState {
+            id: 2,
+            rng: Pcg64::from_raw(adopted.rng_raw()),
+            rng_init: Pcg64::from_raw(adopted.rng_init_raw()),
+            original: adopted.original().clone(),
+            live: adopted.live().clone(),
+        };
+        coord
+            .send(&encode_attach_shards(&[state]).unwrap())
+            .unwrap();
+        let acks = decode_live_acks(&coord.recv().unwrap()).unwrap();
+        assert_eq!(acks, vec![20]);
+        // the next broadcast fans out to all three, adopted slot last
+        let centers = Matrix::from_rows(&[&[0.0, 0.0]]);
+        let mut w = request(Op::CountsFull);
+        w.put_matrix(&centers).unwrap();
+        coord.send(&w.finish()).unwrap();
+        let mut sizes = Vec::new();
+        for _ in 0..3 {
+            let reply = coord.recv().unwrap();
+            sizes.push(FrameReader::new(&reply).get_f64s()[0]);
+        }
+        assert_eq!(sizes, vec![30.0, 50.0, 20.0]);
+        // adopting an id the worker already hosts is a protocol error
+        let dup = MachineState {
+            id: 9,
+            rng: Pcg64::new(1),
+            rng_init: Pcg64::new(1),
+            original: Matrix::zeros(1, 2),
+            live: Matrix::zeros(1, 2),
+        };
+        coord.send(&encode_attach_shards(&[dup]).unwrap()).unwrap();
+        assert!(server.join().expect("serve thread").is_err());
     }
 }

@@ -1,0 +1,273 @@
+//! Elastic-fleet lifecycle, end to end on real worker processes: a
+//! worker SIGKILLed mid-run is detected by heartbeat, relaunched,
+//! re-registered through the fleet's lifetime endpoint, and re-shipped
+//! its shard from the coordinator's retained copy; a planned departure
+//! (`drain_worker`) migrates exact mid-run state onto an adopting
+//! worker with no effect on outcomes or data-plane meters; and a late
+//! joiner launched externally against `rejoin_addr()` adopts an
+//! orphaned index. All recovery traffic stays off the protocol meters
+//! (it is measured separately, in `reship_bytes`).
+
+use soccer::baselines::run_centralized;
+use soccer::clustering::LloydKMeans;
+use soccer::coordinator::{run_soccer, SoccerParams};
+use soccer::core::Matrix;
+use soccer::machines::Fleet;
+use soccer::runtime::NativeEngine;
+use soccer::transport::TransportKind;
+use soccer::util::rng::Pcg64;
+use std::time::Duration;
+
+fn use_test_worker_binary() {
+    static SET: std::sync::Once = std::sync::Once::new();
+    SET.call_once(|| std::env::set_var("SOCCER_MACHINE_BIN", env!("CARGO_BIN_EXE_soccer-machine")));
+}
+
+/// SIGKILL a worker out-of-band, behind the coordinator's back.
+fn sigkill(pid: u32) {
+    let status = std::process::Command::new("kill")
+        .args(["-9", &pid.to_string()])
+        .status()
+        .expect("spawn kill");
+    assert!(status.success(), "kill -9 failed");
+}
+
+/// Probe until the crash is detected (the kill is asynchronous to the
+/// coordinator; heartbeat is the detection path under test).
+fn heartbeat_until_detected(fleet: &mut Fleet) -> usize {
+    for _ in 0..200 {
+        let newly_dead = fleet.heartbeat();
+        if newly_dead > 0 {
+            return newly_dead;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    panic!("heartbeat never detected the killed worker");
+}
+
+/// The headline invariant: kill-and-relaunch mid-run — the crashed
+/// worker re-registers on the fleet's still-open endpoint, gets its
+/// original shard re-shipped, and the healed fleet converges to the
+/// usual cost bounds over the FULL dataset.
+#[test]
+#[cfg(unix)]
+fn elastic_kill_relaunch_rejoins_mid_run() {
+    use_test_worker_binary();
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(3_000, 3);
+    let gm = soccer::data::gaussian::generate(&spec, &mut Pcg64::new(301));
+    let mut fleet =
+        Fleet::with_transport(&gm.points, 4, 302, TransportKind::Process).expect("process fleet");
+    let d = gm.points.cols();
+
+    // a healthy step first, so the crash lands mid-run
+    let centers = Matrix::from_rows(&[&vec![0.0f32; d][..]]);
+    let counts = fleet.counts_full(&centers, &NativeEngine).value;
+    assert_eq!(counts[0] as usize, 3_000);
+
+    let victim = fleet.worker_pids()[1].expect("worker 1 alive");
+    sigkill(victim);
+
+    // heartbeats are unmetered lifecycle traffic, whatever they find
+    let bytes_before = fleet.wire_bytes();
+    assert_eq!(heartbeat_until_detected(&mut fleet), 1);
+    assert_eq!(fleet.wire_bytes(), bytes_before, "heartbeat touched the meters");
+
+    // the crash is visible — and honestly labeled: aggregates cover
+    // the survivors, total_original still reports the fleet's true n
+    // (process-mode pin of the MachineMeta::downgrade fix)
+    assert_eq!(fleet.dead_machines(), 1);
+    assert_eq!(fleet.total_live(), 2_250);
+    assert_eq!(fleet.total_original(), 3_000);
+
+    // relaunch: same binary, same index, same endpoint; the rejoin
+    // handshake re-ships the 750-point shard from the retained copy
+    fleet.relaunch_worker(1).expect("relaunch worker 1");
+    assert_eq!(fleet.dead_machines(), 0);
+    assert_eq!(fleet.total_live(), 3_000);
+    assert_eq!(fleet.total_original(), 3_000);
+    assert!(
+        fleet.reship_bytes() >= 750 * d * 4,
+        "re-ship ({} bytes) must carry at least the raw shard",
+        fleet.reship_bytes()
+    );
+    // ...and none of it leaked into the protocol meters
+    assert_eq!(fleet.wire_bytes(), bytes_before, "re-ship hit the data-plane meters");
+
+    // the healed fleet answers over the full dataset again
+    let counts = fleet.counts_full(&centers, &NativeEngine).value;
+    assert_eq!(counts[0] as usize, 3_000);
+
+    // and converges like a fleet that never crashed
+    let params = SoccerParams::new(3, 0.2);
+    let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 303);
+    let central = run_centralized(&gm.points, 3, &LloydKMeans::default(), 304);
+    assert!(
+        out.cost <= 20.0 * central.cost.max(1e-9),
+        "healed-fleet cost {} vs centralized {}",
+        out.cost,
+        central.cost
+    );
+}
+
+/// RNG discipline across a crash: after the rejoined fleet is reseeded
+/// (`reset_with_seed`, the paper's independent-repetition protocol),
+/// every machine — including the rejoined one — is back on the
+/// canonical streams, so the run is a BIT-exact twin of a fleet that
+/// never crashed.
+#[test]
+#[cfg(unix)]
+fn elastic_rejoined_fleet_replays_like_never_crashed() {
+    use_test_worker_binary();
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(1_200, 3);
+    let gm = soccer::data::gaussian::generate(&spec, &mut Pcg64::new(311));
+    let mut fleet =
+        Fleet::with_transport(&gm.points, 3, 312, TransportKind::Process).expect("process fleet");
+
+    let victim = fleet.worker_pids()[2].expect("worker 2 alive");
+    sigkill(victim);
+    heartbeat_until_detected(&mut fleet);
+    fleet.relaunch_worker(2).expect("relaunch worker 2");
+
+    // reseed both fleets identically and replay
+    fleet.reset_with_seed(315);
+    let params = SoccerParams::new(3, 0.2);
+    let out_p = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 316);
+
+    let mut twin = Fleet::new(&gm.points, 3, 312);
+    twin.reset_with_seed(315);
+    let out_t = run_soccer(&mut twin, &NativeEngine, &params, &LloydKMeans::default(), 316);
+
+    assert_eq!(out_p.c_out, out_t.c_out);
+    assert_eq!(out_p.final_centers, out_t.final_centers);
+    assert_eq!(out_p.rounds, out_t.rounds);
+    assert_eq!(out_p.cost.to_bits(), out_t.cost.to_bits());
+}
+
+/// Controlled departure: `drain_worker` migrates exact mid-run state
+/// (live set + both RNG streams) onto the adopting worker. Outcomes
+/// stay bit-identical to a never-drained twin and the data-plane
+/// meters reconcile exactly — the migration itself crosses the wire as
+/// unmetered lifecycle traffic, tallied in `reship_bytes`.
+#[test]
+fn elastic_drain_migrates_shards_bit_exactly() {
+    use_test_worker_binary();
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(1_800, 3);
+    let gm = soccer::data::gaussian::generate(&spec, &mut Pcg64::new(321));
+    let d = gm.points.cols();
+    // 6 machines packed 2-per-worker: workers host [0,1] [2,3] [4,5]
+    let build = || {
+        Fleet::with_placement(&gm.points, 6, 322, TransportKind::Process, 2)
+            .expect("packed process fleet")
+    };
+    let mut fleet = build();
+    let mut twin = build();
+
+    // identical mid-run state on both: advance machine RNGs and shrink
+    // the live sets (remove the cheaper half of the points)
+    let centers = Matrix::from_rows(&[&vec![0.0f32; d][..]]);
+    let mut costs = fleet.per_point_costs_full(&centers, &NativeEngine);
+    costs.sort_by(|a, b| a.partial_cmp(b).expect("finite costs"));
+    let v = costs[costs.len() / 2];
+    let mut rng_a = Pcg64::new(323);
+    let mut rng_b = Pcg64::new(323);
+    for (f, rng) in [(&mut fleet, &mut rng_a), (&mut twin, &mut rng_b)] {
+        f.sample_pair_exact(300, rng);
+        f.broadcast_remove(&centers, v, &NativeEngine);
+    }
+    assert_eq!(fleet.total_live(), twin.total_live());
+
+    // drain worker 0 onto worker 2; the twin keeps its placement
+    let (up0, down0) = fleet.wire_bytes();
+    fleet.drain_worker(0, 2).expect("drain 0 -> 2");
+    assert_eq!(
+        fleet.wire_bytes(),
+        (up0, down0),
+        "drain leaked into the data-plane meters"
+    );
+    assert!(fleet.reship_bytes() > 0, "migration bytes went unmeasured");
+    assert_eq!(fleet.total_live(), twin.total_live());
+    assert_eq!(fleet.total_original(), 1_800);
+
+    // a drained worker is retired: it cannot adopt, drain again, or
+    // host a rejoin; self-adoption never made sense
+    assert!(fleet.drain_worker(1, 1).is_err());
+    assert!(fleet.drain_worker(0, 1).is_err());
+    assert!(fleet.drain_worker(1, 0).is_err());
+    assert!(fleet.relaunch_worker(0).is_err());
+
+    // every subsequent step is a bit-exact twin with byte-equal meters
+    fleet.reset_wire_meter();
+    twin.reset_wire_meter();
+    let mut rng_a = Pcg64::new(324);
+    let mut rng_b = Pcg64::new(324);
+    let sa = fleet.sample_pair_exact(200, &mut rng_a);
+    let sb = twin.sample_pair_exact(200, &mut rng_b);
+    assert_eq!(sa.value.0, sb.value.0);
+    assert_eq!(sa.value.1, sb.value.1);
+    let pa = fleet.uniform_point(&mut rng_a);
+    let pb = twin.uniform_point(&mut rng_b);
+    assert_eq!(pa, pb);
+    let ca = fleet.counts_full(&centers, &NativeEngine).value;
+    let cb = twin.counts_full(&centers, &NativeEngine).value;
+    assert_eq!(ca, cb);
+    assert_eq!(
+        fleet.wire_bytes(),
+        twin.wire_bytes(),
+        "post-drain data-plane meters must reconcile byte-exactly"
+    );
+    let da = fleet.drain();
+    let db = twin.drain();
+    assert_eq!(da, db);
+}
+
+/// A late joiner launched by SOMEONE ELSE — dialing `rejoin_addr()`
+/// with the orphaned index — is admitted by `admit_rejoins` and
+/// adopts the dead worker's shard; with nobody dead, `admit_rejoins`
+/// is a cheap no-op.
+#[test]
+fn elastic_late_joiner_adopts_orphaned_shard() {
+    use_test_worker_binary();
+
+    let spec = soccer::data::gaussian::GaussianMixtureSpec::paper(400, 2);
+    let gm = soccer::data::gaussian::generate(&spec, &mut Pcg64::new(331));
+    let d = gm.points.cols();
+    let mut fleet =
+        Fleet::with_transport(&gm.points, 2, 332, TransportKind::Process).expect("process fleet");
+
+    // nothing dead: the window closes without admitting anyone
+    assert_eq!(
+        fleet.admit_rejoins(Duration::from_millis(50)).expect("no-op rejoin"),
+        0
+    );
+
+    // in-band kill (kill_machine downgrades immediately; no heartbeat
+    // needed) orphans worker 0's index and shard
+    assert_eq!(fleet.kill_machine(0), 200);
+    assert_eq!(fleet.dead_machines(), 1);
+
+    // an external launcher brings up a replacement against the
+    // published rejoin address — the coordinator never spawned it
+    let addr = fleet.rejoin_addr().expect("process fleets retain an endpoint").to_string();
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_soccer-machine"))
+        .args(["--connect", &addr, "--id", "0"])
+        .spawn()
+        .expect("launch late joiner");
+
+    let admitted = fleet.admit_rejoins(Duration::from_secs(30)).expect("rejoin window");
+    assert_eq!(admitted, 1);
+    assert_eq!(fleet.dead_machines(), 0);
+    assert_eq!(fleet.total_live(), 400);
+    assert!(fleet.reship_bytes() >= 200 * d * 4);
+    let centers = Matrix::from_rows(&[&vec![0.0f32; d][..]]);
+    let counts = fleet.counts_full(&centers, &NativeEngine).value;
+    assert_eq!(counts[0] as usize, 400);
+
+    // fleet teardown sends the late joiner its Shutdown like any other
+    // worker: the child we launched exits cleanly
+    drop(fleet);
+    let status = child.wait().expect("late joiner exit status");
+    assert!(status.success(), "late joiner exited {status:?}");
+}

@@ -308,21 +308,23 @@ fn process_worker_crash_downgrades_within_timeout() {
     let handle = std::thread::spawn(move || {
         let centers = soccer::core::Matrix::from_rows(&[&[0.0f32; 15]]);
         let counts = fleet.counts_full(&centers, &NativeEngine).value;
-        let survivors = fleet.total_original();
+        let reported_original = fleet.total_original();
         let dead = fleet.dead_machines();
         // the fleet keeps working on the survivors end to end
         let params = SoccerParams::new(3, 0.2);
         let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 104);
-        tx.send((counts, survivors, dead, out.cost)).expect("report");
+        tx.send((counts, reported_original, dead, out.cost))
+            .expect("report");
     });
-    let (counts, survivors, dead, cost) = rx
+    let (counts, reported_original, dead, cost) = rx
         .recv_timeout(std::time::Duration::from_secs(60))
         .expect("coordinator deadlocked after worker crash");
     handle.join().expect("watchdog thread");
     // worker 1's shard is gone from the aggregates (shards are 1000
-    // points each), and the coordinator both knows it and reports it
+    // points each), the coordinator knows it — and total_original
+    // keeps reporting the fleet's true n, not the survivor count
     assert_eq!(dead, 1);
-    assert_eq!(survivors, 2_000);
+    assert_eq!(reported_original, 3_000);
     assert_eq!(counts[0] as usize, 2_000);
     assert!(cost.is_finite() && cost >= 0.0);
 }
@@ -472,18 +474,20 @@ fn process_packed_worker_crash_downgrades_all_its_machines() {
         let centers = soccer::core::Matrix::from_rows(&[&[0.0f32; 15]]);
         let counts = fleet.counts_full(&centers, &NativeEngine).value;
         let dead = fleet.dead_machines();
-        let survivors = fleet.total_original();
+        let reported_original = fleet.total_original();
         let params = SoccerParams::new(3, 0.2);
         let out = run_soccer(&mut fleet, &NativeEngine, &params, &LloydKMeans::default(), 134);
-        tx.send((counts, dead, survivors, out)).expect("report");
+        tx.send((counts, dead, reported_original, out))
+            .expect("report");
     });
-    let (counts, dead, survivors, out_p) = rx
+    let (counts, dead, reported_original, out_p) = rx
         .recv_timeout(std::time::Duration::from_secs(60))
         .expect("coordinator deadlocked after worker crash");
     handle.join().expect("watchdog thread");
-    // BOTH hosted machines died with the process (500 points each)
+    // BOTH hosted machines died with the process (500 points each);
+    // aggregates drop to the survivors, total_original does not
     assert_eq!(dead, 2);
-    assert_eq!(survivors, 2_000);
+    assert_eq!(reported_original, 3_000);
     assert_eq!(counts[0] as usize, 2_000);
 
     // the run over the survivors is a bit-exact twin of a fleet whose
