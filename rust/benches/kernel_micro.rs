@@ -1,8 +1,19 @@
 //! Microbench of the native nearest-center kernel (the L3 machine-side
-//! hot loop) across the dataset shapes the paper uses. §Perf's
-//! before/after numbers come from here.
+//! hot loop) across the dataset shapes the paper uses, recording the
+//! PR 10 kernel trajectory: the seed direct-difference kernel vs the
+//! norm-expansion tiled kernel, single-threaded and pooled.
+//!
+//! Besides the console table, writes the machine-readable snapshot
+//! `BENCH_kernel.json` at the repo root (committed; CI smoke-parses it
+//! for schema drift). GFLOP/s is the NOMINAL 2·n·k·d model in both
+//! columns — the norm expansion does roughly half the inner-loop
+//! arithmetic for the same nominal flops, which is half of where the
+//! speedup comes from (the rest is tiling and the cached norms).
 
-use soccer::core::distance::nearest_center_into;
+use soccer::bench_support::harness::{bench_n, bench_reps, write_repo_snapshot, Table};
+use soccer::core::distance::{nearest_center_into, nearest_center_seq, PointNorms};
+use soccer::util::json::Json;
+use soccer::util::pool::default_workers;
 use soccer::util::rng::Pcg64;
 use soccer::util::timer::timed;
 use soccer::Matrix;
@@ -12,24 +23,156 @@ fn randmat(seed: u64, rows: usize, cols: usize) -> Matrix {
     Matrix::from_vec((0..rows * cols).map(|_| rng.normal() as f32).collect(), rows, cols)
 }
 
+/// The seed kernel, kept verbatim as the in-bench baseline: per-point
+/// direct-difference distances, center-blocked by 4 with named
+/// accumulator chains, single-threaded, no norm reuse. This is what
+/// every pre-PR-10 machine-seconds number in EXPERIMENTS.md ran on.
+fn seed_nearest_into(points: &Matrix, centers: &Matrix, dist_out: &mut [f32], idx_out: &mut [u32]) {
+    let n = points.rows();
+    let k = centers.rows();
+    let d = points.cols();
+    for i in 0..n {
+        let p = points.row(i);
+        let mut best = f32::INFINITY;
+        let mut best_j = 0u32;
+        let mut j = 0usize;
+        while j + 4 <= k {
+            let base = j * d;
+            let c = &centers.data()[base..base + 4 * d];
+            let (c0, rest) = c.split_at(d);
+            let (c1, rest) = rest.split_at(d);
+            let (c2, c3) = rest.split_at(d);
+            let mut a0 = 0.0f32;
+            let mut a1 = 0.0f32;
+            let mut a2 = 0.0f32;
+            let mut a3 = 0.0f32;
+            for t in 0..d {
+                let x = p[t];
+                let d0 = x - c0[t];
+                let d1 = x - c1[t];
+                let d2 = x - c2[t];
+                let d3 = x - c3[t];
+                a0 += d0 * d0;
+                a1 += d1 * d1;
+                a2 += d2 * d2;
+                a3 += d3 * d3;
+            }
+            if a0 < best {
+                best = a0;
+                best_j = j as u32;
+            }
+            if a1 < best {
+                best = a1;
+                best_j = (j + 1) as u32;
+            }
+            if a2 < best {
+                best = a2;
+                best_j = (j + 2) as u32;
+            }
+            if a3 < best {
+                best = a3;
+                best_j = (j + 3) as u32;
+            }
+            j += 4;
+        }
+        while j < k {
+            let dsq = soccer::core::distance::sq_dist(p, centers.row(j));
+            if dsq < best {
+                best = dsq;
+                best_j = j as u32;
+            }
+            j += 1;
+        }
+        dist_out[i] = best;
+        idx_out[i] = best_j;
+    }
+}
+
 fn main() {
-    let n = soccer::bench_support::harness::bench_n(100_000);
-    let reps = soccer::bench_support::harness::bench_reps(5);
-    println!("nearest-center microbench: n={n}, reps={reps}");
-    println!("{:<22} {:>10} {:>10}", "shape (d, k)", "secs", "GFLOP/s");
-    for (d, k) in [(15usize, 96usize), (28, 109), (42, 109), (57, 109), (68, 109), (15, 384), (64, 256)] {
+    let n = bench_n(100_000);
+    let reps = bench_reps(5);
+    let threads = default_workers();
+    println!("nearest-center microbench: n={n}, reps={reps}, pool threads={threads}");
+
+    let shapes = [
+        (15usize, 96usize),
+        (28, 109),
+        (42, 109),
+        (57, 109),
+        (68, 109),
+        (15, 384),
+        (64, 256),
+    ];
+    let mut table = Table::new(
+        "Kernel trajectory (nominal GFLOP/s, 2nkd model)",
+        &["shape (d, k)", "seed", "seq", "seq x", "pooled", "pooled x"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    for (d, k) in shapes {
         let pts = randmat(1, n, d);
         let cen = randmat(2, k, d);
+        let norms = PointNorms::compute(&pts);
         let mut dist = vec![0.0f32; n];
         let mut idx = vec![0u32; n];
+        let gflops = |secs: f64| 2.0 * n as f64 * k as f64 * d as f64 / secs / 1e9;
+
+        // seed kernel, 1 thread
+        seed_nearest_into(&pts, &cen, &mut dist, &mut idx); // warm
+        let (_, secs) = timed(|| {
+            for _ in 0..reps {
+                seed_nearest_into(&pts, &cen, &mut dist, &mut idx);
+            }
+        });
+        let seed_g = gflops(secs / reps as f64);
+
+        // tiled norm-expansion kernel, 1 thread, cached norms
+        nearest_center_seq(&pts, &cen, Some(&norms), &mut dist, &mut idx); // warm
+        let (_, secs) = timed(|| {
+            for _ in 0..reps {
+                nearest_center_seq(&pts, &cen, Some(&norms), &mut dist, &mut idx);
+            }
+        });
+        let seq_g = gflops(secs / reps as f64);
+
+        // same kernel through the pooled entry (bit-identical output)
         nearest_center_into(&pts, &cen, &mut dist, &mut idx); // warm
         let (_, secs) = timed(|| {
             for _ in 0..reps {
                 nearest_center_into(&pts, &cen, &mut dist, &mut idx);
             }
         });
-        let per = secs / reps as f64;
-        let gflops = 2.0 * n as f64 * k as f64 * d as f64 / per / 1e9;
-        println!("{:<22} {:>10.4} {:>10.2}", format!("d={d}, k={k}"), per, gflops);
+        let pooled_g = gflops(secs / reps as f64);
+
+        table.row(vec![
+            format!("d={d}, k={k}"),
+            format!("{seed_g:.2}"),
+            format!("{seq_g:.2}"),
+            format!("{:.2}x", seq_g / seed_g),
+            format!("{pooled_g:.2}"),
+            format!("{:.2}x", pooled_g / seed_g),
+        ]);
+        rows.push(Json::obj(vec![
+            ("d", Json::num(d as f64)),
+            ("k", Json::num(k as f64)),
+            ("seed_gflops", Json::num(seed_g)),
+            ("seq_gflops", Json::num(seq_g)),
+            ("seq_speedup", Json::num(seq_g / seed_g)),
+            ("pooled_gflops", Json::num(pooled_g)),
+            ("pooled_speedup", Json::num(pooled_g / seed_g)),
+        ]));
     }
+    table.print();
+
+    let payload = Json::obj(vec![
+        ("bench", Json::str("kernel_micro/nearest_center")),
+        ("status", Json::str("recorded")),
+        ("n", Json::num(n as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("threads", Json::num(threads as f64)),
+        ("flops_model", Json::str("2*n*k*d")),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = write_repo_snapshot("BENCH_kernel", payload);
+    println!("wrote {}", path.display());
 }

@@ -4,7 +4,7 @@
 //! weighted-reduction step shared by SOCCER and k-means||, and (in its
 //! weighted form) the final stage of k-means|| itself.
 
-use crate::core::distance::update_nearest;
+use crate::core::distance::{update_nearest_cached, PointNorms};
 use crate::core::Matrix;
 use crate::util::rng::Pcg64;
 
@@ -35,11 +35,14 @@ pub fn seed_indices_weighted(
     }
     let wval = |i: usize| weights.map(|w| w[i]).unwrap_or(1.0).max(0.0);
 
-    // first center: weighted-uniform
+    // first center: weighted-uniform. One ‖x‖² pass serves the whole
+    // D² chain — each chosen center folds in through the incremental
+    // blocked kernel (bit-identical to the uncached path).
+    let norms = PointNorms::compute(points);
     let first = sample_weighted_index(rng, n, &wval);
     let mut chosen = vec![first];
     let mut dist = vec![f32::INFINITY; n];
-    update_nearest(points, &points.select(&[first]), &mut dist, None);
+    update_nearest_cached(points, &points.select(&[first]), &norms, &mut dist, None);
 
     while chosen.len() < k {
         // total w·D² mass
@@ -71,7 +74,7 @@ pub fn seed_indices_weighted(
             }
         };
         chosen.push(next);
-        update_nearest(points, &points.select(&[next]), &mut dist, None);
+        update_nearest_cached(points, &points.select(&[next]), &norms, &mut dist, None);
     }
     chosen
 }

@@ -3,7 +3,7 @@
 //! Mirrors the L2 `lloyd_step` graph: assign, accumulate weighted sums
 //! and counts, divide, reseed empty clusters to the most expensive point.
 
-use crate::core::distance::nearest_center_into;
+use crate::core::distance::{nearest_center_cached, PointNorms};
 use crate::core::Matrix;
 
 /// Outcome of a Lloyd refinement.
@@ -37,10 +37,13 @@ pub fn lloyd(
     let mut idx = vec![0u32; n];
     let mut prev_cost = f64::INFINITY;
     let mut iterations = 0;
+    // the point set is fixed across iterations: one ‖x‖² pass serves
+    // every assignment (bit-identical to recomputing per iteration)
+    let norms = PointNorms::compute(points);
 
     for it in 0..max_iter.max(1) {
         iterations = it + 1;
-        nearest_center_into(points, &centers, &mut dist, &mut idx);
+        nearest_center_cached(points, &centers, &norms, &mut dist, &mut idx);
         let cost: f64 = (0..n).map(|i| wval(i) * dist[i] as f64).sum();
 
         // accumulate weighted sums/counts
@@ -83,7 +86,7 @@ pub fn lloyd(
     }
 
     // final cost w.r.t. the updated centers
-    nearest_center_into(points, &centers, &mut dist, &mut idx);
+    nearest_center_cached(points, &centers, &norms, &mut dist, &mut idx);
     let final_cost: f64 = (0..n).map(|i| wval(i) * dist[i] as f64).sum();
     LloydResult {
         centers,

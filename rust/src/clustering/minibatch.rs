@@ -55,6 +55,9 @@ pub fn minibatch_kmeans(
     let bs = cfg.batch_size.min(n);
     let mut bdist = vec![0.0f32; bs];
     let mut bidx = vec![0u32; bs];
+    // each batch is a fresh row selection, so no point-norm cache
+    // applies; the blocked kernel streams the norms per batch (and a
+    // default-sized batch stays under the pool threshold — sequential)
     for _ in 0..cfg.max_batches {
         let batch_idx = rng.sample_indices(n, bs);
         let batch = points.select(&batch_idx);

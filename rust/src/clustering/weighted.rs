@@ -10,6 +10,8 @@ use crate::core::Matrix;
 use crate::util::rng::Pcg64;
 
 /// Cluster sizes of `centers` on `points` (the reduction weights).
+/// A full-dataset sweep, so it rides the kernel's pooled path when
+/// `points` is large (bit-identical to the sequential result).
 pub fn center_weights(points: &Matrix, centers: &Matrix) -> Vec<f64> {
     let mut w = vec![0.0f64; centers.rows()];
     if points.is_empty() || centers.is_empty() {

@@ -6,7 +6,7 @@
 //!                v = 2·cost_{3/2(k+1)d_k}(P₂, C_iter) / (3·k·d_k)
 //!                is built from.
 
-use super::distance::nearest_dist_into;
+use super::distance::{nearest_dist_cached, nearest_dist_into, PointNorms};
 use super::matrix::Matrix;
 use crate::util::stats::select_nth;
 
@@ -18,6 +18,18 @@ pub fn cost(s: &Matrix, t: &Matrix) -> f64 {
     }
     let mut dist = vec![0.0f32; s.rows()];
     nearest_dist_into(s, t, &mut dist);
+    dist.iter().map(|&d| d as f64).sum()
+}
+
+/// [`cost`] with a caller-held point-norm cache (machines evaluate many
+/// center sets against the same immutable shard; the cache skips the
+/// O(n·d) point-norm pass each time). Bit-identical to [`cost`].
+pub fn cost_cached(s: &Matrix, t: &Matrix, norms: &PointNorms) -> f64 {
+    if s.is_empty() {
+        return 0.0;
+    }
+    let mut dist = vec![0.0f32; s.rows()];
+    nearest_dist_cached(s, t, norms, &mut dist);
     dist.iter().map(|&d| d as f64).sum()
 }
 
@@ -66,6 +78,15 @@ pub fn per_point_costs(s: &Matrix, t: &Matrix) -> Vec<f32> {
     let mut dist = vec![0.0f32; s.rows()];
     if !s.is_empty() {
         nearest_dist_into(s, t, &mut dist);
+    }
+    dist
+}
+
+/// [`per_point_costs`] with a caller-held point-norm cache.
+pub fn per_point_costs_cached(s: &Matrix, t: &Matrix, norms: &PointNorms) -> Vec<f32> {
+    let mut dist = vec![0.0f32; s.rows()];
+    if !s.is_empty() {
+        nearest_dist_cached(s, t, norms, &mut dist);
     }
     dist
 }
@@ -124,6 +145,16 @@ mod tests {
                 "l={l} fast={fast} slow={slow}"
             );
         }
+    }
+
+    #[test]
+    fn cached_cost_matches_uncached() {
+        let mut rng = Pcg64::new(9);
+        let s = Matrix::from_vec((0..80 * 6).map(|_| rng.normal() as f32).collect(), 80, 6);
+        let t = Matrix::from_vec((0..4 * 6).map(|_| rng.normal() as f32).collect(), 4, 6);
+        let norms = PointNorms::compute(&s);
+        assert_eq!(cost(&s, &t), cost_cached(&s, &t, &norms));
+        assert_eq!(per_point_costs(&s, &t), per_point_costs_cached(&s, &t, &norms));
     }
 
     #[test]

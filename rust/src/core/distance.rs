@@ -1,12 +1,67 @@
-//! Native nearest-center distance kernel (the rust mirror of the L1
-//! Pallas kernel, used as fallback for shapes without artifacts and as
-//! the ablation baseline in `benches/ablate_runtime.rs`).
+//! Native nearest-center distance kernels (the rust mirror of the L1
+//! Pallas kernel in `python/compile/kernels/distance.py`, used as the
+//! fallback for shapes without artifacts and as the ablation baseline
+//! in `benches/ablate_runtime.rs`).
 //!
-//! Same formulation as the Pallas kernel: d²(x,c) = ‖x‖² − 2x·c + ‖c‖²
-//! with a clamp at zero, blocked over centers so the center panel stays
-//! in cache while point rows stream.
+//! Since PR 10 the kernel really computes what this header always
+//! claimed: the norm-expansion form
+//!
+//! ```text
+//! d²(x, c) = ‖x‖² − 2·x·c + ‖c‖²   (clamped at zero)
+//! ```
+//!
+//! with a center-norm panel precomputed once per call and the point
+//! norms either streamed per block or served from a caller-held
+//! [`PointNorms`] cache (machines cache the norms of their shard once
+//! and reuse them every round). The traversal is tiled on three
+//! levels, mirroring the Pallas kernel's BlockSpec structure:
+//!
+//! - **point blocks** of [`POINT_BLOCK`] rows (the Pallas `BLOCK_N`
+//!   analog): the running dist/idx block and a 4-row center panel stay
+//!   L1-resident while the point block streams;
+//! - **center blocks** of 4 rows: four independent dot-product
+//!   accumulator chains per point (the ILP sweet spot recorded in
+//!   EXPERIMENTS.md §Perf for this loop — 8 chains spilled);
+//! - **dimension chunks** of 4 via `chunks_exact`, with the scalar
+//!   tail folded element-wise.
+//!
+//! Every entry point — full assign, the no-index distance path, and
+//! the incremental [`update_nearest`] — funnels into ONE sweep whose
+//! per-(point, center) arithmetic follows a single association rule
+//! ([`dot1`]; [`dot4`] is four lanes of it). That makes the computed
+//! bits independent of blocking, of how a center set is split across
+//! calls, and of the pool decomposition: pooled ≡ sequential and
+//! incremental ≡ batch hold **bit-identically**, which is what keeps
+//! the Direct ≡ InProc ≡ Process twin guarantees alive now that the
+//! pool runs underneath every call site.
+//!
+//! Parallelism: the pooled entries split the point axis into fixed
+//! [`POOL_CHUNK`]-row jobs on `util::pool` (each job writes a disjoint
+//! dist/idx range; per-point arithmetic never crosses a chunk edge).
+//! Calls from inside a pool worker — e.g. machine compute under the
+//! fleet's per-machine parallel map — degrade to inline execution via
+//! the pool's nested-map guard, so nesting cannot deadlock and cannot
+//! change results. Recorded before/after numbers live in
+//! `BENCH_kernel.json` at the repo root (written by
+//! `benches/kernel_micro.rs`; see README §Perf: kernel).
 
 use super::matrix::Matrix;
+use crate::util::pool::{default_workers, par_map_mut};
+
+/// Rows per cache-level point tile (the Pallas `BLOCK_N` analog). The
+/// f32 working set per tile — point rows + the 4-row center panel +
+/// the dist/idx block — stays far below L2 for every paper shape.
+pub const POINT_BLOCK: usize = 256;
+
+/// Rows per pooled job. Fixed (not n/threads) so the decomposition is
+/// the same whatever the pool width; results are bit-identical either
+/// way, but a fixed chunk also bounds queue traffic and keeps each
+/// job's output range cache-friendly.
+pub const POOL_CHUNK: usize = 4096;
+
+/// Below this many points the pooled entries run sequentially inline:
+/// a couple of chunks of work do not amortize the queue round-trip.
+pub const POOL_MIN_POINTS: usize = 2 * POOL_CHUNK;
 
 /// Checked narrowing for the u32 index buffers of the Engine contract:
 /// a center index is bounded by `centers.rows()`, far below 2^32 — not
@@ -18,7 +73,10 @@ fn center_idx(j: usize) -> u32 {
     j as u32 // lint: allow(lossy-cast) center index bounded by centers.rows(); debug-asserted above
 }
 
-/// Squared Euclidean distance between two points.
+/// Squared Euclidean distance between two points — the direct-difference
+/// brute-force reference the property suites pin the blocked kernel
+/// against. NOT the hot path: every `nearest_*`/`update_*` entry uses
+/// the norm-expansion sweep below.
 #[inline]
 pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -42,10 +100,372 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
-/// Per-point nearest-center squared distance + index.
+// ---- the one association rule ------------------------------------------
+
+/// Inner product with THE association every path shares: 4-element
+/// `chunks_exact` blocks, each folded as `x0·y0 + x1·y1 + x2·y2 + x3·y3`
+/// left to right, scalar tail element-wise. f32 addition is not
+/// associative, so fixing this shape (and never letting the compiler
+/// re-associate — rustc has no fast-math) is what makes every dot
+/// product bit-identical regardless of which block, call, or pool job
+/// computed it.
+#[inline(always)]
+fn dot1(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.chunks_exact(4).zip(b.chunks_exact(4)) {
+        acc += x[0] * y[0] + x[1] * y[1] + x[2] * y[2] + x[3] * y[3];
+    }
+    for (x, y) in a
+        .chunks_exact(4)
+        .remainder()
+        .iter()
+        .zip(b.chunks_exact(4).remainder())
+    {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Four [`dot1`]-associated dot products of one point row against a
+/// 4-row center panel: the register tile. Four independent accumulator
+/// chains share each point load; per-lane association is exactly
+/// `dot1`'s, so a center's dot does not depend on which lane (or
+/// whether the scalar tail loop) computed it.
+#[inline(always)]
+fn dot4(p: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> (f32, f32, f32, f32) {
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for ((((x, y0), y1), y2), y3) in p
+        .chunks_exact(4)
+        .zip(c0.chunks_exact(4))
+        .zip(c1.chunks_exact(4))
+        .zip(c2.chunks_exact(4))
+        .zip(c3.chunks_exact(4))
+    {
+        a0 += x[0] * y0[0] + x[1] * y0[1] + x[2] * y0[2] + x[3] * y0[3];
+        a1 += x[0] * y1[0] + x[1] * y1[1] + x[2] * y1[2] + x[3] * y1[3];
+        a2 += x[0] * y2[0] + x[1] * y2[1] + x[2] * y2[2] + x[3] * y2[3];
+        a3 += x[0] * y3[0] + x[1] * y3[1] + x[2] * y3[2] + x[3] * y3[3];
+    }
+    let tail = p.len() - p.len() % 4;
+    for t in tail..p.len() {
+        let x = p[t];
+        a0 += x * c0[t];
+        a1 += x * c1[t];
+        a2 += x * c2[t];
+        a3 += x * c3[t];
+    }
+    (a0, a1, a2, a3)
+}
+
+/// `‖row‖²` under the shared association (== `dot1(row, row)`).
+#[inline(always)]
+fn row_norm(row: &[f32]) -> f32 {
+    dot1(row, row)
+}
+
+/// Clamp-at-zero mirroring the Pallas kernel: catastrophic
+/// cancellation in `‖x‖² − 2x·c + ‖c‖²` can produce small negatives
+/// for near-coincident pairs; they are exact zeros. Written as a
+/// `< 0` test so a NaN input propagates (never masquerades as the
+/// nearest center) — same behavior as the direct-difference kernel.
+#[inline(always)]
+fn clamp0(v: f32) -> f32 {
+    if v < 0.0 {
+        0.0
+    } else {
+        v
+    }
+}
+
+// ---- the point-norm cache ----------------------------------------------
+
+/// Caller-held `‖x‖²` panel for a fixed point set — the per-shard
+/// scratch a `Machine` computes once and reuses across every round
+/// (cost, counts, k-means|| updates all hit the same shard). Without a
+/// cache the sweep streams the norms per point block instead, with
+/// bit-identical results (same [`row_norm`] association), so the cache
+/// is purely an O(n·d)-per-call saving.
 ///
-/// Uses the norm-expansion form with a precomputed center-norm panel;
-/// exactly mirrors the Pallas kernel's numerics (including the clamp).
+/// Contract: the cache must describe the exact matrix passed alongside
+/// it. Shapes are asserted; contents are the caller's responsibility —
+/// [`PointNorms::recompute`] after any mutation.
+#[derive(Clone, Debug, Default)]
+pub struct PointNorms {
+    norms: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl PointNorms {
+    pub fn compute(points: &Matrix) -> PointNorms {
+        let mut cache = PointNorms::default();
+        cache.recompute(points);
+        cache
+    }
+
+    /// Refill the cache for `points`, reusing the allocation.
+    pub fn recompute(&mut self, points: &Matrix) {
+        self.rows = points.rows();
+        self.cols = points.cols();
+        self.norms.clear();
+        self.norms.reserve(self.rows);
+        for i in 0..self.rows {
+            self.norms.push(row_norm(points.row(i)));
+        }
+    }
+
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn assert_matches(&self, points: &Matrix) {
+        assert!(
+            self.rows == points.rows() && self.cols == points.cols(),
+            "PointNorms shape mismatch: cache is {}x{}, points are {}x{}",
+            self.rows,
+            self.cols,
+            points.rows(),
+            points.cols()
+        );
+    }
+}
+
+// ---- the sweep core ----------------------------------------------------
+
+/// One point-range sweep: fold every center into the running per-point
+/// minimum held in `dist` (and `idx` when present). `assign` seeds the
+/// running state (∞ / 0) so a full assignment is exactly an update
+/// from nothing — the unification that puts `update_nearest` on the
+/// blocked kernel instead of its old per-center `sq_dist` loop.
+///
+/// Candidates are folded in ascending center order with a strict `<`,
+/// so the earliest index wins ties and — because every candidate's
+/// bits are association-fixed — the outcome is independent of
+/// blocking, of splitting the centers across calls, and of which pool
+/// job ran the range.
+#[allow(clippy::too_many_arguments)]
+fn sweep_range(
+    pts: &[f32],
+    d: usize,
+    cdata: &[f32],
+    k: usize,
+    c_sq: &[f32],
+    norms: Option<&[f32]>,
+    assign: bool,
+    dist: &mut [f32],
+    idx: Option<(&mut [u32], u32)>,
+) {
+    match idx {
+        Some((idx, idx_base)) => {
+            sweep_impl::<true>(pts, d, cdata, k, c_sq, norms, assign, dist, idx, idx_base)
+        }
+        None => sweep_impl::<false>(pts, d, cdata, k, c_sq, norms, assign, dist, &mut [], 0),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sweep_impl<const WRITE_IDX: bool>(
+    pts: &[f32],
+    d: usize,
+    cdata: &[f32],
+    k: usize,
+    c_sq: &[f32],
+    norms: Option<&[f32]>,
+    assign: bool,
+    dist: &mut [f32],
+    idx: &mut [u32],
+    idx_base: u32,
+) {
+    let n = dist.len();
+    debug_assert_eq!(pts.len(), n * d);
+    debug_assert_eq!(cdata.len(), k * d);
+    if WRITE_IDX {
+        debug_assert_eq!(idx.len(), n);
+    }
+    if assign {
+        dist.fill(f32::INFINITY);
+        if WRITE_IDX {
+            idx.fill(0);
+        }
+    }
+    let k4 = k - k % 4;
+    let mut psq = [0.0f32; POINT_BLOCK];
+    let mut b = 0usize;
+    while b < n {
+        let bl = POINT_BLOCK.min(n - b);
+        // point-norm panel for this block: cached or streamed
+        match norms {
+            Some(ns) => psq[..bl].copy_from_slice(&ns[b..b + bl]),
+            None => {
+                for (i, slot) in psq[..bl].iter_mut().enumerate() {
+                    *slot = row_norm(&pts[(b + i) * d..(b + i + 1) * d]);
+                }
+            }
+        }
+        // 4-row center panels: the panel stays L1-hot while the point
+        // block streams past it
+        let mut j = 0usize;
+        while j < k4 {
+            let panel = &cdata[j * d..(j + 4) * d];
+            let (c0, rest) = panel.split_at(d);
+            let (c1, rest) = rest.split_at(d);
+            let (c2, c3) = rest.split_at(d);
+            let (s0, s1, s2, s3) = (c_sq[j], c_sq[j + 1], c_sq[j + 2], c_sq[j + 3]);
+            for i in 0..bl {
+                let p = &pts[(b + i) * d..(b + i + 1) * d];
+                let (a0, a1, a2, a3) = dot4(p, c0, c1, c2, c3);
+                let p_sq = psq[i];
+                let d0 = clamp0(p_sq - 2.0 * a0 + s0);
+                let d1 = clamp0(p_sq - 2.0 * a1 + s1);
+                let d2 = clamp0(p_sq - 2.0 * a2 + s2);
+                let d3 = clamp0(p_sq - 2.0 * a3 + s3);
+                let mut best = dist[b + i];
+                if d0 < best {
+                    best = d0;
+                    if WRITE_IDX {
+                        idx[b + i] = idx_base + center_idx(j);
+                    }
+                }
+                if d1 < best {
+                    best = d1;
+                    if WRITE_IDX {
+                        idx[b + i] = idx_base + center_idx(j + 1);
+                    }
+                }
+                if d2 < best {
+                    best = d2;
+                    if WRITE_IDX {
+                        idx[b + i] = idx_base + center_idx(j + 2);
+                    }
+                }
+                if d3 < best {
+                    best = d3;
+                    if WRITE_IDX {
+                        idx[b + i] = idx_base + center_idx(j + 3);
+                    }
+                }
+                dist[b + i] = best;
+            }
+            j += 4;
+        }
+        // tail centers (k % 4), one at a time through the same rule
+        while j < k {
+            let c = &cdata[j * d..(j + 1) * d];
+            let sj = c_sq[j];
+            for i in 0..bl {
+                let p = &pts[(b + i) * d..(b + i + 1) * d];
+                let dj = clamp0(psq[i] - 2.0 * dot1(p, c) + sj);
+                if dj < dist[b + i] {
+                    dist[b + i] = dj;
+                    if WRITE_IDX {
+                        idx[b + i] = idx_base + center_idx(j);
+                    }
+                }
+            }
+            j += 1;
+        }
+        b += bl;
+    }
+}
+
+/// One pooled job: a disjoint point range with its output slices.
+struct SweepJob<'a> {
+    start: usize,
+    dist: &'a mut [f32],
+    idx: Option<&'a mut [u32]>,
+}
+
+/// Shared driver behind every public entry: precompute the center-norm
+/// panel, then run the sweep either inline or as fixed-size
+/// [`POOL_CHUNK`] jobs on the global pool. Each job owns a disjoint
+/// `dist`/`idx` range and per-point work never crosses a chunk edge,
+/// so the pooled result is bit-identical to the sequential one.
+#[allow(clippy::too_many_arguments)]
+fn drive(
+    points: &Matrix,
+    centers: &Matrix,
+    norms: Option<&PointNorms>,
+    dist: &mut [f32],
+    idx: Option<&mut [u32]>,
+    idx_base: u32,
+    assign: bool,
+    pooled: bool,
+) {
+    let n = points.rows();
+    let d = points.cols();
+    let k = centers.rows();
+    assert_eq!(d, centers.cols(), "dim mismatch");
+    if let Some(cache) = norms {
+        cache.assert_matches(points);
+    }
+    if n == 0 {
+        return;
+    }
+    // center-norm panel, once per call
+    let c_sq: Vec<f32> = (0..k).map(|j| row_norm(centers.row(j))).collect();
+    let pts = points.data();
+    let cdata = centers.data();
+    let ns = norms.map(|c| c.norms());
+
+    let workers = if pooled && n >= POOL_MIN_POINTS {
+        default_workers()
+    } else {
+        1
+    };
+    if workers <= 1 {
+        sweep_range(pts, d, cdata, k, &c_sq, ns, assign, dist, idx.map(|ix| (ix, idx_base)));
+        return;
+    }
+
+    let mut jobs: Vec<SweepJob> = Vec::with_capacity(n.div_ceil(POOL_CHUNK));
+    let mut dist_rest = dist;
+    let mut idx_rest = idx;
+    let mut start = 0usize;
+    while !dist_rest.is_empty() {
+        let take = POOL_CHUNK.min(dist_rest.len());
+        let (dist_chunk, rest) = dist_rest.split_at_mut(take);
+        dist_rest = rest;
+        let idx_chunk = match idx_rest.take() {
+            Some(ix) => {
+                let (chunk, rest) = ix.split_at_mut(take);
+                idx_rest = Some(rest);
+                Some(chunk)
+            }
+            None => None,
+        };
+        jobs.push(SweepJob {
+            start,
+            dist: dist_chunk,
+            idx: idx_chunk,
+        });
+        start += take;
+    }
+    let c_sq = &c_sq;
+    par_map_mut(&mut jobs, workers, |_, job| {
+        let rows = job.start * d..(job.start + job.dist.len()) * d;
+        sweep_range(
+            &pts[rows],
+            d,
+            cdata,
+            k,
+            c_sq,
+            ns.map(|s| &s[job.start..job.start + job.dist.len()]),
+            assign,
+            job.dist,
+            job.idx.as_deref_mut().map(|ix| (ix, idx_base)),
+        );
+    });
+}
+
+// ---- public entry points ------------------------------------------------
+
+/// Per-point nearest-center squared distance + index (allocating
+/// convenience over [`nearest_center_into`]).
 pub fn nearest_center(points: &Matrix, centers: &Matrix) -> (Vec<f32>, Vec<u32>) {
     let n = points.rows();
     let mut dist = vec![0.0f32; n];
@@ -54,7 +474,9 @@ pub fn nearest_center(points: &Matrix, centers: &Matrix) -> (Vec<f32>, Vec<u32>)
     (dist, idx)
 }
 
-/// `nearest_center` into caller-provided buffers (hot path: no alloc).
+/// `nearest_center` into caller-provided buffers (hot path: no
+/// per-point allocation; the only transient is the k-entry center-norm
+/// panel). Pool-parallel for large point sets.
 pub fn nearest_center_into(
     points: &Matrix,
     centers: &Matrix,
@@ -62,124 +484,164 @@ pub fn nearest_center_into(
     idx_out: &mut [u32],
 ) {
     let n = points.rows();
-    let k = centers.rows();
-    assert!(k > 0, "no centers");
-    assert_eq!(points.cols(), centers.cols(), "dim mismatch");
+    assert!(centers.rows() > 0, "no centers");
     assert!(dist_out.len() >= n && idx_out.len() >= n);
-    let d = points.cols();
-    for i in 0..n {
-        let p = points.row(i);
-        let mut best = f32::INFINITY;
-        let mut best_j = 0u32;
-        // center-blocked by 4: four independent named accumulator chains
-        // give the ILP the single-center loop lacks (§Perf: 2.8 → 4.6
-        // GFLOP/s). Rejected variants (EXPERIMENTS.md §Perf): 8-chain
-        // accumulator array (2.5 — register spills), 4x2 t-unroll (4.1,
-        // noisier) — both reverted per the one-change-at-a-time rule.
-        let mut j = 0usize;
-        while j + 4 <= k {
-            let base = j * d;
-            let c = &centers.data()[base..base + 4 * d];
-            let (c0, rest) = c.split_at(d);
-            let (c1, rest) = rest.split_at(d);
-            let (c2, c3) = rest.split_at(d);
-            let mut a0 = 0.0f32;
-            let mut a1 = 0.0f32;
-            let mut a2 = 0.0f32;
-            let mut a3 = 0.0f32;
-            for t in 0..d {
-                let x = p[t];
-                let d0 = x - c0[t];
-                let d1 = x - c1[t];
-                let d2 = x - c2[t];
-                let d3 = x - c3[t];
-                a0 += d0 * d0;
-                a1 += d1 * d1;
-                a2 += d2 * d2;
-                a3 += d3 * d3;
-            }
-            if a0 < best {
-                best = a0;
-                best_j = center_idx(j);
-            }
-            if a1 < best {
-                best = a1;
-                best_j = center_idx(j + 1);
-            }
-            if a2 < best {
-                best = a2;
-                best_j = center_idx(j + 2);
-            }
-            if a3 < best {
-                best = a3;
-                best_j = center_idx(j + 3);
-            }
-            j += 4;
-        }
-        while j < k {
-            let dsq = sq_dist(p, centers.row(j));
-            if dsq < best {
-                best = dsq;
-                best_j = center_idx(j);
-            }
-            j += 1;
-        }
-        dist_out[i] = best;
-        idx_out[i] = best_j;
-    }
+    drive(
+        points,
+        centers,
+        None,
+        &mut dist_out[..n],
+        Some(&mut idx_out[..n]),
+        0,
+        true,
+        true,
+    );
 }
 
-/// Only the per-point nearest squared distance (no index), into a buffer.
+/// [`nearest_center_into`] with a caller-held point-norm cache (the
+/// per-shard scratch machines reuse across rounds).
+pub fn nearest_center_cached(
+    points: &Matrix,
+    centers: &Matrix,
+    norms: &PointNorms,
+    dist_out: &mut [f32],
+    idx_out: &mut [u32],
+) {
+    let n = points.rows();
+    assert!(centers.rows() > 0, "no centers");
+    assert!(dist_out.len() >= n && idx_out.len() >= n);
+    drive(
+        points,
+        centers,
+        Some(norms),
+        &mut dist_out[..n],
+        Some(&mut idx_out[..n]),
+        0,
+        true,
+        true,
+    );
+}
+
+/// Explicitly single-threaded [`nearest_center_into`] twin — the bench
+/// baseline and the reference side of the pooled ≡ sequential
+/// bit-parity property tests.
+pub fn nearest_center_seq(
+    points: &Matrix,
+    centers: &Matrix,
+    norms: Option<&PointNorms>,
+    dist_out: &mut [f32],
+    idx_out: &mut [u32],
+) {
+    let n = points.rows();
+    assert!(centers.rows() > 0, "no centers");
+    assert!(dist_out.len() >= n && idx_out.len() >= n);
+    drive(
+        points,
+        centers,
+        norms,
+        &mut dist_out[..n],
+        Some(&mut idx_out[..n]),
+        0,
+        true,
+        false,
+    );
+}
+
+/// Only the per-point nearest squared distance (no index), into a
+/// buffer. A true no-index kernel path: the sweep skips index
+/// bookkeeping entirely instead of writing into a throwaway buffer.
 pub fn nearest_dist_into(points: &Matrix, centers: &Matrix, dist_out: &mut [f32]) {
     let n = points.rows();
-    let k = centers.rows();
-    assert!(k > 0, "no centers");
-    assert_eq!(points.cols(), centers.cols(), "dim mismatch");
-    // delegate to the blocked kernel; the index write is negligible
-    let mut idx = vec![0u32; n];
-    nearest_center_into(points, centers, dist_out, &mut idx);
+    assert!(centers.rows() > 0, "no centers");
+    assert!(dist_out.len() >= n);
+    drive(points, centers, None, &mut dist_out[..n], None, 0, true, true);
 }
 
-/// Incremental variant: given per-point current nearest distances `dist`
-/// (to an existing center set), fold in `new_centers`, updating dist (and
-/// optionally indices offset by `idx_base`). This is the k-means++ /
-/// k-means|| hot loop — O(n·|new|) instead of O(n·|all|) per round.
+/// [`nearest_dist_into`] with a caller-held point-norm cache.
+pub fn nearest_dist_cached(
+    points: &Matrix,
+    centers: &Matrix,
+    norms: &PointNorms,
+    dist_out: &mut [f32],
+) {
+    let n = points.rows();
+    assert!(centers.rows() > 0, "no centers");
+    assert!(dist_out.len() >= n);
+    drive(points, centers, Some(norms), &mut dist_out[..n], None, 0, true, true);
+}
+
+/// Explicitly single-threaded [`nearest_dist_into`] twin.
+pub fn nearest_dist_seq(
+    points: &Matrix,
+    centers: &Matrix,
+    norms: Option<&PointNorms>,
+    dist_out: &mut [f32],
+) {
+    let n = points.rows();
+    assert!(centers.rows() > 0, "no centers");
+    assert!(dist_out.len() >= n);
+    drive(points, centers, norms, &mut dist_out[..n], None, 0, true, false);
+}
+
+/// Incremental variant: given per-point current nearest distances
+/// `dist` (to an existing center set), fold in `new_centers`, updating
+/// dist (and optionally indices offset by `idx_base`). This is the
+/// k-means++ / k-means|| hot loop — O(n·|new|) instead of O(n·|all|)
+/// per round — and since PR 10 it runs on the same blocked sweep as
+/// the full assignment (an update IS an assignment that starts from
+/// the existing running minima), so incremental ≡ batch holds
+/// bit-identically.
 pub fn update_nearest(
     points: &Matrix,
     new_centers: &Matrix,
     dist: &mut [f32],
     idx: Option<(&mut [u32], u32)>,
 ) {
+    update_nearest_inner(points, new_centers, None, dist, idx, true);
+}
+
+/// [`update_nearest`] with a caller-held point-norm cache.
+pub fn update_nearest_cached(
+    points: &Matrix,
+    new_centers: &Matrix,
+    norms: &PointNorms,
+    dist: &mut [f32],
+    idx: Option<(&mut [u32], u32)>,
+) {
+    update_nearest_inner(points, new_centers, Some(norms), dist, idx, true);
+}
+
+/// Explicitly single-threaded [`update_nearest`] twin.
+pub fn update_nearest_seq(
+    points: &Matrix,
+    new_centers: &Matrix,
+    norms: Option<&PointNorms>,
+    dist: &mut [f32],
+    idx: Option<(&mut [u32], u32)>,
+) {
+    update_nearest_inner(points, new_centers, norms, dist, idx, false);
+}
+
+fn update_nearest_inner(
+    points: &Matrix,
+    new_centers: &Matrix,
+    norms: Option<&PointNorms>,
+    dist: &mut [f32],
+    idx: Option<(&mut [u32], u32)>,
+    pooled: bool,
+) {
     let n = points.rows();
     assert_eq!(dist.len(), n);
     assert_eq!(points.cols(), new_centers.cols());
+    if new_centers.is_empty() {
+        return;
+    }
     match idx {
-        None => {
-            for i in 0..n {
-                let p = points.row(i);
-                let mut best = dist[i];
-                for j in 0..new_centers.rows() {
-                    let d = sq_dist(p, new_centers.row(j));
-                    if d < best {
-                        best = d;
-                    }
-                }
-                dist[i] = best;
-            }
+        Some((ix, idx_base)) => {
+            assert_eq!(ix.len(), n);
+            drive(points, new_centers, norms, dist, Some(ix), idx_base, false, pooled);
         }
-        Some((idx, idx_base)) => {
-            assert_eq!(idx.len(), n);
-            for i in 0..n {
-                let p = points.row(i);
-                for j in 0..new_centers.rows() {
-                    let d = sq_dist(p, new_centers.row(j));
-                    if d < dist[i] {
-                        dist[i] = d;
-                        idx[i] = idx_base + center_idx(j);
-                    }
-                }
-            }
-        }
+        None => drive(points, new_centers, norms, dist, None, 0, false, pooled),
     }
 }
 
@@ -193,6 +655,26 @@ mod tests {
         Matrix::from_vec(data, rows, cols)
     }
 
+    /// Direct-difference brute force (the old kernel's semantics).
+    fn brute(pts: &Matrix, cen: &Matrix) -> (Vec<f32>, Vec<usize>) {
+        let mut dist = Vec::with_capacity(pts.rows());
+        let mut idx = Vec::with_capacity(pts.rows());
+        for i in 0..pts.rows() {
+            let mut best = f32::INFINITY;
+            let mut bj = 0usize;
+            for j in 0..cen.rows() {
+                let d = sq_dist(pts.row(i), cen.row(j));
+                if d < best {
+                    best = d;
+                    bj = j;
+                }
+            }
+            dist.push(best);
+            idx.push(bj);
+        }
+        (dist, idx)
+    }
+
     #[test]
     fn sq_dist_basics() {
         assert_eq!(sq_dist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
@@ -203,29 +685,65 @@ mod tests {
         assert_eq!(sq_dist(&a, &b), 1. + 4. + 9. + 16. + 25. + 36. + 49.);
     }
 
+    /// Distances must agree to relative tolerance; indices must agree
+    /// unless the two kernels' rounding legitimately flipped a
+    /// near-tie (then the picked center's brute distance must be
+    /// within tolerance of the brute optimum).
+    fn check_against_brute(pts: &Matrix, cen: &Matrix, dist: &[f32], idx: &[u32], tag: &str) {
+        let (bdist, bidx) = brute(pts, cen);
+        for i in 0..pts.rows() {
+            let tol = 1e-5 * bdist[i].max(1.0);
+            assert!(
+                (dist[i] - bdist[i]).abs() <= tol,
+                "{tag} i={i}: {} vs {}",
+                dist[i],
+                bdist[i]
+            );
+            if idx[i] as usize != bidx[i] {
+                let picked = sq_dist(pts.row(i), cen.row(idx[i] as usize));
+                assert!(
+                    (picked - bdist[i]).abs() <= tol,
+                    "{tag} i={i}: idx {} vs {} and not a near-tie ({picked} vs {})",
+                    idx[i],
+                    bidx[i],
+                    bdist[i]
+                );
+            }
+        }
+    }
+
     #[test]
     fn nearest_matches_bruteforce() {
         let mut rng = Pcg64::new(1);
         let pts = randmat(&mut rng, 100, 9);
         let cen = randmat(&mut rng, 7, 9);
         let (dist, idx) = nearest_center(&pts, &cen);
-        for i in 0..pts.rows() {
-            let mut best = f32::INFINITY;
-            let mut bj = 0;
-            for j in 0..cen.rows() {
-                let d = sq_dist(pts.row(i), cen.row(j));
-                if d < best {
-                    best = d;
-                    bj = j;
-                }
-            }
-            assert_eq!(idx[i] as usize, bj);
-            assert!((dist[i] - best).abs() <= 1e-6 * best.max(1.0));
+        check_against_brute(&pts, &cen, &dist, &idx, "100x9 k=7");
+    }
+
+    #[test]
+    fn tail_shapes_match_bruteforce() {
+        // d % 4 != 0, k < 4, k % 4 != 0, n < POINT_BLOCK and over it
+        let mut rng = Pcg64::new(10);
+        for &(n, d, k) in &[
+            (3usize, 1usize, 1usize),
+            (17, 3, 2),
+            (40, 5, 3),
+            (POINT_BLOCK + 7, 7, 5),
+            (60, 6, 9),
+            (33, 4, 4),
+        ] {
+            let pts = randmat(&mut rng, n, d);
+            let cen = randmat(&mut rng, k, d);
+            let (dist, idx) = nearest_center(&pts, &cen);
+            check_against_brute(&pts, &cen, &dist, &idx, &format!("n={n} d={d} k={k}"));
         }
     }
 
     #[test]
     fn point_equal_to_center_is_zero() {
+        // norm expansion cancels exactly for x == c under the shared
+        // association: p² − 2p² + p² folds to 0, no clamp needed
         let cen = Matrix::from_rows(&[&[1.0, 2.0], &[5.0, 5.0]]);
         let pts = Matrix::from_rows(&[&[5.0, 5.0]]);
         let (d, i) = nearest_center(&pts, &cen);
@@ -234,7 +752,40 @@ mod tests {
     }
 
     #[test]
-    fn update_nearest_equals_full_recompute() {
+    fn cached_matches_uncached_bit_identical() {
+        let mut rng = Pcg64::new(20);
+        let pts = randmat(&mut rng, 300, 11);
+        let cen = randmat(&mut rng, 6, 11);
+        let norms = PointNorms::compute(&pts);
+        let (dist, idx) = nearest_center(&pts, &cen);
+        let mut dist_c = vec![0.0f32; 300];
+        let mut idx_c = vec![0u32; 300];
+        nearest_center_cached(&pts, &cen, &norms, &mut dist_c, &mut idx_c);
+        assert_eq!(idx, idx_c);
+        for i in 0..300 {
+            assert_eq!(dist[i].to_bits(), dist_c[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn pooled_matches_seq_bit_identical() {
+        // n over POOL_MIN_POINTS forces the chunked pooled path
+        let mut rng = Pcg64::new(21);
+        let n = POOL_MIN_POINTS + 123;
+        let pts = randmat(&mut rng, n, 5);
+        let cen = randmat(&mut rng, 9, 5);
+        let (dist_p, idx_p) = nearest_center(&pts, &cen);
+        let mut dist_s = vec![0.0f32; n];
+        let mut idx_s = vec![0u32; n];
+        nearest_center_seq(&pts, &cen, None, &mut dist_s, &mut idx_s);
+        assert_eq!(idx_p, idx_s);
+        for i in 0..n {
+            assert_eq!(dist_p[i].to_bits(), dist_s[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn update_nearest_equals_full_recompute_bit_identical() {
         let mut rng = Pcg64::new(2);
         let pts = randmat(&mut rng, 200, 5);
         let c1 = randmat(&mut rng, 3, 5);
@@ -248,7 +799,7 @@ mod tests {
         let (dist_full, idx_full) = nearest_center(&pts, &all);
         assert_eq!(idx, idx_full);
         for i in 0..pts.rows() {
-            assert!((dist[i] - dist_full[i]).abs() <= 1e-6);
+            assert_eq!(dist[i].to_bits(), dist_full[i].to_bits(), "i={i}");
         }
     }
 
@@ -264,8 +815,20 @@ mod tests {
         all.extend(&c2);
         let (dist_full, _) = nearest_center(&pts, &all);
         for i in 0..50 {
-            assert!((dist[i] - dist_full[i]).abs() <= 1e-6);
+            assert_eq!(dist[i].to_bits(), dist_full[i].to_bits(), "i={i}");
         }
+    }
+
+    #[test]
+    fn update_with_empty_new_centers_is_noop() {
+        let mut rng = Pcg64::new(5);
+        let pts = randmat(&mut rng, 20, 3);
+        let c1 = randmat(&mut rng, 2, 3);
+        let (mut dist, mut idx) = nearest_center(&pts, &c1);
+        let before = (dist.clone(), idx.clone());
+        let empty = Matrix::zeros(0, 3);
+        update_nearest(&pts, &empty, &mut dist, Some((&mut idx, 2)));
+        assert_eq!((dist, idx), before);
     }
 
     #[test]
@@ -277,6 +840,31 @@ mod tests {
         let mut buf = vec![0.0; 64];
         nearest_dist_into(&pts, &cen, &mut buf);
         assert_eq!(dist, buf);
+    }
+
+    #[test]
+    fn norms_recompute_tracks_mutation() {
+        let mut rng = Pcg64::new(6);
+        let mut pts = randmat(&mut rng, 30, 4);
+        let cen = randmat(&mut rng, 3, 4);
+        let mut norms = PointNorms::compute(&pts);
+        pts.retain_rows(&(0..30).map(|i| i % 2 == 0).collect::<Vec<_>>());
+        norms.recompute(&pts);
+        let mut dist_c = vec![0.0f32; pts.rows()];
+        nearest_dist_cached(&pts, &cen, &norms, &mut dist_c);
+        let (dist, _) = nearest_center(&pts, &cen);
+        assert_eq!(dist, dist_c);
+    }
+
+    #[test]
+    #[should_panic(expected = "PointNorms shape mismatch")]
+    fn stale_norms_shape_panics() {
+        let mut rng = Pcg64::new(7);
+        let pts = randmat(&mut rng, 10, 3);
+        let norms = PointNorms::compute(&pts);
+        let other = randmat(&mut rng, 11, 3);
+        let mut dist = vec![0.0f32; 11];
+        nearest_dist_cached(&other, &pts, &norms, &mut dist);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! self-times so the fleet can report the paper's
 //! "T (machine) = Σ_rounds max_j t_j" metric.
 
+use crate::core::distance::PointNorms;
 use crate::core::Matrix;
 use crate::runtime::Engine;
 use crate::util::rng::Pcg64;
@@ -16,6 +17,12 @@ pub struct Machine {
     /// The machine's full original shard (kept for cost evaluation over
     /// X after the protocol finishes).
     original: Matrix,
+    /// `‖x‖²` panel for `original`, computed once at construction: the
+    /// shard is immutable for the machine's lifetime (reset/reseed/kill
+    /// never touch it), and every per-round engine call over it —
+    /// cost, counts, k-means|| init/update — reuses this cache via the
+    /// engine's `*_cached` entry points. Bit-identical to recomputing.
+    original_norms: PointNorms,
     /// The live dataset X_j (shrinks as rounds remove points).
     live: Matrix,
     rng: Pcg64,
@@ -48,6 +55,7 @@ impl Machine {
             id,
             dead: false,
             live: shard.clone(),
+            original_norms: PointNorms::compute(&shard),
             original: shard,
             rng_init: rng.clone(),
             rng,
@@ -73,6 +81,7 @@ impl Machine {
         Machine {
             id,
             dead: false,
+            original_norms: PointNorms::compute(&original),
             original,
             live,
             rng,
@@ -228,7 +237,7 @@ impl Machine {
         if self.dead {
             return timed(|| 0.0);
         }
-        timed(|| engine.cost(&self.original, centers))
+        timed(|| engine.cost_cached(&self.original, centers, &self.original_norms))
     }
 
     /// Cluster sizes counting only points with nearest-distance^2 at
@@ -240,6 +249,7 @@ impl Machine {
         engine: &dyn Engine,
     ) -> Timed<Vec<f64>> {
         let original = &self.original;
+        let norms = &self.original_norms;
         let dead = self.dead;
         timed(|| {
             let mut counts = vec![0.0f64; centers.rows()];
@@ -248,7 +258,7 @@ impl Machine {
             }
             let mut dist = Vec::new();
             let mut idx = Vec::new();
-            engine.nearest(original, centers, &mut dist, &mut idx);
+            engine.nearest_cached(original, centers, norms, &mut dist, &mut idx);
             for (i, &c) in idx.iter().enumerate() {
                 if dist[i] <= cutoff {
                     counts[c as usize] += 1.0;
@@ -261,6 +271,7 @@ impl Machine {
     /// Per-point costs over the original shard (trimmed-cost support).
     pub fn per_point_costs_original(&self, centers: &Matrix, engine: &dyn Engine) -> Timed<Vec<f32>> {
         let original = &self.original;
+        let norms = &self.original_norms;
         let dead = self.dead;
         timed(|| {
             if dead || original.is_empty() || centers.is_empty() {
@@ -268,7 +279,7 @@ impl Machine {
             }
             let mut dist = Vec::new();
             let mut idx = Vec::new();
-            engine.nearest(original, centers, &mut dist, &mut idx);
+            engine.nearest_cached(original, centers, norms, &mut dist, &mut idx);
             dist
         })
     }
@@ -277,6 +288,7 @@ impl Machine {
     /// reduction weights).
     pub fn counts_original(&self, centers: &Matrix, engine: &dyn Engine) -> Timed<Vec<f64>> {
         let original = &self.original;
+        let norms = &self.original_norms;
         let dead = self.dead;
         timed(|| {
             let mut counts = vec![0.0f64; centers.rows()];
@@ -285,7 +297,7 @@ impl Machine {
             }
             let mut dist = Vec::new();
             let mut idx = Vec::new();
-            engine.nearest(original, centers, &mut dist, &mut idx);
+            engine.nearest_cached(original, centers, norms, &mut dist, &mut idx);
             for &c in &idx {
                 counts[c as usize] += 1.0;
             }
@@ -304,6 +316,7 @@ impl Machine {
             return timed(|| 0.0);
         }
         let original = &self.original;
+        let norms = &self.original_norms;
         let dist = &mut self.kmpar_dist;
         timed(|| {
             dist.resize(original.rows(), f32::INFINITY);
@@ -311,7 +324,7 @@ impl Machine {
             let mut idx = Vec::new();
             let mut d = Vec::new();
             if !original.is_empty() {
-                engine.nearest(original, initial, &mut d, &mut idx);
+                engine.nearest_cached(original, initial, norms, &mut d, &mut idx);
                 dist.copy_from_slice(&d);
             }
             dist.iter().map(|&x| x as f64).sum()
@@ -326,12 +339,13 @@ impl Machine {
             return timed(|| 0.0);
         }
         let original = &self.original;
+        let norms = &self.original_norms;
         let dist = &mut self.kmpar_dist;
         timed(|| {
             if !original.is_empty() && !new_centers.is_empty() {
                 let mut nd = Vec::new();
                 let mut idx = Vec::new();
-                engine.nearest(original, new_centers, &mut nd, &mut idx);
+                engine.nearest_cached(original, new_centers, norms, &mut nd, &mut idx);
                 for (cur, &cand) in dist.iter_mut().zip(&nd) {
                     if cand < *cur {
                         *cur = cand;

@@ -14,7 +14,7 @@ pub mod manifest;
 pub use client::PjrtRuntime;
 pub use manifest::{ArtifactEntry, Manifest};
 
-use crate::core::distance;
+use crate::core::distance::{self, PointNorms};
 use crate::core::Matrix;
 
 /// The distance-computation engine behind machines and cost evaluation.
@@ -32,6 +32,28 @@ pub trait Engine {
 
     /// Total k-means cost of `centers` on `points`.
     fn cost(&self, points: &Matrix, centers: &Matrix) -> f64;
+
+    /// [`Engine::nearest`] with a caller-held point-norm cache for
+    /// `points`. Defaulted to ignore the cache and delegate, so engines
+    /// whose backing kernel has no use for host-side norms (PJRT
+    /// artifacts recompute on-device) stay untouched; the native engine
+    /// overrides it. Must be bit-identical to the uncached call.
+    fn nearest_cached(
+        &self,
+        points: &Matrix,
+        centers: &Matrix,
+        _norms: &PointNorms,
+        dist: &mut Vec<f32>,
+        idx: &mut Vec<u32>,
+    ) {
+        self.nearest(points, centers, dist, idx);
+    }
+
+    /// [`Engine::cost`] with a caller-held point-norm cache; same
+    /// delegate-by-default contract as [`Engine::nearest_cached`].
+    fn cost_cached(&self, points: &Matrix, centers: &Matrix, _norms: &PointNorms) -> f64 {
+        self.cost(points, centers)
+    }
 
     /// Is this engine safe to call from multiple threads at once?
     fn parallel_safe(&self) -> bool;
@@ -62,6 +84,24 @@ impl Engine for NativeEngine {
 
     fn cost(&self, points: &Matrix, centers: &Matrix) -> f64 {
         crate::core::cost::cost(points, centers)
+    }
+
+    fn nearest_cached(
+        &self,
+        points: &Matrix,
+        centers: &Matrix,
+        norms: &PointNorms,
+        dist: &mut Vec<f32>,
+        idx: &mut Vec<u32>,
+    ) {
+        let n = points.rows();
+        dist.resize(n, 0.0);
+        idx.resize(n, 0);
+        distance::nearest_center_cached(points, centers, norms, dist, idx);
+    }
+
+    fn cost_cached(&self, points: &Matrix, centers: &Matrix, norms: &PointNorms) -> f64 {
+        crate::core::cost::cost_cached(points, centers, norms)
     }
 
     fn parallel_safe(&self) -> bool {
@@ -193,6 +233,21 @@ mod tests {
         assert_eq!(dist, d2);
         assert_eq!(idx, i2);
         assert!((eng.cost(&pts, &cen) - crate::core::cost::cost(&pts, &cen)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn native_cached_matches_uncached_bit_identical() {
+        let pts = randmat(5, 120, 6);
+        let cen = randmat(6, 4, 6);
+        let eng = NativeEngine;
+        let norms = PointNorms::compute(&pts);
+        let (mut d1, mut i1) = (Vec::new(), Vec::new());
+        eng.nearest(&pts, &cen, &mut d1, &mut i1);
+        let (mut d2, mut i2) = (Vec::new(), Vec::new());
+        eng.nearest_cached(&pts, &cen, &norms, &mut d2, &mut i2);
+        assert_eq!(d1, d2);
+        assert_eq!(i1, i2);
+        assert_eq!(eng.cost(&pts, &cen), eng.cost_cached(&pts, &cen, &norms));
     }
 
     #[test]

@@ -8,7 +8,10 @@
 use soccer::clustering::{weighted, BlackBox, LloydKMeans};
 use soccer::coordinator::{run_soccer, SoccerParams};
 use soccer::core::cost::{cost, truncated_cost, truncated_sum};
-use soccer::core::distance::{nearest_center, update_nearest};
+use soccer::core::distance::{
+    nearest_center, nearest_center_into, nearest_center_seq, nearest_dist_into, sq_dist,
+    update_nearest, update_nearest_cached, PointNorms, POOL_MIN_POINTS,
+};
 use soccer::machines::Fleet;
 use soccer::prop_assert;
 use soccer::runtime::NativeEngine;
@@ -438,6 +441,194 @@ fn properties_process_packed_parity_randomized() {
                 cp.bytes_broadcast
             );
             prop_assert!(cp.bytes_to_coordinator > 0, "process fleet measured nothing");
+            Ok(())
+        },
+    );
+}
+
+// ---- kernel suites (PR 10: norm-expansion tiled kernel) --------------------
+
+/// The blocked norm-expansion kernel agrees with the direct-difference
+/// brute force (`sq_dist` argmin) across every tail shape: d % 4 ≠ 0,
+/// k < 4, k % 4 ≠ 0, n below/above the point block. The two
+/// formulations round differently, so distances are compared with a
+/// relative tolerance and an index mismatch is only a failure when the
+/// two centers are NOT near-equidistant under the reference metric.
+#[test]
+fn properties_kernel_matches_bruteforce_tail_shapes() {
+    forall(
+        "kernel-vs-bruteforce",
+        40,
+        31,
+        |g| {
+            let n = g.int(1, 600);
+            let d = g.int(1, 9);
+            let k = g.int(1, 11);
+            let scale = g.f64(0.1, 50.0);
+            let mut mk = |rows: usize| {
+                let mut m = Matrix::zeros(rows, d);
+                for i in 0..rows {
+                    for v in m.row_mut(i) {
+                        *v = (g.rng.normal() * scale) as f32;
+                    }
+                }
+                m
+            };
+            let pts = mk(n);
+            let cen = mk(k);
+            (pts, cen)
+        },
+        |(pts, cen)| {
+            let (dist, idx) = nearest_center(pts, cen);
+            for i in 0..pts.rows() {
+                let mut best = f32::INFINITY;
+                let mut best_j = 0usize;
+                for j in 0..cen.rows() {
+                    let d = sq_dist(pts.row(i), cen.row(j));
+                    if d < best {
+                        best = d;
+                        best_j = j;
+                    }
+                }
+                prop_assert!(
+                    (dist[i] - best).abs() <= 1e-5 * best.max(1.0),
+                    "dist mismatch at {i}: kernel {} vs brute {best}",
+                    dist[i]
+                );
+                if idx[i] as usize != best_j {
+                    // the two formulations may round a near-tie apart;
+                    // anything beyond a near-tie is a real bug
+                    let picked = sq_dist(pts.row(i), cen.row(idx[i] as usize));
+                    prop_assert!(
+                        (picked - best).abs() <= 1e-5 * best.max(1.0),
+                        "idx mismatch at {i} beyond tie tolerance: kernel {} (d² {picked}) vs brute {best_j} (d² {best})",
+                        idx[i]
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Pooled ≡ sequential ≡ cached, to the BIT: the same sweep runs
+/// whatever the decomposition, so the pooled entry (n spanning both
+/// sides of the POOL_MIN_POINTS threshold), the explicitly sequential
+/// twin, the cached-norm variant and the no-index distance path all
+/// produce identical f32 bits and identical indices. This is the
+/// kernel-level half of the Direct ≡ InProc ≡ Process twin guarantee.
+#[test]
+fn properties_kernel_pooled_equals_seq_bit_identical() {
+    forall(
+        "kernel-pooled-vs-seq",
+        12,
+        32,
+        |g| {
+            // straddle the pool threshold: a third below, the rest above
+            let n = if g.int(0, 2) == 0 {
+                g.int(1, POOL_MIN_POINTS - 1)
+            } else {
+                g.int(POOL_MIN_POINTS, POOL_MIN_POINTS + 6000)
+            };
+            let d = g.int(1, 6);
+            let k = g.int(1, 8);
+            let mut mk = |rows: usize| {
+                let mut m = Matrix::zeros(rows, d);
+                for i in 0..rows {
+                    for v in m.row_mut(i) {
+                        *v = (g.rng.normal() * 10.0) as f32;
+                    }
+                }
+                m
+            };
+            let pts = mk(n);
+            let cen = mk(k);
+            (pts, cen)
+        },
+        |(pts, cen)| {
+            let n = pts.rows();
+            let mut dist_p = vec![0.0f32; n];
+            let mut idx_p = vec![0u32; n];
+            nearest_center_into(pts, cen, &mut dist_p, &mut idx_p);
+            let mut dist_s = vec![0.0f32; n];
+            let mut idx_s = vec![0u32; n];
+            nearest_center_seq(pts, cen, None, &mut dist_s, &mut idx_s);
+            let norms = PointNorms::compute(pts);
+            let mut dist_c = vec![0.0f32; n];
+            let mut idx_c = vec![0u32; n];
+            nearest_center_seq(pts, cen, Some(&norms), &mut dist_c, &mut idx_c);
+            let mut dist_n = vec![0.0f32; n];
+            nearest_dist_into(pts, cen, &mut dist_n);
+            for i in 0..n {
+                prop_assert!(
+                    dist_p[i].to_bits() == dist_s[i].to_bits(),
+                    "pooled/seq dist bits drifted at {i} (n={n})"
+                );
+                prop_assert!(idx_p[i] == idx_s[i], "pooled/seq idx drifted at {i}");
+                prop_assert!(
+                    dist_c[i].to_bits() == dist_s[i].to_bits(),
+                    "cached dist bits drifted at {i}"
+                );
+                prop_assert!(idx_c[i] == idx_s[i], "cached idx drifted at {i}");
+                prop_assert!(
+                    dist_n[i].to_bits() == dist_s[i].to_bits(),
+                    "no-index path dist bits drifted at {i}"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Incremental ≡ batch to the BIT under the unified sweep: folding a
+/// random k-split of a center set through `update_nearest` (cached and
+/// uncached) produces exactly the bits of one full assignment over the
+/// concatenation — including tail shapes on both halves.
+#[test]
+fn properties_kernel_update_equals_recompute_bit_identical() {
+    forall(
+        "kernel-update-vs-batch",
+        30,
+        33,
+        |g| {
+            let pts = gen_matrix(g, 1, 300, 9);
+            let d = pts.cols();
+            let k1 = g.int(1, 7);
+            let k2 = g.int(1, 7);
+            let mut mk = |k: usize| {
+                let mut m = Matrix::zeros(k, d);
+                for i in 0..k {
+                    for v in m.row_mut(i) {
+                        *v = (g.rng.normal() * 10.0) as f32;
+                    }
+                }
+                m
+            };
+            let c1 = mk(k1);
+            let c2 = mk(k2);
+            (pts, c1, c2)
+        },
+        |(pts, c1, c2)| {
+            let (mut dist, mut idx) = nearest_center(pts, c1);
+            update_nearest(pts, c2, &mut dist, Some((&mut idx, c1.rows() as u32)));
+            let norms = PointNorms::compute(pts);
+            let (mut dist_k, mut idx_k) = nearest_center(pts, c1);
+            update_nearest_cached(pts, c2, &norms, &mut dist_k, Some((&mut idx_k, c1.rows() as u32)));
+            let mut all = c1.clone();
+            all.extend(c2);
+            let (dist_full, idx_full) = nearest_center(pts, &all);
+            for i in 0..pts.rows() {
+                prop_assert!(
+                    dist[i].to_bits() == dist_full[i].to_bits(),
+                    "incremental dist bits drifted at {i}"
+                );
+                prop_assert!(idx[i] == idx_full[i], "incremental idx drifted at {i}");
+                prop_assert!(
+                    dist_k[i].to_bits() == dist_full[i].to_bits(),
+                    "cached incremental dist bits drifted at {i}"
+                );
+                prop_assert!(idx_k[i] == idx_full[i], "cached incremental idx drifted at {i}");
+            }
             Ok(())
         },
     );
